@@ -1,0 +1,88 @@
+//! Finetune a suite of tasks with any optimizer from a TOML config, the way
+//! a downstream user would drive the framework.
+//!
+//!   cargo run --release --example finetune_suite -- [config.toml] \
+//!       [--set train.optimizer=hizoo] [--set train.steps=500]
+//!
+//! Without a config file it runs the built-in demo suite (three tasks,
+//! ConMeZO vs MeZO) and prints a comparison table.
+
+use anyhow::Result;
+use conmezo::config::Config;
+use conmezo::coordinator::{render_table, Mode, RunRecord, TrainConfig, Trainer};
+use conmezo::runtime::Runtime;
+use conmezo::util::json::Json;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut cfg_file = Config::new();
+    let mut i = 0;
+    while i < args.len() {
+        if args[i] == "--set" {
+            cfg_file.set_from_str(&args[i + 1])?;
+            i += 2;
+        } else {
+            cfg_file = Config::load(std::path::Path::new(&args[i]))?;
+            i += 1;
+        }
+    }
+
+    let rt = Runtime::open_default()?;
+    let preset = cfg_file.str_or("model.preset", "nano");
+    let steps = cfg_file.usize_or("train.steps", 3000);
+    let eta = cfg_file.f64_or("train.eta", 3e-4) as f32;
+    let tasks: Vec<String> = match cfg_file.get("train.tasks") {
+        Some(conmezo::config::Value::Array(a)) => a
+            .iter()
+            .filter_map(|v| match v {
+                conmezo::config::Value::Str(s) => Some(s.clone()),
+                _ => None,
+            })
+            .collect(),
+        _ => vec!["sst2".into(), "rte".into(), "trec".into()],
+    };
+    let optimizers: Vec<String> = match cfg_file.get("train.optimizers") {
+        Some(conmezo::config::Value::Array(a)) => a
+            .iter()
+            .filter_map(|v| match v {
+                conmezo::config::Value::Str(s) => Some(s.clone()),
+                _ => None,
+            })
+            .collect(),
+        _ => vec![cfg_file.str_or("train.optimizer", "conmezo"), "mezo".into()],
+    };
+
+    println!("suite: preset={preset} tasks={tasks:?} optimizers={optimizers:?} steps={steps}");
+    let mut rec = RunRecord::new("finetune_suite");
+    let mut rows = Vec::new();
+    for task in &tasks {
+        let mut row = vec![task.clone()];
+        for opt in &optimizers {
+            let mut c = TrainConfig::preset(&preset, task, opt);
+            c.steps = steps;
+            c.eta = eta;
+            c.eval_every = (steps / 4).max(1);
+            c.log_every = (steps / 8).max(1);
+            // exotic baselines require the composed engine
+            if !matches!(opt.as_str(), "conmezo" | "mezo" | "mezo_momentum" | "sgd" | "adamw") {
+                c.mode = Mode::Composed;
+            }
+            let summary = Trainer::new(&rt, c)?.run()?;
+            row.push(format!("{:.3} ({:.0} st/s)", summary.final_accuracy, summary.steps_per_sec));
+            rec.row(vec![
+                ("task", Json::str(task.as_str())),
+                ("optimizer", Json::str(opt.as_str())),
+                ("accuracy", Json::num(summary.final_accuracy)),
+                ("steps_per_sec", Json::num(summary.steps_per_sec)),
+            ]);
+        }
+        rows.push(row);
+    }
+    let mut headers = vec!["task".to_string()];
+    headers.extend(optimizers.iter().cloned());
+    let h: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    println!("\n{}", render_table(&h, &rows));
+    let path = rec.save()?;
+    println!("record: {}", path.display());
+    Ok(())
+}

@@ -1,0 +1,43 @@
+//! Quickstart: load the AOT artifacts, finetune the nano preset on the
+//! sst2-sim task with ConMeZO, and print the loss/accuracy trajectory.
+//!
+//! Run (after `make artifacts && cargo build --release`):
+//!   cargo run --release --example quickstart
+
+use anyhow::Result;
+use conmezo::coordinator::{Mode, TrainConfig, Trainer};
+use conmezo::runtime::Runtime;
+
+fn main() -> Result<()> {
+    // 1. open the artifact directory (compiles programs lazily, caches them)
+    let rt = Runtime::open_default()?;
+    println!("PJRT platform: {}", rt.platform());
+
+    // 2. configure a run — paper defaults (theta=1.35, beta=0.99 with the
+    //    §3.4 warm-up, lambda=1e-3), scaled step count for the demo
+    let mut cfg = TrainConfig::preset("nano", "sst2", "conmezo");
+    cfg.steps = 2000;
+    cfg.eta = 3e-4;
+    cfg.eval_every = 400;
+    cfg.log_every = 200;
+    cfg.mode = Mode::Fused; // whole optimizer step = one XLA program
+
+    // 3. train
+    let mut trainer = Trainer::new(&rt, cfg)?;
+    let summary = trainer.run()?;
+
+    // 4. inspect
+    println!("\nloss curve (step, mean two-point loss):");
+    for (step, loss) in &summary.loss_curve {
+        println!("  {step:>5}  {loss:.4}");
+    }
+    println!("\neval curve (step, accuracy):");
+    for (step, acc) in &summary.eval_curve {
+        println!("  {step:>5}  {acc:.3}");
+    }
+    println!(
+        "\nfinal accuracy {:.3} | {:.1} steps/s | peak state {:.2} MiB | {} forward evals",
+        summary.final_accuracy, summary.steps_per_sec, summary.peak_mem_mib, summary.evals_used
+    );
+    Ok(())
+}

@@ -1,0 +1,6 @@
+"""Build-time compile path: JAX/Pallas model + AOT lowering to HLO text.
+
+Nothing in this package is imported at runtime; `make artifacts` runs it
+once and the Rust coordinator consumes only `artifacts/*.hlo.txt` +
+`artifacts/manifest.json` afterwards.
+"""

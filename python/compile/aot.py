@@ -1,0 +1,227 @@
+"""AOT lowering: JAX/Pallas programs -> artifacts/*.hlo.txt + manifest.json.
+
+HLO *text* (not a serialized HloModuleProto) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids that xla_extension
+0.5.1 (the version the published `xla` 0.1.6 crate links) rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Run once via `make artifacts`; the Rust binary is self-contained after.
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts --presets nano,tiny,small
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import configs, model, quadratic, steps
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _inputs_for(cfg, kind):
+    """(name, ShapeDtypeStruct) list per program kind."""
+    dp = model.d_pad(cfg)
+    b, s = cfg.batch, cfg.seq_len
+    vec = spec([dp])
+    scalar = spec([])
+    iscalar = spec([], I32)
+    batch = [
+        ("input_ids", spec([b, s], I32)),
+        ("targets", spec([b, s], I32)),
+        ("mask", spec([b, s])),
+    ]
+    table = {
+        "init": [("seed", iscalar)],
+        "loss_pallas": [("params", vec)] + batch,
+        "sample_u": [("seed", iscalar)],
+        "loss": [("params", vec)] + batch,
+        "eval_logits": [("params", vec), ("input_ids", spec([b, s], I32)), ("pos", spec([b], I32))],
+        "two_point": [("params", vec), ("z", vec), ("lam", scalar)] + batch,
+        "conmezo_step": [
+            ("params", vec), ("m", vec), ("seed", iscalar),
+            ("theta", scalar), ("beta", scalar), ("eta", scalar), ("lam", scalar),
+        ] + batch,
+        "mezo_step": [("params", vec), ("seed", iscalar), ("eta", scalar), ("lam", scalar)] + batch,
+        "mezo_momentum_step": [
+            ("params", vec), ("m", vec), ("seed", iscalar),
+            ("beta", scalar), ("eta", scalar), ("lam", scalar),
+        ] + batch,
+        "fo_sgd_step": [("params", vec), ("eta", scalar)] + batch,
+        "fo_adamw_step": [
+            ("params", vec), ("mu", vec), ("nu", vec), ("t", scalar), ("eta", scalar),
+        ] + batch,
+        "grad_cos2": [("params", vec), ("m", vec)] + batch,
+    }
+    return table[kind]
+
+
+_OUTPUTS = {
+    "init": ["params"],
+    "loss_pallas": ["loss"],
+    "sample_u": ["u"],
+    "loss": ["loss"],
+    "eval_logits": ["logits"],
+    "two_point": ["loss_plus", "loss_minus"],
+    "conmezo_step": ["params", "m", "loss_plus", "loss_minus", "proj_grad"],
+    "mezo_step": ["params", "loss_plus", "loss_minus", "proj_grad"],
+    "mezo_momentum_step": ["params", "m", "loss_plus", "loss_minus", "proj_grad"],
+    "fo_sgd_step": ["params", "loss"],
+    "fo_adamw_step": ["params", "mu", "nu", "loss"],
+    "grad_cos2": ["cos2", "loss"],
+}
+
+def loss_pallas(cfg, params, input_ids, targets, mask):
+    """Ablation variant: model forward with the Pallas attention/LN kernels."""
+    import dataclasses
+
+    c = dataclasses.replace(cfg, use_pallas=True)
+    return (model.loss(c, params, input_ids, targets, mask),)
+
+
+_FNS = {
+    "init": steps.init_params,
+    "loss_pallas": loss_pallas,
+    "sample_u": steps.sample_u,
+    "loss": steps.loss_only,
+    "eval_logits": steps.eval_logits,
+    "two_point": steps.two_point,
+    "conmezo_step": steps.conmezo_step,
+    "mezo_step": steps.mezo_step,
+    "mezo_momentum_step": steps.mezo_momentum_step,
+    "fo_sgd_step": steps.fo_sgd_step,
+    "fo_adamw_step": steps.fo_adamw_step,
+    "grad_cos2": steps.grad_cos2,
+}
+
+DEFAULT_PROGS = list(_FNS)
+
+
+def export_program(cfg, kind, out_dir):
+    ins = _inputs_for(cfg, kind)
+    fn = _FNS[kind]
+
+    def wrapped(*args):
+        out = fn(cfg, *args)
+        return out if isinstance(out, tuple) else tuple(out)
+
+    t0 = time.time()
+    lowered = jax.jit(wrapped).lower(*[s for _, s in ins])
+    text = to_hlo_text(lowered)
+    name = f"{cfg.name}_{kind}"
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    entry = {
+        "name": name,
+        "preset": cfg.name,
+        "kind": kind,
+        "file": os.path.basename(path),
+        "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+        "inputs": [
+            {"name": n, "dtype": str(s.dtype), "shape": list(s.shape)} for n, s in ins
+        ],
+        "outputs": _OUTPUTS[kind],
+        "lower_seconds": round(time.time() - t0, 2),
+    }
+    print(f"  {name}: {len(text)/1e6:.2f} MB HLO in {entry['lower_seconds']}s", flush=True)
+    return entry
+
+
+def export_quadratic(out_dir):
+    entries = []
+    for kind, fn in [("loss", quadratic.quad_loss), ("grad", quadratic.quad_grad)]:
+        lowered = jax.jit(fn).lower(spec([configs.QUAD_DIM]))
+        text = to_hlo_text(lowered)
+        name = f"quad_{kind}"
+        with open(os.path.join(out_dir, f"{name}.hlo.txt"), "w") as f:
+            f.write(text)
+        entries.append(
+            {
+                "name": name,
+                "preset": "quad",
+                "kind": kind,
+                "file": f"{name}.hlo.txt",
+                "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+                "inputs": [{"name": "x", "dtype": "float32", "shape": [configs.QUAD_DIM]}],
+                "outputs": ["loss" if kind == "loss" else "grad"],
+            }
+        )
+        print(f"  {name}: ok", flush=True)
+    return entries
+
+
+def preset_meta(cfg):
+    return {
+        "name": cfg.name,
+        "vocab": cfg.vocab,
+        "d_model": cfg.d_model,
+        "n_layers": cfg.n_layers,
+        "n_heads": cfg.n_heads,
+        "seq_len": cfg.seq_len,
+        "batch": cfg.batch,
+        "d_ff": cfg.d_ff,
+        "d_raw": model.d_raw(cfg),
+        "d_pad": model.d_pad(cfg),
+        "layout": [
+            {"name": n, "shape": list(s), "offset": o} for n, s, o in model.layout(cfg)
+        ],
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--presets", default="nano,tiny,small,medium")
+    ap.add_argument("--progs", default=",".join(DEFAULT_PROGS))
+    ap.add_argument("--skip-quad", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    progs = args.progs.split(",")
+    unknown = set(progs) - set(DEFAULT_PROGS)
+    if unknown:
+        sys.exit(f"unknown programs: {sorted(unknown)}")
+
+    manifest = {"version": 1, "programs": [], "presets": {}}
+    if not args.skip_quad:
+        print("quadratic:")
+        manifest["programs"] += export_quadratic(args.out_dir)
+    for pname in args.presets.split(","):
+        cfg = configs.get(pname)
+        print(f"preset {pname} (d_raw={model.d_raw(cfg)}, d_pad={model.d_pad(cfg)}):")
+        manifest["presets"][pname] = preset_meta(cfg)
+        for kind in progs:
+            manifest["programs"].append(export_program(cfg, kind, args.out_dir))
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(manifest['programs'])} programs + manifest.json to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

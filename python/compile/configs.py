@@ -1,0 +1,72 @@
+"""Model size presets.
+
+The paper finetunes RoBERTa-large (355M), OPT-1.3B and OPT-13B on a single
+H100. This repo runs on one CPU core (repro band 0/5 -> simulate the
+hardware gate, DESIGN.md §2), so each paper model is mapped to a preset that
+preserves the *regime* (d >> task difficulty, identical code path) at a
+budget the testbed can train in minutes:
+
+  tiny   ~0.2M params  <- RoBERTa-large stand-in (6-task GLUE-sim suite)
+  small  ~1.3M params  <- OPT-1.3B stand-in      (8-task suite)
+  medium ~6.5M params  <- OPT-13B stand-in
+  xl     ~45M  params  <- large-model e2e option (examples/e2e, documented)
+  nano   ~30K  params  <- unit/integration-test fixture
+
+Every preset is exported by aot.py with the same program set, so the Rust
+coordinator is model-size agnostic.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Decoder-only transformer configuration (pre-LN, learned positions,
+    tied embeddings)."""
+
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    seq_len: int
+    batch: int
+    d_ff: int = 0  # 0 -> 4*d_model
+    # Model-internal kernels (attention/LayerNorm). The Pallas variants are
+    # exported as `{preset}_loss_pallas` for the kernel ablation bench; the
+    # default step programs use the XLA-fused jnp path because interpret-mode
+    # Pallas attention is ~30x slower on the CPU PJRT testbed (measured in
+    # EXPERIMENTS.md §Perf). The paper's L1 contribution — the ZO flat-buffer
+    # kernels in kernels/zo_update.py — is ALWAYS Pallas in every step
+    # program regardless of this flag.
+    use_pallas: bool = False
+
+    def __post_init__(self):
+        if self.d_ff == 0:
+            object.__setattr__(self, "d_ff", 4 * self.d_model)
+        assert self.d_model % self.n_heads == 0
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+
+PRESETS = {
+    "nano": ModelConfig("nano", vocab=64, d_model=32, n_layers=2, n_heads=2, seq_len=16, batch=4),
+    "tiny": ModelConfig("tiny", vocab=256, d_model=64, n_layers=3, n_heads=4, seq_len=32, batch=8),
+    "small": ModelConfig("small", vocab=512, d_model=128, n_layers=6, n_heads=8, seq_len=64, batch=8),
+    "medium": ModelConfig("medium", vocab=512, d_model=256, n_layers=8, n_heads=8, seq_len=64, batch=8),
+    "xl": ModelConfig("xl", vocab=4096, d_model=512, n_layers=12, n_heads=8, seq_len=128, batch=8),
+}
+
+# Synthetic quadratic of Fig. 3 / App. C.1: d = 1000, condition number d.
+QUAD_DIM = 1000
+
+
+def get(name: str) -> ModelConfig:
+    try:
+        return PRESETS[name]
+    except KeyError:
+        raise KeyError(f"unknown preset {name!r}; choose from {sorted(PRESETS)}")

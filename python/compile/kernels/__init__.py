@@ -1,0 +1,5 @@
+"""L1 Pallas kernels: the ZO flat-buffer hot path and the transformer
+compute hot-spots, all lowered under interpret=True so the exported HLO runs
+on any PJRT backend (see DESIGN.md)."""
+
+from . import attention, layernorm, ref, zo_update  # noqa: F401

@@ -1,0 +1,74 @@
+"""L1 Pallas causal multi-head attention kernel.
+
+GPU->TPU rethink (DESIGN.md "Hardware adaptation"): the CUDA flash-attention
+formulation assigns a threadblock per (batch, head, q-tile) and streams K/V
+tiles through shared memory. On TPU the analogue is a Pallas grid over
+(batch*head, q-tile) with `BlockSpec` expressing the HBM->VMEM schedule:
+each grid step holds one Q tile plus the full K/V panel for that head in
+VMEM (S * Dh * 4 B each — 32 KiB at S=512, Dh=64, comfortably resident),
+computes the masked scores on the MXU, and keeps the softmax row statistics
+in registers so probabilities are never re-read from HBM.
+
+For the sequence lengths this repo trains at (S <= 256) the full-panel
+schedule is strictly better than a streamed K/V loop: it avoids the online
+rescaling FLOPs and the K/V panel already fits VMEM. The streamed variant
+would only pay off at S >~ 8K (VMEM budget 16 MiB / (2 * Dh * 4B) lanes).
+
+Runs under interpret=True; lowers to plain HLO so the CPU PJRT client can
+execute the exported program.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Q_BLOCK = 32
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, q_block, causal, scale):
+    iq = pl.program_id(1)
+    q = q_ref[0]  # [q_block, Dh]
+    k = k_ref[0]  # [S, Dh]
+    v = v_ref[0]  # [S, Dh]
+    scores = jnp.dot(q, k.T) * scale  # [q_block, S]
+    if causal:
+        s = k.shape[0]
+        qi = iq * q_block + jax.lax.broadcasted_iota(jnp.int32, (q_block, s), 0)
+        ki = jax.lax.broadcasted_iota(jnp.int32, (q_block, s), 1)
+        scores = jnp.where(qi >= ki, scores, -1e30)
+    # numerically-stable softmax with row stats kept local
+    mx = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - mx)
+    probs = e / jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[0] = jnp.dot(probs, v)
+
+
+def attention(q, k, v, causal=True, q_block=None):
+    """Tiled causal attention. q, k, v: [B, H, S, Dh] -> [B, H, S, Dh]."""
+    b, h, s, dh = q.shape
+    qb = q_block or Q_BLOCK
+    while s % qb != 0 and qb > 1:
+        qb //= 2
+    scale = 1.0 / float(dh) ** 0.5
+    # collapse batch and head into one grid axis: [B*H, S, Dh]
+    qf = q.reshape(b * h, s, dh)
+    kf = k.reshape(b * h, s, dh)
+    vf = v.reshape(b * h, s, dh)
+    kern = functools.partial(_attn_kernel, q_block=qb, causal=causal, scale=scale)
+    out = pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((b * h, s, dh), jnp.float32),
+        grid=(b * h, s // qb),
+        in_specs=[
+            pl.BlockSpec((1, qb, dh), lambda ib, iq: (ib, iq, 0)),
+            pl.BlockSpec((1, s, dh), lambda ib, iq: (ib, 0, 0)),
+            pl.BlockSpec((1, s, dh), lambda ib, iq: (ib, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, qb, dh), lambda ib, iq: (ib, iq, 0)),
+        interpret=True,
+    )(qf, kf, vf)
+    return out.reshape(b, h, s, dh)

@@ -1,0 +1,97 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the correctness ground truth: each Pallas kernel in this package
+must match its oracle to float32 tolerance across randomized shape sweeps
+(see python/tests/test_kernels.py). They are also used directly by the
+"no-pallas" model variant exported for speed comparisons.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# ZO flat-buffer kernels (the paper's Section 3.3 fused operations)
+# ---------------------------------------------------------------------------
+
+
+def cone_direction_ref(m, u, theta, d_raw):
+    """z = sqrt(d) * (cos(theta) * m/||m|| + sin(theta) * u), pad lanes zeroed.
+
+    `m` and `u` have padded length d_pad >= d_raw; entries at index >= d_raw
+    are structurally zero in `m` and must be zeroed in `z` so padding never
+    perturbs, contributes to norms, or leaks into momentum.
+
+    Following App. C.2/C.3 of the paper, `u` is standard normal rather than
+    uniform on the sphere (E||u||^2 = d), so the sqrt(d) factor multiplies
+    only the momentum component; the noise component is scaled by sin(theta)
+    alone, exactly as in the paper's reference implementation (App. B).
+    """
+    d = jnp.asarray(d_raw, jnp.float32)
+    valid = (jnp.arange(m.shape[0]) < d_raw).astype(m.dtype)
+    mnorm = jnp.maximum(jnp.linalg.norm(m), 1e-30)
+    cs = jnp.sqrt(d) * jnp.cos(theta) / mnorm
+    sn = jnp.sin(theta)
+    return (cs * m + sn * u) * valid
+
+
+def perturb_ref(x, z, scale):
+    """x + scale * z (the MeZO/ConMeZO two-point perturbation)."""
+    return x + scale * z
+
+
+def zo_update_ref(x, m, z, g, eta, beta):
+    """Fused ConMeZO parameter + momentum update.
+
+    x' = x - eta * g * z
+    m' = beta * m + (1 - beta) * g * z
+
+    Returns (x', m'). A single pass over the flat buffer; the Pallas kernel
+    fuses both writes (the paper's "fused in-place operations").
+    """
+    gz = g * z
+    return x - eta * gz, beta * m + (1.0 - beta) * gz
+
+
+def dot_ref(a, b):
+    """<a, b> over the flat buffer (used for projected-gradient checks)."""
+    return jnp.sum(a * b)
+
+
+# ---------------------------------------------------------------------------
+# Transformer kernels
+# ---------------------------------------------------------------------------
+
+
+def layernorm_ref(x, gamma, beta, eps=1e-5):
+    """LayerNorm over the last axis."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * gamma + beta
+
+
+def attention_ref(q, k, v, causal=True):
+    """Multi-head scaled-dot-product attention.
+
+    q, k, v: [B, H, S, Dh]. Returns [B, H, S, Dh].
+    """
+    s = q.shape[-2]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+
+
+def softmax_xent_ref(logits, targets, mask):
+    """Masked mean token cross-entropy.
+
+    logits: [B, S, V]; targets: int32 [B, S]; mask: float32 [B, S].
+    """
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)

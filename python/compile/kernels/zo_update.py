@@ -1,0 +1,175 @@
+"""L1 Pallas kernels for the ZO flat-buffer hot path (paper Sec. 3.3, App. B).
+
+The paper's implementation contribution is a *fused, vectorized* treatment of
+the flattened parameter buffer: cone-direction construction, two-point
+perturbation and the combined (parameter, momentum) update are each a single
+streaming pass instead of per-parameter Python loops.
+
+TPU mapping (DESIGN.md "Hardware adaptation"): the flat buffer is tiled into
+1-D VMEM-resident blocks of `TILE` float32 lanes; each grid step streams one
+block HBM->VMEM, applies the fused elementwise math on the VPU, and writes
+back. Arithmetic intensity is O(1) flop/byte, so the roofline is HBM
+bandwidth and the optimization goal is *minimal passes over the buffer* —
+which is exactly what fusing the momentum update into the parameter update
+achieves (3 passes/step vs MeZO-loop's 4; see EXPERIMENTS.md Table 3).
+
+All kernels run under `interpret=True` (CPU PJRT cannot execute Mosaic
+custom-calls); they lower to plain HLO loops and fuse into the surrounding
+jitted program.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile: 2^16 f32 lanes = 256 KiB/block; with 4 live operands
+# (x, m, z, out) that is ~1 MiB VMEM, far under the ~16 MiB/core budget,
+# leaving room for double buffering.
+TILE = 65536
+
+
+def _grid(d_pad: int, tile: int) -> int:
+    assert d_pad % tile == 0, f"padded dim {d_pad} must be a multiple of {tile}"
+    return d_pad // tile
+
+
+def pick_tile(d_pad: int, target: int | None = None) -> int:
+    """Block size for the flat-buffer schedule.
+
+    Under interpret=True each grid cell costs ~2.5 ms of buffer-copy
+    overhead on the CPU PJRT backend (measured in EXPERIMENTS.md §Perf), so
+    the exported CPU programs use a SINGLE block (grid=1) — the fused
+    elementwise pass is then one XLA loop at memory bandwidth. On a real
+    TPU the VMEM-sized tiling is what you want: pass ``target=TILE`` to get
+    the largest power-of-two tile <= target dividing d_pad. Tests exercise
+    both schedules against the same oracle.
+    """
+    if target is None:
+        return d_pad
+    t = target
+    while t > 1 and d_pad % t != 0:
+        t //= 2
+    return t
+
+
+# ---------------------------------------------------------------------------
+# cone_direction: z = sqrt(d_raw) * cos(theta)/||m|| * m + sin(theta) * u
+# ---------------------------------------------------------------------------
+
+
+def _cone_kernel(cs_ref, sn_ref, m_ref, u_ref, z_ref, *, tile, d_raw):
+    i = pl.program_id(0)
+    idx = i * tile + jax.lax.broadcasted_iota(jnp.int32, (tile,), 0)
+    valid = (idx < d_raw).astype(jnp.float32)
+    z_ref[...] = (cs_ref[0] * m_ref[...] + sn_ref[0] * u_ref[...]) * valid
+
+
+def cone_direction(m, u, theta, d_raw, tile=None):
+    """Pallas cone-direction construction over the padded flat buffer.
+
+    The scalar prefactors (which need a global reduction ||m||) are computed
+    by XLA outside the kernel; the kernel performs the bandwidth-bound fused
+    scale-add with pad masking.
+    """
+    d_pad = m.shape[0]
+    tile = tile or pick_tile(d_pad)
+    d = jnp.asarray(d_raw, jnp.float32)
+    mnorm = jnp.maximum(jnp.linalg.norm(m), 1e-30)
+    cs = (jnp.sqrt(d) * jnp.cos(theta) / mnorm).reshape(1)
+    sn = jnp.sin(theta).reshape(1).astype(jnp.float32)
+    kern = functools.partial(_cone_kernel, tile=tile, d_raw=d_raw)
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((d_pad,), jnp.float32),
+        grid=(_grid(d_pad, tile),),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),  # cs broadcast
+            pl.BlockSpec((1,), lambda i: (0,)),  # sn broadcast
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        interpret=True,
+    )(cs, sn, m, u)
+
+
+# ---------------------------------------------------------------------------
+# perturb: x + scale * z  (used for the +lambda and -2*lambda hops)
+# ---------------------------------------------------------------------------
+
+
+def _axpy_kernel(s_ref, x_ref, z_ref, o_ref):
+    o_ref[...] = x_ref[...] + s_ref[0] * z_ref[...]
+
+
+def perturb(x, z, scale, tile=None):
+    """x + scale * z in one streaming pass (MeZO's efficient_perturb)."""
+    d_pad = x.shape[0]
+    tile = tile or pick_tile(d_pad)
+    s = jnp.asarray(scale, jnp.float32).reshape(1)
+    return pl.pallas_call(
+        _axpy_kernel,
+        out_shape=jax.ShapeDtypeStruct((d_pad,), jnp.float32),
+        grid=(_grid(d_pad, tile),),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        interpret=True,
+    )(s, x, z)
+
+
+# ---------------------------------------------------------------------------
+# zo_update: fused x' = x - eta*g*z ; m' = beta*m + (1-beta)*g*z
+# ---------------------------------------------------------------------------
+
+
+def _zo_update_kernel(c_ref, x_ref, m_ref, z_ref, xo_ref, mo_ref):
+    # c = [eta*g, beta, (1-beta)*g] precomputed scalars
+    gz_eta = c_ref[0] * z_ref[...]
+    xo_ref[...] = x_ref[...] - gz_eta
+    mo_ref[...] = c_ref[1] * m_ref[...] + c_ref[2] * z_ref[...]
+
+
+def zo_update(x, m, z, g, eta, beta, tile=None):
+    """The paper's fused parameter+momentum update: one pass, two outputs.
+
+    This is the single most important fusion: it halves the buffer traffic
+    of the update phase relative to running the two updates separately.
+    """
+    d_pad = x.shape[0]
+    tile = tile or pick_tile(d_pad)
+    g = jnp.asarray(g, jnp.float32)
+    c = jnp.stack(
+        [
+            jnp.asarray(eta, jnp.float32) * g,
+            jnp.asarray(beta, jnp.float32),
+            (1.0 - jnp.asarray(beta, jnp.float32)) * g,
+        ]
+    )
+    xo, mo = pl.pallas_call(
+        _zo_update_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((d_pad,), jnp.float32),
+            jax.ShapeDtypeStruct((d_pad,), jnp.float32),
+        ),
+        grid=(_grid(d_pad, tile),),
+        in_specs=[
+            pl.BlockSpec((3,), lambda i: (0,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ],
+        out_specs=(
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ),
+        interpret=True,
+    )(c, x, m, z)
+    return xo, mo

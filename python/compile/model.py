@@ -1,0 +1,182 @@
+"""L2: decoder-only transformer LM over a single flat parameter buffer.
+
+The flat buffer is the paper's central implementation object (§3.3): all
+perturbation and update math happens on one contiguous f32 vector, never on
+a per-tensor pytree. This module defines:
+
+  * the parameter layout (name, shape, offset) and the padded flat dim,
+  * `forward` / `loss` / `eval_logits` that unflatten views on the fly,
+  * `init_flat` returning a freshly initialized flat buffer.
+
+The forward path calls the L1 Pallas kernels (attention, layernorm) so that
+they lower into the same HLO program the Rust runtime executes; a pure-jnp
+variant (cfg.use_pallas=False) exists for first-order/grad programs and for
+the kernel-vs-ref speed comparison.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels import attention as attn_k
+from .kernels import layernorm as ln_k
+from .kernels import ref as kref
+
+PAD_QUANTUM = 1024
+
+
+# ---------------------------------------------------------------------------
+# Parameter layout
+# ---------------------------------------------------------------------------
+
+
+def layout(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...], int]]:
+    """Ordered (name, shape, offset) for every parameter tensor."""
+    entries: List[Tuple[str, Tuple[int, ...]]] = []
+    d, ff, v, s = cfg.d_model, cfg.d_ff, cfg.vocab, cfg.seq_len
+    entries.append(("tok_emb", (v, d)))
+    entries.append(("pos_emb", (s, d)))
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        entries += [
+            (p + "ln1.g", (d,)),
+            (p + "ln1.b", (d,)),
+            (p + "attn.wqkv", (d, 3 * d)),
+            (p + "attn.bqkv", (3 * d,)),
+            (p + "attn.wo", (d, d)),
+            (p + "attn.bo", (d,)),
+            (p + "ln2.g", (d,)),
+            (p + "ln2.b", (d,)),
+            (p + "mlp.w1", (d, ff)),
+            (p + "mlp.b1", (ff,)),
+            (p + "mlp.w2", (ff, d)),
+            (p + "mlp.b2", (d,)),
+        ]
+    entries += [("ln_f.g", (d,)), ("ln_f.b", (d,))]
+    out, off = [], 0
+    for name, shape in entries:
+        out.append((name, shape, off))
+        off += math.prod(shape)
+    return out
+
+
+def d_raw(cfg: ModelConfig) -> int:
+    lay = layout(cfg)
+    name, shape, off = lay[-1]
+    return off + math.prod(shape)
+
+
+def d_pad(cfg: ModelConfig) -> int:
+    r = d_raw(cfg)
+    return ((r + PAD_QUANTUM - 1) // PAD_QUANTUM) * PAD_QUANTUM
+
+
+def unflatten(cfg: ModelConfig, flat) -> Dict[str, jax.Array]:
+    """Slice the flat buffer into named parameter views (no copies in XLA)."""
+    params = {}
+    for name, shape, off in layout(cfg):
+        n = 1
+        for sdim in shape:
+            n *= sdim
+        params[name] = flat[off : off + n].reshape(shape)
+    return params
+
+
+def mask_pad(cfg: ModelConfig, vec):
+    """Zero the padding lanes of a padded flat vector."""
+    valid = (jnp.arange(vec.shape[0]) < d_raw(cfg)).astype(vec.dtype)
+    return vec * valid
+
+
+# ---------------------------------------------------------------------------
+# Initialization
+# ---------------------------------------------------------------------------
+
+
+def init_flat(cfg: ModelConfig, key) -> jax.Array:
+    """GPT-2-style init, written directly into the padded flat buffer."""
+    chunks = []
+    for name, shape, _ in layout(cfg):
+        key, sub = jax.random.split(key)
+        n = 1
+        for sdim in shape:
+            n *= sdim
+        if name.endswith((".g",)):
+            chunks.append(jnp.ones(n, jnp.float32))
+        elif name.endswith((".b", ".bqkv", ".bo", ".b1", ".b2")):
+            chunks.append(jnp.zeros(n, jnp.float32))
+        elif name.endswith("wo") or name.endswith("w2"):
+            # residual-branch projections scaled down by depth
+            std = 0.02 / (2.0 * cfg.n_layers) ** 0.5
+            chunks.append(std * jax.random.normal(sub, (n,), jnp.float32))
+        else:
+            chunks.append(0.02 * jax.random.normal(sub, (n,), jnp.float32))
+    flat = jnp.concatenate(chunks)
+    pad = d_pad(cfg) - flat.shape[0]
+    return jnp.concatenate([flat, jnp.zeros(pad, jnp.float32)])
+
+
+# ---------------------------------------------------------------------------
+# Forward / loss
+# ---------------------------------------------------------------------------
+
+
+def _ln(cfg, x2d, g, b):
+    if cfg.use_pallas:
+        return ln_k.layernorm(x2d, g, b)
+    return kref.layernorm_ref(x2d, g, b)
+
+
+def _attention(cfg, q, k, v):
+    if cfg.use_pallas:
+        return attn_k.attention(q, k, v, causal=True)
+    return kref.attention_ref(q, k, v, causal=True)
+
+
+def forward(cfg: ModelConfig, flat, input_ids) -> jax.Array:
+    """Token logits. input_ids: int32 [B, S] -> logits f32 [B, S, V]."""
+    p = unflatten(cfg, flat)
+    bsz, s = input_ids.shape
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+
+    x = p["tok_emb"][input_ids] + p["pos_emb"][None, :s, :]
+    for i in range(cfg.n_layers):
+        pre = f"layer{i}."
+        # --- attention block (pre-LN) ---
+        hx = _ln(cfg, x.reshape(bsz * s, d), p[pre + "ln1.g"], p[pre + "ln1.b"]).reshape(bsz, s, d)
+        qkv = hx @ p[pre + "attn.wqkv"] + p[pre + "attn.bqkv"]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        q = q.reshape(bsz, s, h, hd).transpose(0, 2, 1, 3)
+        k = k.reshape(bsz, s, h, hd).transpose(0, 2, 1, 3)
+        v = v.reshape(bsz, s, h, hd).transpose(0, 2, 1, 3)
+        o = _attention(cfg, q, k, v)
+        o = o.transpose(0, 2, 1, 3).reshape(bsz, s, d)
+        x = x + o @ p[pre + "attn.wo"] + p[pre + "attn.bo"]
+        # --- MLP block ---
+        hx = _ln(cfg, x.reshape(bsz * s, d), p[pre + "ln2.g"], p[pre + "ln2.b"]).reshape(bsz, s, d)
+        hx = jax.nn.gelu(hx @ p[pre + "mlp.w1"] + p[pre + "mlp.b1"])
+        x = x + hx @ p[pre + "mlp.w2"] + p[pre + "mlp.b2"]
+
+    x = _ln(cfg, x.reshape(bsz * s, d), p["ln_f.g"], p["ln_f.b"]).reshape(bsz, s, d)
+    return x @ p["tok_emb"].T  # tied LM head
+
+
+def loss(cfg: ModelConfig, flat, input_ids, targets, mask) -> jax.Array:
+    """Masked mean cross-entropy; the ZO oracle f(x) of the paper."""
+    logits = forward(cfg, flat, input_ids)
+    return kref.softmax_xent_ref(logits, targets, mask)
+
+
+def eval_logits(cfg: ModelConfig, flat, input_ids, pos) -> jax.Array:
+    """Logits at one position per example (classification readout).
+
+    pos: int32 [B] -> returns f32 [B, V]. The Rust evaluator restricts the
+    argmax to the task's verbalizer tokens.
+    """
+    logits = forward(cfg, flat, input_ids)
+    return jax.vmap(lambda l, q: l[q])(logits, pos)

@@ -1,0 +1,32 @@
+"""Synthetic strongly-convex quadratic of Fig. 3 / App. C.1.
+
+f(x) = sum_i sigma_i x_i^2 with (sigma_i) a geometric series from 1/d to 1,
+so the condition number is d. The Rust side also implements this objective
+natively (`objective::NativeQuadratic`) for the 10^5-step grid sweeps; the
+HLO export here is used by integration tests to prove the composed-mode
+path end to end and to cross-check the native implementation bit-for-bit
+at f32 tolerance.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .configs import QUAD_DIM
+
+
+def sigmas(d: int = QUAD_DIM):
+    """Geometric series 1/d -> 1 inclusive (App. C.1)."""
+    i = jnp.arange(d, dtype=jnp.float32)
+    ratio = jnp.asarray(float(d), jnp.float32) ** (1.0 / (d - 1))
+    return (1.0 / d) * ratio**i
+
+
+def quad_loss(x):
+    """f(x); x: f32 [QUAD_DIM]."""
+    return (jnp.sum(sigmas(x.shape[0]) * jnp.square(x)),)
+
+
+def quad_grad(x):
+    """Analytic gradient 2*sigma*x (used by tests only)."""
+    return (2.0 * sigmas(x.shape[0]) * x,)

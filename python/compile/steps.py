@@ -1,0 +1,178 @@
+"""L2 fused step programs — the units the Rust coordinator executes.
+
+Each function here is a pure JAX function of (state, scalars, batch) that
+aot.py lowers to one HLO program. Two families:
+
+*  Fused ZO steps (`conmezo_step`, `mezo_step`, `mezo_momentum_step`): the
+   entire optimizer iteration — seeded direction sampling, cone
+   construction (Pallas), both forward passes, and the fused
+   parameter+momentum update (Pallas) — is a single XLA program. Python is
+   never on the step path, and the Rust side only moves O(1) scalars per
+   step once the state buffers live on device.
+
+*  Composed-mode helpers (`loss`, `two_point`, `eval_logits`) used by the
+   exotic baselines (HiZOO / LOZO / MeZO-SVRG / ZO-AdaMM) whose extra
+   per-coordinate state lives host-side in Rust `vecmath`.
+
+First-order programs (`fo_sgd_step`, `fo_adamw_step`, `grad_cos2`) exist
+for the paper's FO baselines (Tables 1 & 9, Fig. 4) and for Fig. 6's
+momentum/true-gradient alignment probe; they use the pure-jnp forward
+(backprop through interpret-mode Pallas is exercised separately in tests but
+kept off the exported FO path for compile-time economy).
+
+Hyperparameters (theta, beta, eta, lambda) are *runtime scalar inputs*, not
+baked constants — the beta warm-up schedule (§3.4) is driven per step from
+Rust without recompilation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from . import model
+from .configs import ModelConfig
+from .kernels import zo_update as zk
+
+
+def _key(seed):
+    return jax.random.PRNGKey(seed.astype(jnp.uint32))
+
+
+def _sample_u(cfg: ModelConfig, seed):
+    """Standard-normal direction over the padded buffer, pads zeroed.
+
+    This is the seed-replay primitive: the same int32 seed always yields the
+    same direction, so distributed workers regenerate z locally from a
+    broadcast seed instead of receiving d floats (DESIGN.md §4).
+    """
+    u = jax.random.normal(_key(seed), (model.d_pad(cfg),), jnp.float32)
+    return model.mask_pad(cfg, u)
+
+
+# ---------------------------------------------------------------------------
+# ZO fused steps
+# ---------------------------------------------------------------------------
+
+
+def conmezo_step(cfg: ModelConfig, params, m, seed, theta, beta, eta, lam, input_ids, targets, mask):
+    """Algorithm 1, one iteration, fully fused.
+
+    Returns (params', m', loss_plus, loss_minus, proj_grad).
+    """
+    d = model.d_raw(cfg)
+    u = _sample_u(cfg, seed)
+    z = zk.cone_direction(m, u, theta, d)
+    xp = zk.perturb(params, z, lam)
+    lp = model.loss(cfg, xp, input_ids, targets, mask)
+    xm = zk.perturb(params, z, -lam)
+    lm = model.loss(cfg, xm, input_ids, targets, mask)
+    g = (lp - lm) / (2.0 * lam)
+    x_new, m_new = zk.zo_update(params, m, z, g, eta, beta)
+    return x_new, m_new, lp, lm, g
+
+
+def mezo_step(cfg: ModelConfig, params, seed, eta, lam, input_ids, targets, mask):
+    """MeZO (Malladi et al. 2023): isotropic two-point SPSA step.
+
+    Returns (params', loss_plus, loss_minus, proj_grad).
+    """
+    z = _sample_u(cfg, seed)
+    xp = zk.perturb(params, z, lam)
+    lp = model.loss(cfg, xp, input_ids, targets, mask)
+    xm = zk.perturb(params, z, -lam)
+    lm = model.loss(cfg, xm, input_ids, targets, mask)
+    g = (lp - lm) / (2.0 * lam)
+    x_new = zk.perturb(params, z, -eta * g)
+    return x_new, lp, lm, g
+
+
+def mezo_momentum_step(cfg: ModelConfig, params, m, seed, beta, eta, lam, input_ids, targets, mask):
+    """The paper's MeZO+Momentum baseline (§5.2): momentum *replaces* the
+    update direction but does not bias the perturbation.
+
+    m' = beta*m + (1-beta)*g*z ;  x' = x - eta*m'.
+    Returns (params', m', loss_plus, loss_minus, proj_grad).
+    """
+    z = _sample_u(cfg, seed)
+    xp = zk.perturb(params, z, lam)
+    lp = model.loss(cfg, xp, input_ids, targets, mask)
+    xm = zk.perturb(params, z, -lam)
+    lm = model.loss(cfg, xm, input_ids, targets, mask)
+    g = (lp - lm) / (2.0 * lam)
+    # reuse the fused kernel with eta=0 to get m', then apply x' = x - eta*m'
+    _, m_new = zk.zo_update(params, m, z, g, 0.0, beta)
+    x_new = zk.perturb(params, m_new, -eta)
+    return x_new, m_new, lp, lm, g
+
+
+# ---------------------------------------------------------------------------
+# Composed-mode helpers
+# ---------------------------------------------------------------------------
+
+
+def loss_only(cfg: ModelConfig, params, input_ids, targets, mask):
+    return (model.loss(cfg, params, input_ids, targets, mask),)
+
+
+def two_point(cfg: ModelConfig, params, z, lam, input_ids, targets, mask):
+    """f(x + lam*z), f(x - lam*z) for a host-provided direction z."""
+    xp = zk.perturb(params, z, lam)
+    lp = model.loss(cfg, xp, input_ids, targets, mask)
+    xm = zk.perturb(params, z, -lam)
+    lm = model.loss(cfg, xm, input_ids, targets, mask)
+    return lp, lm
+
+
+def eval_logits(cfg: ModelConfig, params, input_ids, pos):
+    return (model.eval_logits(cfg, params, input_ids, pos),)
+
+
+def sample_u(cfg: ModelConfig, seed):
+    return (_sample_u(cfg, seed),)
+
+
+def init_params(cfg: ModelConfig, seed):
+    return (model.init_flat(cfg, _key(seed)),)
+
+
+# ---------------------------------------------------------------------------
+# First-order programs (build-time backprop; baselines + probes)
+# ---------------------------------------------------------------------------
+
+
+def _fo_cfg(cfg: ModelConfig) -> ModelConfig:
+    return dataclasses.replace(cfg, use_pallas=False)
+
+
+def fo_sgd_step(cfg: ModelConfig, params, eta, input_ids, targets, mask):
+    c = _fo_cfg(cfg)
+    l, grad = jax.value_and_grad(lambda p: model.loss(c, p, input_ids, targets, mask))(params)
+    return params - eta * grad, l
+
+
+ADAM_B1, ADAM_B2, ADAM_EPS, ADAM_WD = 0.9, 0.999, 1e-8, 0.0
+
+
+def fo_adamw_step(cfg: ModelConfig, params, mu, nu, t, eta, input_ids, targets, mask):
+    """AdamW with bias correction; t is the 1-based step counter (f32)."""
+    c = _fo_cfg(cfg)
+    l, grad = jax.value_and_grad(lambda p: model.loss(c, p, input_ids, targets, mask))(params)
+    mu_n = ADAM_B1 * mu + (1.0 - ADAM_B1) * grad
+    nu_n = ADAM_B2 * nu + (1.0 - ADAM_B2) * jnp.square(grad)
+    mu_hat = mu_n / (1.0 - ADAM_B1**t)
+    nu_hat = nu_n / (1.0 - ADAM_B2**t)
+    step = mu_hat / (jnp.sqrt(nu_hat) + ADAM_EPS) + ADAM_WD * params
+    return params - eta * step, mu_n, nu_n, l
+
+
+def grad_cos2(cfg: ModelConfig, params, m, input_ids, targets, mask):
+    """cos^2 between momentum and the true gradient (Fig. 6 probe)."""
+    c = _fo_cfg(cfg)
+    l, grad = jax.value_and_grad(lambda p: model.loss(c, p, input_ids, targets, mask))(params)
+    grad = model.mask_pad(c, grad)
+    num = jnp.square(jnp.vdot(m, grad))
+    den = jnp.maximum(jnp.vdot(m, m) * jnp.vdot(grad, grad), 1e-30)
+    return num / den, l

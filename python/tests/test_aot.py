@@ -1,0 +1,83 @@
+"""AOT pipeline integrity: export a preset to a temp dir and validate the
+manifest/program contract the Rust runtime depends on."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+PYDIR = os.path.join(REPO, "python")
+
+
+@pytest.fixture(scope="module")
+def exported(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    r = subprocess.run(
+        [
+            sys.executable, "-m", "compile.aot",
+            "--out-dir", str(out),
+            "--presets", "nano",
+            "--progs", "init,loss,conmezo_step,mezo_step,two_point,eval_logits,sample_u",
+        ],
+        cwd=PYDIR,
+        capture_output=True,
+        text=True,
+    )
+    assert r.returncode == 0, r.stderr
+    return out
+
+
+def test_manifest_exists_and_valid(exported):
+    with open(exported / "manifest.json") as f:
+        man = json.load(f)
+    assert man["version"] == 1
+    assert "nano" in man["presets"]
+    names = {p["name"] for p in man["programs"]}
+    assert {"nano_init", "nano_loss", "nano_conmezo_step", "quad_loss"} <= names
+
+
+def test_manifest_shapes_consistent(exported):
+    with open(exported / "manifest.json") as f:
+        man = json.load(f)
+    preset = man["presets"]["nano"]
+    dp = preset["d_pad"]
+    for prog in man["programs"]:
+        if prog["preset"] != "nano":
+            continue
+        for inp in prog["inputs"]:
+            if inp["name"] in ("params", "m", "z", "u", "mu", "nu"):
+                assert inp["shape"] == [dp], prog["name"]
+
+
+def test_layout_covers_d_raw(exported):
+    with open(exported / "manifest.json") as f:
+        man = json.load(f)
+    preset = man["presets"]["nano"]
+    total = 0
+    for ent in preset["layout"]:
+        n = 1
+        for sdim in ent["shape"]:
+            n *= sdim
+        assert ent["offset"] == total
+        total += n
+    assert total == preset["d_raw"]
+
+
+def test_hlo_files_exist_and_parseable_header(exported):
+    with open(exported / "manifest.json") as f:
+        man = json.load(f)
+    for prog in man["programs"]:
+        path = exported / prog["file"]
+        assert path.exists(), prog["name"]
+        head = path.read_text()[:200]
+        assert "HloModule" in head, prog["name"]
+
+
+def test_programs_have_unique_names(exported):
+    with open(exported / "manifest.json") as f:
+        man = json.load(f)
+    names = [p["name"] for p in man["programs"]]
+    assert len(names) == len(set(names))

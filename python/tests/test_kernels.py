@@ -1,0 +1,206 @@
+"""L1 kernel correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Randomized shape/parameter sweeps (fixed seeds, hypothesis-style) — the
+core build-time correctness signal for the exported artifacts.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import attention as attn_k
+from compile.kernels import layernorm as ln_k
+from compile.kernels import ref, zo_update as zk
+
+RNG = np.random.default_rng(0)
+
+
+def rand(*shape):
+    return jnp.asarray(RNG.standard_normal(shape), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# cone_direction
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("d_pad,d_raw", [(1024, 1000), (2048, 2048), (4096, 3000), (8192, 7777)])
+@pytest.mark.parametrize("theta", [0.0, 0.7, 1.35, np.pi / 2])
+def test_cone_direction_matches_ref(d_pad, d_raw, theta):
+    m = rand(d_pad) * (jnp.arange(d_pad) < d_raw)
+    u = rand(d_pad)
+    got = zk.cone_direction(m, u, jnp.float32(theta), d_raw)
+    want = ref.cone_direction_ref(m, u, jnp.float32(theta), d_raw)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_cone_direction_zeroes_padding():
+    d_pad, d_raw = 2048, 1500
+    m = rand(d_pad) * (jnp.arange(d_pad) < d_raw)
+    u = rand(d_pad)  # noise in the pad region must not leak
+    z = zk.cone_direction(m, u, jnp.float32(1.2), d_raw)
+    assert np.all(np.asarray(z[d_raw:]) == 0.0)
+
+
+def test_cone_direction_norm_identity():
+    """E||z||^2 = d: with exact-unit u the norm identity is exact."""
+    d = 4096
+    m = rand(d)
+    u_raw = rand(d)
+    # project u to the sphere sqrt(d)*S^{d-1} so ||z||^2 == d exactly
+    u = u_raw / jnp.linalg.norm(u_raw) * jnp.sqrt(jnp.float32(d))
+    # and make u orthogonal to m to isolate the parallel/orthogonal split
+    u = u - (jnp.vdot(u, m) / jnp.vdot(m, m)) * m
+    u = u / jnp.linalg.norm(u) * jnp.sqrt(jnp.float32(d))
+    z = zk.cone_direction(m, u, jnp.float32(0.9), d)
+    # ||z||^2 = d cos^2 + sin^2 ||u||^2 = d cos^2 + d sin^2 = d
+    np.testing.assert_allclose(float(jnp.vdot(z, z)), d, rtol=1e-4)
+
+
+def test_cone_theta_zero_is_pure_momentum():
+    d = 1024
+    m, u = rand(d), rand(d)
+    z = zk.cone_direction(m, u, jnp.float32(0.0), d)
+    mhat = m / jnp.linalg.norm(m)
+    np.testing.assert_allclose(z, jnp.sqrt(jnp.float32(d)) * mhat, rtol=1e-4, atol=1e-5)
+
+
+def test_cone_theta_half_pi_is_pure_noise():
+    d = 1024
+    m, u = rand(d), rand(d)
+    z = zk.cone_direction(m, u, jnp.float32(np.pi / 2), d)
+    np.testing.assert_allclose(z, u, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("tile", [256, 1024, 4096])
+def test_cone_direction_tile_invariance(tile):
+    d = 8192
+    m, u = rand(d), rand(d)
+    a = zk.cone_direction(m, u, jnp.float32(1.1), d, tile=tile)
+    b = ref.cone_direction_ref(m, u, jnp.float32(1.1), d)
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# perturb / zo_update
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("d", [1024, 5120, 65536])
+@pytest.mark.parametrize("scale", [1e-3, -1e-3, 2.5])
+def test_perturb_matches_ref(d, scale):
+    x, z = rand(d), rand(d)
+    got = zk.perturb(x, z, jnp.float32(scale))
+    np.testing.assert_allclose(got, ref.perturb_ref(x, z, scale), rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("d", [1024, 3072, 131072])
+@pytest.mark.parametrize("g,eta,beta", [(0.5, 1e-6, 0.99), (-2.0, 1e-3, 0.9), (0.0, 1e-2, 0.0)])
+def test_zo_update_matches_ref(d, g, eta, beta):
+    x, m, z = rand(d), rand(d), rand(d)
+    xo, mo = zk.zo_update(x, m, z, jnp.float32(g), jnp.float32(eta), jnp.float32(beta))
+    xr, mr = ref.zo_update_ref(x, m, z, g, eta, beta)
+    np.testing.assert_allclose(xo, xr, rtol=1e-4, atol=5e-7)
+    np.testing.assert_allclose(mo, mr, rtol=1e-4, atol=5e-7)
+
+
+def test_zo_update_beta_one_freezes_momentum():
+    d = 1024
+    x, m, z = rand(d), rand(d), rand(d)
+    _, mo = zk.zo_update(x, m, z, jnp.float32(3.0), jnp.float32(1e-3), jnp.float32(1.0))
+    np.testing.assert_allclose(mo, m, rtol=1e-6)
+
+
+def test_zo_update_is_single_pass_equivalent():
+    """Fused output must equal the two separate passes exactly (same order)."""
+    d = 2048
+    x, m, z = rand(d), rand(d), rand(d)
+    g, eta, beta = 1.7, 1e-4, 0.95
+    xo, mo = zk.zo_update(x, m, z, jnp.float32(g), jnp.float32(eta), jnp.float32(beta))
+    np.testing.assert_allclose(xo, x - eta * g * z, rtol=1e-4, atol=5e-7)
+    np.testing.assert_allclose(mo, beta * m + (1 - beta) * g * z, rtol=1e-4, atol=5e-7)
+
+
+# ---------------------------------------------------------------------------
+# layernorm
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,d", [(8, 32), (64, 64), (33, 128), (256, 256)])
+def test_layernorm_matches_ref(n, d):
+    x, g, b = rand(n, d), rand(d), rand(d)
+    got = ln_k.layernorm(x, g, b)
+    np.testing.assert_allclose(got, ref.layernorm_ref(x, g, b), rtol=2e-5, atol=2e-5)
+
+
+def test_layernorm_output_standardized():
+    x = rand(16, 64) * 10 + 3
+    y = ln_k.layernorm(x, jnp.ones(64), jnp.zeros(64))
+    np.testing.assert_allclose(np.mean(np.asarray(y), -1), 0.0, atol=1e-5)
+    np.testing.assert_allclose(np.var(np.asarray(y), -1), 1.0, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("b,h,s,dh", [(1, 1, 16, 8), (2, 4, 32, 16), (2, 2, 64, 32), (1, 8, 128, 16)])
+def test_attention_matches_ref(b, h, s, dh):
+    q, k, v = rand(b, h, s, dh), rand(b, h, s, dh), rand(b, h, s, dh)
+    got = attn_k.attention(q, k, v, causal=True)
+    want = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-5)
+
+
+@pytest.mark.parametrize("q_block", [4, 8, 32])
+def test_attention_qblock_invariance(q_block):
+    q, k, v = rand(1, 2, 32, 16), rand(1, 2, 32, 16), rand(1, 2, 32, 16)
+    got = attn_k.attention(q, k, v, q_block=q_block)
+    want = ref.attention_ref(q, k, v)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-5)
+
+
+def test_attention_causality():
+    """Output at position t must not depend on tokens after t."""
+    b, h, s, dh = 1, 2, 16, 8
+    q, k, v = rand(b, h, s, dh), rand(b, h, s, dh), rand(b, h, s, dh)
+    base = attn_k.attention(q, k, v)
+    k2 = k.at[:, :, -1].set(99.0)
+    v2 = v.at[:, :, -1].set(-99.0)
+    pert = attn_k.attention(q, k2, v2)
+    np.testing.assert_allclose(base[:, :, :-1], pert[:, :, :-1], rtol=1e-5, atol=1e-6)
+    assert not np.allclose(base[:, :, -1], pert[:, :, -1])
+
+
+def test_attention_uniform_values():
+    """With identical V rows, attention must return that row regardless of scores."""
+    b, h, s, dh = 1, 1, 32, 8
+    q, k = rand(b, h, s, dh), rand(b, h, s, dh)
+    row = rand(dh)
+    v = jnp.broadcast_to(row, (b, h, s, dh))
+    out = attn_k.attention(q, k, v)
+    np.testing.assert_allclose(out, v, rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# cross-entropy oracle self-checks
+# ---------------------------------------------------------------------------
+
+
+def test_xent_uniform_logits():
+    logits = jnp.zeros((2, 4, 16))
+    targets = jnp.zeros((2, 4), jnp.int32)
+    mask = jnp.ones((2, 4))
+    got = ref.softmax_xent_ref(logits, targets, mask)
+    np.testing.assert_allclose(float(got), np.log(16.0), rtol=1e-6)
+
+
+def test_xent_respects_mask():
+    logits = rand(2, 4, 16)
+    targets = jnp.zeros((2, 4), jnp.int32)
+    mask = jnp.zeros((2, 4)).at[0, 1].set(1.0)
+    got = ref.softmax_xent_ref(logits, targets, mask)
+    lz = jax.nn.logsumexp(logits[0, 1])
+    np.testing.assert_allclose(float(got), float(lz - logits[0, 1, 0]), rtol=1e-5)

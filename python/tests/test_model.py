@@ -1,0 +1,151 @@
+"""L2 model correctness: layout integrity, forward shapes, pallas-vs-jnp
+equivalence (the proof that the Pallas kernels compose into the model
+without changing its math)."""
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import configs, model
+
+NANO = configs.get("nano")
+
+
+def make_batch(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    ids = jnp.asarray(rng.integers(0, cfg.vocab, (cfg.batch, cfg.seq_len)), jnp.int32)
+    tgt = jnp.asarray(rng.integers(0, cfg.vocab, (cfg.batch, cfg.seq_len)), jnp.int32)
+    mask = jnp.zeros((cfg.batch, cfg.seq_len), jnp.float32).at[:, -1].set(1.0)
+    return ids, tgt, mask
+
+
+# ---------------------------------------------------------------------------
+# layout
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("preset", ["nano", "tiny", "small"])
+def test_layout_contiguous_and_ordered(preset):
+    cfg = configs.get(preset)
+    lay = model.layout(cfg)
+    off = 0
+    for name, shape, o in lay:
+        assert o == off, f"{name} offset {o} != expected {off}"
+        off += math.prod(shape)
+    assert off == model.d_raw(cfg)
+    assert model.d_pad(cfg) % model.PAD_QUANTUM == 0
+    assert model.d_pad(cfg) >= model.d_raw(cfg)
+
+
+def test_layout_names_unique():
+    lay = model.layout(NANO)
+    names = [n for n, _, _ in lay]
+    assert len(names) == len(set(names))
+
+
+def test_unflatten_roundtrip():
+    cfg = NANO
+    flat = jnp.arange(model.d_pad(cfg), dtype=jnp.float32)
+    p = model.unflatten(cfg, flat)
+    for name, shape, off in model.layout(cfg):
+        n = math.prod(shape)
+        np.testing.assert_array_equal(
+            np.asarray(p[name]).ravel(), np.arange(off, off + n, dtype=np.float32)
+        )
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def test_init_pads_zero_and_ln_gains_one():
+    cfg = NANO
+    flat = model.init_flat(cfg, jax.random.PRNGKey(0))
+    assert flat.shape == (model.d_pad(cfg),)
+    assert np.all(np.asarray(flat[model.d_raw(cfg):]) == 0.0)
+    p = model.unflatten(cfg, flat)
+    np.testing.assert_array_equal(np.asarray(p["ln_f.g"]), 1.0)
+    np.testing.assert_array_equal(np.asarray(p["layer0.ln1.b"]), 0.0)
+
+
+def test_init_deterministic_per_seed():
+    cfg = NANO
+    a = model.init_flat(cfg, jax.random.PRNGKey(7))
+    b = model.init_flat(cfg, jax.random.PRNGKey(7))
+    c = model.init_flat(cfg, jax.random.PRNGKey(8))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert not np.array_equal(np.asarray(a), np.asarray(c))
+
+
+# ---------------------------------------------------------------------------
+# forward / loss
+# ---------------------------------------------------------------------------
+
+
+def test_forward_shapes_and_finite():
+    cfg = NANO
+    flat = model.init_flat(cfg, jax.random.PRNGKey(0))
+    ids, tgt, mask = make_batch(cfg)
+    logits = model.forward(cfg, flat, ids)
+    assert logits.shape == (cfg.batch, cfg.seq_len, cfg.vocab)
+    assert np.all(np.isfinite(np.asarray(logits)))
+    l = model.loss(cfg, flat, ids, tgt, mask)
+    assert np.isfinite(float(l))
+
+
+def test_fresh_model_loss_near_uniform():
+    """A freshly initialized LM should score ~log(V) per token."""
+    cfg = NANO
+    flat = model.init_flat(cfg, jax.random.PRNGKey(0))
+    ids, tgt, mask = make_batch(cfg)
+    l = float(model.loss(cfg, flat, ids, tgt, mask))
+    assert abs(l - np.log(cfg.vocab)) < 0.5
+
+
+def test_pallas_and_jnp_forward_agree():
+    """The L1 kernels must not change the model's math."""
+    cfg = NANO
+    cfg_ref = dataclasses.replace(cfg, use_pallas=False)
+    flat = model.init_flat(cfg, jax.random.PRNGKey(1))
+    ids, _, _ = make_batch(cfg, seed=3)
+    a = model.forward(cfg, flat, ids)
+    b = model.forward(cfg_ref, flat, ids)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4, atol=2e-4)
+
+
+def test_padding_lanes_do_not_affect_loss():
+    cfg = NANO
+    flat = model.init_flat(cfg, jax.random.PRNGKey(0))
+    ids, tgt, mask = make_batch(cfg)
+    base = float(model.loss(cfg, flat, ids, tgt, mask))
+    poisoned = flat.at[model.d_raw(cfg):].set(123.0)
+    got = float(model.loss(cfg, poisoned, ids, tgt, mask))
+    assert base == got
+
+
+def test_causal_lm_ignores_future_tokens():
+    cfg = NANO
+    flat = model.init_flat(cfg, jax.random.PRNGKey(0))
+    ids, _, _ = make_batch(cfg)
+    logits = model.forward(cfg, flat, ids)
+    ids2 = ids.at[:, -1].set((ids[:, -1] + 1) % cfg.vocab)
+    logits2 = model.forward(cfg, flat, ids2)
+    np.testing.assert_allclose(
+        np.asarray(logits[:, :-1]), np.asarray(logits2[:, :-1]), rtol=1e-4, atol=1e-5
+    )
+
+
+def test_eval_logits_matches_forward_gather():
+    cfg = NANO
+    flat = model.init_flat(cfg, jax.random.PRNGKey(0))
+    ids, _, _ = make_batch(cfg)
+    pos = jnp.asarray([3, 7, 1, 15], jnp.int32)
+    got = model.eval_logits(cfg, flat, ids, pos)
+    logits = model.forward(cfg, flat, ids)
+    want = jnp.stack([logits[i, int(pos[i])] for i in range(cfg.batch)])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)

@@ -1,0 +1,58 @@
+"""Fig. 3 synthetic quadratic: closed-form checks + AD cross-validation.
+
+These same values are golden-tested on the Rust side
+(rust/src/objective/quadratic.rs) so both implementations of the App. C.1
+objective are pinned to each other through this file.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import quadratic
+from compile.configs import QUAD_DIM
+
+
+def test_sigma_endpoints_and_monotone():
+    s = np.asarray(quadratic.sigmas())
+    assert s.shape == (QUAD_DIM,)
+    np.testing.assert_allclose(s[0], 1.0 / QUAD_DIM, rtol=1e-6)
+    np.testing.assert_allclose(s[-1], 1.0, rtol=2e-4)
+    assert np.all(np.diff(s) > 0)
+
+
+def test_condition_number_is_d():
+    s = np.asarray(quadratic.sigmas())
+    np.testing.assert_allclose(s[-1] / s[0], QUAD_DIM, rtol=1e-4)
+
+
+def test_loss_at_unit_vectors():
+    s = np.asarray(quadratic.sigmas())
+    for i in [0, 17, QUAD_DIM - 1]:
+        x = jnp.zeros(QUAD_DIM).at[i].set(2.0)
+        np.testing.assert_allclose(float(quadratic.quad_loss(x)[0]), 4.0 * s[i], rtol=1e-5)
+
+
+def test_grad_matches_autodiff():
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(QUAD_DIM), jnp.float32)
+    got = quadratic.quad_grad(x)[0]
+    want = jax.grad(lambda v: quadratic.quad_loss(v)[0])(x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+def test_minimum_at_origin():
+    assert float(quadratic.quad_loss(jnp.zeros(QUAD_DIM))[0]) == 0.0
+    x = jnp.full((QUAD_DIM,), 0.1)
+    assert float(quadratic.quad_loss(x)[0]) > 0.0
+
+
+def test_golden_value_for_rust_crosscheck():
+    """x_i = 1 for all i: f = sum(sigmas). Pinned so Rust can assert the
+    same constant (see rust objective::quadratic tests)."""
+    x = jnp.ones(QUAD_DIM)
+    total = float(quadratic.quad_loss(x)[0])
+    # geometric series sum: (1/d) * (r^d - 1)/(r - 1), r = d^(1/(d-1))
+    d = QUAD_DIM
+    r = d ** (1.0 / (d - 1))
+    want = (1.0 / d) * (r**d - 1.0) / (r - 1.0)
+    np.testing.assert_allclose(total, want, rtol=1e-4)

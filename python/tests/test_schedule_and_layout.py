@@ -1,0 +1,70 @@
+"""Cross-language pins: the Rust BetaSchedule and the exported preset
+layouts must agree with the python-side definitions (the paper's §3.4
+formula and the manifest contract)."""
+
+import math
+
+import pytest
+
+from compile import configs, model
+
+
+def beta_warmup(t, beta_final=0.99, total=20_000):
+    """Reference implementation of the §3.4 schedule (mirrors
+    rust/src/optimizer/schedule.rs — keep in sync)."""
+    s = total / 20_000.0
+    t1, t2, w = 200 * s, 2000 * s, 1800 * s
+    if t <= t1:
+        return 0.1
+    if t <= t2:
+        r = (t - t1) / w
+        return beta_final - (beta_final - 0.1) / (1 + 8 * r**1.8) ** 3
+    return beta_final
+
+
+def test_warmup_paper_breakpoints():
+    assert beta_warmup(0) == 0.1
+    assert beta_warmup(200) == 0.1
+    # at the end of the ramp the deviation from beta_final is (bf-0.1)/9^3
+    assert abs(beta_warmup(2000) - (0.99 - 0.89 / 729)) < 1e-9
+    assert beta_warmup(2001) == 0.99
+
+
+def test_warmup_monotone():
+    prev = 0.0
+    for t in range(0, 20_000, 50):
+        b = beta_warmup(t)
+        assert b >= prev - 1e-12
+        prev = b
+
+
+def test_warmup_10k_halves_intervals():
+    assert beta_warmup(100, total=10_000) == 0.1
+    assert beta_warmup(150, total=10_000) > 0.1
+    assert beta_warmup(1001, total=10_000) == 0.99
+
+
+@pytest.mark.parametrize("preset", ["nano", "tiny", "small", "medium"])
+def test_every_preset_layout_is_contiguous(preset):
+    cfg = configs.get(preset)
+    off = 0
+    for name, shape, o in model.layout(cfg):
+        assert o == off, name
+        off += math.prod(shape)
+    assert off == model.d_raw(cfg)
+    assert model.d_pad(cfg) % model.PAD_QUANTUM == 0
+
+
+@pytest.mark.parametrize("preset", ["nano", "tiny", "small", "medium"])
+def test_param_counts_are_ordered(preset):
+    # the preset ladder must be strictly increasing in d
+    order = ["nano", "tiny", "small", "medium", "xl"]
+    cfg = configs.get(preset)
+    nxt = order[order.index(preset) + 1]
+    assert model.d_raw(cfg) < model.d_raw(configs.get(nxt))
+
+
+def test_vocab_large_enough_for_task_layout():
+    # rust/src/data/vocab.rs requires CONTENT_START + 16 < vocab
+    for name in ["nano", "tiny", "small", "medium", "xl"]:
+        assert configs.get(name).vocab > 12 + 16

@@ -1,0 +1,189 @@
+"""Step-program semantics: each fused HLO step must implement Algorithm 1
+(and the baselines) exactly, verified against straight-line jnp references
+that do not share code with the Pallas path."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import configs, model, steps
+from compile.kernels import ref
+
+CFG = configs.get("nano")
+
+
+def batch(seed=0):
+    rng = np.random.default_rng(seed)
+    ids = jnp.asarray(rng.integers(0, CFG.vocab, (CFG.batch, CFG.seq_len)), jnp.int32)
+    tgt = jnp.asarray(rng.integers(0, CFG.vocab, (CFG.batch, CFG.seq_len)), jnp.int32)
+    mask = jnp.zeros((CFG.batch, CFG.seq_len), jnp.float32).at[:, -1].set(1.0)
+    return ids, tgt, mask
+
+
+def init_state(seed=0):
+    params = model.init_flat(CFG, jax.random.PRNGKey(seed))
+    m = steps._sample_u(CFG, jnp.int32(seed + 1))
+    return params, m
+
+
+THETA, BETA, ETA, LAM = 1.35, 0.9, 1e-3, 1e-3
+
+
+def conmezo_reference(params, m, seed, ids, tgt, mask):
+    """Straight-line Algorithm 1 with the jnp oracle ops only."""
+    cfg = dataclasses.replace(CFG, use_pallas=False)
+    u = steps._sample_u(CFG, seed)
+    z = ref.cone_direction_ref(m, u, jnp.float32(THETA), model.d_raw(CFG))
+    lp = model.loss(cfg, params + LAM * z, ids, tgt, mask)
+    lm = model.loss(cfg, params - LAM * z, ids, tgt, mask)
+    g = (lp - lm) / (2 * LAM)
+    xn, mn = ref.zo_update_ref(params, m, z, g, ETA, BETA)
+    return xn, mn, lp, lm, g
+
+
+def test_conmezo_step_matches_reference():
+    params, m = init_state()
+    ids, tgt, mask = batch()
+    seed = jnp.int32(42)
+    got = steps.conmezo_step(
+        CFG, params, m, seed,
+        jnp.float32(THETA), jnp.float32(BETA), jnp.float32(ETA), jnp.float32(LAM),
+        ids, tgt, mask,
+    )
+    want = conmezo_reference(params, m, seed, ids, tgt, mask)
+    for g_, w_, name in zip(got, want, ["params", "m", "lp", "lm", "g"]):
+        np.testing.assert_allclose(
+            np.asarray(g_), np.asarray(w_), rtol=1e-3, atol=1e-4, err_msg=name
+        )
+
+
+def test_conmezo_step_momentum_pads_stay_zero():
+    params, m = init_state()
+    ids, tgt, mask = batch()
+    xn, mn, *_ = steps.conmezo_step(
+        CFG, params, m, jnp.int32(7),
+        jnp.float32(THETA), jnp.float32(BETA), jnp.float32(ETA), jnp.float32(LAM),
+        ids, tgt, mask,
+    )
+    r = model.d_raw(CFG)
+    assert np.all(np.asarray(mn[r:]) == 0.0)
+    assert np.all(np.asarray(xn[r:]) == np.asarray(params[r:]))
+
+
+def test_conmezo_step_seed_replay_deterministic():
+    params, m = init_state()
+    ids, tgt, mask = batch()
+    args = (jnp.float32(THETA), jnp.float32(BETA), jnp.float32(ETA), jnp.float32(LAM), ids, tgt, mask)
+    a = steps.conmezo_step(CFG, params, m, jnp.int32(9), *args)
+    b = steps.conmezo_step(CFG, params, m, jnp.int32(9), *args)
+    c = steps.conmezo_step(CFG, params, m, jnp.int32(10), *args)
+    np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[0]))
+    assert not np.array_equal(np.asarray(a[0]), np.asarray(c[0]))
+
+
+def test_mezo_step_matches_two_point_identity():
+    """x' must equal x - eta*g*z with g from the returned losses."""
+    params, _ = init_state()
+    ids, tgt, mask = batch()
+    seed = jnp.int32(5)
+    xn, lp, lm, g = steps.mezo_step(
+        CFG, params, seed, jnp.float32(ETA), jnp.float32(LAM), ids, tgt, mask
+    )
+    z = steps._sample_u(CFG, seed)
+    np.testing.assert_allclose(float(g), (float(lp) - float(lm)) / (2 * LAM), rtol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(xn), np.asarray(params - ETA * g * z), rtol=1e-5, atol=1e-7
+    )
+
+
+def test_mezo_momentum_step_uses_momentum_as_update():
+    params, m = init_state()
+    ids, tgt, mask = batch()
+    seed = jnp.int32(11)
+    xn, mn, lp, lm, g = steps.mezo_momentum_step(
+        CFG, params, m, seed, jnp.float32(BETA), jnp.float32(ETA), jnp.float32(LAM),
+        ids, tgt, mask,
+    )
+    z = steps._sample_u(CFG, seed)
+    m_want = BETA * m + (1 - BETA) * g * z
+    np.testing.assert_allclose(np.asarray(mn), np.asarray(m_want), rtol=1e-4, atol=2e-6)
+    np.testing.assert_allclose(
+        np.asarray(xn), np.asarray(params - ETA * m_want), rtol=1e-5, atol=1e-7
+    )
+
+
+def test_two_point_consistent_with_loss():
+    params, _ = init_state()
+    ids, tgt, mask = batch()
+    z = steps._sample_u(CFG, jnp.int32(3))
+    lp, lm = steps.two_point(CFG, params, z, jnp.float32(LAM), ids, tgt, mask)
+    cfg = dataclasses.replace(CFG, use_pallas=False)
+    np.testing.assert_allclose(
+        float(lp), float(model.loss(cfg, params + LAM * z, ids, tgt, mask)), rtol=5e-5
+    )
+    np.testing.assert_allclose(
+        float(lm), float(model.loss(cfg, params - LAM * z, ids, tgt, mask)), rtol=5e-5
+    )
+
+
+def test_sample_u_moments():
+    u = steps._sample_u(CFG, jnp.int32(0))
+    r = model.d_raw(CFG)
+    body = np.asarray(u[:r])
+    assert abs(body.mean()) < 0.05
+    assert abs(body.std() - 1.0) < 0.05
+    assert np.all(np.asarray(u[r:]) == 0.0)
+
+
+def test_fo_sgd_step_descends():
+    params, _ = init_state()
+    ids, tgt, mask = batch()
+    l0 = None
+    for _ in range(3):
+        params, l = steps.fo_sgd_step(CFG, params, jnp.float32(0.5), ids, tgt, mask)
+        if l0 is None:
+            l0 = float(l)
+    _, l_final = steps.fo_sgd_step(CFG, params, jnp.float32(0.0), ids, tgt, mask)
+    assert float(l_final) < l0
+
+
+def test_fo_adamw_step_matches_manual_math():
+    params, _ = init_state()
+    ids, tgt, mask = batch()
+    d = model.d_pad(CFG)
+    mu = jnp.zeros(d)
+    nu = jnp.zeros(d)
+    cfg = dataclasses.replace(CFG, use_pallas=False)
+    l, grad = jax.value_and_grad(lambda p: model.loss(cfg, p, ids, tgt, mask))(params)
+    xn, mu_n, nu_n, l_got = steps.fo_adamw_step(
+        CFG, params, mu, nu, jnp.float32(1.0), jnp.float32(1e-3), ids, tgt, mask
+    )
+    np.testing.assert_allclose(float(l_got), float(l), rtol=1e-5)
+    mu_want = (1 - steps.ADAM_B1) * grad
+    np.testing.assert_allclose(np.asarray(mu_n), np.asarray(mu_want), rtol=1e-5, atol=1e-8)
+    mu_hat = mu_want / (1 - steps.ADAM_B1)
+    nu_hat = (1 - steps.ADAM_B2) * jnp.square(grad) / (1 - steps.ADAM_B2)
+    x_want = params - 1e-3 * mu_hat / (jnp.sqrt(nu_hat) + steps.ADAM_EPS)
+    np.testing.assert_allclose(np.asarray(xn), np.asarray(x_want), rtol=1e-4, atol=1e-7)
+
+
+def test_grad_cos2_bounds_and_self_alignment():
+    params, _ = init_state()
+    ids, tgt, mask = batch()
+    cfg = dataclasses.replace(CFG, use_pallas=False)
+    _, grad = jax.value_and_grad(lambda p: model.loss(cfg, p, ids, tgt, mask))(params)
+    grad = model.mask_pad(cfg, grad)
+    cos2, _ = steps.grad_cos2(CFG, params, grad, ids, tgt, mask)
+    np.testing.assert_allclose(float(cos2), 1.0, rtol=1e-4)
+    u = steps._sample_u(CFG, jnp.int32(123))
+    cos2_rand, _ = steps.grad_cos2(CFG, params, u, ids, tgt, mask)
+    assert 0.0 <= float(cos2_rand) < 0.05  # ~1/d in expectation
+
+
+def test_init_params_program_matches_model_init():
+    got = steps.init_params(CFG, jnp.int32(4))[0]
+    want = model.init_flat(CFG, jax.random.PRNGKey(jnp.uint32(4)))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

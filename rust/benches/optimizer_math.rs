@@ -1,0 +1,103 @@
+//! L3 host-kernel benchmarks: the vecmath flat-buffer ops against their
+//! memory-bandwidth roofline, plus full composed-mode optimizer steps on
+//! the native quadratic. `cargo bench --bench optimizer_math`.
+
+use conmezo::bench::{consume, write_results, Bencher};
+use conmezo::objective::NativeQuadratic;
+use conmezo::optimizer::{self, BetaSchedule, ZoOptimizer};
+use conmezo::util::rng::Xoshiro256pp;
+use conmezo::vecmath;
+
+fn randv(n: usize, seed: u64) -> Vec<f32> {
+    let mut r = Xoshiro256pp::seed_from_u64(seed);
+    let mut v = vec![0f32; n];
+    r.fill_normal_f32(&mut v);
+    v
+}
+
+fn main() -> anyhow::Result<()> {
+    conmezo::runtime::enable_flush_to_zero();
+    let b = Bencher::default();
+    let mut results = Vec::new();
+
+    for d in [65_536usize, 1 << 20, 8 << 20] {
+        let x = randv(d, 1);
+        let mut y = randv(d, 2);
+        let m = randv(d, 3);
+        let u = randv(d, 4);
+        let mut z = vec![0f32; d];
+        let label = |op: &str| format!("vecmath/{op}/d={d}");
+
+        let r = b.run_items(&label("dot"), Some(d as f64), &mut || {
+            consume(vecmath::dot(&x, &y));
+        });
+        println!("{}", r.report());
+        results.push(r);
+
+        let r = b.run_items(&label("axpy"), Some(d as f64), &mut || {
+            vecmath::axpy(1e-6, &x, &mut y);
+        });
+        println!("{}", r.report());
+        results.push(r);
+
+        let r = b.run_items(&label("cone_direction"), Some(d as f64), &mut || {
+            vecmath::cone_direction(&m, &u, 1.35, d, &mut z);
+        });
+        println!("{}", r.report());
+        results.push(r);
+
+        let mut xm = x.clone();
+        let mut mm = m.clone();
+        let r = b.run_items(&label("zo_update_fused"), Some(d as f64), &mut || {
+            vecmath::zo_update(&mut xm, &mut mm, &u, 0.5, 1e-6, 0.99);
+        });
+        println!("{}", r.report());
+        results.push(r);
+
+        // unfused reference: two separate passes (what the fusion saves)
+        let mut x2 = x.clone();
+        let mut m2 = m.clone();
+        let r = b.run_items(&label("zo_update_unfused"), Some(d as f64), &mut || {
+            vecmath::axpy(-1e-6 * 0.5, &u, &mut x2);
+            for i in 0..d {
+                m2[i] = 0.99 * m2[i] + 0.01 * 0.5 * u[i];
+            }
+        });
+        println!("{}", r.report());
+        results.push(r);
+
+        // direction regeneration (the seed-replay cost)
+        let mut rng = Xoshiro256pp::seed_from_u64(9);
+        let r = b.run_items(&label("sample_normal"), Some(d as f64), &mut || {
+            rng.fill_normal_f32(&mut z);
+        });
+        println!("{}", r.report());
+        results.push(r);
+    }
+
+    // full composed steps on the Fig. 3 quadratic
+    let d = 1000;
+    for name in ["mezo", "conmezo", "zo_adamm", "hizoo", "mezo_svrg"] {
+        let mut opt: Box<dyn ZoOptimizer> = optimizer::by_name(
+            name,
+            d,
+            1e-3,
+            1e-2,
+            1.35,
+            BetaSchedule::Constant(0.99),
+            &[(0, vec![d / 8, 8])],
+        )?;
+        let mut obj = NativeQuadratic::new(d);
+        let mut x = randv(d, 7);
+        let mut t = 0usize;
+        let r = b.run_items(&format!("quad_step/{name}/d={d}"), Some(1.0), &mut || {
+            opt.step(&mut x, &mut obj, t, 5).unwrap();
+            t += 1;
+        });
+        println!("{}", r.report());
+        results.push(r);
+    }
+
+    write_results("optimizer_math.jsonl", &results)?;
+    Ok(())
+}

@@ -1,0 +1,101 @@
+//! End-to-end step latency through the PJRT runtime, per preset and
+//! engine — the L2/L3 boundary measurement backing EXPERIMENTS.md §Perf.
+//!
+//! Measures: fused conmezo/mezo step, composed two-point path, loss-only
+//! forward, eval, and the `loss_pallas` ablation (Pallas attention/LN vs
+//! the XLA-fused default). `cargo bench --bench step_latency [presets]`.
+
+use conmezo::bench::{write_results, Bencher};
+use conmezo::coordinator::{FusedConMeZo, FusedMezo};
+use conmezo::data::{spec, TaskGen, TrainSampler};
+use conmezo::objective::{BatchSource, HloObjective, Objective};
+use conmezo::runtime::{lit_f32, lit_vec_f32, Arg, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::open_default()?;
+    // cargo bench passes flags like --bench; keep only bare preset names
+    let args: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with('-')).collect();
+    let presets: Vec<String> = if args.is_empty() {
+        vec!["nano".into(), "tiny".into(), "small".into()]
+    } else {
+        args
+    };
+    let b = Bencher::quick();
+    let mut results = Vec::new();
+
+    for preset in &presets {
+        let meta = rt.preset(preset)?.clone();
+        let gen = TaskGen::new(spec("sst2").unwrap(), meta.vocab, meta.seq_len);
+        let mut sampler = TrainSampler::new(gen.dataset(64, 1), meta.batch, meta.seq_len, 1, 0);
+        let batch = sampler.next_batch();
+        let init = rt.load_kind(preset, "init")?;
+        let mut params = lit_vec_f32(&init.call(&[Arg::I32(1)])?[0])?;
+        let d = meta.d_pad;
+        let flops_per_fwd = 2.0 * meta.d_raw as f64 * (meta.batch * meta.seq_len) as f64;
+
+        // loss-only forward
+        let loss_prog = rt.load_kind(preset, "loss")?;
+        let dims = vec![meta.batch, meta.seq_len];
+        let r = b.run_items(&format!("{preset}/loss_fwd"), Some(flops_per_fwd), &mut || {
+            let outs = loss_prog
+                .call(&[
+                    Arg::VecF32(&params),
+                    Arg::TensorI32(&batch.input_ids, dims.clone()),
+                    Arg::TensorI32(&batch.targets, dims.clone()),
+                    Arg::TensorF32(&batch.mask, dims.clone()),
+                ])
+                .unwrap();
+            let _ = lit_f32(&outs[0]).unwrap();
+        });
+        println!("{}", r.report());
+        results.push(r);
+
+        // pallas-attention ablation (same math, L1 kernels inside)
+        if let Ok(pl) = rt.load_kind(preset, "loss_pallas") {
+            let r = b.run_items(&format!("{preset}/loss_fwd_pallas"), Some(flops_per_fwd), &mut || {
+                let outs = pl
+                    .call(&[
+                        Arg::VecF32(&params),
+                        Arg::TensorI32(&batch.input_ids, dims.clone()),
+                        Arg::TensorI32(&batch.targets, dims.clone()),
+                        Arg::TensorF32(&batch.mask, dims.clone()),
+                    ])
+                    .unwrap();
+                let _ = lit_f32(&outs[0]).unwrap();
+            });
+            println!("{}", r.report());
+            results.push(r);
+        }
+
+        // fused ZO steps
+        let mut con = FusedConMeZo::new(&rt, preset, 1.35)?;
+        let mut t = 0i32;
+        let r = b.run_items(&format!("{preset}/conmezo_fused_step"), Some(2.0 * flops_per_fwd), &mut || {
+            con.step(&mut params, &batch, t, 0.99, 1e-5, 1e-3).unwrap();
+            t += 1;
+        });
+        println!("{}", r.report());
+        results.push(r);
+
+        let mut mz = FusedMezo::new(&rt, preset)?;
+        let r = b.run_items(&format!("{preset}/mezo_fused_step"), Some(2.0 * flops_per_fwd), &mut || {
+            mz.step(&mut params, &batch, t, 1e-5, 1e-3).unwrap();
+            t += 1;
+        });
+        println!("{}", r.report());
+        results.push(r);
+
+        // composed two-point path (host-held direction)
+        let sampler2 = TrainSampler::new(gen.dataset(64, 1), meta.batch, meta.seq_len, 1, 0);
+        let mut obj = HloObjective::new(&rt, preset, Box::new(sampler2))?;
+        let z = vec![0.01f32; d];
+        let r = b.run_items(&format!("{preset}/composed_two_point"), Some(2.0 * flops_per_fwd), &mut || {
+            let _ = obj.two_point(&params, &z, 1e-3).unwrap();
+        });
+        println!("{}", r.report());
+        results.push(r);
+    }
+
+    write_results("step_latency.jsonl", &results)?;
+    Ok(())
+}

@@ -1,0 +1,43 @@
+//! Table 3 micro-benchmark: wall-clock per optimizer step, loop-based MeZO
+//! (4 RNG regenerations, tensor-by-tensor walk) vs vectorized MeZO vs fused
+//! ConMeZO. The accuracy-side version lives in `repro table3`; this target
+//! isolates the stepping machinery with identical data.
+//!
+//! `cargo bench --bench table3_wallclock [preset]`
+
+use conmezo::bench::{write_results, Bencher};
+use conmezo::coordinator::{Mode, TrainConfig, Trainer};
+use conmezo::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::open_default()?;
+    let preset = std::env::args().skip(1).find(|a| !a.starts_with('-')).unwrap_or_else(|| "tiny".to_string());
+    let b = Bencher::quick();
+    let mut results = Vec::new();
+
+    for (label, opt, mode) in [
+        ("mezo_loop(4 rng regens)", "mezo_loop", Mode::Composed),
+        ("mezo_vectorized", "mezo", Mode::Fused),
+        ("conmezo_fused", "conmezo", Mode::Fused),
+        ("mezo_composed", "mezo", Mode::Composed),
+        ("conmezo_composed", "conmezo", Mode::Composed),
+    ] {
+        let mut cfg = TrainConfig::preset(&preset, "sst2", opt);
+        cfg.mode = mode;
+        cfg.steps = 1;
+        cfg.eta = 1e-5;
+        cfg.eval_every = usize::MAX / 2;
+        cfg.log_every = usize::MAX / 2;
+        let mut tr = Trainer::new(&rt, cfg)?;
+        tr.step(0)?; // compile + warm
+        let mut t = 1usize;
+        let r = b.run_items(&format!("{preset}/{label}"), Some(1.0), &mut || {
+            tr.step(t).unwrap();
+            t += 1;
+        });
+        println!("{}", r.report());
+        results.push(r);
+    }
+    write_results(&format!("table3_wallclock_{preset}.jsonl"), &results)?;
+    Ok(())
+}

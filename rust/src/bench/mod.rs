@@ -1,0 +1,209 @@
+//! Criterion-style benchmark harness (criterion is not vendored offline).
+//!
+//! `Bencher` warms up, runs timed samples until both a minimum sample count
+//! and a minimum wall-clock budget are met, and reports mean/σ/p50/p99 plus
+//! optional throughput. All `cargo bench` targets in `rust/benches/` are
+//! `harness = false` binaries built on this module; results are also
+//! appended as JSON lines under `results/bench/` for EXPERIMENTS.md §Perf.
+
+use std::time::Instant;
+
+use crate::util::{mean_std, percentile};
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: usize,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub p50_s: f64,
+    pub p99_s: f64,
+    /// elements (or items) processed per iteration, for throughput lines
+    pub items_per_iter: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn throughput(&self) -> Option<f64> {
+        self.items_per_iter.map(|n| n / self.mean_s)
+    }
+
+    pub fn report(&self) -> String {
+        let mut s = format!(
+            "{:<44} time: [{:>10} ± {:>9}]  p50 {:>10}  p99 {:>10}  ({} samples)",
+            self.name,
+            fmt_time(self.mean_s),
+            fmt_time(self.std_s),
+            fmt_time(self.p50_s),
+            fmt_time(self.p99_s),
+            self.samples
+        );
+        if let Some(t) = self.throughput() {
+            s.push_str(&format!("  thrpt: {}/s", fmt_count(t)));
+        }
+        s
+    }
+
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("samples", Json::num(self.samples as f64)),
+            ("mean_s", Json::num(self.mean_s)),
+            ("std_s", Json::num(self.std_s)),
+            ("p50_s", Json::num(self.p50_s)),
+            ("p99_s", Json::num(self.p99_s)),
+            (
+                "items_per_iter",
+                self.items_per_iter.map(Json::num).unwrap_or(Json::Null),
+            ),
+        ])
+    }
+}
+
+pub fn fmt_time(s: f64) -> String {
+    if !s.is_finite() {
+        "n/a".into()
+    } else if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+fn fmt_count(c: f64) -> String {
+    if c >= 1e9 {
+        format!("{:.2}G", c / 1e9)
+    } else if c >= 1e6 {
+        format!("{:.2}M", c / 1e6)
+    } else if c >= 1e3 {
+        format!("{:.2}K", c / 1e3)
+    } else {
+        format!("{c:.1}")
+    }
+}
+
+pub struct Bencher {
+    pub warmup_iters: usize,
+    pub min_samples: usize,
+    pub max_samples: usize,
+    pub min_seconds: f64,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { warmup_iters: 3, min_samples: 10, max_samples: 200, min_seconds: 1.0 }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher { warmup_iters: 1, min_samples: 5, max_samples: 30, min_seconds: 0.2 }
+    }
+
+    /// Benchmark `f`, timing each call as one sample.
+    pub fn run(&self, name: &str, mut f: impl FnMut()) -> BenchResult {
+        self.run_items(name, None, &mut f)
+    }
+
+    /// Benchmark with a throughput denominator (items processed per call).
+    pub fn run_items(&self, name: &str, items: Option<f64>, f: &mut dyn FnMut()) -> BenchResult {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while samples.len() < self.min_samples
+            || (start.elapsed().as_secs_f64() < self.min_seconds && samples.len() < self.max_samples)
+        {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_secs_f64());
+        }
+        let (mean, std) = mean_std(&samples);
+        BenchResult {
+            name: name.to_string(),
+            samples: samples.len(),
+            mean_s: mean,
+            std_s: std,
+            p50_s: percentile(&samples, 50.0),
+            p99_s: percentile(&samples, 99.0),
+            items_per_iter: items,
+        }
+    }
+}
+
+/// Append results as JSON lines to results/bench/<file>.jsonl.
+pub fn write_results(file: &str, results: &[BenchResult]) -> anyhow::Result<()> {
+    let dir = std::path::Path::new("results/bench");
+    std::fs::create_dir_all(dir)?;
+    let mut text = String::new();
+    for r in results {
+        text.push_str(&r.to_json().to_string());
+        text.push('\n');
+    }
+    std::fs::write(dir.join(file), text)?;
+    Ok(())
+}
+
+/// Prevent the optimizer from eliding a computed value (black_box stand-in).
+#[inline]
+pub fn consume<T>(x: T) -> T {
+    unsafe { std::ptr::read_volatile(&x as *const T) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collects_samples_and_stats() {
+        let b = Bencher { warmup_iters: 1, min_samples: 8, max_samples: 16, min_seconds: 0.0 };
+        let mut acc = 0u64;
+        let r = b.run("spin", || {
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(i);
+            }
+        });
+        assert!(r.samples >= 8);
+        assert!(r.mean_s > 0.0);
+        assert!(r.p50_s > 0.0 && r.p99_s >= r.p50_s);
+        let _ = consume(acc);
+    }
+
+    #[test]
+    fn throughput_computed() {
+        let b = Bencher { warmup_iters: 0, min_samples: 3, max_samples: 3, min_seconds: 0.0 };
+        let r = b.run_items("t", Some(1000.0), &mut || {
+            std::thread::sleep(std::time::Duration::from_micros(100))
+        });
+        let t = r.throughput().unwrap();
+        assert!(t > 1e5 && t < 1e8, "{t}");
+    }
+
+    #[test]
+    fn time_formatting() {
+        assert_eq!(fmt_time(2.5), "2.500 s");
+        assert_eq!(fmt_time(2.5e-3), "2.500 ms");
+        assert_eq!(fmt_time(2.5e-6), "2.500 µs");
+        assert!(fmt_time(5e-9).ends_with("ns"));
+    }
+
+    #[test]
+    fn report_contains_name_and_time() {
+        let r = BenchResult {
+            name: "x".into(),
+            samples: 5,
+            mean_s: 1e-3,
+            std_s: 1e-5,
+            p50_s: 1e-3,
+            p99_s: 1.2e-3,
+            items_per_iter: Some(100.0),
+        };
+        let rep = r.report();
+        assert!(rep.contains('x') && rep.contains("ms") && rep.contains("thrpt"));
+    }
+}

@@ -1,0 +1,211 @@
+//! Binary checkpoint format for flat parameter/optimizer state.
+//!
+//! Layout (little-endian):
+//!   magic "CMZ1" | preset_len u32 | preset bytes | step u64 | n_bufs u32 |
+//!   per buf: name_len u32 | name | len u64 | f32 data |
+//!   crc32 u32 over everything after the magic
+//!
+//! CRC is checked on load; truncated or bit-flipped files are rejected —
+//! the distributed trainer relies on checkpoint+seed-log replay for worker
+//! rejoin, so silent corruption is unacceptable.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+const MAGIC: &[u8; 4] = b"CMZ1";
+
+/// CRC-32 (IEEE) with a lazily built table.
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut table = [0u32; 256];
+    for (i, t) in table.iter_mut().enumerate() {
+        let mut c = i as u32;
+        for _ in 0..8 {
+            c = if c & 1 != 0 { 0xEDB88320 ^ (c >> 1) } else { c >> 1 };
+        }
+        *t = c;
+    }
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in data {
+        crc = table[((crc ^ b as u32) & 0xFF) as usize] ^ (crc >> 8);
+    }
+    crc ^ 0xFFFF_FFFF
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Checkpoint {
+    pub preset: String,
+    pub step: u64,
+    pub buffers: BTreeMap<String, Vec<f32>>,
+}
+
+impl Checkpoint {
+    pub fn new(preset: &str, step: u64) -> Self {
+        Checkpoint { preset: preset.to_string(), step, buffers: BTreeMap::new() }
+    }
+
+    pub fn put(&mut self, name: &str, data: &[f32]) {
+        self.buffers.insert(name.to_string(), data.to_vec());
+    }
+
+    pub fn get(&self, name: &str) -> Result<&[f32]> {
+        self.buffers
+            .get(name)
+            .map(|v| v.as_slice())
+            .ok_or_else(|| anyhow::anyhow!("checkpoint missing buffer {name:?}"))
+    }
+
+    fn payload(&self) -> Vec<u8> {
+        let mut p = Vec::new();
+        p.extend((self.preset.len() as u32).to_le_bytes());
+        p.extend(self.preset.as_bytes());
+        p.extend(self.step.to_le_bytes());
+        p.extend((self.buffers.len() as u32).to_le_bytes());
+        for (name, data) in &self.buffers {
+            p.extend((name.len() as u32).to_le_bytes());
+            p.extend(name.as_bytes());
+            p.extend((data.len() as u64).to_le_bytes());
+            for v in data {
+                p.extend(v.to_le_bytes());
+            }
+        }
+        p
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let payload = self.payload();
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        f.write_all(MAGIC)?;
+        f.write_all(&payload)?;
+        f.write_all(&crc32(&payload).to_le_bytes())?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let mut bytes = Vec::new();
+        std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?
+            .read_to_end(&mut bytes)?;
+        if bytes.len() < 8 || &bytes[..4] != MAGIC {
+            bail!("{}: not a CMZ1 checkpoint", path.display());
+        }
+        let payload = &bytes[4..bytes.len() - 4];
+        let stored_crc = u32::from_le_bytes(bytes[bytes.len() - 4..].try_into().unwrap());
+        if crc32(payload) != stored_crc {
+            bail!("{}: CRC mismatch (corrupt checkpoint)", path.display());
+        }
+        let mut r = Reader { b: payload, i: 0 };
+        let plen = r.u32()? as usize;
+        let preset = String::from_utf8(r.take(plen)?.to_vec())?;
+        let step = r.u64()?;
+        let n = r.u32()? as usize;
+        let mut buffers = BTreeMap::new();
+        for _ in 0..n {
+            let nlen = r.u32()? as usize;
+            let name = String::from_utf8(r.take(nlen)?.to_vec())?;
+            let dlen = r.u64()? as usize;
+            let raw = r.take(dlen * 4)?;
+            let mut data = Vec::with_capacity(dlen);
+            for c in raw.chunks_exact(4) {
+                data.push(f32::from_le_bytes(c.try_into().unwrap()));
+            }
+            buffers.insert(name, data);
+        }
+        Ok(Checkpoint { preset, step, buffers })
+    }
+}
+
+struct Reader<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.i + n > self.b.len() {
+            bail!("truncated checkpoint");
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("conmezo_ckpt_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip() {
+        let mut c = Checkpoint::new("tiny", 1234);
+        c.put("params", &[1.0, -2.5, 3.25]);
+        c.put("momentum", &[0.0; 100]);
+        let p = tmpfile("rt.ckpt");
+        c.save(&p).unwrap();
+        let l = Checkpoint::load(&p).unwrap();
+        assert_eq!(l.preset, "tiny");
+        assert_eq!(l.step, 1234);
+        assert_eq!(l.get("params").unwrap(), &[1.0, -2.5, 3.25]);
+        assert_eq!(l.get("momentum").unwrap().len(), 100);
+        assert!(l.get("missing").is_err());
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let mut c = Checkpoint::new("tiny", 1);
+        c.put("params", &[1.0; 64]);
+        let p = tmpfile("corrupt.ckpt");
+        c.save(&p).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        std::fs::write(&p, &bytes).unwrap();
+        let err = Checkpoint::load(&p).unwrap_err().to_string();
+        assert!(err.contains("CRC"), "{err}");
+    }
+
+    #[test]
+    fn truncation_detected() {
+        let mut c = Checkpoint::new("tiny", 1);
+        c.put("params", &[1.0; 64]);
+        let p = tmpfile("trunc.ckpt");
+        c.save(&p).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(Checkpoint::load(&p).is_err());
+    }
+
+    #[test]
+    fn wrong_magic_rejected() {
+        let p = tmpfile("magic.ckpt");
+        std::fs::write(&p, b"NOPE12345678").unwrap();
+        let err = Checkpoint::load(&p).unwrap_err().to_string();
+        assert!(err.contains("not a CMZ1"), "{err}");
+    }
+
+    #[test]
+    fn crc32_known_vector() {
+        // standard test vector: crc32("123456789") = 0xCBF43926
+        assert_eq!(crc32(b"123456789"), 0xCBF43926);
+    }
+}

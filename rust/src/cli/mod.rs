@@ -1,0 +1,231 @@
+//! Declarative CLI argument parser (clap is not vendored offline).
+//!
+//! Supports subcommands, `--flag`, `--key value`, `--key=value`, repeated
+//! options, positional args, and auto-generated help text.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+    pub repeated: bool,
+    pub default: Option<&'static str>,
+}
+
+#[derive(Default, Debug)]
+pub struct Parsed {
+    pub subcommand: String,
+    opts: BTreeMap<String, Vec<String>>,
+    pub positional: Vec<String>,
+}
+
+impl Parsed {
+    pub fn flag(&self, name: &str) -> bool {
+        self.opts.contains_key(name)
+    }
+
+    pub fn value(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    pub fn values(&self, name: &str) -> Vec<&str> {
+        self.opts
+            .get(name)
+            .map(|v| v.iter().map(|s| s.as_str()).collect())
+            .unwrap_or_default()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.value(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.value(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.value(name).unwrap_or(default).to_string()
+    }
+}
+
+pub struct App {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub subcommands: Vec<(&'static str, &'static str)>,
+    pub opts: Vec<OptSpec>,
+}
+
+impl App {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        App { name, about, subcommands: Vec::new(), opts: Vec::new() }
+    }
+
+    pub fn subcommand(mut self, name: &'static str, help: &'static str) -> Self {
+        self.subcommands.push((name, help));
+        self
+    }
+
+    pub fn opt(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, takes_value: true, repeated: false, default: None });
+        self
+    }
+
+    pub fn opt_default(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, takes_value: true, repeated: false, default: Some(default) });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, takes_value: false, repeated: false, default: None });
+        self
+    }
+
+    pub fn repeated(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, takes_value: true, repeated: true, default: None });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}\n", self.name, self.about);
+        if !self.subcommands.is_empty() {
+            let _ = writeln!(s, "USAGE: {} <subcommand> [options]\n\nSUBCOMMANDS:", self.name);
+            for (n, h) in &self.subcommands {
+                let _ = writeln!(s, "  {n:<18} {h}");
+            }
+            let _ = writeln!(s);
+        }
+        let _ = writeln!(s, "OPTIONS:");
+        for o in &self.opts {
+            let meta = if o.takes_value { format!("--{} <v>", o.name) } else { format!("--{}", o.name) };
+            let def = o.default.map(|d| format!(" [default: {d}]")).unwrap_or_default();
+            let _ = writeln!(s, "  {meta:<22} {}{def}", o.help);
+        }
+        s
+    }
+
+    pub fn parse(&self, args: &[String]) -> Result<Parsed> {
+        let mut p = Parsed::default();
+        for o in &self.opts {
+            if let Some(d) = o.default {
+                p.opts.insert(o.name.to_string(), vec![d.to_string()]);
+            }
+        }
+        let mut it = args.iter().peekable();
+        // subcommand first if declared
+        if !self.subcommands.is_empty() {
+            match it.peek() {
+                Some(s) if !s.starts_with('-') => {
+                    let sub = it.next().unwrap().clone();
+                    if !self.subcommands.iter().any(|(n, _)| *n == sub) {
+                        bail!("unknown subcommand {sub:?}\n\n{}", self.usage());
+                    }
+                    p.subcommand = sub;
+                }
+                _ => {}
+            }
+        }
+        while let Some(a) = it.next() {
+            if a == "--help" || a == "-h" {
+                bail!("{}", self.usage());
+            }
+            if let Some(body) = a.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| anyhow::anyhow!("unknown option --{name}\n\n{}", self.usage()))?;
+                let val = if !spec.takes_value {
+                    if inline.is_some() {
+                        bail!("flag --{name} takes no value");
+                    }
+                    "true".to_string()
+                } else if let Some(v) = inline {
+                    v
+                } else {
+                    it.next()
+                        .ok_or_else(|| anyhow::anyhow!("option --{name} requires a value"))?
+                        .clone()
+                };
+                let entry = p.opts.entry(name.clone()).or_default();
+                if spec.repeated {
+                    // keep defaults out of repeated accumulation
+                    if spec.default.map(|d| entry.len() == 1 && entry[0] == d).unwrap_or(false) {
+                        entry.clear();
+                    }
+                    entry.push(val);
+                } else {
+                    *entry = vec![val];
+                }
+            } else {
+                p.positional.push(a.clone());
+            }
+        }
+        Ok(p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn app() -> App {
+        App::new("t", "test")
+            .subcommand("run", "run it")
+            .subcommand("list", "list things")
+            .opt_default("steps", "100", "step count")
+            .opt("config", "config path")
+            .flag("verbose", "noisy")
+            .repeated("set", "overrides")
+    }
+
+    fn sv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        let p = app().parse(&sv(&["run", "--steps", "5", "--verbose", "x.toml"])).unwrap();
+        assert_eq!(p.subcommand, "run");
+        assert_eq!(p.usize_or("steps", 0), 5);
+        assert!(p.flag("verbose"));
+        assert_eq!(p.positional, vec!["x.toml"]);
+    }
+
+    #[test]
+    fn equals_syntax_and_defaults() {
+        let p = app().parse(&sv(&["run", "--config=a.toml"])).unwrap();
+        assert_eq!(p.value("config"), Some("a.toml"));
+        assert_eq!(p.usize_or("steps", 0), 100); // default
+        assert!(!p.flag("verbose"));
+    }
+
+    #[test]
+    fn repeated_options_accumulate() {
+        let p = app().parse(&sv(&["run", "--set", "a=1", "--set", "b=2"])).unwrap();
+        assert_eq!(p.values("set"), vec!["a=1", "b=2"]);
+    }
+
+    #[test]
+    fn unknown_rejected() {
+        assert!(app().parse(&sv(&["bogus"])).is_err());
+        assert!(app().parse(&sv(&["run", "--nope"])).is_err());
+        assert!(app().parse(&sv(&["run", "--config"])).is_err());
+    }
+
+    #[test]
+    fn help_is_error_with_usage() {
+        let err = app().parse(&sv(&["--help"])).unwrap_err().to_string();
+        assert!(err.contains("SUBCOMMANDS"));
+        assert!(err.contains("--steps"));
+    }
+}

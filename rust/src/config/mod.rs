@@ -1,0 +1,352 @@
+//! Configuration substrate: a TOML-subset parser + typed access.
+//!
+//! Supported grammar (sufficient for experiment configs; no serde offline):
+//!   * `[section]` and `[section.sub]` headers
+//!   * `key = "string" | 123 | 1.5e-3 | true | false | [v, v, ...]`
+//!   * `#` comments, blank lines
+//!
+//! Values are addressed by dotted path (`"train.steps"`). The launcher layers
+//! `--set key=value` CLI overrides on top of the file (see cli module).
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    /// Parse a scalar literal the way the TOML subset does — also used for
+    /// `--set` overrides.
+    pub fn parse_scalar(s: &str) -> Result<Value> {
+        let t = s.trim();
+        if t.starts_with('"') && t.ends_with('"') && t.len() >= 2 {
+            return Ok(Value::Str(t[1..t.len() - 1].to_string()));
+        }
+        if t == "true" {
+            return Ok(Value::Bool(true));
+        }
+        if t == "false" {
+            return Ok(Value::Bool(false));
+        }
+        if t.starts_with('[') {
+            let inner = t
+                .strip_prefix('[')
+                .and_then(|x| x.strip_suffix(']'))
+                .ok_or_else(|| anyhow!("unterminated array: {t}"))?;
+            let mut vals = Vec::new();
+            if !inner.trim().is_empty() {
+                for part in split_top_level(inner) {
+                    vals.push(Value::parse_scalar(&part)?);
+                }
+            }
+            return Ok(Value::Array(vals));
+        }
+        if let Ok(i) = t.parse::<i64>() {
+            return Ok(Value::Int(i));
+        }
+        if let Ok(f) = t.parse::<f64>() {
+            return Ok(Value::Float(f));
+        }
+        // bare word -> string (ergonomic for enum-ish values: optimizer = conmezo)
+        if !t.is_empty() && t.chars().all(|c| c.is_alphanumeric() || "-_.".contains(c)) {
+            return Ok(Value::Str(t.to_string()));
+        }
+        bail!("cannot parse value: {t:?}")
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+}
+
+fn split_top_level(s: &str) -> Vec<String> {
+    let mut parts = Vec::new();
+    let mut depth = 0;
+    let mut cur = String::new();
+    let mut in_str = false;
+    for c in s.chars() {
+        match c {
+            '"' => {
+                in_str = !in_str;
+                cur.push(c);
+            }
+            '[' if !in_str => {
+                depth += 1;
+                cur.push(c);
+            }
+            ']' if !in_str => {
+                depth -= 1;
+                cur.push(c);
+            }
+            ',' if depth == 0 && !in_str => {
+                parts.push(cur.trim().to_string());
+                cur = String::new();
+            }
+            c => cur.push(c),
+        }
+    }
+    if !cur.trim().is_empty() {
+        parts.push(cur.trim().to_string());
+    }
+    parts
+}
+
+/// A flat map of dotted keys to values.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    map: BTreeMap<String, Value>,
+}
+
+impl Config {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn parse(text: &str) -> Result<Config> {
+        let mut cfg = Config::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                section = line
+                    .strip_prefix('[')
+                    .and_then(|l| l.strip_suffix(']'))
+                    .ok_or_else(|| anyhow!("line {}: bad section header {raw:?}", lineno + 1))?
+                    .trim()
+                    .to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("line {}: expected key = value, got {raw:?}", lineno + 1))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            let val = Value::parse_scalar(v)
+                .with_context(|| format!("line {}: key {key}", lineno + 1))?;
+            cfg.map.insert(key, val);
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn set(&mut self, key: &str, v: Value) {
+        self.map.insert(key.to_string(), v);
+    }
+
+    /// Apply a `key=value` override string.
+    pub fn set_from_str(&mut self, kv: &str) -> Result<()> {
+        let (k, v) = kv
+            .split_once('=')
+            .ok_or_else(|| anyhow!("override must be key=value, got {kv:?}"))?;
+        self.map.insert(k.trim().to_string(), Value::parse_scalar(v)?);
+        Ok(())
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.map.get(key)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &String> {
+        self.map.keys()
+    }
+
+    // typed getters with defaults -------------------------------------------
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        match self.map.get(key) {
+            Some(Value::Str(s)) => s.clone(),
+            _ => default.to_string(),
+        }
+    }
+
+    pub fn i64_or(&self, key: &str, default: i64) -> i64 {
+        match self.map.get(key) {
+            Some(Value::Int(i)) => *i,
+            Some(Value::Float(f)) => *f as i64,
+            _ => default,
+        }
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.i64_or(key, default as i64).max(0) as usize
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        match self.map.get(key) {
+            Some(v) => v.as_f64().unwrap_or(default),
+            None => default,
+        }
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        match self.map.get(key) {
+            Some(Value::Bool(b)) => *b,
+            _ => default,
+        }
+    }
+
+    pub fn f64_list(&self, key: &str) -> Vec<f64> {
+        match self.map.get(key) {
+            Some(Value::Array(v)) => v.iter().filter_map(|x| x.as_f64()).collect(),
+            Some(v) => v.as_f64().into_iter().collect(),
+            None => Vec::new(),
+        }
+    }
+
+    /// Emit back to TOML-subset text (round-trip tested).
+    pub fn to_toml(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let mut last_section = String::new();
+        // top-level (section-less) keys must precede any [section] header
+        let (top, sectioned): (Vec<_>, Vec<_>) =
+            self.map.iter().partition(|(k, _)| !k.contains('.'));
+        for (k, v) in top.into_iter().chain(sectioned) {
+            let (section, key) = match k.rsplit_once('.') {
+                Some((s, key)) => (s.to_string(), key.to_string()),
+                None => (String::new(), k.clone()),
+            };
+            if section != last_section {
+                if !section.is_empty() {
+                    let _ = writeln!(out, "[{section}]");
+                }
+                last_section = section;
+            }
+            let _ = writeln!(out, "{key} = {}", emit_value(v));
+        }
+        out
+    }
+}
+
+fn emit_value(v: &Value) -> String {
+    match v {
+        Value::Str(s) => format!("\"{s}\""),
+        Value::Int(i) => i.to_string(),
+        Value::Float(f) => {
+            if f.fract() == 0.0 && f.abs() < 1e15 {
+                format!("{f:.1}")
+            } else {
+                format!("{f}")
+            }
+        }
+        Value::Bool(b) => b.to_string(),
+        Value::Array(xs) => {
+            let inner: Vec<String> = xs.iter().map(emit_value).collect();
+            format!("[{}]", inner.join(", "))
+        }
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment config
+name = "table1"
+[train]
+steps = 10000
+lr = 1e-6
+optimizer = conmezo
+warmup = true
+thetas = [1.35, 1.4]
+[model]
+preset = "tiny"
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.str_or("name", ""), "table1");
+        assert_eq!(c.i64_or("train.steps", 0), 10000);
+        assert!((c.f64_or("train.lr", 0.0) - 1e-6).abs() < 1e-18);
+        assert_eq!(c.str_or("train.optimizer", ""), "conmezo");
+        assert!(c.bool_or("train.warmup", false));
+        assert_eq!(c.f64_list("train.thetas"), vec![1.35, 1.4]);
+        assert_eq!(c.str_or("model.preset", ""), "tiny");
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.usize_or("x", 7), 7);
+        assert_eq!(c.str_or("y", "z"), "z");
+    }
+
+    #[test]
+    fn overrides() {
+        let mut c = Config::parse(SAMPLE).unwrap();
+        c.set_from_str("train.steps=99").unwrap();
+        c.set_from_str("model.preset=\"small\"").unwrap();
+        assert_eq!(c.i64_or("train.steps", 0), 99);
+        assert_eq!(c.str_or("model.preset", ""), "small");
+    }
+
+    #[test]
+    fn roundtrip_through_toml() {
+        let c = Config::parse(SAMPLE).unwrap();
+        let c2 = Config::parse(&c.to_toml()).unwrap();
+        for k in c.keys() {
+            assert_eq!(c.get(k), c2.get(k), "key {k}");
+        }
+    }
+
+    #[test]
+    fn comments_inside_strings_preserved() {
+        let c = Config::parse("k = \"a#b\" # real comment").unwrap();
+        assert_eq!(c.str_or("k", ""), "a#b");
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(Config::parse("novalue").is_err());
+        assert!(Config::parse("[unclosed").is_err());
+        assert!(Config::parse("k = [1, ").is_err());
+    }
+
+    #[test]
+    fn nested_arrays() {
+        let c = Config::parse("k = [[1, 2], [3]]").unwrap();
+        match c.get("k") {
+            Some(Value::Array(outer)) => {
+                assert_eq!(outer.len(), 2);
+                assert_eq!(outer[0], Value::Array(vec![Value::Int(1), Value::Int(2)]));
+            }
+            other => panic!("expected array, got {other:?}"),
+        }
+    }
+}

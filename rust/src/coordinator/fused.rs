@@ -1,0 +1,236 @@
+//! Fused execution engines: one HLO program per optimizer step.
+//!
+//! This is the paper's §3.3 hot path — direction sampling (seed replay),
+//! cone construction (Pallas), both forward passes and the fused
+//! parameter+momentum update all execute inside a single XLA program; Rust
+//! only moves the state buffers and O(1) scalars. Semantically equivalent
+//! to the composed-mode optimizers (cross-checked in rust/tests/).
+
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::objective::Batch;
+use crate::runtime::{lit_copy_f32, lit_f32, lit_vec_f32, Arg, Program, Runtime};
+
+/// Outcome of one fused step.
+#[derive(Clone, Copy, Debug)]
+pub struct FusedStats {
+    pub loss: f64,
+    pub proj_grad: f64,
+}
+
+fn batch_args(batch: &Batch) -> [Arg<'_>; 3] {
+    let dims = [batch.batch, batch.seq];
+    [
+        Arg::TensorI32(&batch.input_ids, vec![dims[0], dims[1]]),
+        Arg::TensorI32(&batch.targets, vec![dims[0], dims[1]]),
+        Arg::TensorF32(&batch.mask, vec![dims[0], dims[1]]),
+    ]
+}
+
+/// Fused ConMeZO (Algorithm 1): `{preset}_conmezo_step`.
+pub struct FusedConMeZo {
+    prog: Rc<Program>,
+    sample_u: Rc<Program>,
+    /// momentum buffer (device round-trips through host each step on this
+    /// CPU testbed; see EXPERIMENTS.md §Perf for the measured overhead)
+    pub m: Vec<f32>,
+    pub theta: f32,
+    started: bool,
+}
+
+impl FusedConMeZo {
+    pub fn new(rt: &Runtime, preset: &str, theta: f32) -> Result<Self> {
+        let meta = rt.preset(preset)?;
+        Ok(FusedConMeZo {
+            prog: rt.load_kind(preset, "conmezo_step")?,
+            sample_u: rt.load_kind(preset, "sample_u")?,
+            m: vec![0.0; meta.d_pad],
+            theta,
+            started: false,
+        })
+    }
+
+    pub fn step(
+        &mut self,
+        params: &mut [f32],
+        batch: &Batch,
+        seed: i32,
+        beta: f32,
+        eta: f32,
+        lam: f32,
+    ) -> Result<FusedStats> {
+        if !self.started {
+            // Algorithm 1: m_0 <- u_0, regenerated from the same seed the
+            // step program will use for u at t=0
+            let outs = self.sample_u.call(&[Arg::I32(seed)])?;
+            self.m = lit_vec_f32(&outs[0])?;
+            self.started = true;
+        }
+        let [ids, tgt, mask] = batch_args(batch);
+        let outs = self.prog.call(&[
+            Arg::VecF32(params),
+            Arg::VecF32(&self.m),
+            Arg::I32(seed),
+            Arg::F32(self.theta),
+            Arg::F32(beta),
+            Arg::F32(eta),
+            Arg::F32(lam),
+            ids,
+            tgt,
+            mask,
+        ])?;
+        lit_copy_f32(&outs[0], params)?;
+        lit_copy_f32(&outs[1], &mut self.m)?;
+        let lp = lit_f32(&outs[2])? as f64;
+        let lm = lit_f32(&outs[3])? as f64;
+        let g = lit_f32(&outs[4])? as f64;
+        Ok(FusedStats { loss: 0.5 * (lp + lm), proj_grad: g })
+    }
+}
+
+/// Fused MeZO: `{preset}_mezo_step`.
+pub struct FusedMezo {
+    prog: Rc<Program>,
+}
+
+impl FusedMezo {
+    pub fn new(rt: &Runtime, preset: &str) -> Result<Self> {
+        Ok(FusedMezo { prog: rt.load_kind(preset, "mezo_step")? })
+    }
+
+    pub fn step(&mut self, params: &mut [f32], batch: &Batch, seed: i32, eta: f32, lam: f32) -> Result<FusedStats> {
+        let [ids, tgt, mask] = batch_args(batch);
+        let outs = self.prog.call(&[
+            Arg::VecF32(params),
+            Arg::I32(seed),
+            Arg::F32(eta),
+            Arg::F32(lam),
+            ids,
+            tgt,
+            mask,
+        ])?;
+        lit_copy_f32(&outs[0], params)?;
+        let lp = lit_f32(&outs[1])? as f64;
+        let lm = lit_f32(&outs[2])? as f64;
+        let g = lit_f32(&outs[3])? as f64;
+        Ok(FusedStats { loss: 0.5 * (lp + lm), proj_grad: g })
+    }
+}
+
+/// Fused MeZO+Momentum: `{preset}_mezo_momentum_step`.
+pub struct FusedMezoMomentum {
+    prog: Rc<Program>,
+    pub m: Vec<f32>,
+}
+
+impl FusedMezoMomentum {
+    pub fn new(rt: &Runtime, preset: &str) -> Result<Self> {
+        let meta = rt.preset(preset)?;
+        Ok(FusedMezoMomentum { prog: rt.load_kind(preset, "mezo_momentum_step")?, m: vec![0.0; meta.d_pad] })
+    }
+
+    pub fn step(
+        &mut self,
+        params: &mut [f32],
+        batch: &Batch,
+        seed: i32,
+        beta: f32,
+        eta: f32,
+        lam: f32,
+    ) -> Result<FusedStats> {
+        let [ids, tgt, mask] = batch_args(batch);
+        let outs = self.prog.call(&[
+            Arg::VecF32(params),
+            Arg::VecF32(&self.m),
+            Arg::I32(seed),
+            Arg::F32(beta),
+            Arg::F32(eta),
+            Arg::F32(lam),
+            ids,
+            tgt,
+            mask,
+        ])?;
+        lit_copy_f32(&outs[0], params)?;
+        lit_copy_f32(&outs[1], &mut self.m)?;
+        let lp = lit_f32(&outs[2])? as f64;
+        let lm = lit_f32(&outs[3])? as f64;
+        let g = lit_f32(&outs[4])? as f64;
+        Ok(FusedStats { loss: 0.5 * (lp + lm), proj_grad: g })
+    }
+}
+
+/// First-order engines (Tables 1 & 9, Fig. 4): backprop was traced at
+/// build time by `jax.grad`; at runtime these are ordinary programs.
+pub struct FoSgd {
+    prog: Rc<Program>,
+}
+
+impl FoSgd {
+    pub fn new(rt: &Runtime, preset: &str) -> Result<Self> {
+        Ok(FoSgd { prog: rt.load_kind(preset, "fo_sgd_step")? })
+    }
+
+    pub fn step(&mut self, params: &mut [f32], batch: &Batch, eta: f32) -> Result<f64> {
+        let [ids, tgt, mask] = batch_args(batch);
+        let outs = self.prog.call(&[Arg::VecF32(params), Arg::F32(eta), ids, tgt, mask])?;
+        lit_copy_f32(&outs[0], params)?;
+        Ok(lit_f32(&outs[1])? as f64)
+    }
+}
+
+pub struct FoAdamW {
+    prog: Rc<Program>,
+    pub mu: Vec<f32>,
+    pub nu: Vec<f32>,
+    pub t: f32,
+}
+
+impl FoAdamW {
+    pub fn new(rt: &Runtime, preset: &str) -> Result<Self> {
+        let meta = rt.preset(preset)?;
+        Ok(FoAdamW {
+            prog: rt.load_kind(preset, "fo_adamw_step")?,
+            mu: vec![0.0; meta.d_pad],
+            nu: vec![0.0; meta.d_pad],
+            t: 0.0,
+        })
+    }
+
+    pub fn step(&mut self, params: &mut [f32], batch: &Batch, eta: f32) -> Result<f64> {
+        self.t += 1.0;
+        let [ids, tgt, mask] = batch_args(batch);
+        let outs = self.prog.call(&[
+            Arg::VecF32(params),
+            Arg::VecF32(&self.mu),
+            Arg::VecF32(&self.nu),
+            Arg::F32(self.t),
+            Arg::F32(eta),
+            ids,
+            tgt,
+            mask,
+        ])?;
+        lit_copy_f32(&outs[0], params)?;
+        lit_copy_f32(&outs[1], &mut self.mu)?;
+        lit_copy_f32(&outs[2], &mut self.nu)?;
+        Ok(lit_f32(&outs[3])? as f64)
+    }
+}
+
+/// Fig. 6 probe: cos^2(m, grad f) via the AOT `grad_cos2` program.
+pub struct GradProbe {
+    prog: Rc<Program>,
+}
+
+impl GradProbe {
+    pub fn new(rt: &Runtime, preset: &str) -> Result<Self> {
+        Ok(GradProbe { prog: rt.load_kind(preset, "grad_cos2")? })
+    }
+
+    pub fn cos2(&self, params: &[f32], m: &[f32], batch: &Batch) -> Result<f64> {
+        let [ids, tgt, mask] = batch_args(batch);
+        let outs = self.prog.call(&[Arg::VecF32(params), Arg::VecF32(m), ids, tgt, mask])?;
+        Ok(lit_f32(&outs[0])? as f64)
+    }
+}

@@ -1,0 +1,130 @@
+//! Run recording: every experiment writes a structured JSON record under
+//! `results/` so tables/figures are regenerable and auditable.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+
+#[derive(Debug)]
+pub struct RunRecord {
+    pub name: String,
+    meta: Vec<(String, Json)>,
+    rows: Vec<Json>,
+}
+
+impl RunRecord {
+    pub fn new(name: &str) -> Self {
+        RunRecord { name: name.to_string(), meta: Vec::new(), rows: Vec::new() }
+    }
+
+    pub fn meta(&mut self, key: &str, v: Json) -> &mut Self {
+        self.meta.push((key.to_string(), v));
+        self
+    }
+
+    pub fn meta_str(&mut self, key: &str, v: &str) -> &mut Self {
+        self.meta(key, Json::str(v))
+    }
+
+    pub fn meta_num(&mut self, key: &str, v: f64) -> &mut Self {
+        self.meta(key, Json::num(v))
+    }
+
+    pub fn push_row(&mut self, row: Json) {
+        self.rows.push(row);
+    }
+
+    pub fn row(&mut self, pairs: Vec<(&str, Json)>) {
+        self.rows.push(Json::obj(pairs));
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut obj = vec![("name".to_string(), Json::str(&self.name))];
+        obj.extend(self.meta.iter().cloned());
+        obj.push(("rows".to_string(), Json::Arr(self.rows.clone())));
+        Json::Obj(obj.into_iter().collect())
+    }
+
+    /// Write to results/<name>.json (creating the directory).
+    pub fn save(&self) -> Result<PathBuf> {
+        self.save_in(Path::new("results"))
+    }
+
+    pub fn save_in(&self, dir: &Path) -> Result<PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{}.json", self.name));
+        std::fs::write(&path, self.to_json().to_string())?;
+        Ok(path)
+    }
+}
+
+/// Render an aligned text table (the repro binary prints paper-style rows).
+pub fn render_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let mut out = String::new();
+    let line = |cells: &[String], widths: &[usize]| -> String {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:<w$}", c, w = widths.get(i).copied().unwrap_or(8)))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    let hdr: Vec<String> = headers.iter().map(|s| s.to_string()).collect();
+    out.push_str(&line(&hdr, &widths));
+    out.push('\n');
+    out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+    out.push('\n');
+    for row in rows {
+        out.push_str(&line(row, &widths));
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_roundtrip() {
+        let dir = std::env::temp_dir().join("conmezo_metrics_tests");
+        let mut r = RunRecord::new("unit_test_run");
+        r.meta_str("task", "sst2").meta_num("steps", 100.0);
+        r.row(vec![("step", Json::num(1.0)), ("loss", Json::num(0.5))]);
+        r.row(vec![("step", Json::num(2.0)), ("loss", Json::num(0.4))]);
+        let path = r.save_in(&dir).unwrap();
+        let text = std::fs::read_to_string(path).unwrap();
+        let v = Json::parse(&text).unwrap();
+        assert_eq!(v.get("task").unwrap().as_str(), Some("sst2"));
+        assert_eq!(v.get("rows").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let t = render_table(
+            &["task", "MeZO", "ConMeZO"],
+            &[
+                vec!["sst2".into(), "92.8".into(), "93.5".into()],
+                vec!["trec-long-name".into(), "88.4".into(), "90.0".into()],
+            ],
+        );
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].starts_with("task"));
+        assert!(lines[2].contains("92.8"));
+    }
+}

@@ -1,0 +1,14 @@
+//! L3 coordination: training orchestration (single-node + distributed),
+//! fused-step engines, metrics. See DESIGN.md §4.
+
+pub mod distributed;
+pub mod fused;
+pub mod metrics;
+pub mod sweep;
+pub mod trainer;
+
+pub use distributed::{run_leader, run_worker, DistHypers, DistSummary, LocalCluster, ZoWorker};
+pub use fused::{FoAdamW, FoSgd, FusedConMeZo, FusedMezo, FusedMezoMomentum, GradProbe};
+pub use metrics::{render_table, RunRecord};
+pub use sweep::{run_sweep, Axis, Grid, SweepResult};
+pub use trainer::{ensure_pretrained, pretrain, pretrained_path, Evaluator, Mode, TrainConfig, TrainSummary, Trainer};

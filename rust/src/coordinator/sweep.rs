@@ -1,0 +1,260 @@
+//! Hyperparameter grid sweeps — the paper's tuning protocol (App. C.1/C.2:
+//! grids over eta x beta x theta with mean-final-objective selection).
+//!
+//! `Grid` enumerates the cartesian product of axes; `Sweep` runs a user
+//! closure per point (typically a Trainer or quadratic run), aggregates
+//! over trial seeds, and reports the argmin/argmax with the full response
+//! surface for heatmap records (Fig. 5).
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+use crate::util::mean_std;
+
+/// One named axis of the grid.
+#[derive(Clone, Debug)]
+pub struct Axis {
+    pub name: String,
+    pub values: Vec<f64>,
+}
+
+impl Axis {
+    pub fn new(name: &str, values: &[f64]) -> Axis {
+        assert!(!values.is_empty(), "axis {name} is empty");
+        Axis { name: name.to_string(), values: values.to_vec() }
+    }
+}
+
+/// A point in the grid: (axis name, value) pairs in axis order.
+pub type Point = Vec<(String, f64)>;
+
+#[derive(Clone, Debug)]
+pub struct Grid {
+    pub axes: Vec<Axis>,
+}
+
+impl Grid {
+    pub fn new(axes: Vec<Axis>) -> Grid {
+        Grid { axes }
+    }
+
+    pub fn len(&self) -> usize {
+        self.axes.iter().map(|a| a.values.len()).product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Enumerate all points in row-major order (last axis fastest).
+    pub fn points(&self) -> Vec<Point> {
+        let mut out = vec![Vec::new()];
+        for ax in &self.axes {
+            let mut next = Vec::with_capacity(out.len() * ax.values.len());
+            for p in &out {
+                for &v in &ax.values {
+                    let mut q = p.clone();
+                    q.push((ax.name.clone(), v));
+                    next.push(q);
+                }
+            }
+            out = next;
+        }
+        out
+    }
+}
+
+/// Convenience accessor on a Point.
+pub fn point_get(p: &Point, name: &str) -> f64 {
+    p.iter()
+        .find(|(n, _)| n == name)
+        .map(|(_, v)| *v)
+        .unwrap_or_else(|| panic!("point has no axis {name:?}"))
+}
+
+/// Result of one sweep cell (mean over trials).
+#[derive(Clone, Debug)]
+pub struct Cell {
+    pub point: Point,
+    pub mean: f64,
+    pub std: f64,
+    pub trials: usize,
+}
+
+/// Outcome of a sweep: every cell plus the selected optimum.
+#[derive(Clone, Debug)]
+pub struct SweepResult {
+    pub cells: Vec<Cell>,
+    pub best: Cell,
+    pub minimize: bool,
+}
+
+impl SweepResult {
+    pub fn to_json(&self) -> Json {
+        let cells: Vec<Json> = self
+            .cells
+            .iter()
+            .map(|c| {
+                let mut pairs: Vec<(&str, Json)> = Vec::new();
+                for (n, v) in &c.point {
+                    pairs.push((Box::leak(n.clone().into_boxed_str()), Json::num(*v)));
+                }
+                pairs.push(("mean", Json::num(c.mean)));
+                pairs.push(("std", Json::num(c.std)));
+                Json::obj(pairs)
+            })
+            .collect();
+        Json::obj(vec![
+            ("minimize", Json::Bool(self.minimize)),
+            ("best_mean", Json::num(self.best.mean)),
+            (
+                "best_point",
+                Json::Arr(
+                    self.best
+                        .point
+                        .iter()
+                        .map(|(n, v)| Json::obj(vec![("axis", Json::str(n.as_str())), ("value", Json::num(*v))]))
+                        .collect(),
+                ),
+            ),
+            ("cells", Json::Arr(cells)),
+        ])
+    }
+}
+
+/// Run the sweep: `objective(point, trial_seed)` returns the scalar to
+/// aggregate (lower is better when `minimize`).
+pub fn run_sweep(
+    grid: &Grid,
+    trial_seeds: &[u64],
+    minimize: bool,
+    mut objective: impl FnMut(&Point, u64) -> Result<f64>,
+) -> Result<SweepResult> {
+    assert!(!trial_seeds.is_empty());
+    let mut cells = Vec::with_capacity(grid.len());
+    for point in grid.points() {
+        let mut vals = Vec::with_capacity(trial_seeds.len());
+        for &s in trial_seeds {
+            let v = objective(&point, s)?;
+            if v.is_finite() {
+                vals.push(v);
+            }
+        }
+        // all-diverged cells get the worst possible score
+        let (mean, std) = if vals.is_empty() {
+            (if minimize { f64::INFINITY } else { f64::NEG_INFINITY }, f64::NAN)
+        } else {
+            mean_std(&vals)
+        };
+        cells.push(Cell { point, mean, std, trials: vals.len() });
+    }
+    let best = cells
+        .iter()
+        .min_by(|a, b| {
+            let (x, y) = if minimize { (a.mean, b.mean) } else { (b.mean, a.mean) };
+            x.partial_cmp(&y).unwrap_or(std::cmp::Ordering::Equal)
+        })
+        .expect("empty grid")
+        .clone();
+    Ok(SweepResult { cells, best, minimize })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grid2() -> Grid {
+        Grid::new(vec![Axis::new("eta", &[0.1, 0.2]), Axis::new("beta", &[0.5, 0.9, 0.99])])
+    }
+
+    #[test]
+    fn enumerates_cartesian_product() {
+        let g = grid2();
+        assert_eq!(g.len(), 6);
+        let pts = g.points();
+        assert_eq!(pts.len(), 6);
+        // last axis fastest
+        assert_eq!(point_get(&pts[0], "eta"), 0.1);
+        assert_eq!(point_get(&pts[0], "beta"), 0.5);
+        assert_eq!(point_get(&pts[1], "beta"), 0.9);
+        assert_eq!(point_get(&pts[3], "eta"), 0.2);
+    }
+
+    #[test]
+    fn selects_minimum_with_trial_averaging() {
+        // objective = (eta - 0.2)^2 + (beta - 0.9)^2 + seed-dependent noise
+        let r = run_sweep(&grid2(), &[1, 2, 3, 4], true, |p, s| {
+            let e = point_get(p, "eta");
+            let b = point_get(p, "beta");
+            let noise = ((s as f64 * 0.37).sin()) * 1e-3;
+            Ok((e - 0.2).powi(2) + (b - 0.9).powi(2) + noise)
+        })
+        .unwrap();
+        assert_eq!(point_get(&r.best.point, "eta"), 0.2);
+        assert_eq!(point_get(&r.best.point, "beta"), 0.9);
+        assert_eq!(r.cells.len(), 6);
+        assert_eq!(r.best.trials, 4);
+    }
+
+    #[test]
+    fn maximize_mode() {
+        let g = Grid::new(vec![Axis::new("x", &[1.0, 2.0, 3.0])]);
+        let r = run_sweep(&g, &[0], false, |p, _| Ok(point_get(p, "x"))).unwrap();
+        assert_eq!(r.best.mean, 3.0);
+    }
+
+    #[test]
+    fn diverged_cells_lose() {
+        let g = Grid::new(vec![Axis::new("x", &[0.0, 1.0])]);
+        let r = run_sweep(&g, &[0, 1], true, |p, _| {
+            let x = point_get(p, "x");
+            Ok(if x == 0.0 { f64::NAN } else { 5.0 })
+        })
+        .unwrap();
+        assert_eq!(point_get(&r.best.point, "x"), 1.0);
+        assert_eq!(r.cells[0].trials, 0);
+        assert!(r.cells[0].mean.is_infinite());
+    }
+
+    #[test]
+    fn json_emission_roundtrips() {
+        let g = Grid::new(vec![Axis::new("x", &[1.0])]);
+        let r = run_sweep(&g, &[0], true, |_, _| Ok(2.5)).unwrap();
+        let j = r.to_json().to_string();
+        let v = crate::util::json::Json::parse(&j).unwrap();
+        assert_eq!(v.get("best_mean").unwrap().as_f64(), Some(2.5));
+    }
+
+    #[test]
+    fn sweep_tunes_conmezo_on_quadratic() {
+        // end-to-end: a tiny App C.1-style grid actually selects a working
+        // (eta, theta) pair for ConMeZO on the synthetic quadratic
+        use crate::objective::NativeQuadratic;
+        use crate::optimizer::{BetaSchedule, ConMeZo, ZoOptimizer};
+        let g = Grid::new(vec![
+            Axis::new("eta", &[1e-1, 1e-3, 1e-5]),
+            Axis::new("theta", &[1.2, 1.5]),
+        ]);
+        let d = 200;
+        let r = run_sweep(&g, &[0, 1], true, |p, s| {
+            let mut opt = ConMeZo::new(
+                d,
+                point_get(p, "eta") as f32,
+                1e-2,
+                point_get(p, "theta") as f32,
+                BetaSchedule::Constant(0.9),
+            );
+            let mut obj = NativeQuadratic::new(d);
+            let mut rng = crate::util::rng::Xoshiro256pp::seed_from_u64(s);
+            let mut x = vec![0f32; d];
+            rng.fill_normal_f32(&mut x);
+            for t in 0..300 {
+                opt.step(&mut x, &mut obj, t, s)?;
+            }
+            crate::objective::Objective::loss(&mut obj, &x)
+        })
+        .unwrap();
+        // eta=1e-3 descends; 1e-1 diverges; 1e-5 barely moves
+        assert_eq!(point_get(&r.best.point, "eta"), 1e-3, "best: {:?}", r.best.point);
+    }
+}

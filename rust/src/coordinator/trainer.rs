@@ -1,0 +1,470 @@
+//! Single-node training orchestrator.
+//!
+//! Owns the full finetuning lifecycle: parameter init (AOT `init` program
+//! or checkpoint), few-shot dataset construction, the step loop (fused or
+//! composed engine), the β warm-up schedule, periodic candidate-restricted
+//! evaluation, the Fig. 6 alignment probe, memory accounting, checkpointing
+//! and metrics. Python is never on this path.
+
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use anyhow::{bail, Result};
+
+use crate::checkpoint::Checkpoint;
+use crate::coordinator::fused::{
+    FoAdamW, FoSgd, FusedConMeZo, FusedMezo, FusedMezoMomentum, GradProbe,
+};
+use crate::data::{PretrainSampler, TaskGen, TrainSampler};
+use crate::eval::{predict, score, EvalResult};
+use crate::objective::{Batch, BatchSource, HloObjective, Objective};
+use crate::optimizer::{BetaSchedule, ZoOptimizer};
+use crate::runtime::{lit_vec_f32, Arg, Program, Runtime};
+use crate::util::memory::{activation_bytes, MemoryMeter};
+use crate::util::rng::STREAM_DIRECTION;
+use crate::util::Stopwatch;
+
+/// How a step executes (DESIGN.md §4 "Execution modes").
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Mode {
+    /// whole step = one HLO program (conmezo / mezo / mezo_momentum / FO)
+    Fused,
+    /// loss-only HLO programs + host-side optimizer math (all baselines)
+    Composed,
+}
+
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub preset: String,
+    pub task: String,
+    /// conmezo | mezo | mezo_loop | mezo_momentum | zo_adamm | hizoo |
+    /// lozo | lozo_m | mezo_svrg | sgd | adamw
+    pub optimizer: String,
+    pub mode: Mode,
+    pub steps: usize,
+    pub eta: f32,
+    pub lam: f32,
+    pub theta: f32,
+    pub beta_final: f32,
+    pub warmup: bool,
+    pub seed: u64,
+    pub train_per_class: usize,
+    pub eval_examples: usize,
+    pub eval_every: usize,
+    pub log_every: usize,
+    /// warm-start from this checkpoint (the "pretrained model" of the
+    /// few-shot regime); produced by [`pretrain`]
+    pub init_from: Option<PathBuf>,
+    /// record cos^2(m, grad f) every eval (Fig. 6)
+    pub probe_cos2: bool,
+}
+
+impl TrainConfig {
+    /// Paper-default hyperparameters (App. C.2/C.3), scaled step count.
+    pub fn preset(preset: &str, task: &str, optimizer: &str) -> TrainConfig {
+        TrainConfig {
+            preset: preset.to_string(),
+            task: task.to_string(),
+            optimizer: optimizer.to_string(),
+            mode: Mode::Fused,
+            steps: 1000,
+            eta: 5e-2,
+            lam: 1e-3,
+            theta: 1.35,
+            beta_final: 0.99,
+            warmup: true,
+            seed: 42,
+            train_per_class: 128,
+            eval_examples: 128,
+            eval_every: 200,
+            log_every: 100,
+            init_from: None,
+            probe_cos2: false,
+        }
+    }
+
+    pub fn beta_schedule(&self) -> BetaSchedule {
+        if self.warmup {
+            BetaSchedule::PaperWarmup { beta_final: self.beta_final, total_steps: self.steps }
+        } else {
+            BetaSchedule::Constant(self.beta_final)
+        }
+    }
+
+    fn uses_fused_zo(&self) -> bool {
+        matches!(self.optimizer.as_str(), "conmezo" | "mezo" | "mezo_momentum")
+    }
+
+    fn is_fo(&self) -> bool {
+        matches!(self.optimizer.as_str(), "sgd" | "adamw")
+    }
+}
+
+/// Point-in-time training telemetry.
+#[derive(Clone, Debug, Default)]
+pub struct TrainSummary {
+    pub task: String,
+    pub optimizer: String,
+    pub steps: usize,
+    /// (step, mean two-point loss)
+    pub loss_curve: Vec<(usize, f64)>,
+    /// (step, eval accuracy)
+    pub eval_curve: Vec<(usize, f64)>,
+    /// (step, cos^2(m, grad)) when probed
+    pub cos2_curve: Vec<(usize, f64)>,
+    pub final_accuracy: f64,
+    pub final_f1: f64,
+    pub final_loss: f64,
+    pub wall_seconds: f64,
+    pub steps_per_sec: f64,
+    pub peak_mem_mib: f64,
+    pub evals_used: u64,
+}
+
+enum Engine {
+    ConMeZo(FusedConMeZo),
+    Mezo(FusedMezo),
+    MezoMomentum(FusedMezoMomentum),
+    Composed { opt: Box<dyn ZoOptimizer>, obj: HloObjective },
+    Sgd(FoSgd),
+    AdamW(FoAdamW),
+}
+
+/// Candidate-restricted evaluation over a fixed example set.
+pub struct Evaluator {
+    prog: Rc<Program>,
+    examples: Vec<crate::data::Example>,
+    batch: usize,
+    seq: usize,
+}
+
+impl Evaluator {
+    pub fn new(rt: &Runtime, preset: &str, examples: Vec<crate::data::Example>) -> Result<Self> {
+        let meta = rt.preset(preset)?;
+        Ok(Evaluator {
+            prog: rt.load_kind(preset, "eval_logits")?,
+            examples,
+            batch: meta.batch,
+            seq: meta.seq_len,
+        })
+    }
+
+    pub fn evaluate(&self, params: &[f32]) -> Result<EvalResult> {
+        let mut pairs = Vec::with_capacity(self.examples.len());
+        let vocab_probe = &self.examples[0];
+        let _ = vocab_probe;
+        for chunk in self.examples.chunks(self.batch) {
+            let mut ids = vec![0i32; self.batch * self.seq];
+            let mut pos = vec![0i32; self.batch];
+            for (i, e) in chunk.iter().enumerate() {
+                ids[i * self.seq..(i + 1) * self.seq].copy_from_slice(&e.tokens);
+                pos[i] = e.predict_pos as i32;
+            }
+            let outs = self.prog.call(&[
+                Arg::VecF32(params),
+                Arg::TensorI32(&ids, vec![self.batch, self.seq]),
+                Arg::TensorI32(&pos, vec![self.batch]),
+            ])?;
+            let logits = lit_vec_f32(&outs[0])?;
+            let vocab = logits.len() / self.batch;
+            for (i, e) in chunk.iter().enumerate() {
+                let row = &logits[i * vocab..(i + 1) * vocab];
+                pairs.push((e.label, predict(row, &e.candidates)));
+            }
+        }
+        Ok(score(&pairs))
+    }
+}
+
+pub struct Trainer<'rt> {
+    rt: &'rt Runtime,
+    pub cfg: TrainConfig,
+    pub params: Vec<f32>,
+    engine: Engine,
+    sampler: TrainSampler,
+    evaluator: Evaluator,
+    probe: Option<GradProbe>,
+    meter: MemoryMeter,
+    d_pad: usize,
+}
+
+impl<'rt> Trainer<'rt> {
+    pub fn new(rt: &'rt Runtime, cfg: TrainConfig) -> Result<Trainer<'rt>> {
+        let meta = rt.preset(&cfg.preset)?.clone();
+        let spec = crate::data::spec(&cfg.task)
+            .ok_or_else(|| anyhow::anyhow!("unknown task {:?}", cfg.task))?;
+        let gen = TaskGen::new(spec, meta.vocab, meta.seq_len);
+        let n_train = cfg.train_per_class * gen.n_classes().max(1);
+        let train = gen.dataset(n_train, cfg.seed);
+        let eval = gen.dataset(cfg.eval_examples, cfg.seed ^ 0xEEE);
+        let sampler = TrainSampler::new(train, meta.batch, meta.seq_len, cfg.seed, 0);
+        let evaluator = Evaluator::new(rt, &cfg.preset, eval)?;
+
+        // parameters: checkpoint warm start or AOT init program
+        let params = match &cfg.init_from {
+            Some(path) => {
+                let ck = Checkpoint::load(path)?;
+                if ck.preset != cfg.preset {
+                    bail!("checkpoint preset {:?} != config preset {:?}", ck.preset, cfg.preset);
+                }
+                ck.get("params")?.to_vec()
+            }
+            None => {
+                let init = rt.load_kind(&cfg.preset, "init")?;
+                let outs = init.call(&[Arg::I32(cfg.seed as i32)])?;
+                lit_vec_f32(&outs[0])?
+            }
+        };
+
+        // memory accounting: model + optimizer state (the activation
+        // transient is added AFTER the engine allocates its buffers, so the
+        // peak reflects persistent-state deltas correctly)
+        let mut meter = MemoryMeter::new();
+        meter.alloc_f32("params", meta.d_pad);
+
+        let layout: Vec<(usize, Vec<usize>)> =
+            meta.layout.iter().map(|l| (l.offset, l.shape.clone())).collect();
+
+        let engine = if cfg.is_fo() {
+            match cfg.optimizer.as_str() {
+                "sgd" => Engine::Sgd(FoSgd::new(rt, &cfg.preset)?),
+                _ => {
+                    meter.alloc_f32("adam.mu", meta.d_pad);
+                    meter.alloc_f32("adam.nu", meta.d_pad);
+                    meter.alloc_f32("grad", meta.d_pad);
+                    Engine::AdamW(FoAdamW::new(rt, &cfg.preset)?)
+                }
+            }
+        } else if cfg.mode == Mode::Fused && cfg.uses_fused_zo() {
+            match cfg.optimizer.as_str() {
+                "conmezo" => {
+                    meter.alloc_f32("momentum", meta.d_pad);
+                    Engine::ConMeZo(FusedConMeZo::new(rt, &cfg.preset, cfg.theta)?)
+                }
+                "mezo" => Engine::Mezo(FusedMezo::new(rt, &cfg.preset)?),
+                "mezo_momentum" => {
+                    meter.alloc_f32("momentum", meta.d_pad);
+                    Engine::MezoMomentum(FusedMezoMomentum::new(rt, &cfg.preset)?)
+                }
+                _ => unreachable!(),
+            }
+        } else {
+            let opt = crate::optimizer::by_name(
+                &cfg.optimizer,
+                meta.d_pad,
+                cfg.eta,
+                cfg.lam,
+                cfg.theta,
+                cfg.beta_schedule(),
+                &layout,
+            )?;
+            opt.record_memory(&mut meter);
+            let source = TrainSampler::new(
+                sampler.data.clone(),
+                meta.batch,
+                meta.seq_len,
+                cfg.seed,
+                0,
+            );
+            let obj = HloObjective::new(rt, &cfg.preset, Box::new(source))?;
+            Engine::Composed { opt, obj }
+        };
+
+        meter.transient(activation_bytes(
+            meta.batch,
+            meta.seq_len,
+            meta.d_model,
+            meta.d_ff,
+            meta.n_layers,
+            meta.vocab,
+            cfg.is_fo(),
+        ));
+
+        let probe = if cfg.probe_cos2 { Some(GradProbe::new(rt, &cfg.preset)?) } else { None };
+
+        Ok(Trainer { rt, cfg, params, engine, sampler, evaluator, probe, meter, d_pad: meta.d_pad })
+    }
+
+    /// Momentum buffer view (for probes), if the engine keeps one.
+    pub fn momentum(&self) -> Option<&[f32]> {
+        match &self.engine {
+            Engine::ConMeZo(e) => Some(&e.m),
+            Engine::MezoMomentum(e) => Some(&e.m),
+            _ => None,
+        }
+    }
+
+    /// Per-step direction seed: pure function of (run seed, t) so fused and
+    /// distributed runs can replay it.
+    pub fn step_seed(run_seed: u64, t: usize) -> i32 {
+        let mut s = run_seed ^ (t as u64).rotate_left(17) ^ STREAM_DIRECTION;
+        (crate::util::rng::splitmix64(&mut s) & 0x7FFF_FFFF) as i32
+    }
+
+    /// One optimizer step; returns the mean two-point loss.
+    pub fn step(&mut self, t: usize) -> Result<f64> {
+        let beta = self.cfg.beta_schedule().at(t);
+        let seed = Self::step_seed(self.cfg.seed, t);
+        let loss = match &mut self.engine {
+            Engine::ConMeZo(e) => {
+                let batch = self.sampler.next_batch();
+                e.step(&mut self.params, &batch, seed, beta, self.cfg.eta, self.cfg.lam)?.loss
+            }
+            Engine::Mezo(e) => {
+                let batch = self.sampler.next_batch();
+                e.step(&mut self.params, &batch, seed, self.cfg.eta, self.cfg.lam)?.loss
+            }
+            Engine::MezoMomentum(e) => {
+                let batch = self.sampler.next_batch();
+                e.step(&mut self.params, &batch, seed, beta, self.cfg.eta, self.cfg.lam)?.loss
+            }
+            Engine::Composed { opt, obj } => {
+                obj.advance();
+                opt.step(&mut self.params, obj, t, self.cfg.seed)?.loss
+            }
+            Engine::Sgd(e) => {
+                let batch = self.sampler.next_batch();
+                e.step(&mut self.params, &batch, self.cfg.eta)?
+            }
+            Engine::AdamW(e) => {
+                let batch = self.sampler.next_batch();
+                e.step(&mut self.params, &batch, self.cfg.eta)?
+            }
+        };
+        Ok(loss)
+    }
+
+    pub fn evaluate(&self) -> Result<EvalResult> {
+        self.evaluator.evaluate(&self.params)
+    }
+
+    /// Full training run with periodic eval + probes.
+    pub fn run(&mut self) -> Result<TrainSummary> {
+        let sw = Stopwatch::start();
+        let mut summary = TrainSummary {
+            task: self.cfg.task.clone(),
+            optimizer: self.cfg.optimizer.clone(),
+            steps: self.cfg.steps,
+            ..Default::default()
+        };
+        let mut loss_acc = 0f64;
+        let mut loss_n = 0usize;
+        for t in 0..self.cfg.steps {
+            let loss = self.step(t)?;
+            loss_acc += loss;
+            loss_n += 1;
+            summary.final_loss = loss;
+            if (t + 1) % self.cfg.log_every == 0 || t + 1 == self.cfg.steps {
+                summary.loss_curve.push((t + 1, loss_acc / loss_n as f64));
+                loss_acc = 0.0;
+                loss_n = 0;
+            }
+            if (t + 1) % self.cfg.eval_every == 0 || t + 1 == self.cfg.steps {
+                let r = self.evaluate()?;
+                summary.eval_curve.push((t + 1, r.accuracy()));
+                summary.final_accuracy = r.accuracy();
+                summary.final_f1 = r.macro_f1;
+                crate::info!(
+                    "trainer",
+                    "{}/{} t={} loss={:.4} acc={:.3}",
+                    self.cfg.task,
+                    self.cfg.optimizer,
+                    t + 1,
+                    summary.loss_curve.last().map(|x| x.1).unwrap_or(f64::NAN),
+                    r.accuracy()
+                );
+                if self.probe.is_some() && self.momentum().is_some() {
+                    let batch = self.sampler.next_batch();
+                    let probe = self.probe.as_ref().unwrap();
+                    let m = self.momentum().unwrap();
+                    summary.cos2_curve.push((t + 1, probe.cos2(&self.params, m, &batch)?));
+                }
+            }
+        }
+        summary.wall_seconds = sw.secs();
+        summary.steps_per_sec = self.cfg.steps as f64 / summary.wall_seconds.max(1e-9);
+        summary.peak_mem_mib = self.meter.peak_mib();
+        if let Engine::Composed { obj, .. } = &self.engine {
+            summary.evals_used = crate::objective::Objective::evals(obj);
+        } else {
+            summary.evals_used = 2 * self.cfg.steps as u64;
+        }
+        Ok(summary)
+    }
+
+    pub fn save_checkpoint(&self, path: &std::path::Path, step: u64) -> Result<()> {
+        let mut ck = Checkpoint::new(&self.cfg.preset, step);
+        ck.put("params", &self.params);
+        if let Some(m) = self.momentum() {
+            ck.put("momentum", m);
+        }
+        ck.save(path)
+    }
+
+    pub fn peak_mem_mib(&self) -> f64 {
+        self.meter.peak_mib()
+    }
+
+    pub fn d_pad(&self) -> usize {
+        self.d_pad
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        self.rt
+    }
+}
+
+/// Pretrain a preset on the mixed synthetic corpus with AdamW (build-time
+/// backprop via the AOT grad program) and write the checkpoint. This is the
+/// "pretrained LM" of the paper's few-shot finetuning regime; `label_noise`
+/// leaves accuracy headroom for ZO finetuning to recover (DESIGN.md §2).
+pub fn pretrain(
+    rt: &Runtime,
+    preset: &str,
+    steps: usize,
+    eta: f32,
+    label_noise: f32,
+    seed: u64,
+    out: &std::path::Path,
+) -> Result<Vec<(usize, f64)>> {
+    let meta = rt.preset(preset)?.clone();
+    let gens: Vec<TaskGen> = crate::data::registry()
+        .into_iter()
+        .map(|s| TaskGen::new(s, meta.vocab, meta.seq_len))
+        .collect();
+    let mut sampler = PretrainSampler::new(gens, meta.batch, meta.seq_len, label_noise, seed);
+    let init = rt.load_kind(preset, "init")?;
+    let mut params = lit_vec_f32(&init.call(&[Arg::I32(seed as i32)])?[0])?;
+    let mut adamw = FoAdamW::new(rt, preset)?;
+    let mut curve = Vec::new();
+    let mut acc = 0f64;
+    for t in 0..steps {
+        let batch: Batch = sampler.next_batch();
+        let loss = adamw.step(&mut params, &batch, eta)?;
+        acc += loss;
+        if (t + 1) % 50 == 0 || t + 1 == steps {
+            curve.push((t + 1, acc / 50f64.min((t + 1) as f64)));
+            crate::info!("pretrain", "{preset} t={} loss={:.4}", t + 1, curve.last().unwrap().1);
+            acc = 0.0;
+        }
+    }
+    let mut ck = Checkpoint::new(preset, steps as u64);
+    ck.put("params", &params);
+    ck.save(out)?;
+    Ok(curve)
+}
+
+/// Standard location for a preset's pretrained checkpoint.
+pub fn pretrained_path(preset: &str) -> PathBuf {
+    PathBuf::from(format!("results/pretrained_{preset}.ckpt"))
+}
+
+/// Pretrain only if the checkpoint does not exist yet; return its path.
+pub fn ensure_pretrained(rt: &Runtime, preset: &str, steps: usize, eta: f32, label_noise: f32) -> Result<PathBuf> {
+    let path = pretrained_path(preset);
+    if !path.exists() {
+        crate::info!("pretrain", "building pretrained checkpoint for {preset} ({steps} steps)");
+        pretrain(rt, preset, steps, eta, label_noise, 7, &path)?;
+    }
+    Ok(path)
+}

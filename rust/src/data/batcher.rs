@@ -1,0 +1,216 @@
+//! Batch assembly: examples -> fixed-shape [B, S] token batches for the
+//! HLO programs, for both finetuning (predict-at-query) and LM pretraining
+//! (next-token) objectives.
+
+use crate::data::tasks::{Example, TaskGen};
+use crate::data::vocab::PAD;
+use crate::objective::{Batch, BatchSource};
+use crate::util::rng::{Xoshiro256pp, STREAM_DATA};
+
+/// Finetuning batch: loss mass only at each example's query position,
+/// target = the gold answer token (the prompt-conditioned few-shot regime).
+pub fn finetune_batch(examples: &[&Example], batch: usize, seq: usize) -> Batch {
+    assert!(examples.len() <= batch);
+    let mut b = Batch::zeros(batch, seq);
+    for (i, e) in examples.iter().enumerate() {
+        assert_eq!(e.tokens.len(), seq);
+        b.input_ids[i * seq..(i + 1) * seq].copy_from_slice(&e.tokens);
+        b.targets[i * seq + e.predict_pos] = e.label;
+        b.mask[i * seq + e.predict_pos] = 1.0;
+    }
+    // rows beyond examples.len() stay fully masked (zero loss weight)
+    b
+}
+
+/// LM pretraining batch over prompt+answer sequences: next-token targets on
+/// every non-pad transition. `label_noise` corrupts the answer token with
+/// the given probability (creates the accuracy headroom ZO finetuning then
+/// recovers; DESIGN.md §2).
+pub fn lm_batch(
+    examples: &[&Example],
+    batch: usize,
+    seq: usize,
+    label_noise: f32,
+    candidates: &[i32],
+    rng: &mut Xoshiro256pp,
+) -> Batch {
+    let mut b = Batch::zeros(batch, seq);
+    for (i, e) in examples.iter().enumerate() {
+        let mut toks = e.tokens.clone();
+        // append the answer right after QRY so the LM learns prompt->answer
+        let ans_pos = e.predict_pos + 1;
+        let mut label = e.label;
+        if label_noise > 0.0 && rng.next_f32() < label_noise && !candidates.is_empty() {
+            label = candidates[rng.gen_range(candidates.len())];
+        }
+        if ans_pos < seq {
+            toks[ans_pos] = label;
+        }
+        b.input_ids[i * seq..(i + 1) * seq].copy_from_slice(&toks);
+        for t in 0..seq - 1 {
+            let next = toks[t + 1];
+            if toks[t] != PAD && next != PAD {
+                b.targets[i * seq + t] = next;
+                b.mask[i * seq + t] = 1.0;
+            }
+        }
+    }
+    b
+}
+
+/// BatchSource drawing finetune batches from a fixed few-shot train set
+/// (with-replacement sampling, per-worker stream).
+pub struct TrainSampler {
+    pub data: Vec<Example>,
+    pub batch: usize,
+    pub seq: usize,
+    rng: Xoshiro256pp,
+}
+
+impl TrainSampler {
+    pub fn new(data: Vec<Example>, batch: usize, seq: usize, seed: u64, worker: u64) -> Self {
+        TrainSampler {
+            data,
+            batch,
+            seq,
+            rng: Xoshiro256pp::derive_stream(seed, STREAM_DATA ^ 0xB47C, worker),
+        }
+    }
+}
+
+impl BatchSource for TrainSampler {
+    fn next_batch(&mut self) -> Batch {
+        let refs: Vec<&Example> = (0..self.batch)
+            .map(|_| &self.data[self.rng.gen_range(self.data.len())])
+            .collect();
+        finetune_batch(&refs, self.batch, self.seq)
+    }
+}
+
+/// BatchSource producing LM pretraining batches straight from a generator
+/// (infinite synthetic corpus).
+pub struct PretrainSampler {
+    pub gens: Vec<TaskGen>,
+    pub batch: usize,
+    pub seq: usize,
+    pub label_noise: f32,
+    rng: Xoshiro256pp,
+}
+
+impl PretrainSampler {
+    pub fn new(gens: Vec<TaskGen>, batch: usize, seq: usize, label_noise: f32, seed: u64) -> Self {
+        PretrainSampler {
+            gens,
+            batch,
+            seq,
+            label_noise,
+            rng: Xoshiro256pp::derive_stream(seed, STREAM_DATA ^ 0x9E7A, 0),
+        }
+    }
+}
+
+impl BatchSource for PretrainSampler {
+    fn next_batch(&mut self) -> Batch {
+        let mut exs = Vec::with_capacity(self.batch);
+        let mut cands = Vec::new();
+        for _ in 0..self.batch {
+            let g = &self.gens[self.rng.gen_range(self.gens.len())];
+            exs.push(g.generate(&mut self.rng));
+            if cands.is_empty() {
+                cands = g.candidates();
+            }
+        }
+        let refs: Vec<&Example> = exs.iter().collect();
+        lm_batch(&refs, self.batch, self.seq, self.label_noise, &cands, &mut self.rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::tasks::{spec, TaskGen};
+    use crate::data::vocab::QRY;
+
+    fn examples(n: usize) -> (TaskGen, Vec<Example>) {
+        let g = TaskGen::new(spec("sst2").unwrap(), 256, 32);
+        let d = g.dataset(n, 1);
+        (g, d)
+    }
+
+    #[test]
+    fn finetune_batch_masks_only_query_positions() {
+        let (_, data) = examples(4);
+        let refs: Vec<&Example> = data.iter().collect();
+        let b = finetune_batch(&refs, 4, 32);
+        assert_eq!(b.mask.iter().filter(|&&m| m == 1.0).count(), 4);
+        for (i, e) in data.iter().enumerate() {
+            assert_eq!(b.targets[i * 32 + e.predict_pos], e.label);
+            assert_eq!(b.input_ids[i * 32 + e.predict_pos], QRY);
+        }
+    }
+
+    #[test]
+    fn finetune_batch_pads_missing_rows() {
+        let (_, data) = examples(2);
+        let refs: Vec<&Example> = data.iter().collect();
+        let b = finetune_batch(&refs, 8, 32);
+        // rows 2..8: no loss mass
+        assert!(b.mask[2 * 32..].iter().all(|&m| m == 0.0));
+    }
+
+    #[test]
+    fn lm_batch_targets_are_shifted_inputs() {
+        let (g, data) = examples(3);
+        let refs: Vec<&Example> = data.iter().collect();
+        let mut rng = Xoshiro256pp::seed_from_u64(0);
+        let b = lm_batch(&refs, 3, 32, 0.0, &g.candidates(), &mut rng);
+        for i in 0..3 {
+            for t in 0..31 {
+                if b.mask[i * 32 + t] == 1.0 {
+                    assert_eq!(b.targets[i * 32 + t], b.input_ids[i * 32 + t + 1]);
+                }
+            }
+        }
+        // the answer token follows QRY in the inputs
+        let e = &data[0];
+        assert_eq!(b.input_ids[e.predict_pos + 1], e.label);
+        // and the QRY position carries loss mass predicting it
+        assert_eq!(b.mask[e.predict_pos], 1.0);
+        assert_eq!(b.targets[e.predict_pos], e.label);
+    }
+
+    #[test]
+    fn lm_batch_label_noise_corrupts_some_answers() {
+        let (g, data) = examples(64);
+        let refs: Vec<&Example> = data.iter().collect();
+        let mut rng = Xoshiro256pp::seed_from_u64(2);
+        let b = lm_batch(&refs, 64, 32, 0.5, &g.candidates(), &mut rng);
+        let corrupted = data
+            .iter()
+            .enumerate()
+            .filter(|(i, e)| b.input_ids[i * 32 + e.predict_pos + 1] != e.label)
+            .count();
+        assert!(corrupted > 5 && corrupted < 40, "{corrupted}");
+    }
+
+    #[test]
+    fn train_sampler_is_deterministic_per_worker() {
+        let (_, data) = examples(50);
+        let mut a = TrainSampler::new(data.clone(), 4, 32, 7, 0);
+        let mut b = TrainSampler::new(data.clone(), 4, 32, 7, 0);
+        let mut c = TrainSampler::new(data, 4, 32, 7, 1);
+        let ba = a.next_batch();
+        assert_eq!(ba, b.next_batch());
+        assert_ne!(ba, c.next_batch());
+    }
+
+    #[test]
+    fn pretrain_sampler_mixes_tasks() {
+        let g1 = TaskGen::new(spec("sst2").unwrap(), 256, 32);
+        let g2 = TaskGen::new(spec("trec").unwrap(), 256, 32);
+        let mut s = PretrainSampler::new(vec![g1, g2], 8, 32, 0.0, 3);
+        let b = s.next_batch();
+        assert_eq!(b.input_ids.len(), 8 * 32);
+        assert!(b.mask.iter().sum::<f32>() > 8.0); // LM loss covers many positions
+    }
+}

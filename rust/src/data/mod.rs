@@ -1,0 +1,13 @@
+//! Synthetic data substrate: vocabulary, procedural task suite, batchers.
+//!
+//! Stand-ins for the paper's GLUE/SuperGLUE/QA datasets (repro band 0/5 —
+//! DESIGN.md §2 documents the substitution and why it preserves the
+//! optimizer comparisons).
+
+pub mod batcher;
+pub mod tasks;
+pub mod vocab;
+
+pub use batcher::{finetune_batch, lm_batch, PretrainSampler, TrainSampler};
+pub use tasks::{registry, spec, Example, TaskGen, TaskKind, TaskSpec};
+pub use vocab::Vocab;

@@ -1,0 +1,425 @@
+//! Procedural task suite — synthetic stand-ins for the paper's benchmarks.
+//!
+//! Every paper task maps to a generator preserving its *shape* (class
+//! count, single- vs two-segment prompts, open-vocabulary QA) so the
+//! optimizer comparisons exercise the same readout structure:
+//!
+//! | paper task | kind | classes |
+//! |---|---|---|
+//! | SST-2 | Classify, 1 segment | 2 |
+//! | SST-5 | Classify, 1 segment | 5 |
+//! | SNLI / MNLI | Classify, 2 segments | 3 |
+//! | RTE | Classify, 2 segments | 2 |
+//! | TREC | Classify, 1 segment (prefix cue) | 6 |
+//! | BoolQ | Classify, 2 segments | 2 |
+//! | WiC | WordInContext | 2 |
+//! | SQuAD / DROP | KeyValue QA (open vocab) | — |
+//! | ReCoRD / MultiRC | MultiChoice | 2 |
+//!
+//! Difficulty is controlled by `signal` (fraction of class-signature tokens
+//! in the prompt); evaluation is argmax over the task's candidate tokens at
+//! the query position.
+
+use crate::data::vocab::{Vocab, BOS, PAD, QRY, SEP};
+use crate::util::rng::Xoshiro256pp;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum TaskKind {
+    /// n-way classification from class-conditional token statistics.
+    Classify { n_classes: usize, two_segment: bool, prefix_cue: bool },
+    /// Retrieve the VALUE token paired with the queried KEY token.
+    KeyValue { n_pairs: usize },
+    /// Do the two occurrences of the target word share a sense marker?
+    WordInContext,
+    /// Is the candidate answer token present in the passage?
+    MultiChoice,
+}
+
+#[derive(Clone, Debug)]
+pub struct TaskSpec {
+    pub name: &'static str,
+    pub kind: TaskKind,
+    /// fraction of prompt tokens carrying the class signature
+    pub signal: f32,
+}
+
+/// One generated example, model-ready.
+#[derive(Clone, Debug)]
+pub struct Example {
+    /// padded to seq_len by the caller
+    pub tokens: Vec<i32>,
+    /// position whose logits predict the answer (the QRY token's position)
+    pub predict_pos: usize,
+    /// gold answer token id
+    pub label: i32,
+    /// candidate answer tokens for evaluation (argmax restricted to these)
+    pub candidates: Vec<i32>,
+    /// class index when applicable (for per-class sampling / noise)
+    pub class: usize,
+}
+
+/// The registry mapping paper task names to generator specs.
+pub fn registry() -> Vec<TaskSpec> {
+    use TaskKind::*;
+    vec![
+        TaskSpec { name: "sst2", kind: Classify { n_classes: 2, two_segment: false, prefix_cue: false }, signal: 0.35 },
+        TaskSpec { name: "sst5", kind: Classify { n_classes: 5, two_segment: false, prefix_cue: false }, signal: 0.30 },
+        TaskSpec { name: "snli", kind: Classify { n_classes: 3, two_segment: true, prefix_cue: false }, signal: 0.35 },
+        TaskSpec { name: "mnli", kind: Classify { n_classes: 3, two_segment: true, prefix_cue: false }, signal: 0.28 },
+        TaskSpec { name: "rte", kind: Classify { n_classes: 2, two_segment: true, prefix_cue: false }, signal: 0.30 },
+        TaskSpec { name: "trec", kind: Classify { n_classes: 6, two_segment: false, prefix_cue: true }, signal: 0.35 },
+        TaskSpec { name: "boolq", kind: Classify { n_classes: 2, two_segment: true, prefix_cue: false }, signal: 0.30 },
+        TaskSpec { name: "wic", kind: WordInContext, signal: 0.5 },
+        TaskSpec { name: "squad", kind: KeyValue { n_pairs: 4 }, signal: 1.0 },
+        TaskSpec { name: "drop", kind: KeyValue { n_pairs: 6 }, signal: 1.0 },
+        TaskSpec { name: "record", kind: MultiChoice, signal: 0.5 },
+        TaskSpec { name: "multirc", kind: MultiChoice, signal: 0.5 },
+    ]
+}
+
+pub fn spec(name: &str) -> Option<TaskSpec> {
+    registry().into_iter().find(|t| t.name == name)
+}
+
+/// Deterministic example generator for one task.
+pub struct TaskGen {
+    pub spec: TaskSpec,
+    pub vocab: Vocab,
+    pub seq_len: usize,
+}
+
+impl TaskGen {
+    pub fn new(spec: TaskSpec, vocab_size: usize, seq_len: usize) -> Self {
+        TaskGen { spec, vocab: Vocab::new(vocab_size), seq_len }
+    }
+
+    pub fn n_classes(&self) -> usize {
+        match self.spec.kind {
+            TaskKind::Classify { n_classes, .. } => n_classes,
+            TaskKind::WordInContext | TaskKind::MultiChoice => 2,
+            TaskKind::KeyValue { .. } => 0, // open vocabulary
+        }
+    }
+
+    /// Candidate tokens for eval argmax.
+    pub fn candidates(&self) -> Vec<i32> {
+        match self.spec.kind {
+            TaskKind::KeyValue { .. } => self.vocab.content_range().collect(),
+            _ => (0..self.n_classes()).map(|c| self.vocab.label_token(c)).collect(),
+        }
+    }
+
+    fn pad_to_seq(&self, mut tokens: Vec<i32>) -> (Vec<i32>, usize) {
+        // predict position = index of the final QRY token
+        assert!(tokens.len() <= self.seq_len, "prompt {} > seq {}", tokens.len(), self.seq_len);
+        let predict_pos = tokens.len() - 1;
+        tokens.resize(self.seq_len, PAD);
+        (tokens, predict_pos)
+    }
+
+    pub fn generate(&self, rng: &mut Xoshiro256pp) -> Example {
+        match self.spec.kind {
+            TaskKind::Classify { n_classes, two_segment, prefix_cue } => {
+                self.gen_classify(rng, n_classes, two_segment, prefix_cue)
+            }
+            TaskKind::KeyValue { n_pairs } => self.gen_keyvalue(rng, n_pairs),
+            TaskKind::WordInContext => self.gen_wic(rng),
+            TaskKind::MultiChoice => self.gen_multichoice(rng),
+        }
+    }
+
+    fn draw(&self, rng: &mut Xoshiro256pp, range: &std::ops::Range<i32>) -> i32 {
+        range.start + rng.gen_range((range.end - range.start) as usize) as i32
+    }
+
+    /// Class-signature pool: the lower 3/4 of the content range split into
+    /// `n_classes` disjoint chunks; the shared (class-neutral) pool is the
+    /// upper 1/4, disjoint from every signature.
+    pub fn class_chunk(&self, c: usize, n_classes: usize) -> std::ops::Range<i32> {
+        let r = self.vocab.content_range();
+        let sig_span = (r.end - r.start) * 3 / 4;
+        let per = sig_span / n_classes as i32;
+        let start = r.start + c as i32 * per;
+        start..start + per
+    }
+
+    fn shared_pool(&self) -> std::ops::Range<i32> {
+        let r = self.vocab.content_range();
+        (r.start + (r.end - r.start) * 3 / 4)..r.end
+    }
+
+    fn gen_classify(&self, rng: &mut Xoshiro256pp, n_classes: usize, two_segment: bool, prefix_cue: bool) -> Example {
+        let c = rng.gen_range(n_classes);
+        let sig = self.class_chunk(c, n_classes);
+        let shared = self.shared_pool();
+        let body_len = self.seq_len - 3; // BOS ... QRY (answer predicted, not in prompt)
+        let mut tokens = vec![BOS];
+        if prefix_cue {
+            // TREC-style: a cue token early in the prompt carries most signal
+            tokens.push(self.draw(rng, &sig));
+        }
+        let seg_boundary = if two_segment { body_len / 2 } else { usize::MAX };
+        while tokens.len() < 1 + body_len {
+            if tokens.len() == seg_boundary {
+                tokens.push(SEP);
+                continue;
+            }
+            let from_sig = rng.next_f32() < self.spec.signal;
+            tokens.push(if from_sig { self.draw(rng, &sig) } else { self.draw(rng, &shared) });
+        }
+        tokens.push(QRY);
+        let (tokens, predict_pos) = self.pad_to_seq(tokens);
+        Example {
+            tokens,
+            predict_pos,
+            label: self.vocab.label_token(c),
+            candidates: self.candidates(),
+            class: c,
+        }
+    }
+
+    fn gen_keyvalue(&self, rng: &mut Xoshiro256pp, n_pairs: usize) -> Example {
+        // passage: KEY_i VALUE_i pairs; question: QRY KEY_j -> VALUE_j
+        let content = self.vocab.content_range();
+        let mut keys = Vec::with_capacity(n_pairs);
+        let mut vals = Vec::with_capacity(n_pairs);
+        for _ in 0..n_pairs {
+            loop {
+                let k = self.draw(rng, &content);
+                if !keys.contains(&k) {
+                    keys.push(k);
+                    break;
+                }
+            }
+            vals.push(self.draw(rng, &content));
+        }
+        let mut tokens = vec![BOS];
+        for i in 0..n_pairs {
+            tokens.push(keys[i]);
+            tokens.push(vals[i]);
+        }
+        tokens.push(SEP);
+        let j = rng.gen_range(n_pairs);
+        tokens.push(keys[j]);
+        tokens.push(QRY);
+        let (tokens, predict_pos) = self.pad_to_seq(tokens);
+        Example {
+            tokens,
+            predict_pos,
+            label: vals[j],
+            candidates: self.candidates(),
+            class: 0,
+        }
+    }
+
+    fn gen_wic(&self, rng: &mut Xoshiro256pp) -> Example {
+        // two segments, each: context tokens + [word, sense-marker].
+        // label = do the sense markers come from the same half?
+        let content = self.vocab.content_range();
+        let half = (content.end - content.start) / 2;
+        let word = self.draw(rng, &content);
+        let same = rng.gen_range(2) == 1;
+        let m1_half = rng.gen_range(2) as i32;
+        let m2_half = if same { m1_half } else { 1 - m1_half };
+        let marker = |h: i32, r: &mut Xoshiro256pp| {
+            content.start + h * half + r.gen_range(half as usize) as i32
+        };
+        let ctx = (self.seq_len - 9) / 2;
+        let mut tokens = vec![BOS];
+        for _ in 0..ctx {
+            tokens.push(self.draw(rng, &content));
+        }
+        tokens.push(word);
+        tokens.push(marker(m1_half, rng));
+        tokens.push(SEP);
+        for _ in 0..ctx {
+            tokens.push(self.draw(rng, &content));
+        }
+        tokens.push(word);
+        tokens.push(marker(m2_half, rng));
+        tokens.push(QRY);
+        let (tokens, predict_pos) = self.pad_to_seq(tokens);
+        Example {
+            tokens,
+            predict_pos,
+            label: self.vocab.label_token(same as usize),
+            candidates: self.candidates(),
+            class: same as usize,
+        }
+    }
+
+    fn gen_multichoice(&self, rng: &mut Xoshiro256pp) -> Example {
+        // passage tokens; then SEP candidate QRY -> is candidate in passage?
+        let content = self.vocab.content_range();
+        let plen = self.seq_len - 5;
+        let mut passage = Vec::with_capacity(plen);
+        for _ in 0..plen {
+            passage.push(self.draw(rng, &content));
+        }
+        let inside = rng.gen_range(2) == 1;
+        let cand = if inside {
+            passage[rng.gen_range(plen)]
+        } else {
+            loop {
+                let c = self.draw(rng, &content);
+                if !passage.contains(&c) {
+                    break c;
+                }
+            }
+        };
+        let mut tokens = vec![BOS];
+        tokens.extend_from_slice(&passage);
+        tokens.push(SEP);
+        tokens.push(cand);
+        tokens.push(QRY);
+        let (tokens, predict_pos) = self.pad_to_seq(tokens);
+        Example {
+            tokens,
+            predict_pos,
+            label: self.vocab.label_token(inside as usize),
+            candidates: self.candidates(),
+            class: inside as usize,
+        }
+    }
+
+    /// Generate a dataset of `n` examples from a named stream.
+    pub fn dataset(&self, n: usize, seed: u64) -> Vec<Example> {
+        let mut rng = Xoshiro256pp::derive_stream(seed, crate::util::rng::STREAM_DATA, fxhash(self.spec.name));
+        (0..n).map(|_| self.generate(&mut rng)).collect()
+    }
+}
+
+fn fxhash(s: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gen(name: &str) -> TaskGen {
+        TaskGen::new(spec(name).unwrap(), 256, 32)
+    }
+
+    #[test]
+    fn registry_covers_paper_tasks() {
+        let names: Vec<&str> = registry().iter().map(|t| t.name).collect();
+        for t in ["sst2", "sst5", "snli", "mnli", "rte", "trec", "boolq", "wic", "squad", "drop", "record", "multirc"] {
+            assert!(names.contains(&t), "{t}");
+        }
+    }
+
+    #[test]
+    fn examples_are_well_formed() {
+        let mut rng = Xoshiro256pp::seed_from_u64(0);
+        for spec in registry() {
+            let g = TaskGen::new(spec.clone(), 256, 32);
+            for _ in 0..20 {
+                let e = g.generate(&mut rng);
+                assert_eq!(e.tokens.len(), 32, "{}", spec.name);
+                assert_eq!(e.tokens[e.predict_pos], QRY, "{}", spec.name);
+                assert!(e.tokens[0] == BOS);
+                assert!(e.candidates.contains(&e.label), "{}", spec.name);
+                assert!(e.tokens.iter().all(|&t| t >= 0 && (t as usize) < 256));
+                // everything after predict_pos is padding
+                assert!(e.tokens[e.predict_pos + 1..].iter().all(|&t| t == PAD));
+            }
+        }
+    }
+
+    #[test]
+    fn classify_labels_balanced() {
+        let g = gen("sst2");
+        let data = g.dataset(2000, 7);
+        let pos = data.iter().filter(|e| e.class == 1).count();
+        assert!((800..1200).contains(&pos), "{pos}");
+    }
+
+    #[test]
+    fn classify_signal_tokens_present() {
+        // class-0 examples should contain tokens from chunk 0 much more
+        // often than class-1 examples do
+        let g = gen("sst2");
+        let data = g.dataset(500, 9);
+        let chunk0 = g.class_chunk(0, 2);
+        let count = |class: usize| -> usize {
+            data.iter()
+                .filter(|e| e.class == class)
+                .map(|e| e.tokens.iter().filter(|t| chunk0.contains(t)).count())
+                .sum()
+        };
+        assert!(count(0) > 3 * count(1).max(1), "{} vs {}", count(0), count(1));
+    }
+
+    #[test]
+    fn keyvalue_answer_is_paired_value() {
+        let g = gen("squad");
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        for _ in 0..50 {
+            let e = g.generate(&mut rng);
+            // the queried key is the token right before QRY
+            let key = e.tokens[e.predict_pos - 1];
+            // find it in the passage; the next token is the value
+            let body = &e.tokens[1..e.predict_pos - 2];
+            let idx = body.iter().position(|&t| t == key).unwrap();
+            assert_eq!(body[idx + 1], e.label);
+        }
+    }
+
+    #[test]
+    fn wic_same_markers_match_label() {
+        let g = gen("wic");
+        let mut rng = Xoshiro256pp::seed_from_u64(5);
+        let half = (g.vocab.content_range().end - g.vocab.content_range().start) / 2;
+        for _ in 0..50 {
+            let e = g.generate(&mut rng);
+            let m1 = e.tokens[e.predict_pos - 1 - (g.seq_len - 9) / 2 - 3]; // marker 1
+            let m2 = e.tokens[e.predict_pos - 1];
+            let h1 = (m1 - g.vocab.content_range().start) / half;
+            let h2 = (m2 - g.vocab.content_range().start) / half;
+            let same = h1 == h2;
+            assert_eq!(e.label, g.vocab.label_token(same as usize));
+        }
+    }
+
+    #[test]
+    fn multichoice_label_is_membership() {
+        let g = gen("record");
+        let mut rng = Xoshiro256pp::seed_from_u64(6);
+        for _ in 0..50 {
+            let e = g.generate(&mut rng);
+            let cand = e.tokens[e.predict_pos - 1];
+            let passage = &e.tokens[1..e.predict_pos - 2];
+            let inside = passage.contains(&cand);
+            assert_eq!(e.label, g.vocab.label_token(inside as usize));
+        }
+    }
+
+    #[test]
+    fn datasets_are_deterministic() {
+        let g = gen("mnli");
+        let a = g.dataset(10, 42);
+        let b = g.dataset(10, 42);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.tokens, y.tokens);
+            assert_eq!(x.label, y.label);
+        }
+        let c = g.dataset(10, 43);
+        assert!(a.iter().zip(&c).any(|(x, y)| x.tokens != y.tokens));
+    }
+
+    #[test]
+    fn works_at_larger_geometry() {
+        let g = TaskGen::new(spec("squad").unwrap(), 512, 64);
+        let data = g.dataset(20, 1);
+        for e in data {
+            assert_eq!(e.tokens.len(), 64);
+            assert_eq!(e.tokens[e.predict_pos], QRY);
+        }
+    }
+}

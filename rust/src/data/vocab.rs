@@ -1,0 +1,85 @@
+//! Synthetic vocabulary layout shared by every task generator.
+//!
+//! The paper finetunes on GLUE/SuperGLUE/QA datasets we cannot ship
+//! (repro band 0/5), so tasks are procedurally generated over a synthetic
+//! token space (DESIGN.md §2). The vocabulary is laid out as:
+//!
+//!   0 PAD | 1 BOS | 2 SEP | 3 QRY | 4..4+MAX_CLASSES label verbalizers |
+//!   CONTENT_START..V content tokens
+//!
+//! Verbalizer tokens play the role of the paper's label words ("great",
+//! "terrible", ...): classification is "predict the verbalizer at the query
+//! position", exactly the prompt-conditioned regime of App. C.2.
+
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const SEP: i32 = 2;
+pub const QRY: i32 = 3;
+pub const LABEL_BASE: i32 = 4;
+pub const MAX_CLASSES: usize = 8;
+pub const CONTENT_START: i32 = LABEL_BASE + MAX_CLASSES as i32; // 12
+
+#[derive(Clone, Copy, Debug)]
+pub struct Vocab {
+    pub size: usize,
+}
+
+impl Vocab {
+    pub fn new(size: usize) -> Self {
+        assert!(size as i32 > CONTENT_START + 16, "vocab too small: {size}");
+        Vocab { size }
+    }
+
+    pub fn label_token(&self, class: usize) -> i32 {
+        assert!(class < MAX_CLASSES);
+        LABEL_BASE + class as i32
+    }
+
+    pub fn content_range(&self) -> std::ops::Range<i32> {
+        CONTENT_START..self.size as i32
+    }
+
+    pub fn n_content(&self) -> usize {
+        self.size - CONTENT_START as usize
+    }
+
+    /// The c-th disjoint signature chunk when the content range is split
+    /// into `n_chunks` equal parts (class-conditional token pools).
+    pub fn signature_chunk(&self, c: usize, n_chunks: usize) -> std::ops::Range<i32> {
+        let n = self.n_content();
+        let per = n / n_chunks;
+        let start = CONTENT_START + (c * per) as i32;
+        start..start + per as i32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_is_disjoint() {
+        let v = Vocab::new(256);
+        assert!(v.label_token(0) > QRY);
+        assert!(v.label_token(MAX_CLASSES - 1) < CONTENT_START);
+        assert_eq!(v.content_range().start, CONTENT_START);
+        assert_eq!(v.content_range().end, 256);
+    }
+
+    #[test]
+    fn signature_chunks_partition() {
+        let v = Vocab::new(256);
+        let a = v.signature_chunk(0, 4);
+        let b = v.signature_chunk(1, 4);
+        let d = v.signature_chunk(3, 4);
+        assert_eq!(a.end, b.start);
+        assert!(d.end <= 256);
+        assert_eq!(a.len(), b.len());
+    }
+
+    #[test]
+    #[should_panic]
+    fn tiny_vocab_rejected() {
+        Vocab::new(20);
+    }
+}

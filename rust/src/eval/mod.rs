@@ -1,0 +1,100 @@
+//! Evaluation metrics: accuracy and macro-F1 over candidate-restricted
+//! argmax predictions (the paper reports accuracy for classification tasks
+//! and F1 for QA; our KeyValue tasks use exact-match which equals F1 for
+//! single-token answers).
+
+/// Restricted argmax: the candidate token with the highest logit.
+pub fn predict(logits: &[f32], candidates: &[i32]) -> i32 {
+    let mut best = candidates[0];
+    let mut best_v = f32::NEG_INFINITY;
+    for &c in candidates {
+        let v = logits[c as usize];
+        if v > best_v {
+            best_v = v;
+            best = c;
+        }
+    }
+    best
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct EvalResult {
+    pub correct: usize,
+    pub total: usize,
+    pub macro_f1: f64,
+}
+
+impl EvalResult {
+    pub fn accuracy(&self) -> f64 {
+        if self.total == 0 {
+            return f64::NAN;
+        }
+        self.correct as f64 / self.total as f64
+    }
+}
+
+/// Compute accuracy + macro-F1 from (gold, predicted) pairs.
+pub fn score(pairs: &[(i32, i32)]) -> EvalResult {
+    let correct = pairs.iter().filter(|(g, p)| g == p).count();
+    // macro-F1 over the set of gold classes
+    let mut classes: Vec<i32> = pairs.iter().map(|(g, _)| *g).collect();
+    classes.sort_unstable();
+    classes.dedup();
+    let mut f1_sum = 0f64;
+    for &c in &classes {
+        let tp = pairs.iter().filter(|(g, p)| *g == c && *p == c).count() as f64;
+        let fp = pairs.iter().filter(|(g, p)| *g != c && *p == c).count() as f64;
+        let fnn = pairs.iter().filter(|(g, p)| *g == c && *p != c).count() as f64;
+        let prec = if tp + fp > 0.0 { tp / (tp + fp) } else { 0.0 };
+        let rec = if tp + fnn > 0.0 { tp / (tp + fnn) } else { 0.0 };
+        f1_sum += if prec + rec > 0.0 { 2.0 * prec * rec / (prec + rec) } else { 0.0 };
+    }
+    EvalResult {
+        correct,
+        total: pairs.len(),
+        macro_f1: if classes.is_empty() { f64::NAN } else { f1_sum / classes.len() as f64 },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn predict_restricts_to_candidates() {
+        let mut logits = vec![0f32; 10];
+        logits[0] = 100.0; // not a candidate
+        logits[4] = 1.0;
+        logits[5] = 2.0;
+        assert_eq!(predict(&logits, &[4, 5]), 5);
+    }
+
+    #[test]
+    fn perfect_predictions() {
+        let pairs: Vec<(i32, i32)> = (0..10).map(|i| (i % 3, i % 3)).collect();
+        let r = score(&pairs);
+        assert_eq!(r.accuracy(), 1.0);
+        assert!((r.macro_f1 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn chance_level_binary() {
+        // alternating predictions against constant gold: accuracy 0.5,
+        // macro-f1 well below 1
+        let pairs: Vec<(i32, i32)> = (0..100).map(|i| (4, if i % 2 == 0 { 4 } else { 5 })).collect();
+        let r = score(&pairs);
+        assert!((r.accuracy() - 0.5).abs() < 1e-12);
+        assert!(r.macro_f1 < 0.7);
+    }
+
+    #[test]
+    fn macro_f1_penalizes_minority_misses() {
+        // 90 of class A all correct; 10 of class B all predicted A
+        let mut pairs = vec![(0, 0); 90];
+        pairs.extend(vec![(1, 0); 10]);
+        let r = score(&pairs);
+        assert!((r.accuracy() - 0.9).abs() < 1e-12);
+        // class B f1 = 0 -> macro ~ 0.47
+        assert!(r.macro_f1 < 0.6);
+    }
+}

@@ -1,0 +1,28 @@
+//! # ConMeZO — gradient-free LLM finetuning, three-layer reproduction
+//!
+//! Rust L3 coordinator for the AISTATS 2026 paper *ConMeZO: Adaptive
+//! Descent-Direction Sampling for Gradient-Free Finetuning of Large
+//! Language Models*. The compute graph (L2, JAX) and kernels (L1, Pallas)
+//! are AOT-compiled to HLO text by `python/compile/aot.py`; this crate
+//! loads and executes them via PJRT (`runtime`), implements the optimizer
+//! family (`optimizer`), the training orchestration and the O(1)-bytes/step
+//! distributed shared-randomness trainer (`coordinator`), plus every
+//! substrate the offline environment lacks (`util`, `config`, `cli`,
+//! `vecmath`, `net`, `checkpoint`, `bench`, `testing`).
+//!
+//! Quick start (after `make artifacts`): see `examples/quickstart.rs`.
+
+pub mod bench;
+pub mod checkpoint;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod net;
+pub mod objective;
+pub mod optimizer;
+pub mod runtime;
+pub mod testing;
+pub mod util;
+pub mod vecmath;

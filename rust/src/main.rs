@@ -1,0 +1,230 @@
+//! `conmezo` — the launcher CLI.
+//!
+//! Subcommands:
+//!   train     finetune a preset on a task with any optimizer (config file
+//!             + --set overrides)
+//!   pretrain  build the pretrained checkpoint for a preset
+//!   worker    join a distributed run (connect to a leader)
+//!   leader    host a distributed run over TCP
+//!   info      print artifact/platform info
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+use conmezo::cli::App;
+use conmezo::config::Config;
+use conmezo::coordinator::{self, DistHypers, Mode, TrainConfig, Trainer, ZoWorker};
+use conmezo::data::{TaskGen, TrainSampler};
+use conmezo::net::{TcpTransport, Transport};
+use conmezo::objective::HloObjective;
+use conmezo::optimizer::BetaSchedule;
+use conmezo::runtime::{lit_vec_f32, Arg, Runtime};
+use conmezo::util::json::Json;
+
+fn app() -> App {
+    App::new("conmezo", "gradient-free LLM finetuning (ConMeZO, AISTATS 2026)")
+        .subcommand("train", "finetune a preset on a task")
+        .subcommand("pretrain", "build a pretrained checkpoint")
+        .subcommand("leader", "host a distributed ZO run")
+        .subcommand("worker", "join a distributed ZO run")
+        .subcommand("info", "print artifacts / platform info")
+        .opt("config", "TOML config file")
+        .repeated("set", "config override key=value")
+        .opt_default("preset", "tiny", "model preset (nano|tiny|small|medium)")
+        .opt_default("task", "sst2", "task name (see data::tasks registry)")
+        .opt_default("optimizer", "conmezo", "optimizer name")
+        .opt_default("steps", "1000", "training steps")
+        .opt_default("eta", "0.05", "learning rate")
+        .opt_default("lam", "0.001", "smoothing parameter lambda")
+        .opt_default("theta", "1.35", "cone half-angle")
+        .opt_default("beta", "0.99", "final momentum beta")
+        .opt_default("seed", "42", "run seed")
+        .opt_default("mode", "fused", "execution mode (fused|composed)")
+        .opt("init-from", "checkpoint to warm-start from")
+        .flag("pretrained", "warm-start from the preset's pretrained ckpt (builds it if missing)")
+        .flag("no-warmup", "disable the §3.4 beta warm-up")
+        .opt_default("eval-every", "200", "evaluate every N steps")
+        .opt_default("listen", "127.0.0.1:7070", "leader bind address")
+        .opt_default("connect", "127.0.0.1:7070", "worker connect address")
+        .opt_default("workers", "2", "expected worker count (leader)")
+        .opt_default("worker-id", "0", "worker id")
+        .opt_default("out", "", "output JSON path for the run summary")
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let p = match app().parse(&args) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    match p.subcommand.as_str() {
+        "train" => cmd_train(&p),
+        "pretrain" => cmd_pretrain(&p),
+        "leader" => cmd_leader(&p),
+        "worker" => cmd_worker(&p),
+        "info" | "" => cmd_info(),
+        other => bail!("unhandled subcommand {other}"),
+    }
+}
+
+fn build_config(p: &conmezo::cli::Parsed) -> Result<TrainConfig> {
+    // layering: file < CLI flags < --set overrides
+    let mut file_cfg = match p.value("config") {
+        Some(path) => Config::load(Path::new(path))?,
+        None => Config::new(),
+    };
+    for kv in p.values("set") {
+        file_cfg.set_from_str(kv)?;
+    }
+    let mut cfg = TrainConfig::preset(
+        &file_cfg.str_or("model.preset", &p.str_or("preset", "tiny")),
+        &file_cfg.str_or("train.task", &p.str_or("task", "sst2")),
+        &file_cfg.str_or("train.optimizer", &p.str_or("optimizer", "conmezo")),
+    );
+    cfg.steps = file_cfg.usize_or("train.steps", p.usize_or("steps", 1000));
+    cfg.eta = file_cfg.f64_or("train.eta", p.f64_or("eta", 0.05)) as f32;
+    cfg.lam = file_cfg.f64_or("train.lam", p.f64_or("lam", 1e-3)) as f32;
+    cfg.theta = file_cfg.f64_or("train.theta", p.f64_or("theta", 1.35)) as f32;
+    cfg.beta_final = file_cfg.f64_or("train.beta", p.f64_or("beta", 0.99)) as f32;
+    cfg.warmup = !p.flag("no-warmup") && file_cfg.bool_or("train.warmup", true);
+    cfg.seed = file_cfg.i64_or("train.seed", p.usize_or("seed", 42) as i64) as u64;
+    cfg.eval_every = file_cfg.usize_or("train.eval_every", p.usize_or("eval-every", 200));
+    cfg.mode = match file_cfg.str_or("train.mode", &p.str_or("mode", "fused")).as_str() {
+        "composed" => Mode::Composed,
+        _ => Mode::Fused,
+    };
+    if let Some(path) = p.value("init-from") {
+        cfg.init_from = Some(path.into());
+    }
+    Ok(cfg)
+}
+
+fn cmd_train(p: &conmezo::cli::Parsed) -> Result<()> {
+    let rt = Runtime::open_default()?;
+    let mut cfg = build_config(p)?;
+    if p.flag("pretrained") && cfg.init_from.is_none() {
+        cfg.init_from = Some(coordinator::ensure_pretrained(&rt, &cfg.preset, 400, 1e-3, 0.3)?);
+    }
+    println!(
+        "training {} on {} with {} ({} steps, mode {:?})",
+        cfg.preset, cfg.task, cfg.optimizer, cfg.steps, cfg.mode
+    );
+    let mut tr = Trainer::new(&rt, cfg)?;
+    let summary = tr.run()?;
+    println!(
+        "done: final loss {:.4}, accuracy {:.3}, {:.2} steps/s, peak mem {:.1} MiB",
+        summary.final_loss, summary.final_accuracy, summary.steps_per_sec, summary.peak_mem_mib
+    );
+    let out = p.str_or("out", "");
+    if !out.is_empty() {
+        let mut rec = coordinator::RunRecord::new(Path::new(&out).file_stem().unwrap().to_str().unwrap());
+        rec.meta_str("task", &summary.task).meta_str("optimizer", &summary.optimizer);
+        rec.meta_num("final_accuracy", summary.final_accuracy);
+        rec.meta_num("final_loss", summary.final_loss);
+        for (s, l) in &summary.loss_curve {
+            rec.row(vec![("step", Json::num(*s as f64)), ("loss", Json::num(*l))]);
+        }
+        let dir = Path::new(&out).parent().unwrap_or(Path::new("results"));
+        rec.save_in(dir)?;
+    }
+    Ok(())
+}
+
+fn cmd_pretrain(p: &conmezo::cli::Parsed) -> Result<()> {
+    let rt = Runtime::open_default()?;
+    let preset = p.str_or("preset", "tiny");
+    let steps = p.usize_or("steps", 400);
+    let path = coordinator::pretrained_path(&preset);
+    let curve = coordinator::pretrain(&rt, &preset, steps, 1e-3, 0.3, p.usize_or("seed", 7) as u64, &path)?;
+    println!("pretrained {preset} for {steps} steps -> {}", path.display());
+    if let Some((_, l)) = curve.last() {
+        println!("final LM loss {l:.4}");
+    }
+    Ok(())
+}
+
+fn cmd_leader(p: &conmezo::cli::Parsed) -> Result<()> {
+    let addr = p.str_or("listen", "127.0.0.1:7070");
+    let n = p.usize_or("workers", 2);
+    let steps = p.usize_or("steps", 1000) as u64;
+    let hypers = DistHypers {
+        theta: p.f64_or("theta", 1.35) as f32,
+        eta: p.f64_or("eta", 0.05) as f32,
+        lam: p.f64_or("lam", 1e-3) as f32,
+    };
+    let beta = BetaSchedule::PaperWarmup {
+        beta_final: p.f64_or("beta", 0.99) as f32,
+        total_steps: steps as usize,
+    };
+    println!("leader: waiting for {n} workers on {addr}");
+    let listener = std::net::TcpListener::bind(&addr)?;
+    let mut conns: Vec<Box<dyn Transport>> = Vec::new();
+    for i in 0..n {
+        let (s, peer) = listener.accept()?;
+        println!("worker {i} connected from {peer}");
+        conns.push(Box::new(TcpTransport::new(s)?));
+    }
+    let seed = p.usize_or("seed", 42) as u64;
+    let summary = coordinator::run_leader(&mut conns, seed, steps, hypers, &beta, p.usize_or("eval-every", 200) as u64)?;
+    println!(
+        "distributed run done: {} steps, {:.1} B/step/worker on the wire, final loss {:.4}",
+        summary.steps,
+        summary.wire_bytes as f64 / summary.steps as f64 / n as f64,
+        summary.loss_curve.last().map(|x| x.1).unwrap_or(f64::NAN)
+    );
+    for (t, acc) in &summary.eval_curve {
+        println!("  eval@{t}: {acc:.3}");
+    }
+    Ok(())
+}
+
+fn cmd_worker(p: &conmezo::cli::Parsed) -> Result<()> {
+    let rt = Runtime::open_default()?;
+    let preset = p.str_or("preset", "tiny");
+    let task = p.str_or("task", "sst2");
+    let id = p.usize_or("worker-id", 0) as u32;
+    let seed = p.usize_or("seed", 42) as u64;
+    let meta = rt.preset(&preset)?.clone();
+    let spec = conmezo::data::spec(&task).ok_or_else(|| anyhow::anyhow!("unknown task {task}"))?;
+    let gen = TaskGen::new(spec, meta.vocab, meta.seq_len);
+    let train = gen.dataset(256, seed);
+    let evalset = gen.dataset(64, seed ^ 0xEEE ^ id as u64);
+    // every worker shards data by its own sampler stream (worker id)
+    let sampler = TrainSampler::new(train, meta.batch, meta.seq_len, seed, id as u64);
+    let obj = HloObjective::new(&rt, &preset, Box::new(sampler))?;
+
+    // identical initial params on every worker: the shared init program
+    let init = rt.load_kind(&preset, "init")?;
+    let params = lit_vec_f32(&init.call(&[Arg::I32(seed as i32)])?[0])?;
+    let mut w = ZoWorker::new(id, params, Box::new(obj));
+    let evaluator = coordinator::Evaluator::new(&rt, &preset, evalset)?;
+    w.eval_fn = Some(Box::new(move |x: &[f32]| {
+        match evaluator.evaluate(x) {
+            Ok(r) => (r.correct as u64, r.total as u64),
+            Err(_) => (0, 0),
+        }
+    }));
+
+    let addr = p.str_or("connect", "127.0.0.1:7070");
+    println!("worker {id}: connecting to {addr}");
+    let mut conn = TcpTransport::connect(&addr)?;
+    coordinator::run_worker(&mut conn, &mut w)?;
+    println!("worker {id}: shutdown");
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    let rt = Runtime::open_default()?;
+    println!("platform: {}", rt.platform());
+    println!("programs: {}", rt.manifest.programs.len());
+    for (name, preset) in &rt.manifest.presets {
+        println!(
+            "  preset {name}: d={} (pad {}), vocab {}, {} layers, seq {}",
+            preset.d_raw, preset.d_pad, preset.vocab, preset.n_layers, preset.seq_len
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,302 @@
+//! Objective abstraction: the ZO oracle f(x) of Definition 1.
+//!
+//! Composed-mode optimizers (HiZOO, LOZO, MeZO-SVRG, ZO-AdaMM and the
+//! loop-based MeZO emulation of Table 3) only interact with the model
+//! through this trait — two function evaluations per step, exactly like the
+//! paper's setting. Two implementations:
+//!
+//! * [`NativeQuadratic`] — the Fig. 3 / App. C.1 synthetic objective in
+//!   pure Rust (microseconds per eval; used for the 10^5-step grid sweeps).
+//! * [`HloObjective`] — the transformer loss, evaluated by executing the
+//!   AOT-compiled `{preset}_loss` / `{preset}_two_point` programs on PJRT.
+
+use anyhow::Result;
+
+use crate::runtime::{lit_f32, Arg, Program, Runtime};
+
+/// Fixed-shape token batch fed to the HLO loss programs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Batch {
+    pub input_ids: Vec<i32>,
+    pub targets: Vec<i32>,
+    pub mask: Vec<f32>,
+    pub batch: usize,
+    pub seq: usize,
+}
+
+impl Batch {
+    pub fn zeros(batch: usize, seq: usize) -> Batch {
+        Batch {
+            input_ids: vec![0; batch * seq],
+            targets: vec![0; batch * seq],
+            mask: vec![0.0; batch * seq],
+            batch,
+            seq,
+        }
+    }
+
+    pub fn dims(&self) -> [usize; 2] {
+        [self.batch, self.seq]
+    }
+}
+
+/// Supplies minibatches to a stochastic objective.
+pub trait BatchSource {
+    fn next_batch(&mut self) -> Batch;
+}
+
+/// The ZO oracle.
+pub trait Objective {
+    /// Padded flat dimension (buffer length).
+    fn dim(&self) -> usize;
+    /// True parameter count d (<= dim()).
+    fn d_raw(&self) -> usize;
+    /// f(x) on the current minibatch.
+    fn loss(&mut self, x: &[f32]) -> Result<f64>;
+    /// (f(x + lam z), f(x - lam z)) on the *same* minibatch — the SPSA pair
+    /// must see identical data (Definition 1).
+    fn two_point(&mut self, x: &[f32], z: &[f32], lam: f32) -> Result<(f64, f64)>;
+    /// Advance to the next minibatch (no-op for deterministic objectives).
+    fn advance(&mut self) {}
+    /// Total function evaluations so far (the ZO cost metric).
+    fn evals(&self) -> u64;
+}
+
+// ---------------------------------------------------------------------------
+// NativeQuadratic
+// ---------------------------------------------------------------------------
+
+/// f(x) = sum_i sigma_i x_i^2 with sigma_i geometric from 1/d to 1
+/// (condition number d) — byte-for-byte the python `quadratic.sigmas`.
+pub struct NativeQuadratic {
+    pub sigmas: Vec<f32>,
+    evals: u64,
+}
+
+impl NativeQuadratic {
+    pub fn new(d: usize) -> Self {
+        let ratio = (d as f64).powf(1.0 / (d as f64 - 1.0));
+        let mut sigmas = Vec::with_capacity(d);
+        let mut cur = 1.0 / d as f64;
+        for _ in 0..d {
+            sigmas.push(cur as f32);
+            cur *= ratio;
+        }
+        NativeQuadratic { sigmas, evals: 0 }
+    }
+
+    /// Analytic gradient (tests + Fig. 6-style probes).
+    pub fn grad(&self, x: &[f32], out: &mut [f32]) {
+        for i in 0..x.len() {
+            out[i] = 2.0 * self.sigmas[i] * x[i];
+        }
+    }
+
+    fn eval(&self, x: &[f32]) -> f64 {
+        let mut acc = 0f64;
+        for (xi, si) in x.iter().zip(&self.sigmas) {
+            acc += *si as f64 * (*xi as f64) * (*xi as f64);
+        }
+        acc
+    }
+}
+
+impl Objective for NativeQuadratic {
+    fn dim(&self) -> usize {
+        self.sigmas.len()
+    }
+
+    fn d_raw(&self) -> usize {
+        self.sigmas.len()
+    }
+
+    fn loss(&mut self, x: &[f32]) -> Result<f64> {
+        self.evals += 1;
+        Ok(self.eval(x))
+    }
+
+    fn two_point(&mut self, x: &[f32], z: &[f32], lam: f32) -> Result<(f64, f64)> {
+        self.evals += 2;
+        // evaluate without materializing x +- lam z
+        let (mut lp, mut lm) = (0f64, 0f64);
+        let lam = lam as f64;
+        for i in 0..x.len() {
+            let s = self.sigmas[i] as f64;
+            let xp = x[i] as f64 + lam * z[i] as f64;
+            let xm = x[i] as f64 - lam * z[i] as f64;
+            lp += s * xp * xp;
+            lm += s * xm * xm;
+        }
+        Ok((lp, lm))
+    }
+
+    fn evals(&self) -> u64 {
+        self.evals
+    }
+}
+
+// ---------------------------------------------------------------------------
+// HloObjective
+// ---------------------------------------------------------------------------
+
+/// Transformer loss via the AOT artifacts. Holds the compiled `loss` and
+/// `two_point` programs plus the current minibatch.
+pub struct HloObjective {
+    loss_prog: std::rc::Rc<Program>,
+    two_point_prog: std::rc::Rc<Program>,
+    pub batch: Batch,
+    source: Box<dyn BatchSource>,
+    d_pad: usize,
+    d_raw: usize,
+    evals: u64,
+}
+
+impl HloObjective {
+    pub fn new(rt: &Runtime, preset: &str, source: Box<dyn BatchSource>) -> Result<Self> {
+        let meta = rt.preset(preset)?.clone();
+        let mut source = source;
+        let batch = source.next_batch();
+        Ok(HloObjective {
+            loss_prog: rt.load_kind(preset, "loss")?,
+            two_point_prog: rt.load_kind(preset, "two_point")?,
+            batch,
+            source,
+            d_pad: meta.d_pad,
+            d_raw: meta.d_raw,
+            evals: 0,
+        })
+    }
+
+    fn batch_args(&self) -> [Arg<'_>; 3] {
+        let dims = [self.batch.batch, self.batch.seq];
+        [
+            Arg::TensorI32(&self.batch.input_ids, vec![dims[0], dims[1]]),
+            Arg::TensorI32(&self.batch.targets, vec![dims[0], dims[1]]),
+            Arg::TensorF32(&self.batch.mask, vec![dims[0], dims[1]]),
+        ]
+    }
+}
+
+impl Objective for HloObjective {
+    fn dim(&self) -> usize {
+        self.d_pad
+    }
+
+    fn d_raw(&self) -> usize {
+        self.d_raw
+    }
+
+    fn loss(&mut self, x: &[f32]) -> Result<f64> {
+        self.evals += 1;
+        let [ids, tgt, mask] = self.batch_args();
+        let outs = self.loss_prog.call(&[Arg::VecF32(x), ids, tgt, mask])?;
+        Ok(lit_f32(&outs[0])? as f64)
+    }
+
+    fn two_point(&mut self, x: &[f32], z: &[f32], lam: f32) -> Result<(f64, f64)> {
+        self.evals += 2;
+        let [ids, tgt, mask] = self.batch_args();
+        let outs = self
+            .two_point_prog
+            .call(&[Arg::VecF32(x), Arg::VecF32(z), Arg::F32(lam), ids, tgt, mask])?;
+        Ok((lit_f32(&outs[0])? as f64, lit_f32(&outs[1])? as f64))
+    }
+
+    fn advance(&mut self) {
+        self.batch = self.source.next_batch();
+    }
+
+    fn evals(&self) -> u64 {
+        self.evals
+    }
+}
+
+/// A trivial batch source cycling over a fixed dataset (tests/benches).
+pub struct CyclicBatches {
+    pub batches: Vec<Batch>,
+    pub i: usize,
+}
+
+impl BatchSource for CyclicBatches {
+    fn next_batch(&mut self) -> Batch {
+        let b = self.batches[self.i % self.batches.len()].clone();
+        self.i += 1;
+        b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quadratic_matches_python_golden() {
+        // pinned against python/tests/test_quadratic.py::test_golden_value
+        let d = 1000usize;
+        let mut q = NativeQuadratic::new(d);
+        let x = vec![1f32; d];
+        let got = q.loss(&x).unwrap();
+        let r = (d as f64).powf(1.0 / (d as f64 - 1.0));
+        let want = (1.0 / d as f64) * (r.powi(d as i32) - 1.0) / (r - 1.0);
+        assert!((got - want).abs() / want < 1e-5, "{got} vs {want}");
+    }
+
+    #[test]
+    fn quadratic_sigma_endpoints() {
+        let q = NativeQuadratic::new(1000);
+        assert!((q.sigmas[0] - 1e-3).abs() < 1e-9);
+        assert!((q.sigmas[999] - 1.0).abs() < 2e-4);
+        assert!(q.sigmas.windows(2).all(|w| w[1] > w[0]));
+    }
+
+    #[test]
+    fn two_point_consistent_with_loss() {
+        let d = 64;
+        let mut q = NativeQuadratic::new(d);
+        let x: Vec<f32> = (0..d).map(|i| (i as f32 * 0.1).sin()).collect();
+        let z: Vec<f32> = (0..d).map(|i| (i as f32 * 0.3).cos()).collect();
+        let lam = 1e-2f32;
+        let (lp, lm) = q.two_point(&x, &z, lam).unwrap();
+        let xp: Vec<f32> = x.iter().zip(&z).map(|(a, b)| a + lam * b).collect();
+        let xm: Vec<f32> = x.iter().zip(&z).map(|(a, b)| a - lam * b).collect();
+        assert!((lp - q.loss(&xp).unwrap()).abs() < 1e-6);
+        assert!((lm - q.loss(&xm).unwrap()).abs() < 1e-6);
+        assert_eq!(q.evals(), 4);
+    }
+
+    #[test]
+    fn quadratic_grad_matches_finite_difference() {
+        let d = 32;
+        let q = NativeQuadratic::new(d);
+        let x: Vec<f32> = (0..d).map(|i| 0.5 + i as f32 * 0.01).collect();
+        let mut g = vec![0f32; d];
+        q.grad(&x, &mut g);
+        let eps = 1e-3f32;
+        for i in [0usize, 15, 31] {
+            let mut xp = x.clone();
+            xp[i] += eps;
+            let mut xm = x.clone();
+            xm[i] -= eps;
+            let fd = (q.eval(&xp) - q.eval(&xm)) / (2.0 * eps as f64);
+            assert!((g[i] as f64 - fd).abs() < 1e-3, "coord {i}: {} vs {fd}", g[i]);
+        }
+    }
+
+    #[test]
+    fn cyclic_batches_cycle() {
+        let mut src = CyclicBatches {
+            batches: vec![Batch::zeros(1, 4), {
+                let mut b = Batch::zeros(1, 4);
+                b.input_ids[0] = 7;
+                b
+            }],
+            i: 0,
+        };
+        let a = src.next_batch();
+        let b = src.next_batch();
+        let c = src.next_batch();
+        assert_eq!(a.input_ids[0], 0);
+        assert_eq!(b.input_ids[0], 7);
+        assert_eq!(c, a);
+    }
+}

@@ -1,0 +1,164 @@
+//! ConMeZO — Algorithm 1 of the paper, composed-mode implementation.
+//!
+//! Per step t:
+//!   u_t ~ N(0, I_d)                      (App. C.2 practice)
+//!   m_0 = u_0                            (first iteration)
+//!   z_t = sqrt(d) cos(theta) m_t/||m_t|| + sin(theta) u_t
+//!   g   = (f(x + lam z) - f(x - lam z)) / (2 lam)
+//!   x  <- x - eta_t g z
+//!   m  <- beta_t m + (1 - beta_t) g z    (fused single pass, §3.3)
+//!
+//! beta_t follows the §3.4 warm-up schedule when configured.
+
+use anyhow::Result;
+
+use super::{sample_direction, BetaSchedule, StepStats, ZoOptimizer};
+use crate::objective::Objective;
+use crate::util::memory::MemoryMeter;
+use crate::vecmath;
+
+pub struct ConMeZo {
+    pub eta: f32,
+    pub lam: f32,
+    pub theta: f32,
+    pub beta: BetaSchedule,
+    /// Momentum buffer m_t (the paper's extra optimizer state, §3.3).
+    pub m: Vec<f32>,
+    /// Scratch: the raw direction u_t.
+    u: Vec<f32>,
+    /// Scratch: the cone direction z_t.
+    z: Vec<f32>,
+    started: bool,
+}
+
+impl ConMeZo {
+    pub fn new(dim: usize, eta: f32, lam: f32, theta: f32, beta: BetaSchedule) -> Self {
+        ConMeZo {
+            eta,
+            lam,
+            theta,
+            beta,
+            m: vec![0.0; dim],
+            u: vec![0.0; dim],
+            z: vec![0.0; dim],
+            started: false,
+        }
+    }
+
+    /// Current momentum-vs-vector alignment (Fig. 6 probe helper).
+    pub fn momentum_cos2(&self, v: &[f32]) -> f64 {
+        vecmath::cos2(&self.m, v)
+    }
+}
+
+impl ZoOptimizer for ConMeZo {
+    fn name(&self) -> &'static str {
+        "conmezo"
+    }
+
+    fn step(&mut self, x: &mut [f32], obj: &mut dyn Objective, t: usize, run_seed: u64) -> Result<StepStats> {
+        let d_raw = obj.d_raw();
+        sample_direction(&mut self.u, d_raw, run_seed, t);
+        if !self.started {
+            // Algorithm 1: m_0 <- u_0
+            self.m.copy_from_slice(&self.u);
+            self.started = true;
+        }
+        vecmath::cone_direction(&self.m, &self.u, self.theta, d_raw, &mut self.z);
+        let (lp, lm) = obj.two_point(x, &self.z, self.lam)?;
+        let g = ((lp - lm) / (2.0 * self.lam as f64)) as f32;
+        let beta = self.beta.at(t);
+        vecmath::zo_update(x, &mut self.m, &self.z, g, self.eta, beta);
+        Ok(StepStats { loss: 0.5 * (lp + lm), proj_grad: g as f64, evals: 2 })
+    }
+
+    fn record_memory(&self, meter: &mut MemoryMeter) {
+        meter.alloc_f32("opt.momentum", self.m.len());
+        // u is regenerated per step but lives as a persistent scratch buffer
+        // in this implementation (the paper stores the perturbation in the
+        // momentum buffer; either way it is one extra vector, §3.3)
+        meter.alloc_f32("opt.direction", self.u.len());
+        meter.alloc_f32("opt.cone", self.z.len());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optimizer::test_support::{initial_quadratic_loss, quadratic_final_loss};
+
+    fn mk(d: usize) -> ConMeZo {
+        ConMeZo::new(d, 1e-3, 1e-2, 1.35, BetaSchedule::Constant(0.95))
+    }
+
+    #[test]
+    fn descends_on_quadratic() {
+        let d = 200;
+        let l0 = initial_quadratic_loss(d, 1);
+        let l = quadratic_final_loss(&mut mk(d), d, 800, 1);
+        assert!(l < 0.5 * l0, "loss {l} vs initial {l0}");
+    }
+
+    #[test]
+    fn beats_pure_random_direction_on_quadratic() {
+        // theta < pi/2 with momentum should descend at least as fast as
+        // theta = pi/2 (which is MeZO) in this well-conditioned regime
+        let d = 500;
+        let steps = 1500;
+        let lc = quadratic_final_loss(&mut mk(d), d, steps, 3);
+        let mut mezo_like = ConMeZo::new(d, 1e-3, 1e-2, std::f32::consts::FRAC_PI_2, BetaSchedule::Constant(0.95));
+        let lm = quadratic_final_loss(&mut mezo_like, d, steps, 3);
+        assert!(lc < lm, "cone {lc} should beat isotropic {lm}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let d = 64;
+        let la = quadratic_final_loss(&mut mk(d), d, 50, 9);
+        let lb = quadratic_final_loss(&mut mk(d), d, 50, 9);
+        assert_eq!(la, lb);
+        let lc = quadratic_final_loss(&mut mk(d), d, 50, 10);
+        assert_ne!(la, lc);
+    }
+
+    #[test]
+    fn momentum_initialized_from_first_direction() {
+        let d = 32;
+        let mut opt = mk(d);
+        let mut obj = crate::objective::NativeQuadratic::new(d);
+        let mut x = vec![1f32; d];
+        opt.step(&mut x, &mut obj, 0, 5).unwrap();
+        // after one step m = beta*u0 + (1-beta)*g*z where z built from m=u0:
+        // m must be correlated with u0 (cos2 >> 1/d)
+        let mut u0 = vec![0f32; d];
+        super::super::sample_direction(&mut u0, d, 5, 0);
+        assert!(opt.momentum_cos2(&u0) > 0.5);
+    }
+
+    #[test]
+    fn memory_is_three_extra_buffers() {
+        let mut meter = MemoryMeter::new();
+        mk(128).record_memory(&mut meter);
+        assert_eq!(meter.current_bytes(), 3 * 128 * 4);
+    }
+
+    #[test]
+    fn warmup_schedule_is_consulted() {
+        // with PaperWarmup, beta at t=0 is 0.1: momentum after step 0 is
+        // dominated by the fresh gradient estimate rather than u0
+        let d = 64;
+        let mut opt = ConMeZo::new(d, 1e-3, 1e-2, 1.35, BetaSchedule::PaperWarmup { beta_final: 0.99, total_steps: 20_000 });
+        let mut obj = crate::objective::NativeQuadratic::new(d);
+        let mut x = vec![1f32; d];
+        opt.step(&mut x, &mut obj, 0, 5).unwrap();
+        // beta=0.1 -> m ~ 0.1 u0 + 0.9 g z; with g z nontrivial, cos2(m, u0)
+        // should be noticeably below the beta=0.99 case
+        let mut opt2 = ConMeZo::new(d, 1e-3, 1e-2, 1.35, BetaSchedule::Constant(0.99));
+        let mut obj2 = crate::objective::NativeQuadratic::new(d);
+        let mut x2 = vec![1f32; d];
+        opt2.step(&mut x2, &mut obj2, 0, 5).unwrap();
+        let mut u0 = vec![0f32; d];
+        super::super::sample_direction(&mut u0, d, 5, 0);
+        assert!(opt2.momentum_cos2(&u0) >= opt.momentum_cos2(&u0));
+    }
+}

@@ -1,0 +1,294 @@
+//! LOZO (Chen et al. 2025): low-rank zeroth-order perturbations
+//! (Table 5 baseline), plus its momentum variant LOZO-M.
+//!
+//! For every 2-D parameter tensor W in R^{a x b}, the perturbation block is
+//! the rank-r product U V^T / sqrt(r) with U in R^{a x r} resampled every
+//! step and V in R^{b x r} resampled lazily every `nu` steps (the paper's
+//! update interval). 1-D tensors (biases, LN gains) are perturbed densely.
+//! This captures LOZO's core claim — LLM gradients live in a low-dimensional
+//! subspace, so structured perturbations estimate them with less variance.
+//!
+//! LOZO-M adds a momentum over the *dense* accumulated estimate. (The
+//! original work keeps the momentum in factored form; we keep it dense for
+//! simplicity, which only increases this baseline's memory — documented in
+//! DESIGN.md §2.)
+
+use anyhow::Result;
+
+use super::{StepStats, ZoOptimizer};
+use crate::objective::Objective;
+use crate::util::memory::MemoryMeter;
+use crate::util::rng::{Xoshiro256pp, STREAM_DIRECTION};
+use crate::vecmath;
+
+#[derive(Clone, Copy, Debug)]
+pub struct LozoConfig {
+    pub rank: usize,
+    /// V resample interval (the paper's nu in {50, 100}).
+    pub nu: usize,
+    pub beta: f32,
+}
+
+impl Default for LozoConfig {
+    fn default() -> Self {
+        LozoConfig { rank: 2, nu: 50, beta: 0.9 }
+    }
+}
+
+enum Seg {
+    /// 2-D tensor: (offset, rows, cols, V[cols x r])
+    Mat { off: usize, rows: usize, cols: usize, v: Vec<f32> },
+    /// 1-D tensor: dense perturbation
+    Dense { off: usize, len: usize },
+}
+
+pub struct Lozo {
+    pub eta: f32,
+    pub lam: f32,
+    pub cfg: LozoConfig,
+    segs: Vec<Seg>,
+    z: Vec<f32>,
+    momentum: Option<Vec<f32>>,
+    dim: usize,
+}
+
+impl Lozo {
+    pub fn new(
+        dim: usize,
+        eta: f32,
+        lam: f32,
+        cfg: LozoConfig,
+        layout: &[(usize, Vec<usize>)],
+        with_momentum: bool,
+    ) -> Self {
+        let mut segs = Vec::new();
+        if layout.is_empty() {
+            segs.push(Seg::Dense { off: 0, len: dim });
+        } else {
+            for (off, shape) in layout {
+                if shape.len() == 2 && shape[0] >= cfg.rank && shape[1] >= cfg.rank {
+                    segs.push(Seg::Mat {
+                        off: *off,
+                        rows: shape[0],
+                        cols: shape[1],
+                        v: vec![0.0; shape[1] * cfg.rank],
+                    });
+                } else {
+                    segs.push(Seg::Dense { off: *off, len: shape.iter().product::<usize>().max(1) });
+                }
+            }
+        }
+        Lozo {
+            eta,
+            lam,
+            cfg,
+            segs,
+            z: vec![0.0; dim],
+            momentum: if with_momentum { Some(vec![0.0; dim]) } else { None },
+            dim,
+        }
+    }
+
+    /// Build the structured direction z for step t into self.z.
+    fn build_direction(&mut self, run_seed: u64, t: usize, d_raw: usize) {
+        let r = self.cfg.rank;
+        let resample_v = t % self.cfg.nu == 0;
+        // V is a function of (seed, epoch index) — replayable
+        let epoch = t / self.cfg.nu;
+        for v in self.z.iter_mut() {
+            *v = 0.0;
+        }
+        let mut u_rng = Xoshiro256pp::derive_stream(run_seed, STREAM_DIRECTION, t as u64);
+        let mut v_rng = Xoshiro256pp::derive_stream(run_seed, STREAM_DIRECTION ^ 0x5A5A, epoch as u64);
+        let inv_sqrt_r = 1.0 / (r as f32).sqrt();
+        for seg in &mut self.segs {
+            match seg {
+                Seg::Mat { off, rows, cols, v } => {
+                    if resample_v {
+                        v_rng.fill_normal_f32(v);
+                    } else {
+                        // keep the RNG stream aligned: V for this epoch was
+                        // already drawn at the epoch boundary; re-draw from
+                        // the same epoch stream to stay deterministic
+                        v_rng.fill_normal_f32(v);
+                    }
+                    let mut u = vec![0f32; *rows * r];
+                    u_rng.fill_normal_f32(&mut u);
+                    // z_block = U V^T / sqrt(r), row-major [rows x cols]
+                    for i in 0..*rows {
+                        for j in 0..*cols {
+                            let mut acc = 0f32;
+                            for k in 0..r {
+                                acc += u[i * r + k] * v[j * r + k];
+                            }
+                            let idx = *off + i * *cols + j;
+                            if idx < d_raw {
+                                self.z[idx] = acc * inv_sqrt_r;
+                            }
+                        }
+                    }
+                }
+                Seg::Dense { off, len } => {
+                    let end = (*off + *len).min(d_raw);
+                    if *off < end {
+                        u_rng.fill_normal_f32(&mut self.z[*off..end]);
+                    }
+                }
+            }
+        }
+        for v in self.z[d_raw..].iter_mut() {
+            *v = 0.0;
+        }
+    }
+}
+
+impl ZoOptimizer for Lozo {
+    fn name(&self) -> &'static str {
+        if self.momentum.is_some() {
+            "lozo_m"
+        } else {
+            "lozo"
+        }
+    }
+
+    fn step(&mut self, x: &mut [f32], obj: &mut dyn Objective, t: usize, run_seed: u64) -> Result<StepStats> {
+        debug_assert_eq!(x.len(), self.dim);
+        self.build_direction(run_seed, t, obj.d_raw());
+        let (lp, lm) = obj.two_point(x, &self.z, self.lam)?;
+        let g = ((lp - lm) / (2.0 * self.lam as f64)) as f32;
+        match &mut self.momentum {
+            Some(m) => {
+                let beta = self.cfg.beta;
+                let cm = (1.0 - beta) * g;
+                for i in 0..x.len() {
+                    m[i] = beta * m[i] + cm * self.z[i];
+                }
+                vecmath::axpy(-self.eta, m, x);
+            }
+            None => vecmath::axpy(-self.eta * g, &self.z, x),
+        }
+        Ok(StepStats { loss: 0.5 * (lp + lm), proj_grad: g as f64, evals: 2 })
+    }
+
+    fn record_memory(&self, meter: &mut MemoryMeter) {
+        meter.alloc_f32("opt.direction", self.z.len());
+        let v_total: usize = self
+            .segs
+            .iter()
+            .map(|s| match s {
+                Seg::Mat { v, .. } => v.len(),
+                _ => 0,
+            })
+            .sum();
+        meter.alloc_f32("opt.lozo.v", v_total);
+        if let Some(m) = &self.momentum {
+            meter.alloc_f32("opt.momentum", m.len());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optimizer::test_support::{initial_quadratic_loss, quadratic_final_loss};
+
+    fn layout_2d(d: usize) -> Vec<(usize, Vec<usize>)> {
+        // treat the quadratic's coordinates as a [d/8 x 8] matrix + biases
+        vec![(0, vec![d / 8, 8])]
+    }
+
+    #[test]
+    fn descends_on_quadratic() {
+        let d = 256;
+        let l0 = initial_quadratic_loss(d, 20);
+        let mut opt = Lozo::new(d, 1e-3, 1e-2, LozoConfig::default(), &layout_2d(d), false);
+        let l = quadratic_final_loss(&mut opt, d, 800, 20);
+        assert!(l < 0.7 * l0, "{l} vs {l0}");
+    }
+
+    #[test]
+    fn direction_blocks_are_low_rank() {
+        let d = 256;
+        let (rows, cols, r) = (32usize, 8usize, 2usize);
+        let mut opt = Lozo::new(
+            d,
+            1e-3,
+            1e-2,
+            LozoConfig { rank: r, nu: 50, beta: 0.9 },
+            &[(0, vec![rows, cols])],
+            false,
+        );
+        opt.build_direction(7, 1, d);
+        // any (r+1) x (r+1) minor-ish check: columns of the block must live
+        // in an r-dimensional space => rank of the [rows x cols] block <= r.
+        // verify via Gram matrix rank proxy: the (r+1)-th singular value
+        // should be ~0. Use simple Gram-Schmidt on columns.
+        let block: Vec<Vec<f32>> = (0..cols)
+            .map(|j| (0..rows).map(|i| opt.z[i * cols + j]).collect())
+            .collect();
+        let mut basis: Vec<Vec<f32>> = Vec::new();
+        for col in &block {
+            let mut v = col.clone();
+            for b in &basis {
+                let proj = vecmath::dot(&v, b) as f32;
+                for i in 0..v.len() {
+                    v[i] -= proj * b[i];
+                }
+            }
+            let n = vecmath::nrm2(&v) as f32;
+            if n > 1e-4 {
+                for vi in v.iter_mut() {
+                    *vi /= n;
+                }
+                basis.push(v);
+            }
+        }
+        assert!(basis.len() <= r, "block rank {} > {r}", basis.len());
+    }
+
+    #[test]
+    fn v_persists_within_interval_u_changes() {
+        let d = 256;
+        let mut opt = Lozo::new(d, 1e-3, 1e-2, LozoConfig { rank: 1, nu: 10, beta: 0.9 }, &[(0, vec![32, 8])], false);
+        opt.build_direction(3, 1, d);
+        let z1 = opt.z.clone();
+        opt.build_direction(3, 2, d);
+        let z2 = opt.z.clone();
+        // same V (epoch 0), different U: rank-1 blocks share column space =>
+        // columns of z1 and z2 are parallel
+        let c1: Vec<f32> = (0..32).map(|i| z1[i * 8]).collect();
+        let c2: Vec<f32> = (0..32).map(|i| z2[i * 8]).collect();
+        assert_ne!(z1, z2);
+        // both are multiples of the same U? no — column j of U V^T is V[j]*U.
+        // column 0 of z1 is V1[0]*U1, of z2 is V1[0]*U2 -> NOT parallel.
+        // Instead check ROWS: row i of z = U[i] * V^T -> rows within one z
+        // are parallel for rank 1.
+        let r0: Vec<f32> = z1[0..8].to_vec();
+        let r1: Vec<f32> = z1[8..16].to_vec();
+        let _ = (c1, c2);
+        assert!(vecmath::cos2(&r0, &r1) > 0.999, "rows not parallel for rank-1");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let d = 128;
+        let layout = layout_2d(d);
+        let mut a = Lozo::new(d, 1e-3, 1e-2, LozoConfig::default(), &layout, false);
+        let mut b = Lozo::new(d, 1e-3, 1e-2, LozoConfig::default(), &layout, false);
+        let la = quadratic_final_loss(&mut a, d, 30, 5);
+        let lb = quadratic_final_loss(&mut b, d, 30, 5);
+        assert_eq!(la, lb);
+    }
+
+    #[test]
+    fn lozo_m_accumulates_momentum() {
+        let d = 128;
+        let layout = layout_2d(d);
+        let mut opt = Lozo::new(d, 1e-3, 1e-2, LozoConfig::default(), &layout, true);
+        let mut obj = crate::objective::NativeQuadratic::new(d);
+        let mut x = vec![1f32; d];
+        opt.step(&mut x, &mut obj, 0, 2).unwrap();
+        let m = opt.momentum.as_ref().unwrap();
+        assert!(vecmath::nrm2(m) > 0.0);
+    }
+}

@@ -1,0 +1,99 @@
+//! MeZO+Momentum — the paper's own baseline (§5.2): keeps the isotropic
+//! MeZO perturbation but replaces the update direction with the momentum:
+//!
+//!   z ~ N(0, I)           (perturbation NOT biased by momentum)
+//!   g = (f+ - f-)/(2 lam)
+//!   m <- beta m + (1 - beta) g z
+//!   x <- x - eta m
+//!
+//! The paper shows this is consistently weaker than ConMeZO (Table 1),
+//! demonstrating that *where* the momentum enters (sampling vs update)
+//! matters.
+
+use anyhow::Result;
+
+use super::{sample_direction, BetaSchedule, StepStats, ZoOptimizer};
+use crate::objective::Objective;
+use crate::util::memory::MemoryMeter;
+use crate::vecmath;
+
+pub struct MezoMomentum {
+    pub eta: f32,
+    pub lam: f32,
+    pub beta: BetaSchedule,
+    pub m: Vec<f32>,
+    z: Vec<f32>,
+}
+
+impl MezoMomentum {
+    pub fn new(dim: usize, eta: f32, lam: f32, beta: BetaSchedule) -> Self {
+        MezoMomentum { eta, lam, beta, m: vec![0.0; dim], z: vec![0.0; dim] }
+    }
+}
+
+impl ZoOptimizer for MezoMomentum {
+    fn name(&self) -> &'static str {
+        "mezo_momentum"
+    }
+
+    fn step(&mut self, x: &mut [f32], obj: &mut dyn Objective, t: usize, run_seed: u64) -> Result<StepStats> {
+        sample_direction(&mut self.z, obj.d_raw(), run_seed, t);
+        let (lp, lm) = obj.two_point(x, &self.z, self.lam)?;
+        let g = ((lp - lm) / (2.0 * self.lam as f64)) as f32;
+        let beta = self.beta.at(t);
+        // m <- beta m + (1-beta) g z
+        let cm = (1.0 - beta) * g;
+        for i in 0..self.m.len() {
+            self.m[i] = beta * self.m[i] + cm * self.z[i];
+        }
+        vecmath::axpy(-self.eta, &self.m, x);
+        Ok(StepStats { loss: 0.5 * (lp + lm), proj_grad: g as f64, evals: 2 })
+    }
+
+    fn record_memory(&self, meter: &mut MemoryMeter) {
+        meter.alloc_f32("opt.momentum", self.m.len());
+        meter.alloc_f32("opt.direction", self.z.len());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optimizer::test_support::{initial_quadratic_loss, quadratic_final_loss};
+
+    #[test]
+    fn descends_on_quadratic() {
+        let d = 200;
+        let l0 = initial_quadratic_loss(d, 6);
+        let mut opt = MezoMomentum::new(d, 5e-3, 1e-2, BetaSchedule::Constant(0.9));
+        let l = quadratic_final_loss(&mut opt, d, 800, 6);
+        assert!(l < 0.7 * l0, "{l} vs {l0}");
+    }
+
+    #[test]
+    fn update_uses_momentum_not_direction() {
+        let d = 16;
+        let mut opt = MezoMomentum::new(d, 1.0, 1e-2, BetaSchedule::Constant(0.5));
+        let mut obj = crate::objective::NativeQuadratic::new(d);
+        let mut x = vec![1f32; d];
+        let x0 = x.clone();
+        opt.step(&mut x, &mut obj, 0, 3).unwrap();
+        // x - x0 must be exactly -eta * m
+        for i in 0..d {
+            assert!((x[i] - (x0[i] - opt.m[i])).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn momentum_accumulates_across_steps() {
+        let d = 16;
+        let mut opt = MezoMomentum::new(d, 1e-3, 1e-2, BetaSchedule::Constant(0.9));
+        let mut obj = crate::objective::NativeQuadratic::new(d);
+        let mut x = vec![1f32; d];
+        opt.step(&mut x, &mut obj, 0, 3).unwrap();
+        let m1 = opt.m.clone();
+        opt.step(&mut x, &mut obj, 1, 3).unwrap();
+        // m2 = 0.9*m1 + 0.1*g2 z2 -> correlated with m1
+        assert!(vecmath::cos2(&opt.m, &m1) > 0.2);
+    }
+}

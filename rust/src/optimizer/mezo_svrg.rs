@@ -1,0 +1,164 @@
+//! MeZO-SVRG (Gautam et al. 2024): variance reduction via a periodically
+//! refreshed full-batch anchor (Table 6 baseline).
+//!
+//! Every `anchor_every` steps, refresh:
+//!   x_a <- x
+//!   g_a <- (1/K) sum_j ghat(x_a; z_j, B_j)      (dense anchor gradient)
+//! On regular steps, with a fresh direction z and minibatch B:
+//!   c   = proj(x; z, B) - proj(x_a; z, B)       (control variate scalar)
+//!   x  <- x - eta (c * z + g_a)
+//!
+//! Cost: 4 evals on regular steps (two two-point pairs), 2K on anchor
+//! steps — the ~16x per-100-step wall-clock overhead the paper reports in
+//! §6.3 comes from K being the full-batch/minibatch ratio.
+//!
+//! Memory: two extra dense vectors (x_a, g_a) — more than ConMeZO's one.
+
+use anyhow::Result;
+
+use super::{sample_direction, StepStats, ZoOptimizer};
+use crate::objective::Objective;
+use crate::util::memory::MemoryMeter;
+use crate::vecmath;
+
+#[derive(Clone, Copy, Debug)]
+pub struct SvrgConfig {
+    /// refresh the anchor every N steps
+    pub anchor_every: usize,
+    /// number of minibatch estimates averaged into the anchor gradient
+    pub anchor_batches: usize,
+}
+
+impl Default for SvrgConfig {
+    fn default() -> Self {
+        SvrgConfig { anchor_every: 50, anchor_batches: 8 }
+    }
+}
+
+pub struct MezoSvrg {
+    pub eta: f32,
+    pub lam: f32,
+    pub cfg: SvrgConfig,
+    x_anchor: Vec<f32>,
+    g_anchor: Vec<f32>,
+    z: Vec<f32>,
+    have_anchor: bool,
+}
+
+impl MezoSvrg {
+    pub fn new(dim: usize, eta: f32, lam: f32, cfg: SvrgConfig) -> Self {
+        MezoSvrg {
+            eta,
+            lam,
+            cfg,
+            x_anchor: vec![0.0; dim],
+            g_anchor: vec![0.0; dim],
+            z: vec![0.0; dim],
+            have_anchor: false,
+        }
+    }
+
+    fn refresh_anchor(&mut self, x: &[f32], obj: &mut dyn Objective, t: usize, run_seed: u64) -> Result<u32> {
+        self.x_anchor.copy_from_slice(x);
+        for v in self.g_anchor.iter_mut() {
+            *v = 0.0;
+        }
+        let k = self.cfg.anchor_batches.max(1);
+        let mut evals = 0;
+        for j in 0..k {
+            // distinct directions per anchor component, replayable
+            sample_direction(&mut self.z, obj.d_raw(), run_seed ^ 0xA17C_4042, t as usize * 1000 + j);
+            let (lp, lm) = obj.two_point(x, &self.z, self.lam)?;
+            evals += 2;
+            let g = ((lp - lm) / (2.0 * self.lam as f64)) as f32 / k as f32;
+            vecmath::axpy(g, &self.z, &mut self.g_anchor);
+            obj.advance(); // anchor averages across minibatches
+        }
+        self.have_anchor = true;
+        Ok(evals)
+    }
+}
+
+impl ZoOptimizer for MezoSvrg {
+    fn name(&self) -> &'static str {
+        "mezo_svrg"
+    }
+
+    fn step(&mut self, x: &mut [f32], obj: &mut dyn Objective, t: usize, run_seed: u64) -> Result<StepStats> {
+        let mut evals = 0;
+        if !self.have_anchor || t % self.cfg.anchor_every == 0 {
+            evals += self.refresh_anchor(x, obj, t, run_seed)?;
+        }
+        sample_direction(&mut self.z, obj.d_raw(), run_seed, t);
+        // minibatch projections at x and at the anchor, same z + same batch
+        let (lp, lm) = obj.two_point(x, &self.z, self.lam)?;
+        let (ap, am) = obj.two_point(&self.x_anchor, &self.z, self.lam)?;
+        evals += 4;
+        let gx = (lp - lm) / (2.0 * self.lam as f64);
+        let ga = (ap - am) / (2.0 * self.lam as f64);
+        let c = (gx - ga) as f32;
+        // x <- x - eta (c z + g_anchor)
+        for i in 0..x.len() {
+            x[i] -= self.eta * (c * self.z[i] + self.g_anchor[i]);
+        }
+        Ok(StepStats { loss: 0.5 * (lp + lm), proj_grad: gx, evals })
+    }
+
+    fn record_memory(&self, meter: &mut MemoryMeter) {
+        meter.alloc_f32("opt.svrg.x_anchor", self.x_anchor.len());
+        meter.alloc_f32("opt.svrg.g_anchor", self.g_anchor.len());
+        meter.alloc_f32("opt.direction", self.z.len());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::objective::NativeQuadratic;
+    use crate::optimizer::test_support::{initial_quadratic_loss, quadratic_final_loss};
+
+    #[test]
+    fn descends_on_quadratic() {
+        let d = 200;
+        let l0 = initial_quadratic_loss(d, 30);
+        let mut opt = MezoSvrg::new(d, 1e-3, 1e-2, SvrgConfig { anchor_every: 20, anchor_batches: 4 });
+        let l = quadratic_final_loss(&mut opt, d, 600, 30);
+        assert!(l < 0.7 * l0, "{l} vs {l0}");
+    }
+
+    #[test]
+    fn anchor_step_costs_more_evals() {
+        let d = 64;
+        let mut obj = NativeQuadratic::new(d);
+        let mut opt = MezoSvrg::new(d, 1e-3, 1e-2, SvrgConfig { anchor_every: 100, anchor_batches: 4 });
+        let mut x = vec![1f32; d];
+        let s0 = opt.step(&mut x, &mut obj, 0, 1).unwrap();
+        let s1 = opt.step(&mut x, &mut obj, 1, 1).unwrap();
+        assert_eq!(s0.evals, 4 + 2 * 4, "anchor step: 4 + 2*anchor_batches");
+        assert_eq!(s1.evals, 4, "regular step");
+    }
+
+    #[test]
+    fn control_variate_vanishes_at_anchor() {
+        // immediately after an anchor refresh, x == x_anchor, so the
+        // control variate c == 0 and the update direction equals g_anchor
+        let d = 32;
+        let mut obj = NativeQuadratic::new(d);
+        let mut opt = MezoSvrg::new(d, 1.0, 1e-2, SvrgConfig { anchor_every: 1000, anchor_batches: 2 });
+        let mut x = vec![1f32; d];
+        let x0 = x.clone();
+        opt.step(&mut x, &mut obj, 0, 5).unwrap();
+        // x - x0 = -eta * (0 * z + g_anchor) = -g_anchor
+        for i in 0..d {
+            let want = x0[i] - opt.g_anchor[i];
+            assert!((x[i] - want).abs() < 1e-4, "coord {i}: {} vs {want}", x[i]);
+        }
+    }
+
+    #[test]
+    fn memory_includes_two_dense_anchors() {
+        let mut meter = MemoryMeter::new();
+        MezoSvrg::new(100, 1e-3, 1e-3, SvrgConfig::default()).record_memory(&mut meter);
+        assert_eq!(meter.current_bytes(), 3 * 100 * 4);
+    }
+}

@@ -1,0 +1,164 @@
+//! The ZO optimizer family (composed mode).
+//!
+//! Every algorithm implements [`ZoOptimizer`] against the [`Objective`]
+//! oracle — two (or three/four) function evaluations per step, mirroring the
+//! paper's setting. The fused execution mode (whole step as one HLO
+//! program) lives in `coordinator::fused` and is semantically equivalent to
+//! the composed ConMeZO/MeZO here (cross-checked in integration tests).
+//!
+//! | module | algorithm | paper artefact |
+//! |---|---|---|
+//! | `conmezo` | Algorithm 1 + §3.4 warm-up | everything |
+//! | `mezo` | MeZO (vectorized) + loop-based emulation | all tables, Table 3 |
+//! | `mezo_momentum` | MeZO+Momentum baseline | Table 1 |
+//! | `zo_adamm` | ZO-AdaMM (Chen et al. 2019) | Table 7 |
+//! | `hizoo` | HiZOO diagonal-Hessian ZO | Table 4 |
+//! | `lozo` | LOZO / LOZO-M low-rank perturbations | Table 5 |
+//! | `mezo_svrg` | MeZO-SVRG variance reduction | Table 6 |
+
+pub mod conmezo;
+pub mod hizoo;
+pub mod lozo;
+pub mod mezo;
+pub mod mezo_momentum;
+pub mod mezo_svrg;
+pub mod schedule;
+pub mod zo_adamm;
+
+use anyhow::Result;
+
+use crate::objective::Objective;
+use crate::util::memory::MemoryMeter;
+use crate::util::rng::{Xoshiro256pp, STREAM_DIRECTION};
+
+pub use conmezo::ConMeZo;
+pub use hizoo::HiZoo;
+pub use lozo::{Lozo, LozoConfig};
+pub use mezo::{Mezo, MezoLoop};
+pub use mezo_momentum::MezoMomentum;
+pub use mezo_svrg::{MezoSvrg, SvrgConfig};
+pub use schedule::{BetaSchedule, LrSchedule};
+pub use zo_adamm::ZoAdaMM;
+
+/// Per-step telemetry.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepStats {
+    /// Mean of the two perturbed losses (the paper's reported train loss).
+    pub loss: f64,
+    /// Projected gradient g = (f+ - f-)/(2 lambda).
+    pub proj_grad: f64,
+    /// Function evaluations consumed by this step.
+    pub evals: u32,
+}
+
+/// A zeroth-order optimizer over the flat parameter buffer.
+pub trait ZoOptimizer {
+    fn name(&self) -> &'static str;
+
+    /// One iteration: mutate `x` in place using only `obj` evaluations.
+    /// `t` is the step index; `run_seed` the experiment seed — the
+    /// perturbation direction MUST be a pure function of (run_seed, t) so
+    /// distributed replicas regenerate it identically (DESIGN.md §4).
+    fn step(&mut self, x: &mut [f32], obj: &mut dyn Objective, t: usize, run_seed: u64) -> Result<StepStats>;
+
+    /// Account persistent optimizer state (Fig. 4 / Table 8).
+    fn record_memory(&self, meter: &mut MemoryMeter);
+}
+
+/// The shared direction stream: u ~ N(0, I_d) on valid lanes, zero pads.
+/// Public because distributed workers must regenerate identical directions.
+pub fn sample_direction(buf: &mut [f32], d_raw: usize, run_seed: u64, t: usize) {
+    let mut rng = Xoshiro256pp::derive_stream(run_seed, STREAM_DIRECTION, t as u64);
+    rng.fill_normal_f32(&mut buf[..d_raw]);
+    for v in buf[d_raw..].iter_mut() {
+        *v = 0.0;
+    }
+}
+
+/// Build an optimizer by name with the paper-default hyperparameters
+/// (overridable afterwards through the concrete types or config).
+pub fn by_name(
+    name: &str,
+    dim: usize,
+    eta: f32,
+    lam: f32,
+    theta: f32,
+    beta: BetaSchedule,
+    layout: &[(usize, Vec<usize>)],
+) -> Result<Box<dyn ZoOptimizer>> {
+    Ok(match name {
+        "conmezo" => Box::new(ConMeZo::new(dim, eta, lam, theta, beta)),
+        "mezo" => Box::new(Mezo::new(dim, eta, lam)),
+        "mezo_loop" => Box::new(MezoLoop::new(dim, eta, lam, layout)),
+        "mezo_momentum" => Box::new(MezoMomentum::new(dim, eta, lam, beta)),
+        "zo_adamm" => Box::new(ZoAdaMM::new(dim, eta, lam)),
+        "hizoo" => Box::new(HiZoo::new(dim, eta, lam)),
+        "lozo" => Box::new(Lozo::new(dim, eta, lam, LozoConfig::default(), layout, false)),
+        "lozo_m" => Box::new(Lozo::new(dim, eta, lam, LozoConfig::default(), layout, true)),
+        "mezo_svrg" => Box::new(MezoSvrg::new(dim, eta, lam, SvrgConfig::default())),
+        other => anyhow::bail!("unknown optimizer {other:?}"),
+    })
+}
+
+#[cfg(test)]
+pub(crate) mod test_support {
+    use super::*;
+    use crate::objective::NativeQuadratic;
+
+    /// Run `opt` on the Fig. 3 quadratic from a fixed start; return the
+    /// final loss. Used by every optimizer's descent test.
+    pub fn quadratic_final_loss(opt: &mut dyn ZoOptimizer, d: usize, steps: usize, seed: u64) -> f64 {
+        let mut obj = NativeQuadratic::new(d);
+        // ||x0|| = 10 like App. C.1
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let mut x = vec![0f32; d];
+        rng.fill_normal_f32(&mut x);
+        let n = crate::vecmath::nrm2(&x) as f32;
+        crate::vecmath::scale(10.0 / n, &mut x);
+        for t in 0..steps {
+            opt.step(&mut x, &mut obj, t, seed).unwrap();
+        }
+        obj.loss(&x).unwrap()
+    }
+
+    pub fn initial_quadratic_loss(d: usize, seed: u64) -> f64 {
+        let mut obj = NativeQuadratic::new(d);
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let mut x = vec![0f32; d];
+        rng.fill_normal_f32(&mut x);
+        let n = crate::vecmath::nrm2(&x) as f32;
+        crate::vecmath::scale(10.0 / n, &mut x);
+        obj.loss(&x).unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sample_direction_deterministic_and_padded() {
+        let mut a = vec![1f32; 100];
+        let mut b = vec![2f32; 100];
+        sample_direction(&mut a, 90, 7, 3);
+        sample_direction(&mut b, 90, 7, 3);
+        assert_eq!(a, b);
+        assert!(a[90..].iter().all(|&v| v == 0.0));
+        let mut c = vec![0f32; 100];
+        sample_direction(&mut c, 90, 7, 4);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn by_name_constructs_all() {
+        let layout = vec![(0usize, vec![8usize, 4]), (32, vec![8])];
+        for name in [
+            "conmezo", "mezo", "mezo_loop", "mezo_momentum", "zo_adamm",
+            "hizoo", "lozo", "lozo_m", "mezo_svrg",
+        ] {
+            let o = by_name(name, 40, 1e-3, 1e-3, 1.35, BetaSchedule::Constant(0.9), &layout);
+            assert!(o.is_ok(), "{name}");
+        }
+        assert!(by_name("bogus", 40, 1e-3, 1e-3, 1.35, BetaSchedule::Constant(0.9), &[]).is_err());
+    }
+}

@@ -1,0 +1,127 @@
+//! Hyperparameter schedules — notably the paper's momentum warm-up (§3.4).
+
+/// The three-phase β warm-up of §3.4, written for a 20K-step run and scaled
+/// linearly to other horizons (the paper halves the breakpoints for 10K
+/// runs, i.e. scales by T/20000):
+///
+/// ```text
+/// beta_t = 0.1                                    0     <= t <= 200 s
+///        = bf - (bf - 0.1)/(1 + 8 ((t-200s)/(1800s))^1.8)^3   200s < t <= 2000 s
+///        = bf                                     t > 2000 s
+/// ```
+/// with `s = total_steps / 20000`.
+#[derive(Clone, Debug)]
+pub enum BetaSchedule {
+    Constant(f32),
+    PaperWarmup { beta_final: f32, total_steps: usize },
+}
+
+impl BetaSchedule {
+    pub fn at(&self, t: usize) -> f32 {
+        match self {
+            BetaSchedule::Constant(b) => *b,
+            BetaSchedule::PaperWarmup { beta_final, total_steps } => {
+                let s = (*total_steps as f64 / 20_000.0).max(1e-9);
+                let t1 = 200.0 * s;
+                let t2 = 2000.0 * s;
+                let w = 1800.0 * s;
+                let t = t as f64;
+                let bf = *beta_final as f64;
+                if t <= t1 {
+                    0.1
+                } else if t <= t2 {
+                    let r = (t - t1) / w;
+                    (bf - (bf - 0.1) / (1.0 + 8.0 * r.powf(1.8)).powi(3)) as f32 as f64 as f32
+                } else {
+                    *beta_final
+                }
+            }
+        }
+    }
+
+    /// Emit the whole curve (Fig. 8).
+    pub fn curve(&self, total: usize) -> Vec<f32> {
+        (0..total).map(|t| self.at(t)).collect()
+    }
+}
+
+/// Learning-rate schedule (constant in the paper; linear decay provided as
+/// an extension knob for the ablation benches).
+#[derive(Clone, Debug)]
+pub enum LrSchedule {
+    Constant(f32),
+    LinearDecay { lr0: f32, lr1: f32, total_steps: usize },
+}
+
+impl LrSchedule {
+    pub fn at(&self, t: usize) -> f32 {
+        match self {
+            LrSchedule::Constant(l) => *l,
+            LrSchedule::LinearDecay { lr0, lr1, total_steps } => {
+                let r = (t as f32 / (*total_steps).max(1) as f32).min(1.0);
+                lr0 + (lr1 - lr0) * r
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_paper_breakpoints_20k() {
+        let s = BetaSchedule::PaperWarmup { beta_final: 0.99, total_steps: 20_000 };
+        // flat start
+        assert_eq!(s.at(0), 0.1);
+        assert_eq!(s.at(200), 0.1);
+        // end of ramp hits ~bf: at t=2000, r=1 -> bf - (bf-0.1)/9^3 = bf - 0.00122
+        let b2000 = s.at(2000);
+        assert!((b2000 - (0.99 - 0.89 / 729.0) as f32).abs() < 1e-4, "{b2000}");
+        // saturated
+        assert_eq!(s.at(2001), 0.99);
+        assert_eq!(s.at(19_999), 0.99);
+    }
+
+    #[test]
+    fn warmup_monotone_nondecreasing() {
+        let s = BetaSchedule::PaperWarmup { beta_final: 0.99, total_steps: 20_000 };
+        let c = s.curve(20_000);
+        for w in c.windows(2) {
+            assert!(w[1] >= w[0] - 1e-6, "{} -> {}", w[0], w[1]);
+        }
+    }
+
+    #[test]
+    fn warmup_10k_halves_breakpoints() {
+        // the paper: "for 10K runs we halve the interval lengths"
+        let s = BetaSchedule::PaperWarmup { beta_final: 0.99, total_steps: 10_000 };
+        assert_eq!(s.at(100), 0.1);
+        assert!(s.at(150) > 0.1);
+        assert_eq!(s.at(1001), 0.99);
+    }
+
+    #[test]
+    fn constant_is_constant() {
+        let s = BetaSchedule::Constant(0.95);
+        assert_eq!(s.at(0), 0.95);
+        assert_eq!(s.at(10_000), 0.95);
+    }
+
+    #[test]
+    fn lr_linear_decay() {
+        let s = LrSchedule::LinearDecay { lr0: 1e-3, lr1: 1e-4, total_steps: 100 };
+        assert!((s.at(0) - 1e-3).abs() < 1e-9);
+        assert!((s.at(100) - 1e-4).abs() < 1e-9);
+        assert!(s.at(50) < 1e-3 && s.at(50) > 1e-4);
+    }
+
+    #[test]
+    fn warmup_midpoint_matches_formula() {
+        // spot-check the exact closed form at t=1100 (halfway through ramp)
+        let s = BetaSchedule::PaperWarmup { beta_final: 0.99, total_steps: 20_000 };
+        let r: f64 = 900.0 / 1800.0;
+        let want = 0.99 - 0.89 / (1.0 + 8.0 * r.powf(1.8)).powi(3);
+        assert!((s.at(1100) as f64 - want).abs() < 1e-6);
+    }
+}

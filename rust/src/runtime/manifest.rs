@@ -1,0 +1,225 @@
+//! Typed view of `artifacts/manifest.json` — the contract between the
+//! python compile path and the Rust runtime.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ProgramSpec {
+    pub name: String,
+    pub preset: String,
+    pub kind: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<String>,
+}
+
+#[derive(Clone, Debug)]
+pub struct LayoutEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct PresetMeta {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub d_ff: usize,
+    pub d_raw: usize,
+    pub d_pad: usize,
+    pub layout: Vec<LayoutEntry>,
+}
+
+impl PresetMeta {
+    /// Parameter count (unpadded) — what the paper calls d.
+    pub fn dim(&self) -> usize {
+        self.d_raw
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub programs: BTreeMap<String, ProgramSpec>,
+    pub presets: BTreeMap<String, PresetMeta>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}; run `make artifacts` first", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let v = Json::parse(text)?;
+        let mut programs = BTreeMap::new();
+        for p in v.expect("programs")?.as_arr().ok_or_else(|| anyhow!("programs not array"))? {
+            let spec = parse_program(p)?;
+            programs.insert(spec.name.clone(), spec);
+        }
+        let mut presets = BTreeMap::new();
+        if let Some(Json::Obj(m)) = v.get("presets") {
+            for (name, pj) in m {
+                presets.insert(name.clone(), parse_preset(name, pj)?);
+            }
+        }
+        Ok(Manifest { programs, presets })
+    }
+
+    pub fn program(&self, name: &str) -> Result<&ProgramSpec> {
+        self.programs
+            .get(name)
+            .ok_or_else(|| anyhow!("program {name:?} not in manifest; re-run `make artifacts`"))
+    }
+
+    pub fn preset(&self, name: &str) -> Result<&PresetMeta> {
+        self.presets
+            .get(name)
+            .ok_or_else(|| anyhow!("preset {name:?} not in manifest"))
+    }
+}
+
+fn parse_program(p: &Json) -> Result<ProgramSpec> {
+    let gets = |k: &str| -> Result<String> {
+        Ok(p.expect(k)?.as_str().ok_or_else(|| anyhow!("{k} not str"))?.to_string())
+    };
+    let mut inputs = Vec::new();
+    for i in p.expect("inputs")?.as_arr().unwrap_or(&[]) {
+        inputs.push(TensorSpec {
+            name: i.expect("name")?.as_str().unwrap_or("").to_string(),
+            dtype: i.expect("dtype")?.as_str().unwrap_or("").to_string(),
+            shape: i
+                .expect("shape")?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|x| x.as_usize())
+                .collect(),
+        });
+    }
+    let outputs = p
+        .expect("outputs")?
+        .as_arr()
+        .unwrap_or(&[])
+        .iter()
+        .filter_map(|x| x.as_str().map(str::to_string))
+        .collect();
+    Ok(ProgramSpec {
+        name: gets("name")?,
+        preset: gets("preset")?,
+        kind: gets("kind")?,
+        file: gets("file")?,
+        inputs,
+        outputs,
+    })
+}
+
+fn parse_preset(name: &str, p: &Json) -> Result<PresetMeta> {
+    let getu = |k: &str| -> Result<usize> {
+        p.expect(k)?.as_usize().ok_or_else(|| anyhow!("{k} not usize"))
+    };
+    let mut layout = Vec::new();
+    for ent in p.expect("layout")?.as_arr().unwrap_or(&[]) {
+        layout.push(LayoutEntry {
+            name: ent.expect("name")?.as_str().unwrap_or("").to_string(),
+            shape: ent
+                .expect("shape")?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|x| x.as_usize())
+                .collect(),
+            offset: ent.expect("offset")?.as_usize().unwrap_or(0),
+        });
+    }
+    Ok(PresetMeta {
+        name: name.to_string(),
+        vocab: getu("vocab")?,
+        d_model: getu("d_model")?,
+        n_layers: getu("n_layers")?,
+        n_heads: getu("n_heads")?,
+        seq_len: getu("seq_len")?,
+        batch: getu("batch")?,
+        d_ff: getu("d_ff")?,
+        d_raw: getu("d_raw")?,
+        d_pad: getu("d_pad")?,
+        layout,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "programs": [
+        {"name": "nano_loss", "preset": "nano", "kind": "loss", "file": "nano_loss.hlo.txt",
+         "inputs": [{"name": "params", "dtype": "float32", "shape": [28672]},
+                    {"name": "input_ids", "dtype": "int32", "shape": [4, 16]}],
+         "outputs": ["loss"]}
+      ],
+      "presets": {"nano": {"vocab": 64, "d_model": 32, "n_layers": 2, "n_heads": 2,
+        "seq_len": 16, "batch": 4, "d_ff": 128, "d_raw": 28032, "d_pad": 28672,
+        "layout": [{"name": "tok_emb", "shape": [64, 32], "offset": 0}]}}
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let p = m.program("nano_loss").unwrap();
+        assert_eq!(p.inputs.len(), 2);
+        assert_eq!(p.inputs[0].element_count(), 28672);
+        assert_eq!(p.inputs[1].shape, vec![4, 16]);
+        assert_eq!(p.outputs, vec!["loss"]);
+        let preset = m.preset("nano").unwrap();
+        assert_eq!(preset.d_pad, 28672);
+        assert_eq!(preset.layout[0].name, "tok_emb");
+    }
+
+    #[test]
+    fn missing_program_is_error() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.program("nope").is_err());
+        assert!(m.preset("nope").is_err());
+    }
+
+    #[test]
+    fn real_manifest_parses_if_present() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.programs.len() >= 10);
+            let nano = m.preset("nano").unwrap();
+            assert_eq!(nano.d_pad % 1024, 0);
+            // every program's file exists
+            for p in m.programs.values() {
+                assert!(dir.join(&p.file).exists(), "{}", p.file);
+            }
+        }
+    }
+}

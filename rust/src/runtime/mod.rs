@@ -1,0 +1,220 @@
+//! L3 runtime: load AOT artifacts (`artifacts/*.hlo.txt`) and execute them
+//! on the PJRT CPU client via the `xla` crate.
+//!
+//! Pattern (from /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. Programs are compiled once and cached;
+//! after that the binary is self-contained — Python never runs again.
+
+pub mod manifest;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+pub use manifest::{LayoutEntry, Manifest, PresetMeta, ProgramSpec, TensorSpec};
+
+/// A runtime argument. Vector/matrix payloads are borrowed to keep the step
+/// loop allocation-free on the caller side.
+pub enum Arg<'a> {
+    F32(f32),
+    I32(i32),
+    VecF32(&'a [f32]),
+    /// int32 tensor with explicit dims (e.g. token batches [B, S]).
+    TensorI32(&'a [i32], Vec<usize>),
+    /// f32 tensor with explicit dims.
+    TensorF32(&'a [f32], Vec<usize>),
+}
+
+impl Arg<'_> {
+    fn to_literal(&self) -> Result<xla::Literal> {
+        Ok(match self {
+            Arg::F32(v) => xla::Literal::scalar(*v),
+            Arg::I32(v) => xla::Literal::scalar(*v),
+            Arg::VecF32(v) => xla::Literal::vec1(v),
+            Arg::TensorI32(v, dims) => {
+                let d: Vec<i64> = dims.iter().map(|&x| x as i64).collect();
+                xla::Literal::vec1(v).reshape(&d)?
+            }
+            Arg::TensorF32(v, dims) => {
+                let d: Vec<i64> = dims.iter().map(|&x| x as i64).collect();
+                xla::Literal::vec1(v).reshape(&d)?
+            }
+        })
+    }
+
+    fn shape_of(&self) -> Vec<usize> {
+        match self {
+            Arg::F32(_) | Arg::I32(_) => vec![],
+            Arg::VecF32(v) => vec![v.len()],
+            Arg::TensorI32(_, d) | Arg::TensorF32(_, d) => d.clone(),
+        }
+    }
+}
+
+/// A compiled program plus its manifest spec.
+pub struct Program {
+    pub spec: ProgramSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Program {
+    /// Execute with typed args; returns output literals in manifest order.
+    ///
+    /// Shape checking happens against the manifest up front, turning silent
+    /// PJRT size mismatches into named errors.
+    pub fn call(&self, args: &[Arg<'_>]) -> Result<Vec<xla::Literal>> {
+        if args.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: expected {} args ({:?}), got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                self.spec.inputs.iter().map(|i| i.name.as_str()).collect::<Vec<_>>(),
+                args.len()
+            );
+        }
+        for (a, spec) in args.iter().zip(&self.spec.inputs) {
+            let got = a.shape_of();
+            if got != spec.shape {
+                bail!(
+                    "{}: arg {:?} shape mismatch: got {:?}, manifest says {:?}",
+                    self.spec.name,
+                    spec.name,
+                    got,
+                    spec.shape
+                );
+            }
+        }
+        let mut lits = Vec::with_capacity(args.len());
+        for a in args {
+            lits.push(a.to_literal()?);
+        }
+        let bufs = self
+            .exe
+            .execute::<xla::Literal>(&lits)
+            .with_context(|| format!("executing {}", self.spec.name))?;
+        // return_tuple=True => one tuple-shaped output buffer
+        let tuple = bufs[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching outputs of {}", self.spec.name))?;
+        let outs = tuple.to_tuple()?;
+        if outs.len() != self.spec.outputs.len() {
+            bail!(
+                "{}: program returned {} outputs, manifest says {}",
+                self.spec.name,
+                outs.len(),
+                self.spec.outputs.len()
+            );
+        }
+        Ok(outs)
+    }
+}
+
+/// Enable FTZ + DAZ on this thread BEFORE the PJRT client spawns its
+/// thread pool (children inherit MXCSR). ZO momentum buffers decay
+/// geometrically (beta = 0.99), and denormal f32 arithmetic on x86 traps to
+/// microcode at ~100x the cost — measured as a progressive 4-5x slowdown
+/// over long ConMeZO runs before this was set (EXPERIMENTS.md §Perf).
+pub fn enable_flush_to_zero() {
+    #[cfg(target_arch = "x86_64")]
+    unsafe {
+        use std::arch::x86_64::{_mm_getcsr, _mm_setcsr};
+        // bit 15 = FTZ, bit 6 = DAZ
+        _mm_setcsr(_mm_getcsr() | (1 << 15) | (1 << 6));
+    }
+}
+
+/// Extraction helpers for output literals.
+pub fn lit_f32(l: &xla::Literal) -> Result<f32> {
+    Ok(l.get_first_element::<f32>()?)
+}
+
+pub fn lit_vec_f32(l: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(l.to_vec::<f32>()?)
+}
+
+/// Copy a literal's f32 payload into an existing buffer (hot path: avoids
+/// the Vec allocation per step).
+pub fn lit_copy_f32(l: &xla::Literal, dst: &mut [f32]) -> Result<()> {
+    if l.element_count() != dst.len() {
+        bail!("literal has {} elements, dst {}", l.element_count(), dst.len());
+    }
+    l.copy_raw_to(dst)?;
+    Ok(())
+}
+
+/// The PJRT runtime: client + artifact directory + compiled-program cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<Program>>>,
+}
+
+impl Runtime {
+    /// Open the artifact directory (compiles nothing yet).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
+        enable_flush_to_zero();
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime { client, dir, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// Default artifact location relative to the repo root.
+    pub fn open_default() -> Result<Runtime> {
+        let candidates = ["artifacts", "../artifacts", "../../artifacts"];
+        for c in candidates {
+            if Path::new(c).join("manifest.json").exists() {
+                return Self::open(c);
+            }
+        }
+        // fall back to CARGO_MANIFEST_DIR for tests
+        let from_env = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if from_env.join("manifest.json").exists() {
+            return Self::open(from_env);
+        }
+        bail!("artifacts/manifest.json not found; run `make artifacts`")
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load (and compile, once) a program by manifest name.
+    pub fn load(&self, name: &str) -> Result<Rc<Program>> {
+        if let Some(p) = self.cache.borrow().get(name) {
+            return Ok(p.clone());
+        }
+        let spec = self.manifest.program(name)?.clone();
+        let path = self.dir.join(&spec.file);
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        crate::debug!(
+            "runtime",
+            "compiled {name} in {:.2}s",
+            t0.elapsed().as_secs_f64()
+        );
+        let prog = Rc::new(Program { spec, exe });
+        self.cache.borrow_mut().insert(name.to_string(), prog.clone());
+        Ok(prog)
+    }
+
+    /// Load a preset-scoped program, e.g. ("tiny", "conmezo_step").
+    pub fn load_kind(&self, preset: &str, kind: &str) -> Result<Rc<Program>> {
+        self.load(&format!("{preset}_{kind}"))
+    }
+
+    pub fn preset(&self, name: &str) -> Result<&PresetMeta> {
+        self.manifest.preset(name)
+    }
+}

@@ -1,0 +1,146 @@
+//! Optimizer/model state byte accounting — the substitute for the paper's
+//! GPU VRAM measurements (Fig. 4, Table 8; DESIGN.md §2).
+//!
+//! The paper's memory story is about *persistent state*: MeZO keeps only the
+//! parameters; ConMeZO adds one momentum buffer (a constant Δ per model);
+//! ZO-AdaMM adds a second-moment buffer; first-order AdamW adds gradients +
+//! two moments + activation storage for backprop. `MemoryMeter` tracks named
+//! allocations so every experiment reports peak bytes with the same
+//! semantics across optimizers.
+
+use std::collections::BTreeMap;
+
+#[derive(Default, Debug, Clone)]
+pub struct MemoryMeter {
+    live: BTreeMap<String, usize>,
+    current: usize,
+    peak: usize,
+}
+
+pub const MIB: usize = 1024 * 1024;
+
+impl MemoryMeter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record a named persistent buffer of `bytes`. Re-recording a name
+    /// replaces the old size (buffers are resized, not duplicated).
+    pub fn alloc(&mut self, name: &str, bytes: usize) {
+        if let Some(old) = self.live.insert(name.to_string(), bytes) {
+            self.current -= old;
+        }
+        self.current += bytes;
+        self.peak = self.peak.max(self.current);
+    }
+
+    /// Record a named buffer of `n` f32 elements.
+    pub fn alloc_f32(&mut self, name: &str, n: usize) {
+        self.alloc(name, n * 4);
+    }
+
+    /// Record a transient allocation that exists only within a step (e.g.
+    /// the activation working set of one forward pass): raises the peak but
+    /// not the persistent size.
+    pub fn transient(&mut self, bytes: usize) {
+        self.peak = self.peak.max(self.current + bytes);
+    }
+
+    pub fn free(&mut self, name: &str) {
+        if let Some(old) = self.live.remove(name) {
+            self.current -= old;
+        }
+    }
+
+    pub fn current_bytes(&self) -> usize {
+        self.current
+    }
+
+    pub fn peak_bytes(&self) -> usize {
+        self.peak
+    }
+
+    pub fn peak_mib(&self) -> f64 {
+        self.peak as f64 / MIB as f64
+    }
+
+    /// Itemized live buffers (for the Table 8 breakdown).
+    pub fn breakdown(&self) -> &BTreeMap<String, usize> {
+        &self.live
+    }
+}
+
+/// Estimate of the transformer forward-pass activation working set in bytes
+/// for a [B, S] batch (used to make FO-vs-ZO peaks comparable: backprop must
+/// retain activations, ZO releases them after each forward).
+pub fn activation_bytes(batch: usize, seq: usize, d_model: usize, d_ff: usize, n_layers: usize, vocab: usize, retain_for_backprop: bool) -> usize {
+    let per_layer = batch * seq * (4 * d_model + d_ff) * 4; // qkv+attn-out+mlp hidden
+    let logits = batch * seq * vocab * 4;
+    if retain_for_backprop {
+        n_layers * per_layer + logits
+    } else {
+        // only one layer's working set is live at a time in inference
+        per_layer + logits
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn peak_tracks_max_of_current() {
+        let mut m = MemoryMeter::new();
+        m.alloc("params", 1000);
+        m.alloc("momentum", 1000);
+        assert_eq!(m.peak_bytes(), 2000);
+        m.free("momentum");
+        assert_eq!(m.current_bytes(), 1000);
+        assert_eq!(m.peak_bytes(), 2000);
+    }
+
+    #[test]
+    fn realloc_replaces() {
+        let mut m = MemoryMeter::new();
+        m.alloc("b", 500);
+        m.alloc("b", 700);
+        assert_eq!(m.current_bytes(), 700);
+        assert_eq!(m.peak_bytes(), 700);
+    }
+
+    #[test]
+    fn transient_raises_peak_only() {
+        let mut m = MemoryMeter::new();
+        m.alloc("params", 100);
+        m.transient(1000);
+        assert_eq!(m.current_bytes(), 100);
+        assert_eq!(m.peak_bytes(), 1100);
+    }
+
+    #[test]
+    fn mezo_vs_conmezo_vs_adamw_ordering() {
+        // the Fig. 4 shape: AdamW >> ConMeZO > MeZO, with ConMeZO - MeZO a
+        // constant equal to one parameter buffer.
+        let d = 1_000_000;
+        let mut mezo = MemoryMeter::new();
+        mezo.alloc_f32("params", d);
+        let mut con = MemoryMeter::new();
+        con.alloc_f32("params", d);
+        con.alloc_f32("momentum", d);
+        let mut adamw = MemoryMeter::new();
+        adamw.alloc_f32("params", d);
+        adamw.alloc_f32("grad", d);
+        adamw.alloc_f32("adam.mu", d);
+        adamw.alloc_f32("adam.nu", d);
+        assert!(mezo.peak_bytes() < con.peak_bytes());
+        assert!(con.peak_bytes() < adamw.peak_bytes());
+        assert_eq!(con.peak_bytes() - mezo.peak_bytes(), d * 4);
+    }
+
+    #[test]
+    fn activation_estimate_backprop_dominates() {
+        let inf = activation_bytes(8, 64, 128, 512, 6, 512, false);
+        let bp = activation_bytes(8, 64, 128, 512, 6, 512, true);
+        assert!(bp > 3 * inf);
+    }
+}

@@ -1,0 +1,153 @@
+//! ASCII line plots for terminal figure rendering (no plotting libs
+//! offline). Used by the `repro` driver to sketch Fig. 1/3/6/7 curves next
+//! to the JSON records.
+
+/// Render one or more named series into a fixed-size ASCII canvas with a
+/// log-y option (loss curves span decades).
+pub struct Plot {
+    pub width: usize,
+    pub height: usize,
+    pub log_y: bool,
+    series: Vec<(String, Vec<(f64, f64)>, char)>,
+}
+
+const MARKS: [char; 6] = ['*', '+', 'o', 'x', '#', '@'];
+
+impl Plot {
+    pub fn new(width: usize, height: usize) -> Self {
+        Plot { width, height, log_y: false, series: Vec::new() }
+    }
+
+    pub fn log_y(mut self) -> Self {
+        self.log_y = true;
+        self
+    }
+
+    pub fn series(&mut self, name: &str, points: &[(f64, f64)]) -> &mut Self {
+        let mark = MARKS[self.series.len() % MARKS.len()];
+        self.series.push((name.to_string(), points.to_vec(), mark));
+        self
+    }
+
+    fn ty(&self, y: f64) -> f64 {
+        if self.log_y {
+            y.max(1e-30).log10()
+        } else {
+            y
+        }
+    }
+
+    pub fn render(&self) -> String {
+        let mut pts: Vec<(f64, f64)> = Vec::new();
+        for (_, s, _) in &self.series {
+            pts.extend(s.iter().map(|&(x, y)| (x, self.ty(y))));
+        }
+        if pts.is_empty() {
+            return String::from("(empty plot)\n");
+        }
+        let (mut x0, mut x1) = (f64::INFINITY, f64::NEG_INFINITY);
+        let (mut y0, mut y1) = (f64::INFINITY, f64::NEG_INFINITY);
+        for &(x, y) in &pts {
+            if x.is_finite() {
+                x0 = x0.min(x);
+                x1 = x1.max(x);
+            }
+            if y.is_finite() {
+                y0 = y0.min(y);
+                y1 = y1.max(y);
+            }
+        }
+        if x1 <= x0 {
+            x1 = x0 + 1.0;
+        }
+        if y1 <= y0 {
+            y1 = y0 + 1.0;
+        }
+        let mut grid = vec![vec![' '; self.width]; self.height];
+        for (_, s, mark) in &self.series {
+            for &(x, y) in s {
+                let ty = self.ty(y);
+                if !x.is_finite() || !ty.is_finite() {
+                    continue;
+                }
+                let cx = ((x - x0) / (x1 - x0) * (self.width - 1) as f64).round() as usize;
+                let cy = ((ty - y0) / (y1 - y0) * (self.height - 1) as f64).round() as usize;
+                let row = self.height - 1 - cy.min(self.height - 1);
+                grid[row][cx.min(self.width - 1)] = *mark;
+            }
+        }
+        let mut out = String::new();
+        let ylab = |v: f64| -> String {
+            if self.log_y {
+                format!("{:>9.2e}", 10f64.powf(v))
+            } else {
+                format!("{v:>9.3}")
+            }
+        };
+        for (i, row) in grid.iter().enumerate() {
+            let frac = 1.0 - i as f64 / (self.height - 1) as f64;
+            let yv = y0 + frac * (y1 - y0);
+            let label = if i == 0 || i == self.height - 1 || i == self.height / 2 {
+                ylab(yv)
+            } else {
+                " ".repeat(9)
+            };
+            out.push_str(&format!("{label} |{}\n", row.iter().collect::<String>()));
+        }
+        out.push_str(&format!(
+            "{} +{}\n{}  {:<w$.0}{:>w2$.0}\n",
+            " ".repeat(9),
+            "-".repeat(self.width),
+            " ".repeat(9),
+            x0,
+            x1,
+            w = self.width / 2,
+            w2 = self.width - self.width / 2
+        ));
+        for (name, _, mark) in &self.series {
+            out.push_str(&format!("{} {mark} {name}\n", " ".repeat(9)));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_marks_in_bounds() {
+        let mut p = Plot::new(40, 10);
+        p.series("a", &[(0.0, 0.0), (10.0, 1.0), (20.0, 4.0)]);
+        p.series("b", &[(0.0, 4.0), (20.0, 0.0)]);
+        let s = p.render();
+        assert!(s.contains('*') && s.contains('+'));
+        assert!(s.contains("a\n") && s.contains("b\n"));
+        // every line fits the canvas width + labels
+        for line in s.lines() {
+            assert!(line.len() <= 9 + 2 + 42, "{line}");
+        }
+    }
+
+    #[test]
+    fn log_scale_handles_decades() {
+        let mut p = Plot::new(30, 8).log_y();
+        p.series("loss", &[(0.0, 100.0), (1.0, 1.0), (2.0, 0.01)]);
+        let s = p.render();
+        assert!(s.contains("e"), "log labels expected: {s}");
+    }
+
+    #[test]
+    fn empty_plot_does_not_panic() {
+        let p = Plot::new(10, 5);
+        assert!(p.render().contains("empty"));
+    }
+
+    #[test]
+    fn constant_series_does_not_divide_by_zero() {
+        let mut p = Plot::new(20, 6);
+        p.series("flat", &[(0.0, 1.0), (5.0, 1.0)]);
+        let s = p.render();
+        assert!(s.contains('*'));
+    }
+}

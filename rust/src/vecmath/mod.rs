@@ -1,0 +1,227 @@
+//! Host-side flat-buffer f32 kernels — the L3 hot path for composed-mode
+//! optimizers (HiZOO / LOZO / MeZO-SVRG / loop-based MeZO emulation).
+//!
+//! Mirrors the L1 Pallas kernel set one-for-one (`cone_direction`,
+//! `perturb`, `zo_update`, ...) so either execution mode computes identical
+//! math. Loops are written as chunked, multiplier-accumulator-friendly code
+//! that LLVM auto-vectorizes; `cargo bench optimizer_math` tracks their
+//! throughput against the memory-bandwidth roofline (EXPERIMENTS.md §Perf).
+
+/// y <- y + a * x (BLAS axpy).
+pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += a * *xi;
+    }
+}
+
+/// out <- x + a * z, writing into a separate buffer.
+pub fn axpy_into(a: f32, z: &[f32], x: &[f32], out: &mut [f32]) {
+    assert_eq!(x.len(), z.len());
+    assert_eq!(x.len(), out.len());
+    for i in 0..x.len() {
+        out[i] = x[i] + a * z[i];
+    }
+}
+
+/// <x, y> with f64 accumulation (stable for d up to ~10^8).
+pub fn dot(x: &[f32], y: &[f32]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    // 4-way unrolled accumulators help LLVM keep the pipeline full
+    let mut acc = [0f64; 4];
+    let chunks = x.len() / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        acc[0] += x[i] as f64 * y[i] as f64;
+        acc[1] += x[i + 1] as f64 * y[i + 1] as f64;
+        acc[2] += x[i + 2] as f64 * y[i + 2] as f64;
+        acc[3] += x[i + 3] as f64 * y[i + 3] as f64;
+    }
+    let mut tail = 0f64;
+    for i in chunks * 4..x.len() {
+        tail += x[i] as f64 * y[i] as f64;
+    }
+    acc[0] + acc[1] + acc[2] + acc[3] + tail
+}
+
+/// Euclidean norm.
+pub fn nrm2(x: &[f32]) -> f64 {
+    dot(x, x).sqrt()
+}
+
+/// x <- a * x.
+pub fn scale(a: f32, x: &mut [f32]) {
+    for xi in x.iter_mut() {
+        *xi *= a;
+    }
+}
+
+/// The cone construction of Algorithm 1 (host-side twin of the Pallas
+/// kernel): z <- sqrt(d_raw) * cos(theta)/||m|| * m + sin(theta) * u.
+/// `m` must be zero on pad lanes; `z`'s pad lanes are zeroed explicitly.
+pub fn cone_direction(m: &[f32], u: &[f32], theta: f32, d_raw: usize, z: &mut [f32]) {
+    assert_eq!(m.len(), u.len());
+    assert_eq!(m.len(), z.len());
+    assert!(d_raw <= m.len());
+    let mnorm = nrm2(m).max(1e-30) as f32;
+    let cs = (d_raw as f32).sqrt() * theta.cos() / mnorm;
+    let sn = theta.sin();
+    for i in 0..d_raw {
+        z[i] = cs * m[i] + sn * u[i];
+    }
+    for zi in z[d_raw..].iter_mut() {
+        *zi = 0.0;
+    }
+}
+
+/// Fused ConMeZO update (host twin of the Pallas `zo_update`):
+/// x <- x - eta*g*z ; m <- beta*m + (1-beta)*g*z, one pass.
+pub fn zo_update(x: &mut [f32], m: &mut [f32], z: &[f32], g: f32, eta: f32, beta: f32) {
+    assert_eq!(x.len(), z.len());
+    assert_eq!(m.len(), z.len());
+    let ce = eta * g;
+    let cm = (1.0 - beta) * g;
+    for i in 0..x.len() {
+        let zi = z[i];
+        x[i] -= ce * zi;
+        m[i] = beta * m[i] + cm * zi;
+    }
+}
+
+/// Per-coordinate scaled perturbation used by HiZOO: out = x + a * s * z
+/// where `s` is a per-coordinate scale vector (Sigma^{1/2}).
+pub fn axpy_scaled(a: f32, s: &[f32], z: &[f32], x: &[f32], out: &mut [f32]) {
+    assert_eq!(x.len(), z.len());
+    assert_eq!(x.len(), s.len());
+    for i in 0..x.len() {
+        out[i] = x[i] + a * s[i] * z[i];
+    }
+}
+
+/// cos^2 of the angle between two vectors ((m^T g)^2 / (||m||^2 ||g||^2)).
+pub fn cos2(a: &[f32], b: &[f32]) -> f64 {
+    let num = dot(a, b);
+    let den = (dot(a, a) * dot(b, b)).max(1e-60);
+    num * num / den
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256pp;
+
+    fn randv(n: usize, seed: u64) -> Vec<f32> {
+        let mut r = Xoshiro256pp::seed_from_u64(seed);
+        let mut v = vec![0f32; n];
+        r.fill_normal_f32(&mut v);
+        v
+    }
+
+    #[test]
+    fn dot_matches_naive() {
+        let x = randv(1001, 1);
+        let y = randv(1001, 2);
+        let naive: f64 = x.iter().zip(&y).map(|(a, b)| *a as f64 * *b as f64).sum();
+        assert!((dot(&x, &y) - naive).abs() < 1e-9);
+    }
+
+    #[test]
+    fn axpy_matches_scalar() {
+        let x = randv(37, 3);
+        let mut y = randv(37, 4);
+        let y0 = y.clone();
+        axpy(0.5, &x, &mut y);
+        for i in 0..37 {
+            assert_eq!(y[i], y0[i] + 0.5 * x[i]);
+        }
+    }
+
+    #[test]
+    fn cone_direction_properties() {
+        let d_pad = 2048;
+        let d_raw = 2000;
+        let mut m = randv(d_pad, 5);
+        for v in m[d_raw..].iter_mut() {
+            *v = 0.0;
+        }
+        let u = randv(d_pad, 6);
+        let mut z = vec![0f32; d_pad];
+
+        // theta = 0: z = sqrt(d) * m_hat
+        cone_direction(&m, &u, 0.0, d_raw, &mut z);
+        let mn = nrm2(&m);
+        for i in 0..d_raw {
+            let want = (d_raw as f64).sqrt() as f32 / mn as f32 * m[i];
+            assert!((z[i] - want).abs() < 1e-4, "{} vs {}", z[i], want);
+        }
+        // pads zero
+        assert!(z[d_raw..].iter().all(|&v| v == 0.0));
+
+        // theta = pi/2: z = u on the valid lanes
+        cone_direction(&m, &u, std::f32::consts::FRAC_PI_2, d_raw, &mut z);
+        for i in 0..d_raw {
+            assert!((z[i] - u[i]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn cone_norm_identity_with_unit_inputs() {
+        // with u restricted to the sphere sqrt(d) S^{d-1} and orthogonal to
+        // m, ||z||^2 == d exactly (Lemma 2 setting)
+        let d = 4096;
+        let m = randv(d, 7);
+        let mut u = randv(d, 8);
+        // orthogonalize then normalize to sqrt(d)
+        let proj = (dot(&u, &m) / dot(&m, &m)) as f32;
+        for i in 0..d {
+            u[i] -= proj * m[i];
+        }
+        let s = ((d as f64).sqrt() / nrm2(&u)) as f32;
+        scale(s, &mut u);
+        let mut z = vec![0f32; d];
+        cone_direction(&m, &u, 0.9, d, &mut z);
+        let zz = dot(&z, &z);
+        assert!((zz - d as f64).abs() / (d as f64) < 1e-4, "||z||^2 = {zz}");
+    }
+
+    #[test]
+    fn zo_update_matches_reference() {
+        let d = 515;
+        let mut x = randv(d, 9);
+        let mut m = randv(d, 10);
+        let z = randv(d, 11);
+        let (x0, m0) = (x.clone(), m.clone());
+        let (g, eta, beta) = (1.7f32, 1e-3f32, 0.95f32);
+        zo_update(&mut x, &mut m, &z, g, eta, beta);
+        for i in 0..d {
+            assert!((x[i] - (x0[i] - eta * g * z[i])).abs() < 1e-6);
+            assert!((m[i] - (beta * m0[i] + (1.0 - beta) * g * z[i])).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn cos2_bounds_and_self() {
+        let a = randv(512, 12);
+        let b = randv(512, 13);
+        let c = cos2(&a, &b);
+        assert!((0.0..=1.0).contains(&c));
+        assert!((cos2(&a, &a) - 1.0).abs() < 1e-9);
+        // scaled copies are perfectly aligned
+        let mut a2 = a.clone();
+        scale(-3.0, &mut a2);
+        assert!((cos2(&a, &a2) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn axpy_scaled_matches_scalar() {
+        let d = 64;
+        let x = randv(d, 14);
+        let z = randv(d, 15);
+        let s = randv(d, 16);
+        let mut out = vec![0f32; d];
+        axpy_scaled(2.0, &s, &z, &x, &mut out);
+        for i in 0..d {
+            assert!((out[i] - (x[i] + 2.0 * s[i] * z[i])).abs() < 1e-6);
+        }
+    }
+}

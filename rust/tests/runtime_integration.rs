@@ -1,0 +1,200 @@
+//! Integration tests over the PJRT runtime + AOT artifacts: numerics of
+//! loaded programs against golden values and cross-implementation
+//! equivalences (fused HLO vs composed host path, HLO quadratic vs native).
+//!
+//! These tests need `artifacts/` (run `make artifacts` first); they are
+//! skipped gracefully when absent so `cargo test` works on a fresh clone.
+
+use conmezo::coordinator::{FusedConMeZo, FusedMezo};
+use conmezo::data::{spec, TaskGen, TrainSampler};
+use conmezo::objective::{BatchSource, HloObjective, NativeQuadratic, Objective};
+use conmezo::runtime::{lit_f32, lit_vec_f32, Arg, Runtime};
+use conmezo::vecmath;
+
+fn runtime() -> Option<Runtime> {
+    match Runtime::open_default() {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("skipping integration test (no artifacts): {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn quad_hlo_matches_native() {
+    let Some(rt) = runtime() else { return };
+    let prog = rt.load("quad_loss").unwrap();
+    let mut native = NativeQuadratic::new(1000);
+    let mut rng = conmezo::util::rng::Xoshiro256pp::seed_from_u64(3);
+    let mut x = vec![0f32; 1000];
+    rng.fill_normal_f32(&mut x);
+    let outs = prog.call(&[Arg::VecF32(&x)]).unwrap();
+    let hlo = lit_f32(&outs[0]).unwrap() as f64;
+    let nat = native.loss(&x).unwrap();
+    assert!((hlo - nat).abs() / nat.abs().max(1e-9) < 1e-4, "{hlo} vs {nat}");
+}
+
+#[test]
+fn quad_grad_matches_native() {
+    let Some(rt) = runtime() else { return };
+    let prog = rt.load("quad_grad").unwrap();
+    let native = NativeQuadratic::new(1000);
+    let x = vec![0.5f32; 1000];
+    let outs = prog.call(&[Arg::VecF32(&x)]).unwrap();
+    let hlo = lit_vec_f32(&outs[0]).unwrap();
+    let mut g = vec![0f32; 1000];
+    native.grad(&x, &mut g);
+    for i in (0..1000).step_by(97) {
+        // f32 pow chains differ slightly between XLA and the host sigmas
+        let tol = 1e-4 * g[i].abs().max(1e-3);
+        assert!((hlo[i] - g[i]).abs() < tol, "coord {i}: {} vs {}", hlo[i], g[i]);
+    }
+}
+
+#[test]
+fn init_program_deterministic_and_padded() {
+    let Some(rt) = runtime() else { return };
+    let meta = rt.preset("nano").unwrap().clone();
+    let init = rt.load_kind("nano", "init").unwrap();
+    let a = lit_vec_f32(&init.call(&[Arg::I32(5)]).unwrap()[0]).unwrap();
+    let b = lit_vec_f32(&init.call(&[Arg::I32(5)]).unwrap()[0]).unwrap();
+    let c = lit_vec_f32(&init.call(&[Arg::I32(6)]).unwrap()[0]).unwrap();
+    assert_eq!(a, b);
+    assert_ne!(a, c);
+    assert_eq!(a.len(), meta.d_pad);
+    assert!(a[meta.d_raw..].iter().all(|&v| v == 0.0), "pads must be zero");
+}
+
+#[test]
+fn loss_program_is_batch_sensitive_and_finite() {
+    let Some(rt) = runtime() else { return };
+    let meta = rt.preset("nano").unwrap().clone();
+    let gen = TaskGen::new(spec("sst2").unwrap(), meta.vocab, meta.seq_len);
+    let mut s1 = TrainSampler::new(gen.dataset(32, 1), meta.batch, meta.seq_len, 1, 0);
+    let mut obj = HloObjective::new(&rt, "nano", Box::new(TrainSampler::new(gen.dataset(32, 1), meta.batch, meta.seq_len, 1, 0))).unwrap();
+    let init = rt.load_kind("nano", "init").unwrap();
+    let params = lit_vec_f32(&init.call(&[Arg::I32(1)]).unwrap()[0]).unwrap();
+    let l1 = obj.loss(&params).unwrap();
+    assert!(l1.is_finite() && l1 > 0.0);
+    // fresh model ~ uniform prediction: loss ~ ln(vocab)
+    assert!((l1 - (meta.vocab as f64).ln()).abs() < 0.7, "{l1}");
+    obj.advance();
+    let l2 = obj.loss(&params).unwrap();
+    assert_ne!(l1, l2, "different batches must give different losses");
+    let _ = s1.next_batch();
+}
+
+#[test]
+fn fused_conmezo_matches_composed_host_path() {
+    // THE equivalence: the fused HLO step (Pallas kernels inside) and the
+    // composed path (host vecmath + two_point program) implement the same
+    // Algorithm 1 update when driven with the same direction.
+    let Some(rt) = runtime() else { return };
+    let meta = rt.preset("nano").unwrap().clone();
+    let gen = TaskGen::new(spec("sst2").unwrap(), meta.vocab, meta.seq_len);
+    let data = gen.dataset(32, 1);
+    let mut sampler = TrainSampler::new(data.clone(), meta.batch, meta.seq_len, 1, 0);
+    let batch = sampler.next_batch();
+
+    let init = rt.load_kind("nano", "init").unwrap();
+    let params0 = lit_vec_f32(&init.call(&[Arg::I32(1)]).unwrap()[0]).unwrap();
+    let (theta, beta, eta, lam) = (1.35f32, 0.9f32, 1e-4f32, 1e-3f32);
+    let seed = 77i32;
+
+    // fused path
+    let mut fused = FusedConMeZo::new(&rt, "nano", theta).unwrap();
+    let mut p_fused = params0.clone();
+    let stats = fused.step(&mut p_fused, &batch, seed, beta, eta, lam).unwrap();
+
+    // composed path with the SAME direction: regenerate u via sample_u
+    let sample_u = rt.load_kind("nano", "sample_u").unwrap();
+    let u = lit_vec_f32(&sample_u.call(&[Arg::I32(seed)]).unwrap()[0]).unwrap();
+    let m0 = u.clone(); // t=0: m <- u
+    let mut z = vec![0f32; meta.d_pad];
+    vecmath::cone_direction(&m0, &u, theta, meta.d_raw, &mut z);
+    let mut obj = HloObjective::new(
+        &rt,
+        "nano",
+        Box::new(conmezo::objective::CyclicBatches { batches: vec![batch.clone()], i: 0 }),
+    )
+    .unwrap();
+    let (lp, lm) = obj.two_point(&params0, &z, lam).unwrap();
+    let g = ((lp - lm) / (2.0 * lam as f64)) as f32;
+    let mut p_host = params0.clone();
+    let mut m_host = m0;
+    vecmath::zo_update(&mut p_host, &mut m_host, &z, g, eta, beta);
+
+    assert!(
+        (stats.proj_grad - g as f64).abs() < 5e-3 * g.abs().max(1.0) as f64,
+        "proj grad: fused {} vs composed {g}",
+        stats.proj_grad
+    );
+    let mut max_rel = 0f64;
+    for i in (0..meta.d_pad).step_by(101) {
+        let diff = (p_fused[i] - p_host[i]).abs() as f64;
+        max_rel = max_rel.max(diff / p_host[i].abs().max(1e-3) as f64);
+    }
+    assert!(max_rel < 1e-2, "fused vs composed params diverge: {max_rel}");
+}
+
+#[test]
+fn fused_mezo_seed_replay_is_deterministic() {
+    let Some(rt) = runtime() else { return };
+    let meta = rt.preset("nano").unwrap().clone();
+    let gen = TaskGen::new(spec("rte").unwrap(), meta.vocab, meta.seq_len);
+    let mut sampler = TrainSampler::new(gen.dataset(16, 2), meta.batch, meta.seq_len, 2, 0);
+    let batch = sampler.next_batch();
+    let init = rt.load_kind("nano", "init").unwrap();
+    let params0 = lit_vec_f32(&init.call(&[Arg::I32(2)]).unwrap()[0]).unwrap();
+
+    let mut a = FusedMezo::new(&rt, "nano").unwrap();
+    let mut pa = params0.clone();
+    a.step(&mut pa, &batch, 9, 1e-4, 1e-3).unwrap();
+    let mut b = FusedMezo::new(&rt, "nano").unwrap();
+    let mut pb = params0.clone();
+    b.step(&mut pb, &batch, 9, 1e-4, 1e-3).unwrap();
+    assert_eq!(pa, pb, "same seed must give bit-identical updates");
+    let mut c = FusedMezo::new(&rt, "nano").unwrap();
+    let mut pc = params0;
+    c.step(&mut pc, &batch, 10, 1e-4, 1e-3).unwrap();
+    assert_ne!(pa, pc);
+}
+
+#[test]
+fn eval_logits_shape_and_candidates() {
+    let Some(rt) = runtime() else { return };
+    let meta = rt.preset("nano").unwrap().clone();
+    let prog = rt.load_kind("nano", "eval_logits").unwrap();
+    let init = rt.load_kind("nano", "init").unwrap();
+    let params = lit_vec_f32(&init.call(&[Arg::I32(3)]).unwrap()[0]).unwrap();
+    let ids = vec![1i32; meta.batch * meta.seq_len];
+    let pos = vec![(meta.seq_len - 1) as i32; meta.batch];
+    let outs = prog
+        .call(&[
+            Arg::VecF32(&params),
+            Arg::TensorI32(&ids, vec![meta.batch, meta.seq_len]),
+            Arg::TensorI32(&pos, vec![meta.batch]),
+        ])
+        .unwrap();
+    let logits = lit_vec_f32(&outs[0]).unwrap();
+    assert_eq!(logits.len(), meta.batch * meta.vocab);
+    assert!(logits.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn program_shape_validation_rejects_bad_args() {
+    let Some(rt) = runtime() else { return };
+    let prog = rt.load("quad_loss").unwrap();
+    let too_short = vec![0f32; 10];
+    let err = match prog.call(&[Arg::VecF32(&too_short)]) {
+        Err(e) => e.to_string(),
+        Ok(_) => panic!("short arg accepted"),
+    };
+    assert!(err.contains("shape mismatch"), "{err}");
+    let err2 = match prog.call(&[]) {
+        Err(e) => e.to_string(),
+        Ok(_) => panic!("empty args accepted"),
+    };
+    assert!(err2.contains("expected 1 args"), "{err2}");
+}
