@@ -9,10 +9,10 @@
 //!
 //!   cargo run --release --example distributed_zo
 
-use anyhow::Result;
+use conmezo::util::error::Result;
 use conmezo::coordinator::{DistHypers, Evaluator, LocalCluster, ZoWorker};
 use conmezo::data::{spec, TaskGen, TrainSampler};
-use conmezo::objective::HloObjective;
+use conmezo::objective::ModelObjective;
 use conmezo::optimizer::BetaSchedule;
 use conmezo::runtime::{lit_vec_f32, Arg, Runtime};
 
@@ -40,7 +40,7 @@ fn main() -> Result<()> {
     for id in 0..n_workers {
         let train = gen.dataset(512, seed);
         let sampler = TrainSampler::new(train, meta.batch, meta.seq_len, seed, id as u64);
-        let obj = HloObjective::new(&rt, preset, Box::new(sampler))?;
+        let obj = ModelObjective::new(&rt, preset, Box::new(sampler))?;
         let mut w = ZoWorker::new(id, x0.clone(), Box::new(obj));
         let shard = gen.dataset(32, seed ^ 0xE0 ^ id as u64);
         let evaluator = Evaluator::new(&rt, preset, shard)?;

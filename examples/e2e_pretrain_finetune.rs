@@ -17,7 +17,7 @@
 //! (6.5M params) the same driver exercises the multi-million-parameter
 //! path (slower; see EXPERIMENTS.md for a recorded run).
 
-use anyhow::Result;
+use conmezo::util::error::Result;
 use conmezo::coordinator::{pretrain, RunRecord, TrainConfig, Trainer};
 use conmezo::runtime::Runtime;
 use conmezo::util::json::Json;

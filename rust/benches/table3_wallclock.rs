@@ -9,7 +9,7 @@ use conmezo::bench::{write_results, Bencher};
 use conmezo::coordinator::{Mode, TrainConfig, Trainer};
 use conmezo::runtime::Runtime;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> conmezo::util::error::Result<()> {
     let rt = Runtime::open_default()?;
     let preset = std::env::args().skip(1).find(|a| !a.starts_with('-')).unwrap_or_else(|| "tiny".to_string());
     let b = Bencher::quick();

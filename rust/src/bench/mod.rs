@@ -137,7 +137,7 @@ impl Bencher {
 }
 
 /// Append results as JSON lines to results/bench/<file>.jsonl.
-pub fn write_results(file: &str, results: &[BenchResult]) -> anyhow::Result<()> {
+pub fn write_results(file: &str, results: &[BenchResult]) -> crate::util::error::Result<()> {
     let dir = std::path::Path::new("results/bench");
     std::fs::create_dir_all(dir)?;
     let mut text = String::new();

@@ -13,7 +13,7 @@ use std::collections::BTreeMap;
 use std::io::{Read, Write};
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use crate::util::error::{bail, Context, Result};
 
 const MAGIC: &[u8; 4] = b"CMZ1";
 
@@ -54,7 +54,7 @@ impl Checkpoint {
         self.buffers
             .get(name)
             .map(|v| v.as_slice())
-            .ok_or_else(|| anyhow::anyhow!("checkpoint missing buffer {name:?}"))
+            .ok_or_else(|| crate::anyhow!("checkpoint missing buffer {name:?}"))
     }
 
     fn payload(&self) -> Vec<u8> {

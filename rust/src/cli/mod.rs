@@ -5,7 +5,7 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::{bail, Result};
+use crate::util::error::{bail, Result};
 
 #[derive(Clone, Debug)]
 pub struct OptSpec {
@@ -143,7 +143,7 @@ impl App {
                     .opts
                     .iter()
                     .find(|o| o.name == name)
-                    .ok_or_else(|| anyhow::anyhow!("unknown option --{name}\n\n{}", self.usage()))?;
+                    .ok_or_else(|| crate::anyhow!("unknown option --{name}\n\n{}", self.usage()))?;
                 let val = if !spec.takes_value {
                     if inline.is_some() {
                         bail!("flag --{name} takes no value");
@@ -153,7 +153,7 @@ impl App {
                     v
                 } else {
                     it.next()
-                        .ok_or_else(|| anyhow::anyhow!("option --{name} requires a value"))?
+                        .ok_or_else(|| crate::anyhow!("option --{name} requires a value"))?
                         .clone()
                 };
                 let entry = p.opts.entry(name.clone()).or_default();

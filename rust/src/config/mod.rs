@@ -10,7 +10,7 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::{anyhow, bail, Context, Result};
+use crate::util::error::{anyhow, bail, Context, Result};
 
 #[derive(Clone, Debug, PartialEq)]
 pub enum Value {

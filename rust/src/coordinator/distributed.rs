@@ -17,7 +17,7 @@
 //! * N-worker aggregate ≡ single node stepping with the N shards'
 //!   mean projected gradient.
 
-use anyhow::{bail, Result};
+use crate::util::error::{bail, Result};
 
 use crate::net::{Msg, Transport};
 use crate::objective::Objective;

@@ -8,7 +8,7 @@
 
 use std::rc::Rc;
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use crate::objective::Batch;
 use crate::runtime::{lit_copy_f32, lit_f32, lit_vec_f32, Arg, Program, Runtime};

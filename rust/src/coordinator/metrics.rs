@@ -3,7 +3,7 @@
 
 use std::path::{Path, PathBuf};
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use crate::util::json::Json;
 

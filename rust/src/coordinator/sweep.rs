@@ -6,7 +6,7 @@
 //! over trial seeds, and reports the argmin/argmax with the full response
 //! surface for heatmap records (Fig. 5).
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use crate::util::json::Json;
 use crate::util::mean_std;

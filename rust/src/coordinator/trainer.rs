@@ -9,7 +9,7 @@
 use std::path::PathBuf;
 use std::rc::Rc;
 
-use anyhow::{bail, Result};
+use crate::util::error::{bail, Context, Result};
 
 use crate::checkpoint::Checkpoint;
 use crate::coordinator::fused::{
@@ -17,7 +17,7 @@ use crate::coordinator::fused::{
 };
 use crate::data::{PretrainSampler, TaskGen, TrainSampler};
 use crate::eval::{predict, score, EvalResult};
-use crate::objective::{Batch, BatchSource, HloObjective, Objective};
+use crate::objective::{Batch, BatchSource, ModelObjective, Objective};
 use crate::optimizer::{BetaSchedule, ZoOptimizer};
 use crate::runtime::{lit_vec_f32, Arg, Program, Runtime};
 use crate::util::memory::{activation_bytes, MemoryMeter};
@@ -125,7 +125,7 @@ enum Engine {
     ConMeZo(FusedConMeZo),
     Mezo(FusedMezo),
     MezoMomentum(FusedMezoMomentum),
-    Composed { opt: Box<dyn ZoOptimizer>, obj: HloObjective },
+    Composed { opt: Box<dyn ZoOptimizer>, obj: ModelObjective },
     Sgd(FoSgd),
     AdamW(FoAdamW),
 }
@@ -192,7 +192,7 @@ impl<'rt> Trainer<'rt> {
     pub fn new(rt: &'rt Runtime, cfg: TrainConfig) -> Result<Trainer<'rt>> {
         let meta = rt.preset(&cfg.preset)?.clone();
         let spec = crate::data::spec(&cfg.task)
-            .ok_or_else(|| anyhow::anyhow!("unknown task {:?}", cfg.task))?;
+            .ok_or_else(|| crate::anyhow!("unknown task {:?}", cfg.task))?;
         let gen = TaskGen::new(spec, meta.vocab, meta.seq_len);
         let n_train = cfg.train_per_class * gen.n_classes().max(1);
         let train = gen.dataset(n_train, cfg.seed);
@@ -266,7 +266,7 @@ impl<'rt> Trainer<'rt> {
                 cfg.seed,
                 0,
             );
-            let obj = HloObjective::new(rt, &cfg.preset, Box::new(source))?;
+            let obj = ModelObjective::new(rt, &cfg.preset, Box::new(source))?;
             Engine::Composed { opt, obj }
         };
 
@@ -435,7 +435,8 @@ pub fn pretrain(
     let mut sampler = PretrainSampler::new(gens, meta.batch, meta.seq_len, label_noise, seed);
     let init = rt.load_kind(preset, "init")?;
     let mut params = lit_vec_f32(&init.call(&[Arg::I32(seed as i32)])?[0])?;
-    let mut adamw = FoAdamW::new(rt, preset)?;
+    let mut adamw = FoAdamW::new(rt, preset)
+        .context("pretraining needs the first-order fo_adamw_step program (pjrt backend only)")?;
     let mut curve = Vec::new();
     let mut acc = 0f64;
     for t in 0..steps {

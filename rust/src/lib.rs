@@ -2,15 +2,23 @@
 //!
 //! Rust L3 coordinator for the AISTATS 2026 paper *ConMeZO: Adaptive
 //! Descent-Direction Sampling for Gradient-Free Finetuning of Large
-//! Language Models*. The compute graph (L2, JAX) and kernels (L1, Pallas)
-//! are AOT-compiled to HLO text by `python/compile/aot.py`; this crate
-//! loads and executes them via PJRT (`runtime`), implements the optimizer
-//! family (`optimizer`), the training orchestration and the O(1)-bytes/step
-//! distributed shared-randomness trainer (`coordinator`), plus every
-//! substrate the offline environment lacks (`util`, `config`, `cli`,
-//! `vecmath`, `net`, `checkpoint`, `bench`, `testing`).
+//! Language Models*. The `runtime` module executes the manifest's program
+//! set on a pluggable [`runtime::Backend`]:
 //!
-//! Quick start (after `make artifacts`): see `examples/quickstart.rs`.
+//! * **native** (default): a pure-Rust transformer forward + fused ZO step
+//!   emulation built on `vecmath` — zero external dependencies, the whole
+//!   train/eval/distributed stack runs offline with no Python or XLA;
+//! * **pjrt** (cargo feature `pjrt`): the AOT HLO artifacts produced by
+//!   `python/compile/aot.py` (L2 JAX graphs + L1 Pallas kernels), executed
+//!   on the PJRT CPU client via the external `xla` crate.
+//!
+//! On top of that sit the optimizer family (`optimizer`), the training
+//! orchestration and the O(1)-bytes/step distributed shared-randomness
+//! trainer (`coordinator`), plus every substrate the offline environment
+//! lacks (`util`, `config`, `cli`, `vecmath`, `net`, `checkpoint`,
+//! `bench`, `testing`).
+//!
+//! Quick start (no artifacts needed): see `examples/quickstart.rs`.
 
 pub mod bench;
 pub mod checkpoint;

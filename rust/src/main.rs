@@ -10,13 +10,13 @@
 
 use std::path::Path;
 
-use anyhow::{bail, Result};
+use conmezo::util::error::{bail, Result};
 use conmezo::cli::App;
 use conmezo::config::Config;
 use conmezo::coordinator::{self, DistHypers, Mode, TrainConfig, Trainer, ZoWorker};
 use conmezo::data::{TaskGen, TrainSampler};
 use conmezo::net::{TcpTransport, Transport};
-use conmezo::objective::HloObjective;
+use conmezo::objective::ModelObjective;
 use conmezo::optimizer::BetaSchedule;
 use conmezo::runtime::{lit_vec_f32, Arg, Runtime};
 use conmezo::util::json::Json;
@@ -28,6 +28,7 @@ fn app() -> App {
         .subcommand("leader", "host a distributed ZO run")
         .subcommand("worker", "join a distributed ZO run")
         .subcommand("info", "print artifacts / platform info")
+        .opt_default("backend", "auto", "execution backend (native|pjrt|auto)")
         .opt("config", "TOML config file")
         .repeated("set", "config override key=value")
         .opt_default("preset", "tiny", "model preset (nano|tiny|small|medium)")
@@ -65,12 +66,13 @@ fn main() -> Result<()> {
         "pretrain" => cmd_pretrain(&p),
         "leader" => cmd_leader(&p),
         "worker" => cmd_worker(&p),
-        "info" | "" => cmd_info(),
+        "info" | "" => cmd_info(&p),
         other => bail!("unhandled subcommand {other}"),
     }
 }
 
-fn build_config(p: &conmezo::cli::Parsed) -> Result<TrainConfig> {
+/// (train config, backend name) from the layered config sources.
+fn build_config(p: &conmezo::cli::Parsed) -> Result<(TrainConfig, String)> {
     // layering: file < CLI flags < --set overrides
     let mut file_cfg = match p.value("config") {
         Some(path) => Config::load(Path::new(path))?,
@@ -79,6 +81,12 @@ fn build_config(p: &conmezo::cli::Parsed) -> Result<TrainConfig> {
     for kv in p.values("set") {
         file_cfg.set_from_str(kv)?;
     }
+    // an explicit --backend beats the config file (file < CLI flags); the
+    // "auto" default defers to the file's runtime.backend when present
+    let backend = match p.str_or("backend", "auto").as_str() {
+        "auto" => file_cfg.str_or("runtime.backend", "auto"),
+        explicit => explicit.to_string(),
+    };
     let mut cfg = TrainConfig::preset(
         &file_cfg.str_or("model.preset", &p.str_or("preset", "tiny")),
         &file_cfg.str_or("train.task", &p.str_or("task", "sst2")),
@@ -99,18 +107,18 @@ fn build_config(p: &conmezo::cli::Parsed) -> Result<TrainConfig> {
     if let Some(path) = p.value("init-from") {
         cfg.init_from = Some(path.into());
     }
-    Ok(cfg)
+    Ok((cfg, backend))
 }
 
 fn cmd_train(p: &conmezo::cli::Parsed) -> Result<()> {
-    let rt = Runtime::open_default()?;
-    let mut cfg = build_config(p)?;
+    let (mut cfg, backend) = build_config(p)?;
+    let rt = Runtime::from_name(&backend)?;
     if p.flag("pretrained") && cfg.init_from.is_none() {
         cfg.init_from = Some(coordinator::ensure_pretrained(&rt, &cfg.preset, 400, 1e-3, 0.3)?);
     }
     println!(
-        "training {} on {} with {} ({} steps, mode {:?})",
-        cfg.preset, cfg.task, cfg.optimizer, cfg.steps, cfg.mode
+        "training {} on {} with {} ({} steps, mode {:?}, backend {})",
+        cfg.preset, cfg.task, cfg.optimizer, cfg.steps, cfg.mode, rt.platform()
     );
     let mut tr = Trainer::new(&rt, cfg)?;
     let summary = tr.run()?;
@@ -134,7 +142,7 @@ fn cmd_train(p: &conmezo::cli::Parsed) -> Result<()> {
 }
 
 fn cmd_pretrain(p: &conmezo::cli::Parsed) -> Result<()> {
-    let rt = Runtime::open_default()?;
+    let rt = Runtime::from_name(&p.str_or("backend", "auto"))?;
     let preset = p.str_or("preset", "tiny");
     let steps = p.usize_or("steps", 400);
     let path = coordinator::pretrained_path(&preset);
@@ -182,19 +190,19 @@ fn cmd_leader(p: &conmezo::cli::Parsed) -> Result<()> {
 }
 
 fn cmd_worker(p: &conmezo::cli::Parsed) -> Result<()> {
-    let rt = Runtime::open_default()?;
+    let rt = Runtime::from_name(&p.str_or("backend", "auto"))?;
     let preset = p.str_or("preset", "tiny");
     let task = p.str_or("task", "sst2");
     let id = p.usize_or("worker-id", 0) as u32;
     let seed = p.usize_or("seed", 42) as u64;
     let meta = rt.preset(&preset)?.clone();
-    let spec = conmezo::data::spec(&task).ok_or_else(|| anyhow::anyhow!("unknown task {task}"))?;
+    let spec = conmezo::data::spec(&task).ok_or_else(|| conmezo::anyhow!("unknown task {task}"))?;
     let gen = TaskGen::new(spec, meta.vocab, meta.seq_len);
     let train = gen.dataset(256, seed);
     let evalset = gen.dataset(64, seed ^ 0xEEE ^ id as u64);
     // every worker shards data by its own sampler stream (worker id)
     let sampler = TrainSampler::new(train, meta.batch, meta.seq_len, seed, id as u64);
-    let obj = HloObjective::new(&rt, &preset, Box::new(sampler))?;
+    let obj = ModelObjective::new(&rt, &preset, Box::new(sampler))?;
 
     // identical initial params on every worker: the shared init program
     let init = rt.load_kind(&preset, "init")?;
@@ -216,11 +224,11 @@ fn cmd_worker(p: &conmezo::cli::Parsed) -> Result<()> {
     Ok(())
 }
 
-fn cmd_info() -> Result<()> {
-    let rt = Runtime::open_default()?;
+fn cmd_info(p: &conmezo::cli::Parsed) -> Result<()> {
+    let rt = Runtime::from_name(&p.str_or("backend", "auto"))?;
     println!("platform: {}", rt.platform());
-    println!("programs: {}", rt.manifest.programs.len());
-    for (name, preset) in &rt.manifest.presets {
+    println!("programs: {}", rt.manifest().programs.len());
+    for (name, preset) in &rt.manifest().presets {
         println!(
             "  preset {name}: d={} (pad {}), vocab {}, {} layers, seq {}",
             preset.d_raw, preset.d_pad, preset.vocab, preset.n_layers, preset.seq_len

@@ -14,7 +14,7 @@
 use std::io::{Read, Write};
 use std::net::TcpStream;
 
-use anyhow::{bail, Result};
+use crate::util::error::{bail, Result};
 
 /// Protocol messages.
 #[derive(Clone, Debug, PartialEq)]

@@ -7,10 +7,12 @@
 //!
 //! * [`NativeQuadratic`] — the Fig. 3 / App. C.1 synthetic objective in
 //!   pure Rust (microseconds per eval; used for the 10^5-step grid sweeps).
-//! * [`HloObjective`] — the transformer loss, evaluated by executing the
-//!   AOT-compiled `{preset}_loss` / `{preset}_two_point` programs on PJRT.
+//! * [`ModelObjective`] — the transformer loss, evaluated by executing the
+//!   `{preset}_loss` / `{preset}_two_point` programs on whichever runtime
+//!   backend is active (native CPU by default, PJRT with `--features pjrt`).
+//!   Formerly named `HloObjective`; renamed when execution became pluggable.
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use crate::runtime::{lit_f32, Arg, Program, Runtime};
 
@@ -136,12 +138,12 @@ impl Objective for NativeQuadratic {
 }
 
 // ---------------------------------------------------------------------------
-// HloObjective
+// ModelObjective
 // ---------------------------------------------------------------------------
 
-/// Transformer loss via the AOT artifacts. Holds the compiled `loss` and
-/// `two_point` programs plus the current minibatch.
-pub struct HloObjective {
+/// Transformer loss via the runtime's `loss`/`two_point` programs (any
+/// backend). Holds the prepared programs plus the current minibatch.
+pub struct ModelObjective {
     loss_prog: std::rc::Rc<Program>,
     two_point_prog: std::rc::Rc<Program>,
     pub batch: Batch,
@@ -151,12 +153,12 @@ pub struct HloObjective {
     evals: u64,
 }
 
-impl HloObjective {
+impl ModelObjective {
     pub fn new(rt: &Runtime, preset: &str, source: Box<dyn BatchSource>) -> Result<Self> {
         let meta = rt.preset(preset)?.clone();
         let mut source = source;
         let batch = source.next_batch();
-        Ok(HloObjective {
+        Ok(ModelObjective {
             loss_prog: rt.load_kind(preset, "loss")?,
             two_point_prog: rt.load_kind(preset, "two_point")?,
             batch,
@@ -177,7 +179,7 @@ impl HloObjective {
     }
 }
 
-impl Objective for HloObjective {
+impl Objective for ModelObjective {
     fn dim(&self) -> usize {
         self.d_pad
     }

@@ -10,7 +10,7 @@
 //!
 //! beta_t follows the §3.4 warm-up schedule when configured.
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use super::{sample_direction, BetaSchedule, StepStats, ZoOptimizer};
 use crate::objective::Objective;
@@ -144,21 +144,24 @@ mod tests {
 
     #[test]
     fn warmup_schedule_is_consulted() {
-        // with PaperWarmup, beta at t=0 is 0.1: momentum after step 0 is
-        // dominated by the fresh gradient estimate rather than u0
+        // with PaperWarmup, beta in the flat phase is 0.1: momentum is
+        // dominated by fresh gradient estimates rather than u0. One step is
+        // degenerate (z_0 is parallel to m_0 = u_0, so both cos2 are ~1);
+        // after TWO steps the low-beta momentum has rotated toward z_1 while
+        // beta=0.99 still points at u0 (simulated cos2: ~0.78 vs ~0.997).
         let d = 64;
         let mut opt = ConMeZo::new(d, 1e-3, 1e-2, 1.35, BetaSchedule::PaperWarmup { beta_final: 0.99, total_steps: 20_000 });
         let mut obj = crate::objective::NativeQuadratic::new(d);
         let mut x = vec![1f32; d];
         opt.step(&mut x, &mut obj, 0, 5).unwrap();
-        // beta=0.1 -> m ~ 0.1 u0 + 0.9 g z; with g z nontrivial, cos2(m, u0)
-        // should be noticeably below the beta=0.99 case
+        opt.step(&mut x, &mut obj, 1, 5).unwrap();
         let mut opt2 = ConMeZo::new(d, 1e-3, 1e-2, 1.35, BetaSchedule::Constant(0.99));
         let mut obj2 = crate::objective::NativeQuadratic::new(d);
         let mut x2 = vec![1f32; d];
         opt2.step(&mut x2, &mut obj2, 0, 5).unwrap();
+        opt2.step(&mut x2, &mut obj2, 1, 5).unwrap();
         let mut u0 = vec![0f32; d];
         super::super::sample_direction(&mut u0, d, 5, 0);
-        assert!(opt2.momentum_cos2(&u0) >= opt.momentum_cos2(&u0));
+        assert!(opt2.momentum_cos2(&u0) > opt.momentum_cos2(&u0) + 0.05);
     }
 }

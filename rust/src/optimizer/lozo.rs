@@ -13,7 +13,7 @@
 //! simplicity, which only increases this baseline's memory — documented in
 //! DESIGN.md §2.)
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use super::{StepStats, ZoOptimizer};
 use crate::objective::Objective;

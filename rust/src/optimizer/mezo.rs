@@ -14,7 +14,7 @@
 //!   ConMeZO's extra momentum buffer is what lets it skip two of the four
 //!   regenerations.
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use super::{sample_direction, StepStats, ZoOptimizer};
 use crate::objective::Objective;

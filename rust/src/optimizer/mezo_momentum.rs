@@ -10,7 +10,7 @@
 //! demonstrating that *where* the momentum enters (sampling vs update)
 //! matters.
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use super::{sample_direction, BetaSchedule, StepStats, ZoOptimizer};
 use crate::objective::Objective;

@@ -14,7 +14,7 @@
 //!
 //! Memory: two extra dense vectors (x_a, g_a) — more than ConMeZO's one.
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use super::{sample_direction, StepStats, ZoOptimizer};
 use crate::objective::Objective;

@@ -25,7 +25,7 @@ pub mod mezo_svrg;
 pub mod schedule;
 pub mod zo_adamm;
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use crate::objective::Objective;
 use crate::util::memory::MemoryMeter;
@@ -96,7 +96,7 @@ pub fn by_name(
         "lozo" => Box::new(Lozo::new(dim, eta, lam, LozoConfig::default(), layout, false)),
         "lozo_m" => Box::new(Lozo::new(dim, eta, lam, LozoConfig::default(), layout, true)),
         "mezo_svrg" => Box::new(MezoSvrg::new(dim, eta, lam, SvrgConfig::default())),
-        other => anyhow::bail!("unknown optimizer {other:?}"),
+        other => crate::bail!("unknown optimizer {other:?}"),
     })
 }
 

@@ -8,7 +8,7 @@
 //! Stores TWO extra d-vectors — strictly more memory than ConMeZO's one
 //! (the point the paper makes in §6.4).
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use super::{sample_direction, StepStats, ZoOptimizer};
 use crate::objective::Objective;

@@ -4,7 +4,7 @@
 use std::collections::BTreeMap;
 use std::path::Path;
 
-use anyhow::{anyhow, Context, Result};
+use crate::util::error::{anyhow, Context, Result};
 
 use crate::util::json::Json;
 
@@ -93,7 +93,13 @@ impl Manifest {
     pub fn program(&self, name: &str) -> Result<&ProgramSpec> {
         self.programs
             .get(name)
-            .ok_or_else(|| anyhow!("program {name:?} not in manifest; re-run `make artifacts`"))
+            .ok_or_else(|| {
+                anyhow!(
+                    "program {name:?} not in this backend's manifest (the native backend \
+                     omits the first-order programs; use the pjrt backend for fo_*/grad_cos2, \
+                     or re-run `make artifacts`)"
+                )
+            })
     }
 
     pub fn preset(&self, name: &str) -> Result<&PresetMeta> {

@@ -1,21 +1,40 @@
-//! L3 runtime: load AOT artifacts (`artifacts/*.hlo.txt`) and execute them
-//! on the PJRT CPU client via the `xla` crate.
+//! Pluggable execution runtime.
 //!
-//! Pattern (from /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
-//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
-//! `client.compile` → `execute`. Programs are compiled once and cached;
-//! after that the binary is self-contained — Python never runs again.
+//! The manifest's program set (`{preset}_loss`, `{preset}_two_point`, the
+//! fused `*_step` programs, ...) can execute on any [`Backend`]:
+//!
+//! * [`native::NativeBackend`] — pure-Rust transformer forward + fused ZO
+//!   step emulation built on `vecmath`. Zero external dependencies, no
+//!   artifacts on disk, always available; this is the default, so the full
+//!   train/eval/distributed stack runs offline.
+//! * `pjrt::PjrtBackend` (cargo feature `pjrt`) — loads the AOT artifacts
+//!   (`artifacts/*.hlo.txt` from `python/compile/aot.py`) and executes them
+//!   on the PJRT CPU client via the external `xla` crate. Adds the
+//!   first-order programs (`fo_sgd_step`, `fo_adamw_step`, `grad_cos2`)
+//!   that native does not implement.
+//!
+//! [`Runtime`] is the façade the rest of the crate talks to: it owns one
+//! backend, resolves program names through the manifest, validates argument
+//! shapes once (turning silent size mismatches into named errors on every
+//! backend), and caches prepared programs.
+//!
+//! Backend selection: `Runtime::from_name("native"|"pjrt"|"auto")`, the
+//! `CONMEZO_BACKEND` env var, or `Runtime::open_default()` (auto).
 
 pub mod manifest;
+pub mod model;
+pub mod native;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 
 use std::cell::RefCell;
 use std::collections::HashMap;
-use std::path::{Path, PathBuf};
 use std::rc::Rc;
 
-use anyhow::{anyhow, bail, Context, Result};
+use crate::util::error::{bail, Result};
 
 pub use manifest::{LayoutEntry, Manifest, PresetMeta, ProgramSpec, TensorSpec};
+pub use native::NativeBackend;
 
 /// A runtime argument. Vector/matrix payloads are borrowed to keep the step
 /// loop allocation-free on the caller side.
@@ -30,23 +49,7 @@ pub enum Arg<'a> {
 }
 
 impl Arg<'_> {
-    fn to_literal(&self) -> Result<xla::Literal> {
-        Ok(match self {
-            Arg::F32(v) => xla::Literal::scalar(*v),
-            Arg::I32(v) => xla::Literal::scalar(*v),
-            Arg::VecF32(v) => xla::Literal::vec1(v),
-            Arg::TensorI32(v, dims) => {
-                let d: Vec<i64> = dims.iter().map(|&x| x as i64).collect();
-                xla::Literal::vec1(v).reshape(&d)?
-            }
-            Arg::TensorF32(v, dims) => {
-                let d: Vec<i64> = dims.iter().map(|&x| x as i64).collect();
-                xla::Literal::vec1(v).reshape(&d)?
-            }
-        })
-    }
-
-    fn shape_of(&self) -> Vec<usize> {
+    pub fn shape_of(&self) -> Vec<usize> {
         match self {
             Arg::F32(_) | Arg::I32(_) => vec![],
             Arg::VecF32(v) => vec![v.len()],
@@ -55,18 +58,86 @@ impl Arg<'_> {
     }
 }
 
-/// A compiled program plus its manifest spec.
+/// An owned program output (backend-agnostic replacement for the PJRT
+/// literal). All exported programs return f32 payloads; I32 exists for
+/// forward-compatibility with integer outputs.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Value {
+    pub fn scalar(v: f32) -> Value {
+        Value::F32(vec![v])
+    }
+
+    pub fn element_count(&self) -> usize {
+        match self {
+            Value::F32(v) => v.len(),
+            Value::I32(v) => v.len(),
+        }
+    }
+}
+
+/// Extraction helpers for output values (same names as the old literal
+/// helpers so call sites read identically across backends).
+pub fn lit_f32(v: &Value) -> Result<f32> {
+    match v {
+        Value::F32(x) if !x.is_empty() => Ok(x[0]),
+        Value::I32(x) if !x.is_empty() => Ok(x[0] as f32),
+        _ => bail!("empty output value"),
+    }
+}
+
+pub fn lit_vec_f32(v: &Value) -> Result<Vec<f32>> {
+    match v {
+        Value::F32(x) => Ok(x.clone()),
+        Value::I32(_) => bail!("expected f32 output, got i32"),
+    }
+}
+
+/// Copy a value's f32 payload into an existing buffer (hot path: avoids
+/// the Vec allocation per step).
+pub fn lit_copy_f32(v: &Value, dst: &mut [f32]) -> Result<()> {
+    match v {
+        Value::F32(x) => {
+            if x.len() != dst.len() {
+                bail!("output has {} elements, dst {}", x.len(), dst.len());
+            }
+            dst.copy_from_slice(x);
+            Ok(())
+        }
+        Value::I32(_) => bail!("expected f32 output, got i32"),
+    }
+}
+
+/// Backend-side executable for one manifest program.
+pub trait ProgramImpl {
+    fn call(&self, spec: &ProgramSpec, args: &[Arg<'_>]) -> Result<Vec<Value>>;
+}
+
+/// An execution backend: resolves manifest programs into executables.
+pub trait Backend {
+    /// Human-readable platform name ("native-cpu", PJRT platform, ...).
+    fn platform(&self) -> String;
+    /// The program/preset manifest this backend serves.
+    fn manifest(&self) -> &Manifest;
+    /// Prepare (compile/instantiate) one program. Called once per program
+    /// name; the [`Runtime`] caches the result.
+    fn instantiate(&self, spec: &ProgramSpec) -> Result<Box<dyn ProgramImpl>>;
+}
+
+/// A prepared program plus its manifest spec. Shape checking happens here,
+/// against the manifest, identically on every backend.
 pub struct Program {
     pub spec: ProgramSpec,
-    exe: xla::PjRtLoadedExecutable,
+    imp: Box<dyn ProgramImpl>,
 }
 
 impl Program {
-    /// Execute with typed args; returns output literals in manifest order.
-    ///
-    /// Shape checking happens against the manifest up front, turning silent
-    /// PJRT size mismatches into named errors.
-    pub fn call(&self, args: &[Arg<'_>]) -> Result<Vec<xla::Literal>> {
+    /// Execute with typed args; returns output values in manifest order.
+    pub fn call(&self, args: &[Arg<'_>]) -> Result<Vec<Value>> {
         if args.len() != self.spec.inputs.len() {
             bail!(
                 "{}: expected {} args ({:?}), got {}",
@@ -88,19 +159,7 @@ impl Program {
                 );
             }
         }
-        let mut lits = Vec::with_capacity(args.len());
-        for a in args {
-            lits.push(a.to_literal()?);
-        }
-        let bufs = self
-            .exe
-            .execute::<xla::Literal>(&lits)
-            .with_context(|| format!("executing {}", self.spec.name))?;
-        // return_tuple=True => one tuple-shaped output buffer
-        let tuple = bufs[0][0]
-            .to_literal_sync()
-            .with_context(|| format!("fetching outputs of {}", self.spec.name))?;
-        let outs = tuple.to_tuple()?;
+        let outs = self.imp.call(&self.spec, args)?;
         if outs.len() != self.spec.outputs.len() {
             bail!(
                 "{}: program returned {} outputs, manifest says {}",
@@ -113,11 +172,11 @@ impl Program {
     }
 }
 
-/// Enable FTZ + DAZ on this thread BEFORE the PJRT client spawns its
-/// thread pool (children inherit MXCSR). ZO momentum buffers decay
-/// geometrically (beta = 0.99), and denormal f32 arithmetic on x86 traps to
-/// microcode at ~100x the cost — measured as a progressive 4-5x slowdown
-/// over long ConMeZO runs before this was set (EXPERIMENTS.md §Perf).
+/// Enable FTZ + DAZ on this thread BEFORE any execution threads spawn
+/// (children inherit MXCSR). ZO momentum buffers decay geometrically
+/// (beta = 0.99), and denormal f32 arithmetic on x86 traps to microcode at
+/// ~100x the cost — measured as a progressive 4-5x slowdown over long
+/// ConMeZO runs before this was set (EXPERIMENTS.md §Perf).
 pub fn enable_flush_to_zero() {
     #[cfg(target_arch = "x86_64")]
     unsafe {
@@ -127,84 +186,100 @@ pub fn enable_flush_to_zero() {
     }
 }
 
-/// Extraction helpers for output literals.
-pub fn lit_f32(l: &xla::Literal) -> Result<f32> {
-    Ok(l.get_first_element::<f32>()?)
-}
-
-pub fn lit_vec_f32(l: &xla::Literal) -> Result<Vec<f32>> {
-    Ok(l.to_vec::<f32>()?)
-}
-
-/// Copy a literal's f32 payload into an existing buffer (hot path: avoids
-/// the Vec allocation per step).
-pub fn lit_copy_f32(l: &xla::Literal, dst: &mut [f32]) -> Result<()> {
-    if l.element_count() != dst.len() {
-        bail!("literal has {} elements, dst {}", l.element_count(), dst.len());
-    }
-    l.copy_raw_to(dst)?;
-    Ok(())
-}
-
-/// The PJRT runtime: client + artifact directory + compiled-program cache.
+/// The runtime façade: one backend + a prepared-program cache.
 pub struct Runtime {
-    client: xla::PjRtClient,
-    dir: PathBuf,
-    pub manifest: Manifest,
+    backend: Box<dyn Backend>,
     cache: RefCell<HashMap<String, Rc<Program>>>,
 }
 
 impl Runtime {
-    /// Open the artifact directory (compiles nothing yet).
-    pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
+    /// Wrap an explicit backend.
+    pub fn from_backend(backend: Box<dyn Backend>) -> Runtime {
         enable_flush_to_zero();
-        let dir = dir.as_ref().to_path_buf();
-        let manifest = Manifest::load(&dir)?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
-        Ok(Runtime { client, dir, manifest, cache: RefCell::new(HashMap::new()) })
+        Runtime { backend, cache: RefCell::new(HashMap::new()) }
     }
 
-    /// Default artifact location relative to the repo root.
+    /// The pure-Rust native backend over the built-in presets. Always
+    /// available; needs no artifacts on disk.
+    pub fn native() -> Runtime {
+        Runtime::from_backend(Box::new(NativeBackend::new()))
+    }
+
+    /// Open a PJRT artifact directory (requires the `pjrt` cargo feature).
+    #[cfg(feature = "pjrt")]
+    pub fn open(dir: impl AsRef<std::path::Path>) -> Result<Runtime> {
+        Ok(Runtime::from_backend(Box::new(pjrt::PjrtBackend::open(dir)?)))
+    }
+
+    /// Open a PJRT artifact directory (requires the `pjrt` cargo feature).
+    #[cfg(not(feature = "pjrt"))]
+    pub fn open(dir: impl AsRef<std::path::Path>) -> Result<Runtime> {
+        let _ = dir;
+        bail!("this build has no PJRT support; rebuild with `--features pjrt` or use the native backend")
+    }
+
+    #[cfg(feature = "pjrt")]
+    fn open_pjrt_default() -> Result<Runtime> {
+        Ok(Runtime::from_backend(Box::new(pjrt::PjrtBackend::open_default()?)))
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    fn open_pjrt_default() -> Result<Runtime> {
+        bail!("backend \"pjrt\" requested but this build has no PJRT support; rebuild with `--features pjrt`")
+    }
+
+    /// Select a backend by name: "native", "pjrt", or "auto" (pjrt when the
+    /// feature is compiled in AND artifacts exist, native otherwise).
+    pub fn from_name(name: &str) -> Result<Runtime> {
+        match name {
+            "native" => Ok(Runtime::native()),
+            "pjrt" => Self::open_pjrt_default(),
+            "auto" | "" => Runtime::open_default(),
+            other => bail!("unknown backend {other:?} (expected native|pjrt|auto)"),
+        }
+    }
+
+    /// Default backend selection: the `CONMEZO_BACKEND` env var when set
+    /// ("native" or "pjrt"), otherwise PJRT if compiled in and artifacts are
+    /// present, otherwise native.
     pub fn open_default() -> Result<Runtime> {
-        let candidates = ["artifacts", "../artifacts", "../../artifacts"];
-        for c in candidates {
-            if Path::new(c).join("manifest.json").exists() {
-                return Self::open(c);
+        match std::env::var("CONMEZO_BACKEND").as_deref() {
+            Ok("native") => return Ok(Runtime::native()),
+            Ok("pjrt") => return Self::open_pjrt_default(),
+            Ok("auto") | Ok("") | Err(_) => {}
+            Ok(other) => {
+                bail!("CONMEZO_BACKEND={other:?} not recognized (expected native|pjrt|auto)")
             }
         }
-        // fall back to CARGO_MANIFEST_DIR for tests
-        let from_env = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-        if from_env.join("manifest.json").exists() {
-            return Self::open(from_env);
+        #[cfg(feature = "pjrt")]
+        if let Ok(b) = pjrt::PjrtBackend::open_default() {
+            return Ok(Runtime::from_backend(Box::new(b)));
         }
-        bail!("artifacts/manifest.json not found; run `make artifacts`")
+        Ok(Runtime::native())
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        self.backend.platform()
     }
 
-    /// Load (and compile, once) a program by manifest name.
+    pub fn manifest(&self) -> &Manifest {
+        self.backend.manifest()
+    }
+
+    /// Load (and prepare, once) a program by manifest name.
     pub fn load(&self, name: &str) -> Result<Rc<Program>> {
         if let Some(p) = self.cache.borrow().get(name) {
             return Ok(p.clone());
         }
-        let spec = self.manifest.program(name)?.clone();
-        let path = self.dir.join(&spec.file);
+        let spec = self.backend.manifest().program(name)?.clone();
         let t0 = std::time::Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        let imp = self.backend.instantiate(&spec)?;
         crate::debug!(
             "runtime",
-            "compiled {name} in {:.2}s",
+            "prepared {name} in {:.3}s",
             t0.elapsed().as_secs_f64()
         );
-        let prog = Rc::new(Program { spec, exe });
+        let prog = Rc::new(Program { spec, imp });
         self.cache.borrow_mut().insert(name.to_string(), prog.clone());
         Ok(prog)
     }
@@ -215,6 +290,49 @@ impl Runtime {
     }
 
     pub fn preset(&self, name: &str) -> Result<&PresetMeta> {
-        self.manifest.preset(name)
+        self.backend.manifest().preset(name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_runtime_always_opens() {
+        let rt = Runtime::native();
+        assert_eq!(rt.platform(), "native-cpu");
+        assert!(rt.manifest().programs.len() >= 8);
+        assert!(rt.preset("nano").is_ok());
+    }
+
+    #[test]
+    fn from_name_selects() {
+        assert!(Runtime::from_name("native").is_ok());
+        assert!(Runtime::from_name("auto").is_ok());
+        assert!(Runtime::from_name("bogus").is_err());
+        #[cfg(not(feature = "pjrt"))]
+        assert!(Runtime::from_name("pjrt").is_err());
+    }
+
+    #[test]
+    fn value_helpers() {
+        let v = Value::F32(vec![1.5, 2.5]);
+        assert_eq!(lit_f32(&v).unwrap(), 1.5);
+        assert_eq!(lit_vec_f32(&v).unwrap(), vec![1.5, 2.5]);
+        let mut dst = [0f32; 2];
+        lit_copy_f32(&v, &mut dst).unwrap();
+        assert_eq!(dst, [1.5, 2.5]);
+        let mut short = [0f32; 1];
+        assert!(lit_copy_f32(&v, &mut short).is_err());
+        assert!(lit_f32(&Value::F32(vec![])).is_err());
+    }
+
+    #[test]
+    fn program_cache_returns_same_rc() {
+        let rt = Runtime::native();
+        let a = rt.load("nano_loss").unwrap();
+        let b = rt.load("nano_loss").unwrap();
+        assert!(Rc::ptr_eq(&a, &b));
     }
 }

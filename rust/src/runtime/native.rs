@@ -1,0 +1,503 @@
+//! NativeBackend: the manifest's program set executed in pure Rust.
+//!
+//! Implements `init`, `sample_u`, `loss`, `two_point`, `eval_logits` and the
+//! fused `conmezo_step` / `mezo_step` / `mezo_momentum_step` programs (plus
+//! the `quad_loss`/`quad_grad` synthetic objective) for every built-in
+//! preset — no Python, no XLA, no artifacts on disk. The first-order
+//! programs (`fo_sgd_step`, `fo_adamw_step`, `grad_cos2`) need build-time
+//! backprop and remain PJRT-only; they are simply absent from the native
+//! manifest, so requesting them yields a named error.
+//!
+//! Fused-step emulation reuses the exact `vecmath` kernels the composed
+//! path uses (`cone_direction`, `zo_update`, `axpy_into`), so fused and
+//! composed modes are bit-consistent on this backend — the equivalence the
+//! integration tests assert exactly rather than within tolerance.
+
+use std::collections::BTreeMap;
+
+use crate::runtime::manifest::{Manifest, PresetMeta, ProgramSpec, TensorSpec};
+use crate::runtime::model::{builtin_presets, NativeModel, QUAD_DIM};
+use crate::runtime::{Arg, Backend, ProgramImpl, Value};
+use crate::util::error::{bail, Result};
+use crate::vecmath;
+
+/// Program kinds the native backend implements per preset.
+pub const NATIVE_KINDS: [&str; 8] = [
+    "init",
+    "sample_u",
+    "loss",
+    "two_point",
+    "eval_logits",
+    "conmezo_step",
+    "mezo_step",
+    "mezo_momentum_step",
+];
+
+pub struct NativeBackend {
+    manifest: Manifest,
+}
+
+impl NativeBackend {
+    /// Backend over the built-in presets (nano/tiny/small/medium/xl).
+    pub fn new() -> NativeBackend {
+        Self::with_presets(builtin_presets())
+    }
+
+    /// Backend over an explicit preset list (tests/fixtures use this to run
+    /// custom geometries).
+    pub fn with_presets(presets: Vec<PresetMeta>) -> NativeBackend {
+        let mut programs = BTreeMap::new();
+        for (kind, outs) in [("loss", "loss"), ("grad", "grad")] {
+            let name = format!("quad_{kind}");
+            programs.insert(
+                name.clone(),
+                ProgramSpec {
+                    name,
+                    preset: "quad".into(),
+                    kind: kind.into(),
+                    file: String::new(),
+                    inputs: vec![tensor("x", "float32", vec![QUAD_DIM])],
+                    outputs: vec![outs.to_string()],
+                },
+            );
+        }
+        let mut preset_map = BTreeMap::new();
+        for meta in presets {
+            for kind in NATIVE_KINDS {
+                let spec = program_spec(&meta, kind);
+                programs.insert(spec.name.clone(), spec);
+            }
+            preset_map.insert(meta.name.clone(), meta);
+        }
+        NativeBackend { manifest: Manifest { programs, presets: preset_map } }
+    }
+}
+
+impl Default for NativeBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Backend for NativeBackend {
+    fn platform(&self) -> String {
+        "native-cpu".to_string()
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn instantiate(&self, spec: &ProgramSpec) -> Result<Box<dyn ProgramImpl>> {
+        if spec.preset == "quad" {
+            return Ok(Box::new(QuadProgram));
+        }
+        let meta = self.manifest.preset(&spec.preset)?.clone();
+        Ok(Box::new(NativeProgram { model: NativeModel::new(meta) }))
+    }
+}
+
+fn tensor(name: &str, dtype: &str, shape: Vec<usize>) -> TensorSpec {
+    TensorSpec { name: name.to_string(), dtype: dtype.to_string(), shape }
+}
+
+/// Input/output signature per kind — mirrors `python/compile/aot.py`
+/// (`_inputs_for` / `_OUTPUTS`) so both backends accept identical calls.
+fn program_spec(meta: &PresetMeta, kind: &str) -> ProgramSpec {
+    let dp = meta.d_pad;
+    let (b, s) = (meta.batch, meta.seq_len);
+    let vec = |n: &str| tensor(n, "float32", vec![dp]);
+    let scalar = |n: &str| tensor(n, "float32", vec![]);
+    let iscalar = |n: &str| tensor(n, "int32", vec![]);
+    let batch = || {
+        vec3(
+            tensor("input_ids", "int32", vec![b, s]),
+            tensor("targets", "int32", vec![b, s]),
+            tensor("mask", "float32", vec![b, s]),
+        )
+    };
+    let (inputs, outputs): (Vec<TensorSpec>, Vec<&str>) = match kind {
+        "init" => (vec![iscalar("seed")], vec!["params"]),
+        "sample_u" => (vec![iscalar("seed")], vec!["u"]),
+        "loss" => (with(vec![vec("params")], batch()), vec!["loss"]),
+        "two_point" => (
+            with(vec![vec("params"), vec("z"), scalar("lam")], batch()),
+            vec!["loss_plus", "loss_minus"],
+        ),
+        "eval_logits" => (
+            vec![
+                vec("params"),
+                tensor("input_ids", "int32", vec![b, s]),
+                tensor("pos", "int32", vec![b]),
+            ],
+            vec!["logits"],
+        ),
+        "conmezo_step" => (
+            with(
+                vec![
+                    vec("params"),
+                    vec("m"),
+                    iscalar("seed"),
+                    scalar("theta"),
+                    scalar("beta"),
+                    scalar("eta"),
+                    scalar("lam"),
+                ],
+                batch(),
+            ),
+            vec!["params", "m", "loss_plus", "loss_minus", "proj_grad"],
+        ),
+        "mezo_step" => (
+            with(
+                vec![vec("params"), iscalar("seed"), scalar("eta"), scalar("lam")],
+                batch(),
+            ),
+            vec!["params", "loss_plus", "loss_minus", "proj_grad"],
+        ),
+        "mezo_momentum_step" => (
+            with(
+                vec![
+                    vec("params"),
+                    vec("m"),
+                    iscalar("seed"),
+                    scalar("beta"),
+                    scalar("eta"),
+                    scalar("lam"),
+                ],
+                batch(),
+            ),
+            vec!["params", "m", "loss_plus", "loss_minus", "proj_grad"],
+        ),
+        other => panic!("program_spec: unknown native kind {other:?}"),
+    };
+    ProgramSpec {
+        name: format!("{}_{kind}", meta.name),
+        preset: meta.name.clone(),
+        kind: kind.to_string(),
+        file: String::new(),
+        inputs,
+        outputs: outputs.into_iter().map(str::to_string).collect(),
+    }
+}
+
+fn vec3(a: TensorSpec, b: TensorSpec, c: TensorSpec) -> Vec<TensorSpec> {
+    vec![a, b, c]
+}
+
+fn with(mut head: Vec<TensorSpec>, tail: Vec<TensorSpec>) -> Vec<TensorSpec> {
+    head.extend(tail);
+    head
+}
+
+// ---------------------------------------------------------------------------
+// Argument extraction
+// ---------------------------------------------------------------------------
+
+fn arg_f32s<'a>(a: &Arg<'a>, what: &str) -> Result<&'a [f32]> {
+    match a {
+        Arg::VecF32(v) => Ok(v),
+        Arg::TensorF32(v, _) => Ok(v),
+        _ => bail!("expected f32 tensor for {what}"),
+    }
+}
+
+fn arg_i32s<'a>(a: &Arg<'a>, what: &str) -> Result<&'a [i32]> {
+    match a {
+        Arg::TensorI32(v, _) => Ok(v),
+        _ => bail!("expected i32 tensor for {what}"),
+    }
+}
+
+fn arg_f32(a: &Arg<'_>, what: &str) -> Result<f32> {
+    match a {
+        Arg::F32(v) => Ok(*v),
+        _ => bail!("expected f32 scalar for {what}"),
+    }
+}
+
+fn arg_i32(a: &Arg<'_>, what: &str) -> Result<i32> {
+    match a {
+        Arg::I32(v) => Ok(*v),
+        _ => bail!("expected i32 scalar for {what}"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-preset program execution
+// ---------------------------------------------------------------------------
+
+struct NativeProgram {
+    model: NativeModel,
+}
+
+impl NativeProgram {
+    fn batch<'a>(&self, args: &[Arg<'a>], at: usize) -> Result<(&'a [i32], &'a [i32], &'a [f32])> {
+        Ok((
+            arg_i32s(&args[at], "input_ids")?,
+            arg_i32s(&args[at + 1], "targets")?,
+            arg_f32s(&args[at + 2], "mask")?,
+        ))
+    }
+
+    /// (f(x + lam z), f(x - lam z)) on one batch, reusing one scratch buffer.
+    fn two_point_losses(
+        &self,
+        params: &[f32],
+        z: &[f32],
+        lam: f32,
+        ids: &[i32],
+        tgt: &[i32],
+        mask: &[f32],
+    ) -> (f32, f32) {
+        let m = &self.model.meta;
+        let (b, s) = (m.batch, m.seq_len);
+        let mut xs = vec![0f32; params.len()];
+        vecmath::axpy_into(lam, z, params, &mut xs);
+        let lp = self.model.loss(&xs, ids, tgt, mask, b, s);
+        vecmath::axpy_into(-lam, z, params, &mut xs);
+        let lm = self.model.loss(&xs, ids, tgt, mask, b, s);
+        (lp, lm)
+    }
+}
+
+impl ProgramImpl for NativeProgram {
+    fn call(&self, spec: &ProgramSpec, args: &[Arg<'_>]) -> Result<Vec<Value>> {
+        let meta = &self.model.meta;
+        let (b, s) = (meta.batch, meta.seq_len);
+        match spec.kind.as_str() {
+            "init" => {
+                let seed = arg_i32(&args[0], "seed")?;
+                Ok(vec![Value::F32(self.model.init_flat(seed))])
+            }
+            "sample_u" => {
+                let seed = arg_i32(&args[0], "seed")?;
+                Ok(vec![Value::F32(self.model.sample_u(seed))])
+            }
+            "loss" => {
+                let params = arg_f32s(&args[0], "params")?;
+                let (ids, tgt, mask) = self.batch(args, 1)?;
+                let l = self.model.loss(params, ids, tgt, mask, b, s);
+                Ok(vec![Value::scalar(l)])
+            }
+            "two_point" => {
+                let params = arg_f32s(&args[0], "params")?;
+                let z = arg_f32s(&args[1], "z")?;
+                let lam = arg_f32(&args[2], "lam")?;
+                let (ids, tgt, mask) = self.batch(args, 3)?;
+                let (lp, lm) = self.two_point_losses(params, z, lam, ids, tgt, mask);
+                Ok(vec![Value::scalar(lp), Value::scalar(lm)])
+            }
+            "eval_logits" => {
+                let params = arg_f32s(&args[0], "params")?;
+                let ids = arg_i32s(&args[1], "input_ids")?;
+                let pos = arg_i32s(&args[2], "pos")?;
+                Ok(vec![Value::F32(self.model.eval_logits(params, ids, pos, b, s))])
+            }
+            "conmezo_step" => {
+                let params = arg_f32s(&args[0], "params")?;
+                let m = arg_f32s(&args[1], "m")?;
+                let seed = arg_i32(&args[2], "seed")?;
+                let theta = arg_f32(&args[3], "theta")?;
+                let beta = arg_f32(&args[4], "beta")?;
+                let eta = arg_f32(&args[5], "eta")?;
+                let lam = arg_f32(&args[6], "lam")?;
+                let (ids, tgt, mask) = self.batch(args, 7)?;
+                let u = self.model.sample_u(seed);
+                let mut z = vec![0f32; meta.d_pad];
+                vecmath::cone_direction(m, &u, theta, meta.d_raw, &mut z);
+                let (lp, lm) = self.two_point_losses(params, &z, lam, ids, tgt, mask);
+                let g = ((lp as f64 - lm as f64) / (2.0 * lam as f64)) as f32;
+                let mut x_new = params.to_vec();
+                let mut m_new = m.to_vec();
+                vecmath::zo_update(&mut x_new, &mut m_new, &z, g, eta, beta);
+                Ok(vec![
+                    Value::F32(x_new),
+                    Value::F32(m_new),
+                    Value::scalar(lp),
+                    Value::scalar(lm),
+                    Value::scalar(g),
+                ])
+            }
+            "mezo_step" => {
+                let params = arg_f32s(&args[0], "params")?;
+                let seed = arg_i32(&args[1], "seed")?;
+                let eta = arg_f32(&args[2], "eta")?;
+                let lam = arg_f32(&args[3], "lam")?;
+                let (ids, tgt, mask) = self.batch(args, 4)?;
+                let z = self.model.sample_u(seed);
+                let (lp, lm) = self.two_point_losses(params, &z, lam, ids, tgt, mask);
+                let g = ((lp as f64 - lm as f64) / (2.0 * lam as f64)) as f32;
+                let mut x_new = vec![0f32; params.len()];
+                vecmath::axpy_into(-eta * g, &z, params, &mut x_new);
+                Ok(vec![
+                    Value::F32(x_new),
+                    Value::scalar(lp),
+                    Value::scalar(lm),
+                    Value::scalar(g),
+                ])
+            }
+            "mezo_momentum_step" => {
+                let params = arg_f32s(&args[0], "params")?;
+                let m = arg_f32s(&args[1], "m")?;
+                let seed = arg_i32(&args[2], "seed")?;
+                let beta = arg_f32(&args[3], "beta")?;
+                let eta = arg_f32(&args[4], "eta")?;
+                let lam = arg_f32(&args[5], "lam")?;
+                let (ids, tgt, mask) = self.batch(args, 6)?;
+                let z = self.model.sample_u(seed);
+                let (lp, lm) = self.two_point_losses(params, &z, lam, ids, tgt, mask);
+                let g = ((lp as f64 - lm as f64) / (2.0 * lam as f64)) as f32;
+                // m' = beta m + (1-beta) g z ; x' = x - eta m'
+                // (same float ops as vecmath::zo_update's momentum pass)
+                let cm = (1.0 - beta) * g;
+                let mut m_new = vec![0f32; m.len()];
+                for i in 0..m.len() {
+                    m_new[i] = beta * m[i] + cm * z[i];
+                }
+                let mut x_new = vec![0f32; params.len()];
+                vecmath::axpy_into(-eta, &m_new, params, &mut x_new);
+                Ok(vec![
+                    Value::F32(x_new),
+                    Value::F32(m_new),
+                    Value::scalar(lp),
+                    Value::scalar(lm),
+                    Value::scalar(g),
+                ])
+            }
+            other => bail!("native backend cannot execute program kind {other:?}"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Synthetic quadratic (Fig. 3 / App. C.1)
+// ---------------------------------------------------------------------------
+
+/// Delegates to [`crate::objective::NativeQuadratic`] so the program and the
+/// composed-mode objective can never drift apart.
+struct QuadProgram;
+
+impl ProgramImpl for QuadProgram {
+    fn call(&self, spec: &ProgramSpec, args: &[Arg<'_>]) -> Result<Vec<Value>> {
+        use crate::objective::{NativeQuadratic, Objective};
+        let x = arg_f32s(&args[0], "x")?;
+        let mut q = NativeQuadratic::new(x.len());
+        match spec.kind.as_str() {
+            "loss" => Ok(vec![Value::scalar(q.loss(x)? as f32)]),
+            "grad" => {
+                let mut g = vec![0f32; x.len()];
+                q.grad(x, &mut g);
+                Ok(vec![Value::F32(g)])
+            }
+            other => bail!("quad program kind {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{lit_f32, lit_vec_f32, Runtime};
+
+    fn rt() -> Runtime {
+        Runtime::native()
+    }
+
+    #[test]
+    fn manifest_has_full_native_program_set() {
+        let rt = rt();
+        for preset in ["nano", "tiny", "small", "medium", "xl"] {
+            for kind in NATIVE_KINDS {
+                assert!(
+                    rt.manifest().program(&format!("{preset}_{kind}")).is_ok(),
+                    "{preset}_{kind}"
+                );
+            }
+        }
+        assert!(rt.manifest().program("quad_loss").is_ok());
+        // first-order programs are pjrt-only: absent, with a named error
+        let err = rt.manifest().program("nano_fo_sgd_step").unwrap_err().to_string();
+        assert!(err.contains("not in this backend's manifest"), "{err}");
+    }
+
+    #[test]
+    fn loss_program_signature_and_value() {
+        let rt = rt();
+        let meta = rt.preset("nano").unwrap().clone();
+        let init = rt.load_kind("nano", "init").unwrap();
+        let params = lit_vec_f32(&init.call(&[Arg::I32(1)]).unwrap()[0]).unwrap();
+        assert_eq!(params.len(), meta.d_pad);
+        let loss = rt.load_kind("nano", "loss").unwrap();
+        let ids = vec![1i32; meta.batch * meta.seq_len];
+        let tgt = vec![4i32; meta.batch * meta.seq_len];
+        let mut mask = vec![0f32; meta.batch * meta.seq_len];
+        mask[meta.seq_len - 1] = 1.0;
+        let dims = vec![meta.batch, meta.seq_len];
+        let outs = loss
+            .call(&[
+                Arg::VecF32(&params),
+                Arg::TensorI32(&ids, dims.clone()),
+                Arg::TensorI32(&tgt, dims.clone()),
+                Arg::TensorF32(&mask, dims),
+            ])
+            .unwrap();
+        let l = lit_f32(&outs[0]).unwrap();
+        assert!(l.is_finite() && l > 0.0);
+    }
+
+    #[test]
+    fn quad_programs_match_native_objective() {
+        use crate::objective::{NativeQuadratic, Objective};
+        let rt = rt();
+        let prog = rt.load("quad_loss").unwrap();
+        let grad = rt.load("quad_grad").unwrap();
+        let mut q = NativeQuadratic::new(QUAD_DIM);
+        let x: Vec<f32> = (0..QUAD_DIM).map(|i| ((i as f32) * 0.01).sin()).collect();
+        let l = lit_f32(&prog.call(&[Arg::VecF32(&x)]).unwrap()[0]).unwrap() as f64;
+        let want = q.loss(&x).unwrap();
+        assert!((l - want).abs() / want.abs().max(1e-9) < 1e-5, "{l} vs {want}");
+        let g = lit_vec_f32(&grad.call(&[Arg::VecF32(&x)]).unwrap()[0]).unwrap();
+        let mut gw = vec![0f32; QUAD_DIM];
+        q.grad(&x, &mut gw);
+        assert_eq!(g, gw);
+    }
+
+    #[test]
+    fn mezo_step_program_updates_along_direction() {
+        let rt = rt();
+        let meta = rt.preset("nano").unwrap().clone();
+        let init = rt.load_kind("nano", "init").unwrap();
+        let params = lit_vec_f32(&init.call(&[Arg::I32(3)]).unwrap()[0]).unwrap();
+        let step = rt.load_kind("nano", "mezo_step").unwrap();
+        let sample = rt.load_kind("nano", "sample_u").unwrap();
+        let ids = vec![2i32; meta.batch * meta.seq_len];
+        let tgt = vec![5i32; meta.batch * meta.seq_len];
+        let mut mask = vec![0f32; meta.batch * meta.seq_len];
+        for i in 0..meta.batch {
+            mask[i * meta.seq_len + 3] = 1.0;
+        }
+        let dims = vec![meta.batch, meta.seq_len];
+        let (seed, eta, lam) = (11i32, 1e-3f32, 1e-3f32);
+        let outs = step
+            .call(&[
+                Arg::VecF32(&params),
+                Arg::I32(seed),
+                Arg::F32(eta),
+                Arg::F32(lam),
+                Arg::TensorI32(&ids, dims.clone()),
+                Arg::TensorI32(&tgt, dims.clone()),
+                Arg::TensorF32(&mask, dims),
+            ])
+            .unwrap();
+        let new = lit_vec_f32(&outs[0]).unwrap();
+        let g = lit_f32(&outs[3]).unwrap();
+        let z = lit_vec_f32(&sample.call(&[Arg::I32(seed)]).unwrap()[0]).unwrap();
+        // x' must equal x - eta g z exactly
+        for i in (0..meta.d_pad).step_by(997) {
+            let want = params[i] - eta * g * z[i];
+            assert_eq!(new[i], want, "coord {i}");
+        }
+        // pads untouched
+        assert!(new[meta.d_raw..].iter().all(|&v| v == 0.0));
+    }
+}

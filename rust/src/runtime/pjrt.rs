@@ -1,0 +1,120 @@
+//! PJRT backend (cargo feature `pjrt`): load AOT artifacts
+//! (`artifacts/*.hlo.txt`) and execute them on the PJRT CPU client via the
+//! external `xla` crate.
+//!
+//! Pattern (from /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. Programs are compiled once and cached by
+//! the [`Runtime`](crate::runtime::Runtime) façade; after that the binary
+//! is self-contained — Python never runs again.
+//!
+//! This is the only module that touches the `xla` crate; the crate's
+//! default build never compiles it (see rust/Cargo.toml for how to enable).
+
+use std::path::{Path, PathBuf};
+
+use crate::runtime::manifest::Manifest;
+use crate::runtime::{Arg, Backend, ProgramImpl, ProgramSpec, Value};
+use crate::util::error::{anyhow, bail, Context, Result};
+
+fn to_literal(a: &Arg<'_>) -> Result<xla::Literal> {
+    Ok(match a {
+        Arg::F32(v) => xla::Literal::scalar(*v),
+        Arg::I32(v) => xla::Literal::scalar(*v),
+        Arg::VecF32(v) => xla::Literal::vec1(v),
+        Arg::TensorI32(v, dims) => {
+            let d: Vec<i64> = dims.iter().map(|&x| x as i64).collect();
+            xla::Literal::vec1(v).reshape(&d)?
+        }
+        Arg::TensorF32(v, dims) => {
+            let d: Vec<i64> = dims.iter().map(|&x| x as i64).collect();
+            xla::Literal::vec1(v).reshape(&d)?
+        }
+    })
+}
+
+fn to_value(l: &xla::Literal) -> Result<Value> {
+    Ok(Value::F32(l.to_vec::<f32>()?))
+}
+
+/// The PJRT backend: client + artifact directory + manifest.
+pub struct PjrtBackend {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+}
+
+impl PjrtBackend {
+    /// Open the artifact directory (compiles nothing yet).
+    pub fn open(dir: impl AsRef<Path>) -> Result<PjrtBackend> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(PjrtBackend { client, dir, manifest })
+    }
+
+    /// Default artifact location relative to the repo root.
+    pub fn open_default() -> Result<PjrtBackend> {
+        let candidates = ["artifacts", "../artifacts", "../../artifacts"];
+        for c in candidates {
+            if Path::new(c).join("manifest.json").exists() {
+                return Self::open(c);
+            }
+        }
+        // fall back to CARGO_MANIFEST_DIR for tests
+        let from_env = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if from_env.join("manifest.json").exists() {
+            return Self::open(from_env);
+        }
+        bail!("artifacts/manifest.json not found; run `make artifacts`")
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn instantiate(&self, spec: &ProgramSpec) -> Result<Box<dyn ProgramImpl>> {
+        let path = self.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", spec.name))?;
+        Ok(Box::new(PjrtProgram { exe }))
+    }
+}
+
+struct PjrtProgram {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl ProgramImpl for PjrtProgram {
+    fn call(&self, spec: &ProgramSpec, args: &[Arg<'_>]) -> Result<Vec<Value>> {
+        let mut lits = Vec::with_capacity(args.len());
+        for a in args {
+            lits.push(to_literal(a)?);
+        }
+        let bufs = self
+            .exe
+            .execute::<xla::Literal>(&lits)
+            .with_context(|| format!("executing {}", spec.name))?;
+        // return_tuple=True => one tuple-shaped output buffer
+        let tuple = bufs[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching outputs of {}", spec.name))?;
+        let outs = tuple.to_tuple()?;
+        let mut values = Vec::with_capacity(outs.len());
+        for o in &outs {
+            values.push(to_value(o)?);
+        }
+        Ok(values)
+    }
+}

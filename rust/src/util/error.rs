@@ -1,0 +1,143 @@
+//! Minimal error substrate (drop-in for the `anyhow` surface this crate
+//! uses: `Result`, `anyhow!`, `bail!`, `Context`).
+//!
+//! The offline build has no registry access, so the crate must compile with
+//! zero external dependencies. [`Error`] is a message string plus a context
+//! chain; any `std::error::Error` converts into it via `?`, and the
+//! [`Context`] extension trait layers human-readable context exactly like
+//! anyhow's (`reading foo.json: No such file or directory`).
+
+use std::fmt;
+
+/// A string-backed error with a context chain (outermost context first).
+pub struct Error {
+    msg: String,
+    context: Vec<String>,
+}
+
+impl Error {
+    pub fn msg(msg: impl Into<String>) -> Error {
+        Error { msg: msg.into(), context: Vec::new() }
+    }
+
+    pub fn push_context(mut self, ctx: impl Into<String>) -> Error {
+        self.context.push(ctx.into());
+        self
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // render outermost context first: "ctx2: ctx1: root cause"
+        for c in self.context.iter().rev() {
+            write!(f, "{c}: ")?;
+        }
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(self, f)
+    }
+}
+
+// Any concrete std error converts via `?`. `Error` itself deliberately does
+// NOT implement `std::error::Error`, which keeps this blanket impl coherent
+// with the reflexive `From<Error> for Error` (the same trick anyhow uses).
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e.to_string())
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to a `Result` or `Option`, anyhow-style.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| e.into().push_context(ctx.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().push_context(f().to_string()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (anyhow's `anyhow!`).
+#[macro_export]
+macro_rules! anyhow {
+    ($($t:tt)*) => { $crate::util::error::Error::msg(format!($($t)*)) };
+}
+
+/// Early-return an error from a format string (anyhow's `bail!`).
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => { return Err($crate::anyhow!($($t)*).into()) };
+}
+
+// Let call sites keep `use crate::util::error::{anyhow, bail, ...}` even
+// though #[macro_export] places the macros at the crate root.
+pub use crate::{anyhow, bail};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        let s = std::fs::read_to_string("/definitely/not/a/real/path/xyz")
+            .with_context(|| "reading config".to_string())?;
+        Ok(s)
+    }
+
+    #[test]
+    fn context_chains_render_outermost_first() {
+        let e = io_fail().context("loading experiment").unwrap_err();
+        let s = e.to_string();
+        assert!(s.starts_with("loading experiment: reading config: "), "{s}");
+    }
+
+    #[test]
+    fn anyhow_and_bail_macros() {
+        let e = anyhow!("bad value {}", 42);
+        assert_eq!(e.to_string(), "bad value 42");
+        fn f(x: i32) -> Result<i32> {
+            if x < 0 {
+                bail!("negative: {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(f(-1).unwrap_err().to_string(), "negative: -1");
+    }
+
+    #[test]
+    fn std_errors_convert_via_question_mark() {
+        fn parse(s: &str) -> Result<i64> {
+            Ok(s.parse::<i64>()?)
+        }
+        assert_eq!(parse("12").unwrap(), 12);
+        assert!(parse("nope").unwrap_err().to_string().contains("invalid digit"));
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        assert_eq!(v.context("missing key").unwrap_err().to_string(), "missing key");
+    }
+}

@@ -1,14 +1,14 @@
 //! Minimal JSON substrate (parser + emitter).
 //!
-//! Only `xla` and `anyhow` are vendored in this offline environment, so the
-//! manifest reader, metrics recorder, and checkpoint metadata implement JSON
-//! from scratch here. Supports the full JSON grammar except `\u` surrogate
-//! pairs beyond the BMP (sufficient for our ASCII artifacts).
+//! The offline build has no registry dependencies at all, so the manifest
+//! reader, metrics recorder, parity fixtures, and checkpoint metadata
+//! implement JSON from scratch here. Supports the full JSON grammar except
+//! `\u` surrogate pairs beyond the BMP (sufficient for our ASCII artifacts).
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
-use anyhow::{anyhow, bail, Result};
+use crate::util::error::{anyhow, bail, Result};
 
 /// A parsed JSON value. Object keys keep insertion order irrelevant; we use
 /// a BTreeMap for deterministic emission.

@@ -1,6 +1,7 @@
 //! Substrate utilities implemented from scratch for the offline build:
-//! PRNG, JSON, logging, memory accounting, and small helpers.
+//! errors, PRNG, JSON, logging, memory accounting, and small helpers.
 
+pub mod error;
 pub mod json;
 pub mod logging;
 pub mod plot;

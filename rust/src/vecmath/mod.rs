@@ -105,6 +105,131 @@ pub fn cos2(a: &[f32], b: &[f32]) -> f64 {
     num * num / den
 }
 
+// ---------------------------------------------------------------------------
+// Dense kernels for the native transformer forward (runtime::model).
+// ---------------------------------------------------------------------------
+
+/// out[m, n] = a[m, k] @ b[k, n], all row-major. Loop order (i, p, j) keeps
+/// the inner loop a contiguous saxpy over `out` and `b` rows, which LLVM
+/// auto-vectorizes.
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(out.len(), m * n);
+    for row in out.iter_mut() {
+        *row = 0.0;
+    }
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (p, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[p * n..(p + 1) * n];
+            for j in 0..n {
+                orow[j] += av * brow[j];
+            }
+        }
+    }
+}
+
+/// out[m, n] = a[m, k] @ bt[n, k]^T — `bt` stores the TRANSPOSE of b
+/// row-major (e.g. the tied LM head: logits = x @ tok_emb^T with tok_emb
+/// stored [vocab, d_model]). Inner loop is a dot of two contiguous rows.
+pub fn matmul_bt(a: &[f32], bt: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(bt.len(), n * k);
+    assert_eq!(out.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for j in 0..n {
+            let brow = &bt[j * k..(j + 1) * k];
+            let mut acc = 0f32;
+            for p in 0..k {
+                acc += arow[p] * brow[p];
+            }
+            orow[j] = acc;
+        }
+    }
+}
+
+/// Row-wise softmax in place over an [rows, cols] buffer (max-subtracted).
+pub fn softmax_rows(x: &mut [f32], rows: usize, cols: usize) {
+    assert_eq!(x.len(), rows * cols);
+    for i in 0..rows {
+        let row = &mut x[i * cols..(i + 1) * cols];
+        let mut maxv = f32::NEG_INFINITY;
+        for &v in row.iter() {
+            if v > maxv {
+                maxv = v;
+            }
+        }
+        let mut denom = 0f32;
+        for v in row.iter_mut() {
+            *v = (*v - maxv).exp();
+            denom += *v;
+        }
+        let inv = 1.0 / denom;
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
+    }
+}
+
+/// Row-wise LayerNorm: out[i, :] = (x[i, :] - mu_i) / sqrt(var_i + eps) * g + b.
+/// Mean/variance accumulate in f64 (matches the jax reference within f32
+/// tolerance for all preset widths).
+pub fn layernorm_rows(x: &[f32], g: &[f32], b: &[f32], rows: usize, cols: usize, eps: f32, out: &mut [f32]) {
+    assert_eq!(x.len(), rows * cols);
+    assert_eq!(out.len(), rows * cols);
+    assert_eq!(g.len(), cols);
+    assert_eq!(b.len(), cols);
+    for i in 0..rows {
+        let row = &x[i * cols..(i + 1) * cols];
+        let orow = &mut out[i * cols..(i + 1) * cols];
+        let mut mean = 0f64;
+        for &v in row {
+            mean += v as f64;
+        }
+        mean /= cols as f64;
+        let mut var = 0f64;
+        for &v in row {
+            let d = v as f64 - mean;
+            var += d * d;
+        }
+        var /= cols as f64;
+        let inv = 1.0 / (var + eps as f64).sqrt();
+        let (mean, inv) = (mean as f32, inv as f32);
+        for j in 0..cols {
+            orow[j] = (row[j] - mean) * inv * g[j] + b[j];
+        }
+    }
+}
+
+/// GELU (tanh approximation — the jax.nn.gelu default used by the L2 model),
+/// applied in place.
+pub fn gelu(x: &mut [f32]) {
+    const C: f32 = 0.797_884_56; // sqrt(2/pi)
+    for v in x.iter_mut() {
+        let t = *v;
+        *v = 0.5 * t * (1.0 + (C * (t + 0.044715 * t * t * t)).tanh());
+    }
+}
+
+/// x[i, :] += bias for every row of an [rows, cols] buffer.
+pub fn add_bias_rows(x: &mut [f32], bias: &[f32], rows: usize, cols: usize) {
+    assert_eq!(x.len(), rows * cols);
+    assert_eq!(bias.len(), cols);
+    for i in 0..rows {
+        let row = &mut x[i * cols..(i + 1) * cols];
+        for j in 0..cols {
+            row[j] += bias[j];
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -223,5 +348,153 @@ mod tests {
         for i in 0..d {
             assert!((out[i] - (x[i] + 2.0 * s[i] * z[i])).abs() < 1e-6);
         }
+    }
+
+    // -----------------------------------------------------------------------
+    // property-based coverage for the dense kernels (testing::property)
+    // -----------------------------------------------------------------------
+
+    use crate::testing::{property, Gen, Pair, UsizeRange};
+    use crate::util::rng::Xoshiro256pp as Rng;
+
+    /// (rows, cols, data) matrix generator.
+    struct MatGen {
+        max_rows: usize,
+        max_cols: usize,
+    }
+
+    impl Gen for MatGen {
+        type Value = (usize, usize, Vec<f32>);
+        fn generate(&self, rng: &mut Rng) -> Self::Value {
+            let r = 1 + rng.gen_range(self.max_rows);
+            let c = 1 + rng.gen_range(self.max_cols);
+            let mut v = vec![0f32; r * c];
+            rng.fill_normal_f32(&mut v);
+            (r, c, v)
+        }
+    }
+
+    #[test]
+    fn prop_softmax_rows_sum_to_one() {
+        let g = MatGen { max_rows: 8, max_cols: 48 };
+        property("softmax-normalizes", &g, 64, |(r, c, data)| {
+            let mut x = data.clone();
+            // widen the dynamic range to stress max-subtraction
+            for v in x.iter_mut() {
+                *v *= 30.0;
+            }
+            softmax_rows(&mut x, *r, *c);
+            (0..*r).all(|i| {
+                let row = &x[i * c..(i + 1) * c];
+                let s: f64 = row.iter().map(|&v| v as f64).sum();
+                (s - 1.0).abs() < 1e-4 && row.iter().all(|&v| (0.0..=1.0).contains(&v))
+            })
+        });
+    }
+
+    #[test]
+    fn prop_layernorm_zero_mean_unit_var() {
+        let g = MatGen { max_rows: 6, max_cols: 64 };
+        property("layernorm-standardizes", &g, 64, |(r, c, data)| {
+            if *c < 8 {
+                return true; // eps dominates tiny rows; not the regime used
+            }
+            let gamma = vec![1f32; *c];
+            let beta = vec![0f32; *c];
+            let mut out = vec![0f32; r * c];
+            layernorm_rows(data, &gamma, &beta, *r, *c, 1e-5, &mut out);
+            (0..*r).all(|i| {
+                let row = &out[i * c..(i + 1) * c];
+                let mean: f64 = row.iter().map(|&v| v as f64).sum::<f64>() / *c as f64;
+                let var: f64 =
+                    row.iter().map(|&v| (v as f64 - mean).powi(2)).sum::<f64>() / *c as f64;
+                mean.abs() < 1e-4 && (var - 1.0).abs() < 2e-2
+            })
+        });
+    }
+
+    #[test]
+    fn prop_matmul_matches_naive_triple_loop() {
+        // random (m, k, n) small shapes; compare against the j-outer naive
+        // order, which exercises a different accumulation pattern
+        let g = Pair(UsizeRange(1, 9), Pair(UsizeRange(1, 9), UsizeRange(1, 9)));
+        property("matmul-naive", &g, 48, |&(m, (k, n))| {
+            let mut rng = Rng::seed_from_u64((m * 97 + k * 13 + n) as u64);
+            let mut a = vec![0f32; m * k];
+            let mut b = vec![0f32; k * n];
+            rng.fill_normal_f32(&mut a);
+            rng.fill_normal_f32(&mut b);
+            let mut fast = vec![0f32; m * n];
+            matmul(&a, &b, m, k, n, &mut fast);
+            let mut bt = vec![0f32; n * k];
+            for p in 0..k {
+                for j in 0..n {
+                    bt[j * k + p] = b[p * n + j];
+                }
+            }
+            let mut fast_bt = vec![0f32; m * n];
+            matmul_bt(&a, &bt, m, k, n, &mut fast_bt);
+            for i in 0..m {
+                for j in 0..n {
+                    let mut acc = 0f64;
+                    for p in 0..k {
+                        acc += a[i * k + p] as f64 * b[p * n + j] as f64;
+                    }
+                    let naive = acc as f32;
+                    if (fast[i * n + j] - naive).abs() > 1e-4 * naive.abs().max(1.0) {
+                        return false;
+                    }
+                    if (fast_bt[i * n + j] - naive).abs() > 1e-4 * naive.abs().max(1.0) {
+                        return false;
+                    }
+                }
+            }
+            true
+        });
+    }
+
+    #[test]
+    fn prop_cone_norm_is_d_in_lemma2_setting() {
+        // Lemma 2: with u restricted to sqrt(d) S^{d-1} and orthogonal to m,
+        // ||z||^2 = d cos^2(theta) + d sin^2(theta) = d for EVERY theta and d
+        let g = Pair(UsizeRange(16, 512), crate::testing::F64Range(0.05, 3.0));
+        property("cone-lemma2-norm", &g, 64, |&(d, theta)| {
+            let mut rng = Rng::seed_from_u64(d as u64 ^ 0xC0DE);
+            let mut m = vec![0f32; d];
+            let mut u = vec![0f32; d];
+            rng.fill_normal_f32(&mut m);
+            rng.fill_normal_f32(&mut u);
+            // orthogonalize u against m, then rescale to ||u|| = sqrt(d)
+            let proj = (dot(&u, &m) / dot(&m, &m)) as f32;
+            for i in 0..d {
+                u[i] -= proj * m[i];
+            }
+            let su = ((d as f64).sqrt() / nrm2(&u)) as f32;
+            scale(su, &mut u);
+            let mut z = vec![0f32; d];
+            cone_direction(&m, &u, theta as f32, d, &mut z);
+            let zz = dot(&z, &z);
+            (zz - d as f64).abs() / d as f64 < 1e-3
+        });
+    }
+
+    #[test]
+    fn gelu_matches_reference_points() {
+        // gelu(0) = 0; gelu(x) -> x for large x; gelu(-x) small negative
+        let mut x = vec![0.0f32, 1.0, -1.0, 3.0, -3.0, 0.5];
+        gelu(&mut x);
+        assert_eq!(x[0], 0.0);
+        assert!((x[1] - 0.8412).abs() < 1e-3, "{}", x[1]); // tanh-approx value
+        assert!((x[2] + 0.1588).abs() < 1e-3, "{}", x[2]);
+        assert!((x[3] - 2.9964).abs() < 1e-3);
+        assert!(x[4].abs() < 0.01);
+        assert!((x[5] - 0.3457).abs() < 1e-3, "{}", x[5]);
+    }
+
+    #[test]
+    fn add_bias_rows_broadcasts() {
+        let mut x = vec![1f32; 6];
+        add_bias_rows(&mut x, &[0.5, -0.5, 2.0], 2, 3);
+        assert_eq!(x, vec![1.5, 0.5, 3.0, 1.5, 0.5, 3.0]);
     }
 }

@@ -1,24 +1,28 @@
-//! Integration tests over the full training stack: Trainer drives loss
-//! down, checkpoint save/resume equivalence, distributed-vs-single-node
-//! equivalence on the HLO objective, and property-based coordinator
-//! invariants.
+//! Integration tests over the full training stack on the NativeBackend:
+//! Trainer drives loss down (fused and composed engines), deterministic
+//! replay, checkpoint round-trip, distributed-vs-single-node equivalence on
+//! the transformer objective, a tiny-preset end-to-end run, and
+//! property-based coordinator invariants. No Python, no XLA, no artifacts.
+//!
+//! Descent thresholds are calibrated against a numpy simulation of the
+//! exact native math (see python/compile/gen_fixtures.py for the mirrored
+//! PRNG): conmezo@3e-4 drops ~3.9 -> ~1.1 over 400 nano/sst2 steps,
+//! zo_adamm@1e-3 ~3.9 -> ~2.2 over 300, the 3-worker cluster ~4.2 -> ~3.1
+//! over 150. The `- 0.3`/`- 0.5` margins below sit far inside those gaps.
+//!
+//! First-order baselines (fo_adamw/fo_sgd) need build-time backprop and
+//! exist only on the PJRT backend; those tests are feature-gated.
 
 use conmezo::checkpoint::Checkpoint;
 use conmezo::coordinator::{DistHypers, LocalCluster, Mode, TrainConfig, Trainer, ZoWorker};
 use conmezo::data::{spec, TaskGen, TrainSampler};
-use conmezo::objective::HloObjective;
+use conmezo::objective::ModelObjective;
 use conmezo::optimizer::BetaSchedule;
 use conmezo::runtime::{lit_vec_f32, Arg, Runtime};
 use conmezo::testing::{property, NormalVec, UsizeRange};
 
-fn runtime() -> Option<Runtime> {
-    match Runtime::open_default() {
-        Ok(rt) => Some(rt),
-        Err(e) => {
-            eprintln!("skipping integration test (no artifacts): {e}");
-            None
-        }
-    }
+fn runtime() -> Runtime {
+    Runtime::native()
 }
 
 fn quick_cfg(opt: &str, steps: usize) -> TrainConfig {
@@ -26,44 +30,37 @@ fn quick_cfg(opt: &str, steps: usize) -> TrainConfig {
     cfg.steps = steps;
     cfg.eta = 3e-4;
     cfg.eval_every = steps;
-    cfg.log_every = steps;
+    cfg.log_every = (steps / 8).max(1);
     cfg
 }
 
 #[test]
 fn trainer_drives_loss_down_fused_and_composed() {
-    let Some(rt) = runtime() else { return };
-    for (opt, mode) in [("conmezo", Mode::Fused), ("mezo", Mode::Fused), ("zo_adamm", Mode::Composed)] {
-        let mut cfg = quick_cfg(opt, 400);
+    let rt = runtime();
+    for (opt, mode, eta, steps) in [
+        ("conmezo", Mode::Fused, 3e-4f32, 400usize),
+        ("mezo", Mode::Fused, 1e-3, 400),
+        ("zo_adamm", Mode::Composed, 1e-3, 300),
+    ] {
+        let mut cfg = quick_cfg(opt, steps);
         cfg.mode = mode;
-        if opt == "zo_adamm" {
-            cfg.eta = 1e-3;
-        }
+        cfg.eta = eta;
         let mut tr = Trainer::new(&rt, cfg).unwrap();
-        let first = tr.step(0).unwrap();
         let summary = tr.run().unwrap();
+        let first = summary.loss_curve.first().unwrap().1;
+        let last = summary.loss_curve.last().unwrap().1;
         assert!(
-            summary.final_loss < first,
-            "{opt}: loss did not decrease ({} -> {})",
-            first,
-            summary.final_loss
+            last < first - 0.5,
+            "{opt}: loss did not decrease enough ({first:.4} -> {last:.4})"
         );
+        assert!(last.is_finite() && last > 0.0, "{opt}: {last}");
+        assert_eq!(summary.evals_used, 2 * steps as u64, "{opt}");
     }
 }
 
 #[test]
-fn fo_adamw_solves_task() {
-    let Some(rt) = runtime() else { return };
-    let mut cfg = quick_cfg("adamw", 200);
-    cfg.eta = 1e-3;
-    cfg.eval_every = 100;
-    let summary = Trainer::new(&rt, cfg).unwrap().run().unwrap();
-    assert!(summary.final_accuracy > 0.9, "adamw acc {}", summary.final_accuracy);
-}
-
-#[test]
 fn run_is_deterministic_per_seed() {
-    let Some(rt) = runtime() else { return };
+    let rt = runtime();
     let run = |seed: u64| {
         let mut cfg = quick_cfg("conmezo", 60);
         cfg.seed = seed;
@@ -75,10 +72,9 @@ fn run_is_deterministic_per_seed() {
 
 #[test]
 fn checkpoint_resume_equivalence() {
-    // train 40 steps straight == train 20, checkpoint, reload, train 20:
-    // parameter state round-trips exactly; the remaining steps use the same
-    // per-step seeds because seeds derive from (run_seed, t)
-    let Some(rt) = runtime() else { return };
+    // train 40 steps straight == train 20, checkpoint, reload: parameter
+    // state round-trips exactly; per-step seeds derive from (run_seed, t)
+    let rt = runtime();
     let dir = std::env::temp_dir().join("conmezo_it_ckpt");
     let path = dir.join("mid.ckpt");
 
@@ -96,13 +92,6 @@ fn checkpoint_resume_equivalence() {
     let ck = Checkpoint::load(&path).unwrap();
     let mut resumed = Trainer::new(&rt, quick_cfg("mezo", 1)).unwrap();
     resumed.params = ck.get("params").unwrap().to_vec();
-    // also rewind the data stream by replaying the first 20 batches
-    for t in 0..20 {
-        let _ = t;
-    }
-    // NOTE: mezo's direction depends only on (run_seed, t); the batch
-    // stream of `resumed` is at position 0 though, so exact equality holds
-    // only for the parameter state at the checkpoint itself:
     assert_eq!(resumed.params, first.params);
     // and the checkpoint file round-trips the exact bytes
     let ck2 = Checkpoint::load(&path).unwrap();
@@ -111,8 +100,8 @@ fn checkpoint_resume_equivalence() {
 }
 
 #[test]
-fn distributed_hlo_workers_stay_identical_and_learn() {
-    let Some(rt) = runtime() else { return };
+fn distributed_workers_stay_identical_and_learn() {
+    let rt = runtime();
     let meta = rt.preset("nano").unwrap().clone();
     let gen = TaskGen::new(spec("sst2").unwrap(), meta.vocab, meta.seq_len);
     let init = rt.load_kind("nano", "init").unwrap();
@@ -121,38 +110,64 @@ fn distributed_hlo_workers_stay_identical_and_learn() {
     let mut workers = Vec::new();
     for id in 0..3u32 {
         let sampler = TrainSampler::new(gen.dataset(64, 9), meta.batch, meta.seq_len, 9, id as u64);
-        let obj = HloObjective::new(&rt, "nano", Box::new(sampler)).unwrap();
+        let obj = ModelObjective::new(&rt, "nano", Box::new(sampler)).unwrap();
         workers.push(ZoWorker::new(id, x0.clone(), Box::new(obj)));
     }
     let mut cluster = LocalCluster::new(workers, 11);
     let hypers = DistHypers { theta: 1.35, eta: 3e-4, lam: 1e-3 };
     let summary = cluster.run(150, hypers, &BetaSchedule::Constant(0.99), 0).unwrap();
-    assert!(cluster.replicas_identical(), "replicas diverged on HLO objective");
+    assert!(cluster.replicas_identical(), "replicas diverged on the model objective");
     let first = summary.loss_curve.first().unwrap().1;
     let last = summary.loss_curve.last().unwrap().1;
-    assert!(last < first, "distributed loss did not decrease: {first} -> {last}");
+    assert!(last < first - 0.3, "distributed loss did not decrease: {first} -> {last}");
     // O(1) communication
     assert!(summary.wire_bytes < 150 * 3 * 200, "wire bytes too high: {}", summary.wire_bytes);
 }
 
 #[test]
-fn evaluator_accuracy_on_oracle_params() {
-    // sanity: the Evaluator must report ~100% when the "model" is replaced
-    // by AdamW-trained parameters that solve the task
-    let Some(rt) = runtime() else { return };
-    let mut cfg = quick_cfg("adamw", 250);
-    cfg.eta = 1e-3;
+fn tiny_preset_trains_end_to_end() {
+    // the acceptance workload: a full Trainer run on the tiny preset with
+    // eval, entirely on the native backend
+    let rt = runtime();
+    let mut cfg = TrainConfig::preset("tiny", "sst2", "conmezo");
+    cfg.steps = 24;
+    cfg.eta = 3e-4;
+    cfg.eval_every = 12;
+    cfg.log_every = 6;
     let mut tr = Trainer::new(&rt, cfg).unwrap();
-    for t in 0..250 {
-        tr.step(t).unwrap();
-    }
+    let summary = tr.run().unwrap();
+    assert!(summary.final_loss.is_finite());
+    // fresh tiny model: loss near ln(256) = 5.55, and never exploding
+    assert!(summary.final_loss > 1.0 && summary.final_loss < 7.0, "{}", summary.final_loss);
+    assert_eq!(summary.eval_curve.len(), 2);
+    let acc = summary.final_accuracy;
+    assert!((0.0..=1.0).contains(&acc), "{acc}");
+    assert!(summary.steps_per_sec > 0.0);
+    assert!(summary.peak_mem_mib > 0.0);
+}
+
+#[test]
+fn evaluator_scores_are_well_formed() {
+    let rt = runtime();
+    let tr = Trainer::new(&rt, quick_cfg("conmezo", 10)).unwrap();
     let r = tr.evaluate().unwrap();
-    assert!(r.accuracy() > 0.9, "{}", r.accuracy());
-    assert!(r.macro_f1 > 0.85, "{}", r.macro_f1);
+    assert_eq!(r.total, 128);
+    assert!((0.0..=1.0).contains(&r.accuracy()));
+    assert!(r.macro_f1.is_nan() || (0.0..=1.0).contains(&r.macro_f1));
+}
+
+#[test]
+fn native_backend_rejects_first_order_optimizers_with_named_error() {
+    let rt = runtime();
+    let err = match Trainer::new(&rt, quick_cfg("adamw", 10)) {
+        Err(e) => e.to_string(),
+        Ok(_) => panic!("adamw must not construct on the native backend"),
+    };
+    assert!(err.contains("not in this backend's manifest"), "{err}");
 }
 
 // ---------------------------------------------------------------------------
-// property-based coordinator invariants (no artifacts needed)
+// property-based coordinator invariants
 // ---------------------------------------------------------------------------
 
 #[test]
@@ -196,4 +211,60 @@ fn prop_batcher_never_drops_or_duplicates_loss_mass() {
         // exactly one unit of loss mass per example, none for pad rows
         (b.mask.iter().sum::<f32>() as usize) == n
     });
+}
+
+#[test]
+fn prop_native_sample_u_is_a_pure_function_of_seed() {
+    // the program-level seed-replay primitive behind fused distributed runs
+    let rt = runtime();
+    let prog = rt.load_kind("nano", "sample_u").unwrap();
+    let g = UsizeRange(0, 50_000);
+    property("sample-u-replay", &g, 16, |&s| {
+        let a = lit_vec_f32(&prog.call(&[Arg::I32(s as i32)]).unwrap()[0]).unwrap();
+        let b = lit_vec_f32(&prog.call(&[Arg::I32(s as i32)]).unwrap()[0]).unwrap();
+        a == b
+    });
+}
+
+// ---------------------------------------------------------------------------
+// PJRT-only: first-order baselines (build-time backprop programs)
+// ---------------------------------------------------------------------------
+
+#[cfg(feature = "pjrt")]
+mod pjrt_only {
+    use super::*;
+
+    fn pjrt_runtime() -> Option<Runtime> {
+        match Runtime::from_name("pjrt") {
+            Ok(rt) => Some(rt),
+            Err(e) => {
+                eprintln!("skipping pjrt-only test (no artifacts): {e}");
+                None
+            }
+        }
+    }
+
+    #[test]
+    fn fo_adamw_solves_task() {
+        let Some(rt) = pjrt_runtime() else { return };
+        let mut cfg = quick_cfg("adamw", 200);
+        cfg.eta = 1e-3;
+        cfg.eval_every = 100;
+        let summary = Trainer::new(&rt, cfg).unwrap().run().unwrap();
+        assert!(summary.final_accuracy > 0.9, "adamw acc {}", summary.final_accuracy);
+    }
+
+    #[test]
+    fn evaluator_accuracy_on_oracle_params() {
+        let Some(rt) = pjrt_runtime() else { return };
+        let mut cfg = quick_cfg("adamw", 250);
+        cfg.eta = 1e-3;
+        let mut tr = Trainer::new(&rt, cfg).unwrap();
+        for t in 0..250 {
+            tr.step(t).unwrap();
+        }
+        let r = tr.evaluate().unwrap();
+        assert!(r.accuracy() > 0.9, "{}", r.accuracy());
+        assert!(r.macro_f1 > 0.85, "{}", r.macro_f1);
+    }
 }
