@@ -3,9 +3,10 @@
 //!
 //! Pipeline:
 //!   1. PRETRAIN a transformer LM on the synthetic multi-task corpus with
-//!      the AOT AdamW step (L2 backprop traced at build time), logging the
-//!      LM loss curve — this is the "pretrained model" of the paper's
-//!      few-shot regime (labels corrupted 30% to leave headroom);
+//!      the AdamW step program (native reverse-mode autograd by default,
+//!      build-time jax backprop on pjrt), logging the LM loss curve — this
+//!      is the "pretrained model" of the paper's few-shot regime (labels
+//!      corrupted 30% to leave headroom);
 //!   2. ZO-FINETUNE it on a downstream task with MeZO and ConMeZO via the
 //!      fused L1/L2 step programs (Pallas cone/update kernels inside);
 //!   3. report the loss/accuracy curves and the iterations-to-target ratio

@@ -1,10 +1,18 @@
 """Generate golden-value fixtures for the Rust NativeBackend parity tests.
 
-Writes ``rust/tests/fixtures/native_parity.json``: expected loss /
-two-point / eval-logits values for the nano preset, computed with a numpy
-transcription of the native backend's math and cross-checked here against
-the jax reference (`model.py` + `kernels/ref.py`) before being written —
-so the fixture pins the Rust implementation to the paper reference.
+Writes two fixtures under ``rust/tests/fixtures/``:
+
+* ``native_parity.json`` — expected loss / two-point / eval-logits values
+  for the nano preset, computed with a numpy transcription of the native
+  backend's math and cross-checked here against the jax reference
+  (`model.py` + `kernels/ref.py`) before being written — so the fixture
+  pins the Rust implementation to the paper reference.
+
+* ``fo_parity.json`` — first-order golden values for the native
+  reverse-mode autograd pass (`rust/src/runtime/autograd.rs`):
+  `jax.value_and_grad` loss + gradient norm + strided gradient samples,
+  the Fig. 6 `grad_cos2` probe, the SGD displacement norm and a two-step
+  AdamW trajectory (all via `compile.steps`' fo programs).
 
 The parameter buffer is not stored; it is regenerated from the seed by a
 bit-exact mirror of the Rust init PRNG (xoshiro256++ / splitmix64 /
@@ -129,6 +137,77 @@ def sample_u(cfg, seed):
     return u
 
 
+def gen_fo_parity(cfg, flat, m_buf, init_seed, m_seed, ids, tgt, msk, out_dir):
+    """First-order golden values: jax.value_and_grad over the reference
+    model, plus the fo_sgd / fo_adamw / grad_cos2 step programs."""
+    import jax
+    import jax.numpy as jnp
+
+    import compile.model as model
+    import compile.steps as steps
+
+    b, s = cfg.batch, cfg.seq_len
+    jids, jtgt, jmsk = jnp.asarray(ids), jnp.asarray(tgt), jnp.asarray(msk)
+    loss, grad = jax.value_and_grad(
+        lambda p: model.loss(cfg, p, jids, jtgt, jmsk)
+    )(jnp.asarray(flat))
+    grad = np.asarray(model.mask_pad(cfg, grad), dtype=np.float64)
+    d_raw = model.d_raw(cfg)
+    assert np.all(grad[d_raw:] == 0.0)
+
+    stride = 997
+    samples = [float(grad[i]) for i in range(0, d_raw, stride)]
+
+    cos2, probe_loss = steps.grad_cos2(cfg, jnp.asarray(flat), jnp.asarray(m_buf), jids, jtgt, jmsk)
+    assert abs(float(probe_loss) - float(loss)) < 1e-5 * max(abs(float(loss)), 1.0)
+
+    sgd_eta, adamw_eta = 0.1, 1e-3
+    x_sgd, _ = steps.fo_sgd_step(cfg, jnp.asarray(flat), jnp.float32(sgd_eta), jids, jtgt, jmsk)
+    sgd_disp = np.asarray(x_sgd, np.float64) - flat.astype(np.float64)
+
+    x = jnp.asarray(flat)
+    mu = jnp.zeros_like(x)
+    nu = jnp.zeros_like(x)
+    adamw_loss2 = None
+    for t in (1.0, 2.0):
+        x, mu, nu, l = steps.fo_adamw_step(
+            cfg, x, mu, nu, jnp.float32(t), jnp.float32(adamw_eta), jids, jtgt, jmsk
+        )
+        adamw_loss2 = float(l)
+    adamw_disp = np.asarray(x, np.float64) - flat.astype(np.float64)
+
+    fixture = {
+        "preset": cfg.name,
+        "batch": b,
+        "seq": s,
+        "init_seed": init_seed,
+        "m_seed": m_seed,
+        "input_ids": np.asarray(ids).flatten().tolist(),
+        "targets": np.asarray(tgt).flatten().tolist(),
+        "mask": np.asarray(msk).flatten().tolist(),
+        "sgd_eta": sgd_eta,
+        "adamw_eta": adamw_eta,
+        "grad_sample_stride": stride,
+        "expected": {
+            "loss": float(loss),
+            "grad_l2": float(np.linalg.norm(grad)),
+            "grad_samples": samples,
+            "grad_cos2": float(cos2),
+            "sgd_disp_l2": float(np.linalg.norm(sgd_disp)),
+            "adamw_loss2": adamw_loss2,
+            "adamw_disp_l2": float(np.linalg.norm(adamw_disp)),
+        },
+        "tolerance": 1e-3,
+    }
+    path = os.path.join(out_dir, "fo_parity.json")
+    with open(path, "w") as f:
+        json.dump(fixture, f, indent=1)
+    print(
+        f"wrote {path}: loss={float(loss):.6f} |grad|={float(np.linalg.norm(grad)):.6f} "
+        f"cos2={float(cos2):.3e}"
+    )
+
+
 def main():
     import jax.numpy as jnp
 
@@ -185,6 +264,10 @@ def main():
     with open(path, "w") as f:
         json.dump(fixture, f, indent=1)
     print(f"wrote {path}: loss={loss:.6f} lp={lp:.6f} lm={lm:.6f}")
+
+    # the first-order fixture reuses the same deterministic batch and the
+    # same mirrored init/direction buffers (m = sample_u(cfg, z_seed))
+    gen_fo_parity(cfg, flat, z, init_seed, z_seed, ids, tgt, msk, out)
 
 
 if __name__ == "__main__":

@@ -75,6 +75,71 @@ fn main() -> conmezo::util::error::Result<()> {
         results.push(r);
     }
 
+    // dense GEMM: the blocked matmul against the pre-blocking naive saxpy
+    // loop (the transformer forward/backward hot path; shapes are the
+    // medium-preset QKV projection and a tiny-preset MLP)
+    fn matmul_naive(a: &[f32], bm: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+        for o in out.iter_mut() {
+            *o = 0.0;
+        }
+        for i in 0..m {
+            for (p, &av) in a[i * k..(i + 1) * k].iter().enumerate() {
+                let brow = &bm[p * n..(p + 1) * n];
+                let orow = &mut out[i * n..(i + 1) * n];
+                for j in 0..n {
+                    orow[j] += av * brow[j];
+                }
+            }
+        }
+    }
+    for (m, k, n) in [(128usize, 64usize, 256usize), (512, 256, 768)] {
+        let a = randv(m * k, 31);
+        let bm = randv(k * n, 32);
+        let mut out = vec![0f32; m * n];
+        let items = Some((m * k * n) as f64);
+        let r = b.run_items(&format!("matmul/naive/{m}x{k}x{n}"), items, &mut || {
+            matmul_naive(&a, &bm, m, k, n, &mut out);
+        });
+        println!("{}", r.report());
+        results.push(r);
+        let r = b.run_items(&format!("matmul/blocked/{m}x{k}x{n}"), items, &mut || {
+            vecmath::matmul(&a, &bm, m, k, n, &mut out);
+        });
+        println!("{}", r.report());
+        results.push(r);
+        let d = randv(m * n, 33);
+        let mut dw = vec![0f32; k * n];
+        let r = b.run_items(&format!("matmul/backward_at/{m}x{k}x{n}"), items, &mut || {
+            vecmath::matmul_at(&a, &d, m, k, n, &mut dw);
+        });
+        println!("{}", r.report());
+        results.push(r);
+    }
+
+    // the native reverse pass itself (fo_sgd's per-step cost on nano)
+    {
+        use conmezo::runtime::{autograd, model};
+        let model = model::NativeModel::new(model::build_preset("nano", 64, 32, 2, 2, 16, 4));
+        let params = model.init_flat(1);
+        let (bsz, s) = (model.meta.batch, model.meta.seq_len);
+        let ids: Vec<i32> = (0..bsz * s).map(|i| (i % 61) as i32).collect();
+        let tgt: Vec<i32> = (0..bsz * s).map(|i| ((i * 3) % 61) as i32).collect();
+        let mut mask = vec![0f32; bsz * s];
+        for i in 0..bsz {
+            mask[i * s + s - 1] = 1.0;
+        }
+        let r = b.run_items("autograd/loss_and_grad/nano", Some(1.0), &mut || {
+            consume(autograd::loss_and_grad(&model, &params, &ids, &tgt, &mask, bsz, s).loss);
+        });
+        println!("{}", r.report());
+        results.push(r);
+        let r = b.run_items("autograd/forward_only/nano", Some(1.0), &mut || {
+            consume(model.loss(&params, &ids, &tgt, &mask, bsz, s));
+        });
+        println!("{}", r.report());
+        results.push(r);
+    }
+
     // full composed steps on the Fig. 3 quadratic
     let d = 1000;
     for name in ["mezo", "conmezo", "zo_adamm", "hizoo", "mezo_svrg"] {

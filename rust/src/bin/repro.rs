@@ -85,19 +85,11 @@ impl Ctx {
         c.beta_final = BETA;
         c.eval_every = (steps / 4).max(1);
         c.log_every = (steps / 10).max(1);
-        // the pretrained warm start needs the first-order AOT programs; on
-        // the native backend (which deliberately omits them) fall back to
-        // random init — the comparison SHAPE between optimizers is
-        // preserved, absolute accuracies shift. Any OTHER pretrain failure
-        // (corrupt checkpoint, I/O, compile error) still aborts the run.
-        c.init_from = match ensure_pretrained(&self.rt, preset, pretrain_steps(preset), 1e-3, 0.3) {
-            Ok(path) => Some(path),
-            Err(e) if e.to_string().contains("not in this backend's manifest") => {
-                conmezo::warn_!("repro", "no pretrained warm start ({e}); using random init");
-                None
-            }
-            Err(e) => return Err(e),
-        };
+        // the pretrained warm start runs on every backend now (the native
+        // reverse-mode pass serves fo_adamw_step), so a pretrain failure is
+        // always a real error — no random-init fallback
+        c.init_from =
+            Some(ensure_pretrained(&self.rt, preset, pretrain_steps(preset), 1e-3, 0.3)?);
         Ok(c)
     }
 

@@ -161,8 +161,9 @@ impl FusedMezoMomentum {
     }
 }
 
-/// First-order engines (Tables 1 & 9, Fig. 4): backprop was traced at
-/// build time by `jax.grad`; at runtime these are ordinary programs.
+/// First-order engines (Tables 1 & 9, Fig. 4): ordinary manifest programs
+/// on every backend — build-time `jax.grad` traces on pjrt, the native
+/// reverse-mode pass (`runtime::autograd`) on the default backend.
 pub struct FoSgd {
     prog: Rc<Program>,
 }

@@ -414,8 +414,9 @@ impl<'rt> Trainer<'rt> {
     }
 }
 
-/// Pretrain a preset on the mixed synthetic corpus with AdamW (build-time
-/// backprop via the AOT grad program) and write the checkpoint. This is the
+/// Pretrain a preset on the mixed synthetic corpus with AdamW (the
+/// `fo_adamw_step` program: native reverse-mode autograd by default,
+/// build-time jax backprop on pjrt) and write the checkpoint. This is the
 /// "pretrained LM" of the paper's few-shot finetuning regime; `label_noise`
 /// leaves accuracy headroom for ZO finetuning to recover (DESIGN.md §2).
 pub fn pretrain(
@@ -436,7 +437,7 @@ pub fn pretrain(
     let init = rt.load_kind(preset, "init")?;
     let mut params = lit_vec_f32(&init.call(&[Arg::I32(seed as i32)])?[0])?;
     let mut adamw = FoAdamW::new(rt, preset)
-        .context("pretraining needs the first-order fo_adamw_step program (pjrt backend only)")?;
+        .context("pretraining needs the first-order fo_adamw_step program")?;
     let mut curve = Vec::new();
     let mut acc = 0f64;
     for t in 0..steps {

@@ -96,8 +96,8 @@ impl Manifest {
             .ok_or_else(|| {
                 anyhow!(
                     "program {name:?} not in this backend's manifest (the native backend \
-                     omits the first-order programs; use the pjrt backend for fo_*/grad_cos2, \
-                     or re-run `make artifacts`)"
+                     serves every program kind except the `loss_pallas` kernel ablation — \
+                     check the preset name; on pjrt, re-run `make artifacts`)"
                 )
             })
     }

@@ -3,15 +3,16 @@
 //! The manifest's program set (`{preset}_loss`, `{preset}_two_point`, the
 //! fused `*_step` programs, ...) can execute on any [`Backend`]:
 //!
-//! * [`native::NativeBackend`] — pure-Rust transformer forward + fused ZO
-//!   step emulation built on `vecmath`. Zero external dependencies, no
-//!   artifacts on disk, always available; this is the default, so the full
-//!   train/eval/distributed stack runs offline.
+//! * [`native::NativeBackend`] — pure-Rust transformer forward + reverse
+//!   pass ([`autograd`]) + fused ZO step emulation built on `vecmath`.
+//!   Zero external dependencies, no artifacts on disk, always available;
+//!   this is the default, so the full train/eval/distributed stack AND the
+//!   first-order programs (`fo_sgd_step`, `fo_adamw_step`, `grad_cos2`,
+//!   hence `pretrain`) run offline.
 //! * `pjrt::PjrtBackend` (cargo feature `pjrt`) — loads the AOT artifacts
 //!   (`artifacts/*.hlo.txt` from `python/compile/aot.py`) and executes them
 //!   on the PJRT CPU client via the external `xla` crate. Adds the
-//!   first-order programs (`fo_sgd_step`, `fo_adamw_step`, `grad_cos2`)
-//!   that native does not implement.
+//!   `loss_pallas` kernel-ablation variant that native does not implement.
 //!
 //! [`Runtime`] is the façade the rest of the crate talks to: it owns one
 //! backend, resolves program names through the manifest, validates argument
@@ -21,6 +22,7 @@
 //! Backend selection: `Runtime::from_name("native"|"pjrt"|"auto")`, the
 //! `CONMEZO_BACKEND` env var, or `Runtime::open_default()` (auto).
 
+pub mod autograd;
 pub mod manifest;
 pub mod model;
 pub mod native;

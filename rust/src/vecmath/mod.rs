@@ -109,28 +109,114 @@ pub fn cos2(a: &[f32], b: &[f32]) -> f64 {
 // Dense kernels for the native transformer forward (runtime::model).
 // ---------------------------------------------------------------------------
 
-/// out[m, n] = a[m, k] @ b[k, n], all row-major. Loop order (i, p, j) keeps
-/// the inner loop a contiguous saxpy over `out` and `b` rows, which LLVM
-/// auto-vectorizes.
+/// Micro-tile height of the blocked [`matmul`]: rows of `a` processed
+/// together so each `b` row loaded from cache is reused MR times.
+const MATMUL_MR: usize = 4;
+/// Micro-tile width: the accumulator tile `MATMUL_MR x MATMUL_NR` lives in
+/// registers/L1 across the whole k-loop.
+const MATMUL_NR: usize = 64;
+
+/// out[m, n] = a[m, k] @ b[k, n], all row-major, register-blocked: a
+/// `MATMUL_MR x MATMUL_NR` accumulator tile is filled across the full inner
+/// dimension before touching `out`, so `b`'s rows are read once per
+/// MR-row-group instead of once per row (the forward/backward GEMM hot
+/// path; `cargo bench optimizer_math` tracks naive-vs-blocked throughput).
+///
+/// Per output element the flop order is identical to the naive (i, p, j)
+/// saxpy loop — p ascending from a zero accumulator — so results are
+/// bit-stable against the pre-blocking implementation.
 pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
     assert_eq!(a.len(), m * k);
     assert_eq!(b.len(), k * n);
     assert_eq!(out.len(), m * n);
-    for row in out.iter_mut() {
-        *row = 0.0;
-    }
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let orow = &mut out[i * n..(i + 1) * n];
-        for (p, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue;
+    let mut acc = [[0f32; MATMUL_NR]; MATMUL_MR];
+    let mut j0 = 0;
+    while j0 < n {
+        let nb = MATMUL_NR.min(n - j0);
+        let mut i0 = 0;
+        while i0 + MATMUL_MR <= m {
+            for row in acc.iter_mut() {
+                row[..nb].fill(0.0);
             }
-            let brow = &b[p * n..(p + 1) * n];
-            for j in 0..n {
-                orow[j] += av * brow[j];
+            for p in 0..k {
+                let brow = &b[p * n + j0..p * n + j0 + nb];
+                for (rr, row) in acc.iter_mut().enumerate() {
+                    let av = a[(i0 + rr) * k + p];
+                    for (o, &bv) in row[..nb].iter_mut().zip(brow) {
+                        *o += av * bv;
+                    }
+                }
+            }
+            for (rr, row) in acc.iter().enumerate() {
+                out[(i0 + rr) * n + j0..(i0 + rr) * n + j0 + nb].copy_from_slice(&row[..nb]);
+            }
+            i0 += MATMUL_MR;
+        }
+        // remainder rows: plain saxpy over the same j-tile
+        for i in i0..m {
+            let orow = &mut out[i * n + j0..i * n + j0 + nb];
+            orow.fill(0.0);
+            for p in 0..k {
+                let av = a[i * k + p];
+                let brow = &b[p * n + j0..p * n + j0 + nb];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
             }
         }
+        j0 += nb;
+    }
+}
+
+/// out[k, n] = a[m, k]^T @ d[m, n] — the weight-gradient half of the
+/// [`matmul`] grad pair. For `Y = X @ W` (X: [m, k], W: [k, n]):
+/// `dW = matmul_at(X, dY)` and `dX = matmul_bt(dY, W)`. Overwrites `out`.
+///
+/// Register-blocked with the same `MATMUL_MR x MATMUL_NR` accumulator tile
+/// as [`matmul`] (here the tile spans rows of `out`, accumulated across the
+/// full m dimension and written once), so the backward GEMMs share the
+/// forward's cache behavior instead of re-streaming `out` m times. Per
+/// element the accumulation order is i ascending from zero.
+pub fn matmul_at(a: &[f32], d: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(d.len(), m * n);
+    assert_eq!(out.len(), k * n);
+    let mut acc = [[0f32; MATMUL_NR]; MATMUL_MR];
+    let mut j0 = 0;
+    while j0 < n {
+        let nb = MATMUL_NR.min(n - j0);
+        let mut p0 = 0;
+        while p0 + MATMUL_MR <= k {
+            for row in acc.iter_mut() {
+                row[..nb].fill(0.0);
+            }
+            for i in 0..m {
+                let drow = &d[i * n + j0..i * n + j0 + nb];
+                for (rr, row) in acc.iter_mut().enumerate() {
+                    let av = a[i * k + p0 + rr];
+                    for (o, &dv) in row[..nb].iter_mut().zip(drow) {
+                        *o += av * dv;
+                    }
+                }
+            }
+            for (rr, row) in acc.iter().enumerate() {
+                out[(p0 + rr) * n + j0..(p0 + rr) * n + j0 + nb].copy_from_slice(&row[..nb]);
+            }
+            p0 += MATMUL_MR;
+        }
+        // remainder out-rows: accumulate the j-tile directly in place
+        for p in p0..k {
+            let orow = &mut out[p * n + j0..p * n + j0 + nb];
+            orow.fill(0.0);
+            for i in 0..m {
+                let av = a[i * k + p];
+                let drow = &d[i * n + j0..i * n + j0 + nb];
+                for (o, &dv) in orow.iter_mut().zip(drow) {
+                    *o += av * dv;
+                }
+            }
+        }
+        j0 += nb;
     }
 }
 
@@ -227,6 +313,125 @@ pub fn add_bias_rows(x: &mut [f32], bias: &[f32], rows: usize, cols: usize) {
         for j in 0..cols {
             row[j] += bias[j];
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Backward kernels for the native reverse pass (runtime::autograd).
+// ---------------------------------------------------------------------------
+
+/// Bias gradient of [`add_bias_rows`]: dbias[j] = sum_i dy[i, j], with f64
+/// column accumulators. Overwrites `dbias`.
+pub fn add_bias_rows_backward(dy: &[f32], rows: usize, cols: usize, dbias: &mut [f32]) {
+    assert_eq!(dy.len(), rows * cols);
+    assert_eq!(dbias.len(), cols);
+    for (j, db) in dbias.iter_mut().enumerate() {
+        let mut acc = 0f64;
+        for i in 0..rows {
+            acc += dy[i * cols + j] as f64;
+        }
+        *db = acc as f32;
+    }
+}
+
+/// Softmax backward given the FORWARD OUTPUT `y` (row-wise probabilities):
+/// dx[i, :] = y[i, :] * (dy[i, :] - <dy[i, :], y[i, :]>). The inner product
+/// accumulates in f64. `dx` may not alias `y`/`dy`; overwritten.
+pub fn softmax_rows_backward(y: &[f32], dy: &[f32], rows: usize, cols: usize, dx: &mut [f32]) {
+    assert_eq!(y.len(), rows * cols);
+    assert_eq!(dy.len(), rows * cols);
+    assert_eq!(dx.len(), rows * cols);
+    for i in 0..rows {
+        let yr = &y[i * cols..(i + 1) * cols];
+        let dyr = &dy[i * cols..(i + 1) * cols];
+        let inner = dot(dyr, yr) as f32;
+        let dxr = &mut dx[i * cols..(i + 1) * cols];
+        for j in 0..cols {
+            dxr[j] = yr[j] * (dyr[j] - inner);
+        }
+    }
+}
+
+/// LayerNorm backward: recomputes the row statistics from the forward input
+/// `x` (f64, bit-identical to [`layernorm_rows`]), then
+///   dg[j]    = sum_i dy[i,j] * xhat[i,j]        (overwrite, f64 accum)
+///   db[j]    = sum_i dy[i,j]                    (overwrite, f64 accum)
+///   dx[i,:]  = inv_i * (dxhat - mean(dxhat) - xhat * mean(dxhat * xhat))
+/// where dxhat = dy * g and xhat = (x - mu_i) * inv_i.
+#[allow(clippy::too_many_arguments)]
+pub fn layernorm_rows_backward(
+    x: &[f32],
+    g: &[f32],
+    rows: usize,
+    cols: usize,
+    eps: f32,
+    dy: &[f32],
+    dx: &mut [f32],
+    dg: &mut [f32],
+    db: &mut [f32],
+) {
+    assert_eq!(x.len(), rows * cols);
+    assert_eq!(dy.len(), rows * cols);
+    assert_eq!(dx.len(), rows * cols);
+    assert_eq!(g.len(), cols);
+    assert_eq!(dg.len(), cols);
+    assert_eq!(db.len(), cols);
+    let mut dg64 = vec![0f64; cols];
+    let mut db64 = vec![0f64; cols];
+    for i in 0..rows {
+        let row = &x[i * cols..(i + 1) * cols];
+        let dyr = &dy[i * cols..(i + 1) * cols];
+        let mut mean = 0f64;
+        for &v in row {
+            mean += v as f64;
+        }
+        mean /= cols as f64;
+        let mut var = 0f64;
+        for &v in row {
+            let d = v as f64 - mean;
+            var += d * d;
+        }
+        var /= cols as f64;
+        let inv = 1.0 / (var + eps as f64).sqrt();
+        let (mean, inv) = (mean as f32, inv as f32);
+        // row means of dxhat and dxhat * xhat (f64), plus dg/db columns
+        let (mut m1, mut m2) = (0f64, 0f64);
+        for j in 0..cols {
+            let xhat = (row[j] - mean) * inv;
+            let dxhat = dyr[j] * g[j];
+            m1 += dxhat as f64;
+            m2 += dxhat as f64 * xhat as f64;
+            dg64[j] += dyr[j] as f64 * xhat as f64;
+            db64[j] += dyr[j] as f64;
+        }
+        let m1 = (m1 / cols as f64) as f32;
+        let m2 = (m2 / cols as f64) as f32;
+        let dxr = &mut dx[i * cols..(i + 1) * cols];
+        for j in 0..cols {
+            let xhat = (row[j] - mean) * inv;
+            let dxhat = dyr[j] * g[j];
+            dxr[j] = inv * (dxhat - m1 - xhat * m2);
+        }
+    }
+    for j in 0..cols {
+        dg[j] = dg64[j] as f32;
+        db[j] = db64[j] as f32;
+    }
+}
+
+/// GELU backward (tanh approximation, matching [`gelu`]): dx = dy * g'(x)
+/// with g'(x) = 0.5 (1 + tanh u) + 0.5 x (1 - tanh^2 u) * u'(x),
+/// u = sqrt(2/pi) (x + 0.044715 x^3). `x` is the PRE-activation input.
+pub fn gelu_backward(x: &[f32], dy: &[f32], dx: &mut [f32]) {
+    assert_eq!(x.len(), dy.len());
+    assert_eq!(x.len(), dx.len());
+    const C: f32 = 0.797_884_56; // sqrt(2/pi)
+    const A: f32 = 0.044715;
+    for i in 0..x.len() {
+        let t = x[i];
+        let th = (C * (t + A * t * t * t)).tanh();
+        let du = C * (1.0 + 3.0 * A * t * t);
+        dx[i] = dy[i] * (0.5 * (1.0 + th) + 0.5 * t * (1.0 - th * th) * du);
     }
 }
 
@@ -496,5 +701,276 @@ mod tests {
         let mut x = vec![1f32; 6];
         add_bias_rows(&mut x, &[0.5, -0.5, 2.0], 2, 3);
         assert_eq!(x, vec![1.5, 0.5, 3.0, 1.5, 0.5, 3.0]);
+    }
+
+    // -----------------------------------------------------------------------
+    // gradcheck property tests for the backward kernels: every analytic
+    // gradient is checked against central differences of the f32 forward,
+    // rel-err <= 1e-2 with a 1e-3 absolute floor (tolerances calibrated
+    // against a numpy mirror of these exact f32 kernels).
+    // -----------------------------------------------------------------------
+
+    const FD_EPS: f32 = 1e-3;
+    const FD_RTOL: f64 = 1e-2;
+    const FD_FLOOR: f64 = 1e-3;
+
+    /// Central-difference check of `grad` against the scalar map
+    /// x -> sum(w ⊙ f(x)) at every coordinate of `x`.
+    fn fd_check(name: &str, f: &dyn Fn(&[f32]) -> Vec<f32>, w: &[f32], x: &[f32], grad: &[f32]) {
+        let scalar = |x: &[f32]| -> f64 {
+            f(x).iter().zip(w).map(|(&y, &wi)| y as f64 * wi as f64).sum()
+        };
+        for i in 0..x.len() {
+            let mut xp = x.to_vec();
+            xp[i] += FD_EPS;
+            let mut xm = x.to_vec();
+            xm[i] -= FD_EPS;
+            let fd = (scalar(&xp) - scalar(&xm)) / (2.0 * FD_EPS as f64);
+            let rel = (fd - grad[i] as f64).abs() / (grad[i] as f64).abs().max(FD_FLOOR);
+            assert!(
+                rel < FD_RTOL,
+                "{name}: coord {i}: analytic {} vs central-diff {fd} (rel {rel:.2e})",
+                grad[i]
+            );
+        }
+    }
+
+    #[test]
+    fn matmul_at_matches_naive_transpose_product() {
+        // n up to 70 straddles the MATMUL_NR j-tile boundary; k up to 9
+        // covers both the MR tile path and the remainder rows
+        let g = Pair(UsizeRange(1, 9), Pair(UsizeRange(1, 9), UsizeRange(1, 70)));
+        property("matmul-at-naive", &g, 48, |&(m, (k, n))| {
+            let mut rng = Rng::seed_from_u64((m * 31 + k * 7 + n) as u64);
+            let mut a = vec![0f32; m * k];
+            let mut d = vec![0f32; m * n];
+            rng.fill_normal_f32(&mut a);
+            rng.fill_normal_f32(&mut d);
+            let mut got = vec![0f32; k * n];
+            matmul_at(&a, &d, m, k, n, &mut got);
+            for p in 0..k {
+                for j in 0..n {
+                    let mut acc = 0f64;
+                    for i in 0..m {
+                        acc += a[i * k + p] as f64 * d[i * n + j] as f64;
+                    }
+                    if (got[p * n + j] as f64 - acc).abs() > 1e-4 * acc.abs().max(1.0) {
+                        return false;
+                    }
+                }
+            }
+            true
+        });
+    }
+
+    #[test]
+    fn prop_blocked_matmul_covers_tile_remainders() {
+        // shapes straddling the MR/NR tile boundaries exercise every edge
+        // path of the blocked kernel
+        let g = Pair(UsizeRange(1, 10), UsizeRange(60, 70));
+        property("matmul-blocked-edges", &g, 24, |&(m, n)| {
+            let k = 17;
+            let mut rng = Rng::seed_from_u64((m * 131 + n) as u64);
+            let mut a = vec![0f32; m * k];
+            let mut b = vec![0f32; k * n];
+            rng.fill_normal_f32(&mut a);
+            rng.fill_normal_f32(&mut b);
+            let mut fast = vec![0f32; m * n];
+            matmul(&a, &b, m, k, n, &mut fast);
+            for i in 0..m {
+                for j in 0..n {
+                    let mut acc = 0f64;
+                    for p in 0..k {
+                        acc += a[i * k + p] as f64 * b[p * n + j] as f64;
+                    }
+                    if (fast[i * n + j] as f64 - acc).abs() > 1e-4 * acc.abs().max(1.0) {
+                        return false;
+                    }
+                }
+            }
+            true
+        });
+    }
+
+    #[test]
+    fn gradcheck_matmul_backward_pair() {
+        // Y = X @ W: dX = matmul_bt(dY, W), dW = matmul_at(X, dY); check
+        // both against central differences on randomized shapes
+        let g = Pair(UsizeRange(1, 5), Pair(UsizeRange(1, 6), UsizeRange(1, 5)));
+        property("gradcheck-matmul", &g, 8, |&(m, (k, n))| {
+            let mut rng = Rng::seed_from_u64((m * 311 + k * 17 + n) as u64);
+            let mut x = vec![0f32; m * k];
+            let mut wmat = vec![0f32; k * n];
+            let mut up = vec![0f32; m * n];
+            rng.fill_normal_f32(&mut x);
+            rng.fill_normal_f32(&mut wmat);
+            rng.fill_normal_f32(&mut up);
+            let mut dx = vec![0f32; m * k];
+            matmul_bt(&up, &wmat, m, n, k, &mut dx);
+            let wmat2 = wmat.clone();
+            fd_check(
+                "matmul-dx",
+                &move |xv: &[f32]| {
+                    let mut y = vec![0f32; m * n];
+                    matmul(xv, &wmat2, m, k, n, &mut y);
+                    y
+                },
+                &up,
+                &x,
+                &dx,
+            );
+            let mut dw = vec![0f32; k * n];
+            matmul_at(&x, &up, m, k, n, &mut dw);
+            let x2 = x.clone();
+            fd_check(
+                "matmul-dw",
+                &move |wv: &[f32]| {
+                    let mut y = vec![0f32; m * n];
+                    matmul(&x2, wv, m, k, n, &mut y);
+                    y
+                },
+                &up,
+                &wmat,
+                &dw,
+            );
+            true
+        });
+    }
+
+    #[test]
+    fn gradcheck_softmax_rows_backward() {
+        let g = Pair(UsizeRange(1, 5), UsizeRange(2, 12));
+        property("gradcheck-softmax", &g, 12, |&(r, c)| {
+            let mut rng = Rng::seed_from_u64((r * 101 + c) as u64);
+            let mut x = vec![0f32; r * c];
+            let mut up = vec![0f32; r * c];
+            rng.fill_normal_f32(&mut x);
+            rng.fill_normal_f32(&mut up);
+            let mut y = x.clone();
+            softmax_rows(&mut y, r, c);
+            let mut dx = vec![0f32; r * c];
+            softmax_rows_backward(&y, &up, r, c, &mut dx);
+            fd_check(
+                "softmax",
+                &move |xv: &[f32]| {
+                    let mut yv = xv.to_vec();
+                    softmax_rows(&mut yv, r, c);
+                    yv
+                },
+                &up,
+                &x,
+                &dx,
+            );
+            true
+        });
+    }
+
+    #[test]
+    fn gradcheck_layernorm_rows_backward() {
+        let g = Pair(UsizeRange(1, 4), UsizeRange(8, 24));
+        property("gradcheck-layernorm", &g, 10, |&(r, c)| {
+            let mut rng = Rng::seed_from_u64((r * 211 + c) as u64);
+            let mut x = vec![0f32; r * c];
+            let mut up = vec![0f32; r * c];
+            let mut gamma = vec![0f32; c];
+            let mut beta = vec![0f32; c];
+            rng.fill_normal_f32(&mut x);
+            rng.fill_normal_f32(&mut up);
+            rng.fill_normal_f32(&mut gamma);
+            rng.fill_normal_f32(&mut beta);
+            let mut dx = vec![0f32; r * c];
+            let mut dg = vec![0f32; c];
+            let mut db = vec![0f32; c];
+            layernorm_rows_backward(&x, &gamma, r, c, 1e-5, &up, &mut dx, &mut dg, &mut db);
+            let (g2, b2) = (gamma.clone(), beta.clone());
+            fd_check(
+                "layernorm-dx",
+                &move |xv: &[f32]| {
+                    let mut y = vec![0f32; r * c];
+                    layernorm_rows(xv, &g2, &b2, r, c, 1e-5, &mut y);
+                    y
+                },
+                &up,
+                &x,
+                &dx,
+            );
+            let (x2, b3) = (x.clone(), beta.clone());
+            fd_check(
+                "layernorm-dg",
+                &move |gv: &[f32]| {
+                    let mut y = vec![0f32; r * c];
+                    layernorm_rows(&x2, gv, &b3, r, c, 1e-5, &mut y);
+                    y
+                },
+                &up,
+                &gamma,
+                &dg,
+            );
+            let (x3, g3) = (x.clone(), gamma.clone());
+            fd_check(
+                "layernorm-db",
+                &move |bv: &[f32]| {
+                    let mut y = vec![0f32; r * c];
+                    layernorm_rows(&x3, &g3, bv, r, c, 1e-5, &mut y);
+                    y
+                },
+                &up,
+                &beta,
+                &db,
+            );
+            true
+        });
+    }
+
+    #[test]
+    fn gradcheck_gelu_backward() {
+        let g = UsizeRange(1, 48);
+        property("gradcheck-gelu", &g, 16, |&n| {
+            let mut rng = Rng::seed_from_u64(n as u64 ^ 0x6E10);
+            let mut x = vec![0f32; n];
+            let mut up = vec![0f32; n];
+            rng.fill_normal_f32(&mut x);
+            rng.fill_normal_f32(&mut up);
+            let mut dx = vec![0f32; n];
+            gelu_backward(&x, &up, &mut dx);
+            fd_check(
+                "gelu",
+                &move |xv: &[f32]| {
+                    let mut y = xv.to_vec();
+                    gelu(&mut y);
+                    y
+                },
+                &up,
+                &x,
+                &dx,
+            );
+            true
+        });
+    }
+
+    #[test]
+    fn gradcheck_add_bias_rows_backward() {
+        let g = Pair(UsizeRange(1, 6), UsizeRange(1, 10));
+        property("gradcheck-bias", &g, 12, |&(r, c)| {
+            let mut rng = Rng::seed_from_u64((r * 7 + c) as u64);
+            let mut up = vec![0f32; r * c];
+            let mut bias = vec![0f32; c];
+            rng.fill_normal_f32(&mut up);
+            rng.fill_normal_f32(&mut bias);
+            let mut db = vec![0f32; c];
+            add_bias_rows_backward(&up, r, c, &mut db);
+            fd_check(
+                "bias",
+                &move |bv: &[f32]| {
+                    let mut y = vec![0f32; r * c];
+                    add_bias_rows(&mut y, bv, r, c);
+                    y
+                },
+                &up,
+                &bias,
+                &db,
+            );
+            true
+        });
     }
 }

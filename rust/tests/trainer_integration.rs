@@ -1,8 +1,10 @@
 //! Integration tests over the full training stack on the NativeBackend:
 //! Trainer drives loss down (fused and composed engines), deterministic
 //! replay, checkpoint round-trip, distributed-vs-single-node equivalence on
-//! the transformer objective, a tiny-preset end-to-end run, and
-//! property-based coordinator invariants. No Python, no XLA, no artifacts.
+//! the transformer objective, a tiny-preset end-to-end run, the first-order
+//! baselines + pretrain -> finetune warm-start pipeline (native reverse-mode
+//! autograd), and property-based coordinator invariants. No Python, no XLA,
+//! no artifacts.
 //!
 //! Descent thresholds are calibrated against a numpy simulation of the
 //! exact native math (see python/compile/gen_fixtures.py for the mirrored
@@ -10,8 +12,8 @@
 //! zo_adamm@1e-3 ~3.9 -> ~2.2 over 300, the 3-worker cluster ~4.2 -> ~3.1
 //! over 150. The `- 0.3`/`- 0.5` margins below sit far inside those gaps.
 //!
-//! First-order baselines (fo_adamw/fo_sgd) need build-time backprop and
-//! exist only on the PJRT backend; those tests are feature-gated.
+//! The PJRT twins of the first-order tests remain feature-gated below and
+//! now serve as cross-backend checks rather than the only FO coverage.
 
 use conmezo::checkpoint::Checkpoint;
 use conmezo::coordinator::{DistHypers, LocalCluster, Mode, TrainConfig, Trainer, ZoWorker};
@@ -157,13 +159,60 @@ fn evaluator_scores_are_well_formed() {
 }
 
 #[test]
-fn native_backend_rejects_first_order_optimizers_with_named_error() {
+fn native_fo_adamw_solves_task() {
+    // first-order AdamW now runs on the native backend via the reverse-mode
+    // autograd pass — and converges like the paper's FO reference
     let rt = runtime();
-    let err = match Trainer::new(&rt, quick_cfg("adamw", 10)) {
-        Err(e) => e.to_string(),
-        Ok(_) => panic!("adamw must not construct on the native backend"),
-    };
-    assert!(err.contains("not in this backend's manifest"), "{err}");
+    let mut cfg = quick_cfg("adamw", 200);
+    cfg.eta = 1e-3;
+    cfg.eval_every = 100;
+    let summary = Trainer::new(&rt, cfg).unwrap().run().unwrap();
+    assert!(summary.final_accuracy > 0.9, "adamw acc {}", summary.final_accuracy);
+    let first = summary.loss_curve.first().unwrap().1;
+    let last = summary.loss_curve.last().unwrap().1;
+    assert!(last < first - 0.5, "adamw loss {first:.3} -> {last:.3}");
+}
+
+#[test]
+fn native_fo_sgd_descends() {
+    let rt = runtime();
+    let mut cfg = quick_cfg("sgd", 120);
+    cfg.eta = 3e-2;
+    let summary = Trainer::new(&rt, cfg).unwrap().run().unwrap();
+    let first = summary.loss_curve.first().unwrap().1;
+    let last = summary.loss_curve.last().unwrap().1;
+    assert!(last < first - 0.3, "sgd loss {first:.3} -> {last:.3}");
+}
+
+#[test]
+fn pretrain_then_conmezo_finetune_end_to_end() {
+    // the acceptance pipeline, fully offline: AdamW pretraining on the
+    // mixed synthetic corpus (native backprop) -> checkpoint -> ConMeZO
+    // few-shot finetune warm-started from it, with the Fig. 6 cos^2 probe
+    let rt = runtime();
+    // per-process dir: concurrent runs on one machine must not share it
+    let dir = std::env::temp_dir().join(format!("conmezo_it_pretrain_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("pretrained_nano.ckpt");
+    let _ = std::fs::remove_file(&path);
+    let curve = conmezo::coordinator::pretrain(&rt, "nano", 80, 1e-3, 0.3, 7, &path).unwrap();
+    assert!(path.exists(), "pretrain must write the checkpoint");
+    let first = curve.first().unwrap().1;
+    let last = curve.last().unwrap().1;
+    assert!(last < first, "pretraining did not reduce loss: {first:.3} -> {last:.3}");
+
+    let mut cfg = quick_cfg("conmezo", 40);
+    cfg.init_from = Some(path);
+    cfg.probe_cos2 = true;
+    cfg.eval_every = 20;
+    let mut tr = Trainer::new(&rt, cfg).unwrap();
+    let summary = tr.run().unwrap();
+    assert!(summary.final_loss.is_finite() && summary.final_loss > 0.0);
+    assert!((0.0..=1.0).contains(&summary.final_accuracy));
+    assert!(!summary.cos2_curve.is_empty(), "probe_cos2 must record the alignment curve");
+    for (_, c) in &summary.cos2_curve {
+        assert!((0.0..=1.0).contains(c), "cos^2 out of range: {c}");
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -227,7 +276,8 @@ fn prop_native_sample_u_is_a_pure_function_of_seed() {
 }
 
 // ---------------------------------------------------------------------------
-// PJRT-only: first-order baselines (build-time backprop programs)
+// PJRT-only: first-order baselines as cross-backend checks (the native
+// twins of these tests run unconditionally above)
 // ---------------------------------------------------------------------------
 
 #[cfg(feature = "pjrt")]
