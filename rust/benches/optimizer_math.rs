@@ -1,10 +1,13 @@
 //! L3 host-kernel benchmarks: the vecmath flat-buffer ops against their
-//! memory-bandwidth roofline, plus full composed-mode optimizer steps on
-//! the native quadratic. `cargo bench --bench optimizer_math`.
+//! memory-bandwidth roofline, the naive-vs-blocked-vs-threaded GEMM
+//! matrix (the `optimizer_math` section of `BENCH_native.json`), plus full
+//! composed-mode optimizer steps on the native quadratic.
+//! `cargo bench --bench optimizer_math [-- --quick]`.
 
-use conmezo::bench::{consume, write_results, Bencher};
+use conmezo::bench::{consume, write_bench_json, write_results, BenchArgs};
 use conmezo::objective::NativeQuadratic;
 use conmezo::optimizer::{self, BetaSchedule, ZoOptimizer};
+use conmezo::runtime::ParallelPolicy;
 use conmezo::util::rng::Xoshiro256pp;
 use conmezo::vecmath;
 
@@ -17,10 +20,12 @@ fn randv(n: usize, seed: u64) -> Vec<f32> {
 
 fn main() -> conmezo::util::error::Result<()> {
     conmezo::runtime::enable_flush_to_zero();
-    let b = Bencher::default();
+    let args = BenchArgs::parse();
+    let b = args.bencher();
     let mut results = Vec::new();
 
-    for d in [65_536usize, 1 << 20, 8 << 20] {
+    let dims: &[usize] = if args.quick { &[65_536] } else { &[65_536, 1 << 20, 8 << 20] };
+    for &d in dims {
         let x = randv(d, 1);
         let mut y = randv(d, 2);
         let m = randv(d, 3);
@@ -75,9 +80,11 @@ fn main() -> conmezo::util::error::Result<()> {
         results.push(r);
     }
 
-    // dense GEMM: the blocked matmul against the pre-blocking naive saxpy
-    // loop (the transformer forward/backward hot path; shapes are the
-    // medium-preset QKV projection and a tiny-preset MLP)
+    // dense GEMM matrix: the pre-blocking naive saxpy loop vs the
+    // register-blocked kernel vs the row-parallel threaded kernel (the
+    // transformer forward/backward hot path; the 512x256x768 shape IS the
+    // medium-preset QKV projection, so the threaded/blocked ratio here is
+    // the medium-preset GEMM speedup recorded in BENCH_native.json)
     fn matmul_naive(a: &[f32], bm: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
         for o in out.iter_mut() {
             *o = 0.0;
@@ -92,6 +99,7 @@ fn main() -> conmezo::util::error::Result<()> {
             }
         }
     }
+    let threads = ParallelPolicy::auto().threads;
     for (m, k, n) in [(128usize, 64usize, 256usize), (512, 256, 768)] {
         let a = randv(m * k, 31);
         let bm = randv(k * n, 32);
@@ -107,6 +115,13 @@ fn main() -> conmezo::util::error::Result<()> {
         });
         println!("{}", r.report());
         results.push(r);
+        if threads > 1 {
+            let r = b.run_items(&format!("matmul/threaded{threads}/{m}x{k}x{n}"), items, &mut || {
+                vecmath::matmul_threaded(&a, &bm, m, k, n, &mut out, threads);
+            });
+            println!("{}", r.report());
+            results.push(r);
+        }
         let d = randv(m * n, 33);
         let mut dw = vec![0f32; k * n];
         let r = b.run_items(&format!("matmul/backward_at/{m}x{k}x{n}"), items, &mut || {
@@ -114,6 +129,13 @@ fn main() -> conmezo::util::error::Result<()> {
         });
         println!("{}", r.report());
         results.push(r);
+        if threads > 1 {
+            let r = b.run_items(&format!("matmul/backward_at_threaded{threads}/{m}x{k}x{n}"), items, &mut || {
+                vecmath::matmul_at_threaded(&a, &d, m, k, n, &mut dw, threads);
+            });
+            println!("{}", r.report());
+            results.push(r);
+        }
     }
 
     // the native reverse pass itself (fo_sgd's per-step cost on nano)
@@ -164,5 +186,6 @@ fn main() -> conmezo::util::error::Result<()> {
     }
 
     write_results("optimizer_math.jsonl", &results)?;
+    write_bench_json("optimizer_math", &results)?;
     Ok(())
 }

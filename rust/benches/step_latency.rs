@@ -1,26 +1,31 @@
-//! End-to-end step latency through the PJRT runtime, per preset and
-//! engine — the L2/L3 boundary measurement backing EXPERIMENTS.md §Perf.
+//! End-to-end step latency through the runtime, per preset and engine —
+//! the session-API hot-path measurement backing EXPERIMENTS.md §Perf and
+//! the `step_latency` section of `BENCH_native.json` at the repo root.
 //!
-//! Measures: fused conmezo/mezo step, composed two-point path, loss-only
-//! forward, eval, and the `loss_pallas` ablation (Pallas attention/LN vs
-//! the XLA-fused default). `cargo bench --bench step_latency [presets]`.
+//! Measures: loss forward through the legacy `Program::call` shim vs a
+//! bound `Session` (the bind-once/run-many overhead delta), the native
+//! `loss_pallas` kernel-composition ablation, fused conmezo/mezo steps,
+//! the composed two-point path (the `Session::two_point` antithetic fast
+//! path), and — when the thread policy allows — a threaded two_point.
+//!
+//! `cargo bench --bench step_latency [-- --quick] [presets...]`; `--quick`
+//! runs a few iterations of everything (the CI smoke mode).
 
-use conmezo::bench::{write_results, Bencher};
+use conmezo::bench::{write_bench_json, write_results, BenchArgs};
 use conmezo::coordinator::{FusedConMeZo, FusedMezo};
 use conmezo::data::{spec, TaskGen, TrainSampler};
 use conmezo::objective::{BatchSource, ModelObjective, Objective};
-use conmezo::runtime::{lit_f32, lit_vec_f32, Arg, Runtime};
+use conmezo::runtime::{lit_f32, lit_vec_f32, Arg, ParallelPolicy, Runtime, Session};
 
 fn main() -> conmezo::util::error::Result<()> {
+    let args = BenchArgs::parse();
     let rt = Runtime::open_default()?;
-    // cargo bench passes flags like --bench; keep only bare preset names
-    let args: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with('-')).collect();
-    let presets: Vec<String> = if args.is_empty() {
+    let presets: Vec<String> = if args.rest.is_empty() {
         vec!["nano".into(), "tiny".into(), "small".into()]
     } else {
-        args
+        args.rest.clone()
     };
-    let b = Bencher::quick();
+    let b = args.bencher();
     let mut results = Vec::new();
 
     for preset in &presets {
@@ -32,11 +37,13 @@ fn main() -> conmezo::util::error::Result<()> {
         let mut params = lit_vec_f32(&init.call(&[Arg::I32(1)])?[0])?;
         let d = meta.d_pad;
         let flops_per_fwd = 2.0 * meta.d_raw as f64 * (meta.batch * meta.seq_len) as f64;
-
-        // loss-only forward
-        let loss_prog = rt.load_kind(preset, "loss")?;
         let dims = vec![meta.batch, meta.seq_len];
-        let r = b.run_items(&format!("{preset}/loss_fwd"), Some(flops_per_fwd), &mut || {
+
+        // loss-only forward, legacy Program::call shim (validates + clones
+        // outputs per call) vs a bound session (zero steady-state alloc) —
+        // the session-vs-legacy overhead entry of BENCH_native.json
+        let loss_prog = rt.load_kind(preset, "loss")?;
+        let r = b.run_items(&format!("{preset}/loss_fwd_legacy_call"), Some(flops_per_fwd), &mut || {
             let outs = loss_prog
                 .call(&[
                     Arg::VecF32(&params),
@@ -50,11 +57,28 @@ fn main() -> conmezo::util::error::Result<()> {
         println!("{}", r.report());
         results.push(r);
 
-        // pallas-attention ablation (same math, L1 kernels inside)
-        if let Ok(pl) = rt.load_kind(preset, "loss_pallas") {
+        let mut loss_sess = rt.bind_kind(preset, "loss")?;
+        let r = b.run_items(&format!("{preset}/loss_fwd_session"), Some(flops_per_fwd), &mut || {
+            let outs = loss_sess
+                .run(&[
+                    Arg::VecF32(&params),
+                    Arg::TensorI32(&batch.input_ids, dims.clone()),
+                    Arg::TensorI32(&batch.targets, dims.clone()),
+                    Arg::TensorF32(&batch.mask, dims.clone()),
+                ])
+                .unwrap();
+            let _ = lit_f32(&outs[0]).unwrap();
+        });
+        println!("{}", r.report());
+        results.push(r);
+
+        // kernel-composition attention ablation (native loss_pallas twin;
+        // same math, kernel-materialized attention inside). Optional so
+        // older pjrt artifact sets without the program keep benching.
+        if let Ok(mut pallas) = rt.bind_kind(preset, "loss_pallas") {
             let r = b.run_items(&format!("{preset}/loss_fwd_pallas"), Some(flops_per_fwd), &mut || {
-                let outs = pl
-                    .call(&[
+                let outs = pallas
+                    .run(&[
                         Arg::VecF32(&params),
                         Arg::TensorI32(&batch.input_ids, dims.clone()),
                         Arg::TensorI32(&batch.targets, dims.clone()),
@@ -67,7 +91,7 @@ fn main() -> conmezo::util::error::Result<()> {
             results.push(r);
         }
 
-        // fused ZO steps
+        // fused ZO steps (session-backed engines)
         let mut con = FusedConMeZo::new(&rt, preset, 1.35)?;
         let mut t = 0i32;
         let r = b.run_items(&format!("{preset}/conmezo_fused_step"), Some(2.0 * flops_per_fwd), &mut || {
@@ -85,7 +109,8 @@ fn main() -> conmezo::util::error::Result<()> {
         println!("{}", r.report());
         results.push(r);
 
-        // composed two-point path (host-held direction)
+        // composed two-point path: the Session::two_point antithetic-pair
+        // fast path through ModelObjective (host-held direction)
         let sampler2 = TrainSampler::new(gen.dataset(64, 1), meta.batch, meta.seq_len, 1, 0);
         let mut obj = ModelObjective::new(&rt, preset, Box::new(sampler2))?;
         let z = vec![0.01f32; d];
@@ -94,8 +119,28 @@ fn main() -> conmezo::util::error::Result<()> {
         });
         println!("{}", r.report());
         results.push(r);
+
+        // row-parallel GEMMs: the same two_point pair on an all-cores
+        // native runtime (bit-identical results; wall-clock is the point)
+        let auto = ParallelPolicy::auto();
+        if auto.threads > 1 {
+            let rt_mt = Runtime::native_with(auto);
+            let mut tp = rt_mt.bind_kind(preset, "two_point")?;
+            let r = b.run_items(
+                &format!("{preset}/two_point_threads{}", auto.threads),
+                Some(2.0 * flops_per_fwd),
+                &mut || {
+                    let _ = tp
+                        .two_point(&params, &z, 1e-3, &batch.input_ids, &batch.targets, &batch.mask)
+                        .unwrap();
+                },
+            );
+            println!("{}", r.report());
+            results.push(r);
+        }
     }
 
     write_results("step_latency.jsonl", &results)?;
+    write_bench_json("step_latency", &results)?;
     Ok(())
 }

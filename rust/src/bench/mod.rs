@@ -149,6 +149,82 @@ pub fn write_results(file: &str, results: &[BenchResult]) -> crate::util::error:
     Ok(())
 }
 
+/// Locate the repository root (the directory holding ROADMAP.md / .git):
+/// cargo runs bench binaries from the package dir (`rust/`), so this is
+/// usually the parent; falls back to the current directory.
+pub fn repo_root() -> std::path::PathBuf {
+    let cwd = std::env::current_dir().unwrap_or_else(|_| std::path::PathBuf::from("."));
+    let mut dir = cwd.clone();
+    for _ in 0..3 {
+        if dir.join("ROADMAP.md").exists() || dir.join(".git").exists() {
+            return dir;
+        }
+        match dir.parent() {
+            Some(p) => dir = p.to_path_buf(),
+            None => break,
+        }
+    }
+    cwd
+}
+
+/// Merge one named section of results into `BENCH_native.json` at the repo
+/// root — the machine-readable perf record (each bench bin owns a section,
+/// so step_latency and optimizer_math can update independently without
+/// clobbering each other).
+pub fn write_bench_json(section: &str, results: &[BenchResult]) -> crate::util::error::Result<()> {
+    use crate::util::json::Json;
+    use std::collections::BTreeMap;
+    let path = repo_root().join("BENCH_native.json");
+    let mut root: BTreeMap<String, Json> = match std::fs::read_to_string(&path) {
+        Ok(text) => match Json::parse(&text) {
+            Ok(Json::Obj(m)) => m,
+            _ => BTreeMap::new(),
+        },
+        Err(_) => BTreeMap::new(),
+    };
+    root.insert(
+        section.to_string(),
+        Json::Arr(results.iter().map(|r| r.to_json()).collect()),
+    );
+    root.insert("schema".into(), Json::str("conmezo-bench-v1"));
+    std::fs::write(&path, Json::Obj(root).to_string())?;
+    Ok(())
+}
+
+/// Shared bench-bin CLI: `--quick` runs a few iterations of everything (the
+/// CI smoke mode that keeps BENCH_native.json generation from rotting);
+/// remaining bare args pass through (e.g. preset names).
+pub struct BenchArgs {
+    pub quick: bool,
+    pub rest: Vec<String>,
+}
+
+impl BenchArgs {
+    pub fn parse() -> BenchArgs {
+        let mut quick = false;
+        let mut rest = Vec::new();
+        // cargo bench passes harness flags like --bench; ignore any other
+        // dashed flag except our own
+        for a in std::env::args().skip(1) {
+            if a == "--quick" {
+                quick = true;
+            } else if !a.starts_with('-') {
+                rest.push(a);
+            }
+        }
+        BenchArgs { quick, rest }
+    }
+
+    /// A Bencher budgeted for this mode.
+    pub fn bencher(&self) -> Bencher {
+        if self.quick {
+            Bencher { warmup_iters: 1, min_samples: 2, max_samples: 3, min_seconds: 0.0 }
+        } else {
+            Bencher::default()
+        }
+    }
+}
+
 /// Prevent the optimizer from eliding a computed value (black_box stand-in).
 #[inline]
 pub fn consume<T>(x: T) -> T {

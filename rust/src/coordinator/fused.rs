@@ -1,17 +1,18 @@
-//! Fused execution engines: one HLO program per optimizer step.
+//! Fused execution engines: one runtime program per optimizer step.
 //!
 //! This is the paper's §3.3 hot path — direction sampling (seed replay),
-//! cone construction (Pallas), both forward passes and the fused
-//! parameter+momentum update all execute inside a single XLA program; Rust
-//! only moves the state buffers and O(1) scalars. Semantically equivalent
-//! to the composed-mode optimizers (cross-checked in rust/tests/).
-
-use std::rc::Rc;
+//! cone construction, both forward passes and the fused parameter+momentum
+//! update all execute inside a single bound program; Rust only moves the
+//! state buffers and O(1) scalars. Every engine owns its step program as a
+//! [`Session`] (bind once at construction, run every step over reused
+//! workspaces — no steady-state buffer allocation on the native backend).
+//! Semantically equivalent to the composed-mode optimizers (cross-checked
+//! in rust/tests/).
 
 use crate::util::error::Result;
 
 use crate::objective::Batch;
-use crate::runtime::{lit_copy_f32, lit_f32, lit_vec_f32, Arg, Program, Runtime};
+use crate::runtime::{lit_copy_f32, lit_f32, Arg, Runtime, Session};
 
 /// Outcome of one fused step.
 #[derive(Clone, Copy, Debug)]
@@ -31,8 +32,8 @@ fn batch_args(batch: &Batch) -> [Arg<'_>; 3] {
 
 /// Fused ConMeZO (Algorithm 1): `{preset}_conmezo_step`.
 pub struct FusedConMeZo {
-    prog: Rc<Program>,
-    sample_u: Rc<Program>,
+    sess: Box<dyn Session>,
+    sample_u: Box<dyn Session>,
     /// momentum buffer (device round-trips through host each step on this
     /// CPU testbed; see EXPERIMENTS.md §Perf for the measured overhead)
     pub m: Vec<f32>,
@@ -43,10 +44,11 @@ pub struct FusedConMeZo {
 impl FusedConMeZo {
     pub fn new(rt: &Runtime, preset: &str, theta: f32) -> Result<Self> {
         let meta = rt.preset(preset)?;
+        let d_pad = meta.d_pad;
         Ok(FusedConMeZo {
-            prog: rt.load_kind(preset, "conmezo_step")?,
-            sample_u: rt.load_kind(preset, "sample_u")?,
-            m: vec![0.0; meta.d_pad],
+            sess: rt.bind_kind(preset, "conmezo_step")?,
+            sample_u: rt.bind_kind(preset, "sample_u")?,
+            m: vec![0.0; d_pad],
             theta,
             started: false,
         })
@@ -64,12 +66,12 @@ impl FusedConMeZo {
         if !self.started {
             // Algorithm 1: m_0 <- u_0, regenerated from the same seed the
             // step program will use for u at t=0
-            let outs = self.sample_u.call(&[Arg::I32(seed)])?;
-            self.m = lit_vec_f32(&outs[0])?;
+            let outs = self.sample_u.run(&[Arg::I32(seed)])?;
+            lit_copy_f32(&outs[0], &mut self.m)?;
             self.started = true;
         }
         let [ids, tgt, mask] = batch_args(batch);
-        let outs = self.prog.call(&[
+        let outs = self.sess.run(&[
             Arg::VecF32(params),
             Arg::VecF32(&self.m),
             Arg::I32(seed),
@@ -82,27 +84,28 @@ impl FusedConMeZo {
             mask,
         ])?;
         lit_copy_f32(&outs[0], params)?;
-        lit_copy_f32(&outs[1], &mut self.m)?;
         let lp = lit_f32(&outs[2])? as f64;
         let lm = lit_f32(&outs[3])? as f64;
         let g = lit_f32(&outs[4])? as f64;
+        let m_new = &outs[1];
+        lit_copy_f32(m_new, &mut self.m)?;
         Ok(FusedStats { loss: 0.5 * (lp + lm), proj_grad: g })
     }
 }
 
 /// Fused MeZO: `{preset}_mezo_step`.
 pub struct FusedMezo {
-    prog: Rc<Program>,
+    sess: Box<dyn Session>,
 }
 
 impl FusedMezo {
     pub fn new(rt: &Runtime, preset: &str) -> Result<Self> {
-        Ok(FusedMezo { prog: rt.load_kind(preset, "mezo_step")? })
+        Ok(FusedMezo { sess: rt.bind_kind(preset, "mezo_step")? })
     }
 
     pub fn step(&mut self, params: &mut [f32], batch: &Batch, seed: i32, eta: f32, lam: f32) -> Result<FusedStats> {
         let [ids, tgt, mask] = batch_args(batch);
-        let outs = self.prog.call(&[
+        let outs = self.sess.run(&[
             Arg::VecF32(params),
             Arg::I32(seed),
             Arg::F32(eta),
@@ -121,14 +124,14 @@ impl FusedMezo {
 
 /// Fused MeZO+Momentum: `{preset}_mezo_momentum_step`.
 pub struct FusedMezoMomentum {
-    prog: Rc<Program>,
+    sess: Box<dyn Session>,
     pub m: Vec<f32>,
 }
 
 impl FusedMezoMomentum {
     pub fn new(rt: &Runtime, preset: &str) -> Result<Self> {
-        let meta = rt.preset(preset)?;
-        Ok(FusedMezoMomentum { prog: rt.load_kind(preset, "mezo_momentum_step")?, m: vec![0.0; meta.d_pad] })
+        let d_pad = rt.preset(preset)?.d_pad;
+        Ok(FusedMezoMomentum { sess: rt.bind_kind(preset, "mezo_momentum_step")?, m: vec![0.0; d_pad] })
     }
 
     pub fn step(
@@ -141,7 +144,7 @@ impl FusedMezoMomentum {
         lam: f32,
     ) -> Result<FusedStats> {
         let [ids, tgt, mask] = batch_args(batch);
-        let outs = self.prog.call(&[
+        let outs = self.sess.run(&[
             Arg::VecF32(params),
             Arg::VecF32(&self.m),
             Arg::I32(seed),
@@ -153,36 +156,38 @@ impl FusedMezoMomentum {
             mask,
         ])?;
         lit_copy_f32(&outs[0], params)?;
-        lit_copy_f32(&outs[1], &mut self.m)?;
         let lp = lit_f32(&outs[2])? as f64;
         let lm = lit_f32(&outs[3])? as f64;
         let g = lit_f32(&outs[4])? as f64;
+        let m_new = &outs[1];
+        lit_copy_f32(m_new, &mut self.m)?;
         Ok(FusedStats { loss: 0.5 * (lp + lm), proj_grad: g })
     }
 }
 
 /// First-order engines (Tables 1 & 9, Fig. 4): ordinary manifest programs
 /// on every backend — build-time `jax.grad` traces on pjrt, the native
-/// reverse-mode pass (`runtime::autograd`) on the default backend.
+/// reverse-mode pass (`runtime::autograd`, tape workspace reused across
+/// steps) on the default backend.
 pub struct FoSgd {
-    prog: Rc<Program>,
+    sess: Box<dyn Session>,
 }
 
 impl FoSgd {
     pub fn new(rt: &Runtime, preset: &str) -> Result<Self> {
-        Ok(FoSgd { prog: rt.load_kind(preset, "fo_sgd_step")? })
+        Ok(FoSgd { sess: rt.bind_kind(preset, "fo_sgd_step")? })
     }
 
     pub fn step(&mut self, params: &mut [f32], batch: &Batch, eta: f32) -> Result<f64> {
         let [ids, tgt, mask] = batch_args(batch);
-        let outs = self.prog.call(&[Arg::VecF32(params), Arg::F32(eta), ids, tgt, mask])?;
+        let outs = self.sess.run(&[Arg::VecF32(params), Arg::F32(eta), ids, tgt, mask])?;
         lit_copy_f32(&outs[0], params)?;
         Ok(lit_f32(&outs[1])? as f64)
     }
 }
 
 pub struct FoAdamW {
-    prog: Rc<Program>,
+    sess: Box<dyn Session>,
     pub mu: Vec<f32>,
     pub nu: Vec<f32>,
     pub t: f32,
@@ -190,11 +195,11 @@ pub struct FoAdamW {
 
 impl FoAdamW {
     pub fn new(rt: &Runtime, preset: &str) -> Result<Self> {
-        let meta = rt.preset(preset)?;
+        let d_pad = rt.preset(preset)?.d_pad;
         Ok(FoAdamW {
-            prog: rt.load_kind(preset, "fo_adamw_step")?,
-            mu: vec![0.0; meta.d_pad],
-            nu: vec![0.0; meta.d_pad],
+            sess: rt.bind_kind(preset, "fo_adamw_step")?,
+            mu: vec![0.0; d_pad],
+            nu: vec![0.0; d_pad],
             t: 0.0,
         })
     }
@@ -202,7 +207,7 @@ impl FoAdamW {
     pub fn step(&mut self, params: &mut [f32], batch: &Batch, eta: f32) -> Result<f64> {
         self.t += 1.0;
         let [ids, tgt, mask] = batch_args(batch);
-        let outs = self.prog.call(&[
+        let outs = self.sess.run(&[
             Arg::VecF32(params),
             Arg::VecF32(&self.mu),
             Arg::VecF32(&self.nu),
@@ -213,25 +218,30 @@ impl FoAdamW {
             mask,
         ])?;
         lit_copy_f32(&outs[0], params)?;
-        lit_copy_f32(&outs[1], &mut self.mu)?;
-        lit_copy_f32(&outs[2], &mut self.nu)?;
-        Ok(lit_f32(&outs[3])? as f64)
+        let loss = lit_f32(&outs[3])? as f64;
+        let (mu_new, nu_new) = (&outs[1], &outs[2]);
+        lit_copy_f32(mu_new, &mut self.mu)?;
+        lit_copy_f32(nu_new, &mut self.nu)?;
+        Ok(loss)
     }
 }
 
-/// Fig. 6 probe: cos^2(m, grad f) via the AOT `grad_cos2` program.
+/// Fig. 6 probe: cos^2(m, grad f) via the bound `grad_cos2` program.
+/// (`RefCell` keeps the probe callable through `&self` from the trainer's
+/// eval loop; single-threaded, never re-entered.)
 pub struct GradProbe {
-    prog: Rc<Program>,
+    sess: std::cell::RefCell<Box<dyn Session>>,
 }
 
 impl GradProbe {
     pub fn new(rt: &Runtime, preset: &str) -> Result<Self> {
-        Ok(GradProbe { prog: rt.load_kind(preset, "grad_cos2")? })
+        Ok(GradProbe { sess: std::cell::RefCell::new(rt.bind_kind(preset, "grad_cos2")?) })
     }
 
     pub fn cos2(&self, params: &[f32], m: &[f32], batch: &Batch) -> Result<f64> {
         let [ids, tgt, mask] = batch_args(batch);
-        let outs = self.prog.call(&[Arg::VecF32(params), Arg::VecF32(m), ids, tgt, mask])?;
+        let mut sess = self.sess.borrow_mut();
+        let outs = sess.run(&[Arg::VecF32(params), Arg::VecF32(m), ids, tgt, mask])?;
         Ok(lit_f32(&outs[0])? as f64)
     }
 }

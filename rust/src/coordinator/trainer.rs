@@ -6,8 +6,8 @@
 //! evaluation, the Fig. 6 alignment probe, memory accounting, checkpointing
 //! and metrics. Python is never on this path.
 
+use std::cell::RefCell;
 use std::path::PathBuf;
-use std::rc::Rc;
 
 use crate::util::error::{bail, Context, Result};
 
@@ -19,7 +19,7 @@ use crate::data::{PretrainSampler, TaskGen, TrainSampler};
 use crate::eval::{predict, score, EvalResult};
 use crate::objective::{Batch, BatchSource, ModelObjective, Objective};
 use crate::optimizer::{BetaSchedule, ZoOptimizer};
-use crate::runtime::{lit_vec_f32, Arg, Program, Runtime};
+use crate::runtime::{lit_vec_f32, Arg, Runtime, Session};
 use crate::util::memory::{activation_bytes, MemoryMeter};
 use crate::util::rng::STREAM_DIRECTION;
 use crate::util::Stopwatch;
@@ -27,9 +27,9 @@ use crate::util::Stopwatch;
 /// How a step executes (DESIGN.md §4 "Execution modes").
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum Mode {
-    /// whole step = one HLO program (conmezo / mezo / mezo_momentum / FO)
+    /// whole step = one bound step program (conmezo / mezo / mezo_momentum / FO)
     Fused,
-    /// loss-only HLO programs + host-side optimizer math (all baselines)
+    /// loss-only program sessions + host-side optimizer math (all baselines)
     Composed,
 }
 
@@ -130,9 +130,12 @@ enum Engine {
     AdamW(FoAdamW),
 }
 
-/// Candidate-restricted evaluation over a fixed example set.
+/// Candidate-restricted evaluation over a fixed example set. Owns a bound
+/// `eval_logits` [`Session`] — the eval workspace binds once and is reused
+/// across every periodic evaluation (`RefCell` keeps `evaluate` callable
+/// through `&self`; single-threaded, never re-entered).
 pub struct Evaluator {
-    prog: Rc<Program>,
+    sess: RefCell<Box<dyn Session>>,
     examples: Vec<crate::data::Example>,
     batch: usize,
     seq: usize,
@@ -141,26 +144,28 @@ pub struct Evaluator {
 impl Evaluator {
     pub fn new(rt: &Runtime, preset: &str, examples: Vec<crate::data::Example>) -> Result<Self> {
         let meta = rt.preset(preset)?;
+        let (batch, seq) = (meta.batch, meta.seq_len);
         Ok(Evaluator {
-            prog: rt.load_kind(preset, "eval_logits")?,
+            sess: RefCell::new(rt.bind_kind(preset, "eval_logits")?),
             examples,
-            batch: meta.batch,
-            seq: meta.seq_len,
+            batch,
+            seq,
         })
     }
 
     pub fn evaluate(&self, params: &[f32]) -> Result<EvalResult> {
         let mut pairs = Vec::with_capacity(self.examples.len());
-        let vocab_probe = &self.examples[0];
-        let _ = vocab_probe;
+        let mut sess = self.sess.borrow_mut();
+        let mut ids = vec![0i32; self.batch * self.seq];
+        let mut pos = vec![0i32; self.batch];
         for chunk in self.examples.chunks(self.batch) {
-            let mut ids = vec![0i32; self.batch * self.seq];
-            let mut pos = vec![0i32; self.batch];
+            ids.fill(0);
+            pos.fill(0);
             for (i, e) in chunk.iter().enumerate() {
                 ids[i * self.seq..(i + 1) * self.seq].copy_from_slice(&e.tokens);
                 pos[i] = e.predict_pos as i32;
             }
-            let outs = self.prog.call(&[
+            let outs = sess.run(&[
                 Arg::VecF32(params),
                 Arg::TensorI32(&ids, vec![self.batch, self.seq]),
                 Arg::TensorI32(&pos, vec![self.batch]),

@@ -1,6 +1,6 @@
 //! Batch assembly: examples -> fixed-shape [B, S] token batches for the
-//! HLO programs, for both finetuning (predict-at-query) and LM pretraining
-//! (next-token) objectives.
+//! runtime loss programs, for both finetuning (predict-at-query) and LM
+//! pretraining (next-token) objectives.
 
 use crate::data::tasks::{Example, TaskGen};
 use crate::data::vocab::PAD;

@@ -18,7 +18,7 @@ use conmezo::data::{TaskGen, TrainSampler};
 use conmezo::net::{TcpTransport, Transport};
 use conmezo::objective::ModelObjective;
 use conmezo::optimizer::BetaSchedule;
-use conmezo::runtime::{lit_vec_f32, Arg, Runtime};
+use conmezo::runtime::{lit_vec_f32, Arg, ParallelPolicy, Runtime};
 use conmezo::util::json::Json;
 
 fn app() -> App {
@@ -29,6 +29,7 @@ fn app() -> App {
         .subcommand("worker", "join a distributed ZO run")
         .subcommand("info", "print artifacts / platform info")
         .opt_default("backend", "auto", "execution backend (native|pjrt|auto)")
+        .opt("threads", "native GEMM worker threads (0 = all cores; default: runtime.threads config, CONMEZO_THREADS env, or 1)")
         .opt("config", "TOML config file")
         .repeated("set", "config override key=value")
         .opt_default("preset", "tiny", "model preset (nano|tiny|small|medium)")
@@ -71,9 +72,9 @@ fn main() -> Result<()> {
     }
 }
 
-/// (train config, backend name) from the layered config sources.
-fn build_config(p: &conmezo::cli::Parsed) -> Result<(TrainConfig, String)> {
-    // layering: file < CLI flags < --set overrides
+/// The layered config sources every subcommand accepts: `--config` file
+/// with `--set` overrides on top.
+fn load_file_cfg(p: &conmezo::cli::Parsed) -> Result<Config> {
     let mut file_cfg = match p.value("config") {
         Some(path) => Config::load(Path::new(path))?,
         None => Config::new(),
@@ -81,12 +82,37 @@ fn build_config(p: &conmezo::cli::Parsed) -> Result<(TrainConfig, String)> {
     for kv in p.values("set") {
         file_cfg.set_from_str(kv)?;
     }
+    Ok(file_cfg)
+}
+
+/// ParallelPolicy from the layered sources: explicit `--threads` beats the
+/// config's `runtime.threads` beats the `CONMEZO_THREADS` env var (0 means
+/// all cores at every layer). An unparsable `--threads` is a hard error,
+/// not a silent fallthrough.
+fn thread_policy(p: &conmezo::cli::Parsed, file_cfg: &Config) -> Result<ParallelPolicy> {
+    if let Some(s) = p.value("threads") {
+        let n: usize = s.trim().parse().map_err(|_| {
+            conmezo::anyhow!("--threads must be a non-negative integer (0 = all cores), got {s:?}")
+        })?;
+        return Ok(ParallelPolicy::from_count(n));
+    }
+    Ok(match file_cfg.get("runtime.threads").and_then(|v| v.as_f64()) {
+        Some(n) if n >= 0.0 => ParallelPolicy::from_count(n as usize),
+        _ => ParallelPolicy::from_env(),
+    })
+}
+
+/// (train config, backend name, thread policy) from the layered sources.
+fn build_config(p: &conmezo::cli::Parsed) -> Result<(TrainConfig, String, ParallelPolicy)> {
+    // layering: file < CLI flags < --set overrides
+    let file_cfg = load_file_cfg(p)?;
     // an explicit --backend beats the config file (file < CLI flags); the
     // "auto" default defers to the file's runtime.backend when present
     let backend = match p.str_or("backend", "auto").as_str() {
         "auto" => file_cfg.str_or("runtime.backend", "auto"),
         explicit => explicit.to_string(),
     };
+    let policy = thread_policy(p, &file_cfg)?;
     let mut cfg = TrainConfig::preset(
         &file_cfg.str_or("model.preset", &p.str_or("preset", "tiny")),
         &file_cfg.str_or("train.task", &p.str_or("task", "sst2")),
@@ -107,12 +133,12 @@ fn build_config(p: &conmezo::cli::Parsed) -> Result<(TrainConfig, String)> {
     if let Some(path) = p.value("init-from") {
         cfg.init_from = Some(path.into());
     }
-    Ok((cfg, backend))
+    Ok((cfg, backend, policy))
 }
 
 fn cmd_train(p: &conmezo::cli::Parsed) -> Result<()> {
-    let (mut cfg, backend) = build_config(p)?;
-    let rt = Runtime::from_name(&backend)?;
+    let (mut cfg, backend, policy) = build_config(p)?;
+    let rt = Runtime::from_name_with(&backend, policy)?;
     if p.flag("pretrained") && cfg.init_from.is_none() {
         cfg.init_from = Some(coordinator::ensure_pretrained(&rt, &cfg.preset, 400, 1e-3, 0.3)?);
     }
@@ -142,7 +168,8 @@ fn cmd_train(p: &conmezo::cli::Parsed) -> Result<()> {
 }
 
 fn cmd_pretrain(p: &conmezo::cli::Parsed) -> Result<()> {
-    let rt = Runtime::from_name(&p.str_or("backend", "auto"))?;
+    let policy = thread_policy(p, &load_file_cfg(p)?)?;
+    let rt = Runtime::from_name_with(&p.str_or("backend", "auto"), policy)?;
     let preset = p.str_or("preset", "tiny");
     let steps = p.usize_or("steps", 400);
     let path = coordinator::pretrained_path(&preset);
@@ -190,7 +217,8 @@ fn cmd_leader(p: &conmezo::cli::Parsed) -> Result<()> {
 }
 
 fn cmd_worker(p: &conmezo::cli::Parsed) -> Result<()> {
-    let rt = Runtime::from_name(&p.str_or("backend", "auto"))?;
+    let policy = thread_policy(p, &load_file_cfg(p)?)?;
+    let rt = Runtime::from_name_with(&p.str_or("backend", "auto"), policy)?;
     let preset = p.str_or("preset", "tiny");
     let task = p.str_or("task", "sst2");
     let id = p.usize_or("worker-id", 0) as u32;

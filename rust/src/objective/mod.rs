@@ -7,16 +7,21 @@
 //!
 //! * [`NativeQuadratic`] — the Fig. 3 / App. C.1 synthetic objective in
 //!   pure Rust (microseconds per eval; used for the 10^5-step grid sweeps).
-//! * [`ModelObjective`] — the transformer loss, evaluated by executing the
-//!   `{preset}_loss` / `{preset}_two_point` programs on whichever runtime
-//!   backend is active (native CPU by default, PJRT with `--features pjrt`).
-//!   Formerly named `HloObjective`; renamed when execution became pluggable.
+//! * [`ModelObjective`] — the transformer loss, executing the
+//!   `{preset}_loss` / `{preset}_two_point` programs through bound
+//!   [`Session`]s on whichever runtime backend is active (native CPU by
+//!   default, PJRT with `--features pjrt`). Each objective owns its
+//!   sessions, so the eval hot path reuses one workspace per program and
+//!   the antithetic pair runs through the first-class
+//!   [`Session::two_point`] entry point. (Formerly named `HloObjective`,
+//!   then a `Program::call` wrapper; migrated when execution grew the
+//!   bind-once/run-many session API.)
 
 use crate::util::error::Result;
 
-use crate::runtime::{lit_f32, Arg, Program, Runtime};
+use crate::runtime::{lit_f32, Arg, Runtime, Session};
 
-/// Fixed-shape token batch fed to the HLO loss programs.
+/// Fixed-shape token batch fed to the runtime loss programs.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Batch {
     pub input_ids: Vec<i32>,
@@ -141,16 +146,27 @@ impl Objective for NativeQuadratic {
 // ModelObjective
 // ---------------------------------------------------------------------------
 
-/// Transformer loss via the runtime's `loss`/`two_point` programs (any
-/// backend). Holds the prepared programs plus the current minibatch.
+/// Transformer loss via bound `loss`/`two_point` [`Session`]s (any
+/// backend). Owns its sessions — workspaces bind once and every eval after
+/// that runs allocation-free — plus the current minibatch.
 pub struct ModelObjective {
-    loss_prog: std::rc::Rc<Program>,
-    two_point_prog: std::rc::Rc<Program>,
+    loss_sess: Box<dyn Session>,
+    two_point_sess: Box<dyn Session>,
     pub batch: Batch,
     source: Box<dyn BatchSource>,
     d_pad: usize,
     d_raw: usize,
     evals: u64,
+}
+
+/// Batch args for a session run (ids, targets, mask).
+fn batch_args(batch: &Batch) -> [Arg<'_>; 3] {
+    let dims = [batch.batch, batch.seq];
+    [
+        Arg::TensorI32(&batch.input_ids, vec![dims[0], dims[1]]),
+        Arg::TensorI32(&batch.targets, vec![dims[0], dims[1]]),
+        Arg::TensorF32(&batch.mask, vec![dims[0], dims[1]]),
+    ]
 }
 
 impl ModelObjective {
@@ -159,23 +175,14 @@ impl ModelObjective {
         let mut source = source;
         let batch = source.next_batch();
         Ok(ModelObjective {
-            loss_prog: rt.load_kind(preset, "loss")?,
-            two_point_prog: rt.load_kind(preset, "two_point")?,
+            loss_sess: rt.bind_kind(preset, "loss")?,
+            two_point_sess: rt.bind_kind(preset, "two_point")?,
             batch,
             source,
             d_pad: meta.d_pad,
             d_raw: meta.d_raw,
             evals: 0,
         })
-    }
-
-    fn batch_args(&self) -> [Arg<'_>; 3] {
-        let dims = [self.batch.batch, self.batch.seq];
-        [
-            Arg::TensorI32(&self.batch.input_ids, vec![dims[0], dims[1]]),
-            Arg::TensorI32(&self.batch.targets, vec![dims[0], dims[1]]),
-            Arg::TensorF32(&self.batch.mask, vec![dims[0], dims[1]]),
-        ]
     }
 }
 
@@ -190,18 +197,23 @@ impl Objective for ModelObjective {
 
     fn loss(&mut self, x: &[f32]) -> Result<f64> {
         self.evals += 1;
-        let [ids, tgt, mask] = self.batch_args();
-        let outs = self.loss_prog.call(&[Arg::VecF32(x), ids, tgt, mask])?;
+        let [ids, tgt, mask] = batch_args(&self.batch);
+        let outs = self.loss_sess.run(&[Arg::VecF32(x), ids, tgt, mask])?;
         Ok(lit_f32(&outs[0])? as f64)
     }
 
     fn two_point(&mut self, x: &[f32], z: &[f32], lam: f32) -> Result<(f64, f64)> {
         self.evals += 2;
-        let [ids, tgt, mask] = self.batch_args();
-        let outs = self
-            .two_point_prog
-            .call(&[Arg::VecF32(x), Arg::VecF32(z), Arg::F32(lam), ids, tgt, mask])?;
-        Ok((lit_f32(&outs[0])? as f64, lit_f32(&outs[1])? as f64))
+        // the paired fast path: one session call, shared scratch, same
+        // minibatch for both evals (Definition 1)
+        self.two_point_sess.two_point(
+            x,
+            z,
+            lam,
+            &self.batch.input_ids,
+            &self.batch.targets,
+            &self.batch.mask,
+        )
     }
 
     fn advance(&mut self) {

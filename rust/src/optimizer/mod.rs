@@ -1,10 +1,13 @@
 //! The ZO optimizer family (composed mode).
 //!
 //! Every algorithm implements [`ZoOptimizer`] against the [`Objective`]
-//! oracle — two (or three/four) function evaluations per step, mirroring the
-//! paper's setting. The fused execution mode (whole step as one HLO
-//! program) lives in `coordinator::fused` and is semantically equivalent to
-//! the composed ConMeZO/MeZO here (cross-checked in integration tests).
+//! oracle — two (or three/four) function evaluations per step, mirroring
+//! the paper's setting; on the model objective each evaluation executes
+//! through a bound runtime `Session` on whichever backend is active
+//! (native by default, PJRT behind the feature flag). The fused execution
+//! mode (whole step as one bound step program) lives in
+//! `coordinator::fused` and is semantically equivalent to the composed
+//! ConMeZO/MeZO here (cross-checked in integration tests).
 //!
 //! | module | algorithm | paper artefact |
 //! |---|---|---|

@@ -96,8 +96,8 @@ impl Manifest {
             .ok_or_else(|| {
                 anyhow!(
                     "program {name:?} not in this backend's manifest (the native backend \
-                     serves every program kind except the `loss_pallas` kernel ablation — \
-                     check the preset name; on pjrt, re-run `make artifacts`)"
+                     serves the full program set including the `loss_pallas` kernel \
+                     ablation — check the preset/kind name; on pjrt, re-run `make artifacts`)"
                 )
             })
     }

@@ -1,26 +1,51 @@
-//! Pluggable execution runtime.
+//! Pluggable execution runtime with a bind-once / run-many session API.
 //!
 //! The manifest's program set (`{preset}_loss`, `{preset}_two_point`, the
 //! fused `*_step` programs, ...) can execute on any [`Backend`]:
 //!
 //! * [`native::NativeBackend`] — pure-Rust transformer forward + reverse
-//!   pass ([`autograd`]) + fused ZO step emulation built on `vecmath`.
-//!   Zero external dependencies, no artifacts on disk, always available;
-//!   this is the default, so the full train/eval/distributed stack AND the
-//!   first-order programs (`fo_sgd_step`, `fo_adamw_step`, `grad_cos2`,
-//!   hence `pretrain`) run offline.
+//!   pass ([`autograd`]) + fused ZO step emulation built on `vecmath`,
+//!   including a native `loss_pallas` kernel-ablation twin. Zero external
+//!   dependencies, no artifacts on disk, always available; this is the
+//!   default, so the full train/eval/distributed stack AND the first-order
+//!   programs (`fo_sgd_step`, `fo_adamw_step`, `grad_cos2`, hence
+//!   `pretrain`) run offline.
 //! * `pjrt::PjrtBackend` (cargo feature `pjrt`) — loads the AOT artifacts
 //!   (`artifacts/*.hlo.txt` from `python/compile/aot.py`) and executes them
-//!   on the PJRT CPU client via the external `xla` crate. Adds the
-//!   `loss_pallas` kernel-ablation variant that native does not implement.
+//!   on the PJRT CPU client via the external `xla` crate.
+//!
+//! ## Execution model: bind once, run many
+//!
+//! ConMeZO's cost profile is two forward evals per step across millions of
+//! steps, so the per-call surface is the hot path of the whole system. A
+//! program is *bound* once into a [`Session`] — which owns its forward
+//! scratch, autograd tape workspace and output buffers — and then *run*
+//! many times with no steady-state buffer allocation (the only per-call
+//! allocations left on the native path are the small per-layer
+//! layout-name strings; see ROADMAP):
+//!
+//! ```ignore
+//! let mut sess = rt.bind_kind("tiny", "loss")?;          // bind once
+//! let outs = sess.run(&[Arg::VecF32(&params), ids, tgt, mask])?; // run many
+//! ```
+//!
+//! [`Session::two_point`] is the first-class antithetic-pair entry point:
+//! both SPSA evals of one step execute in a single call over one scratch
+//! set. [`Program::call`] remains as a thin compat shim (`load`/`call`
+//! call sites work unchanged) that delegates to an internally cached
+//! session.
 //!
 //! [`Runtime`] is the façade the rest of the crate talks to: it owns one
 //! backend, resolves program names through the manifest, validates argument
-//! shapes once (turning silent size mismatches into named errors on every
-//! backend), and caches prepared programs.
+//! shapes identically on every backend (turning silent size mismatches into
+//! named errors), and caches bound compat programs. A [`ParallelPolicy`]
+//! chosen by cli/config/env flows through the backend into the `vecmath`
+//! GEMMs, which are row-parallel and bit-identical at every thread count.
 //!
 //! Backend selection: `Runtime::from_name("native"|"pjrt"|"auto")`, the
-//! `CONMEZO_BACKEND` env var, or `Runtime::open_default()` (auto).
+//! `CONMEZO_BACKEND` env var, or `Runtime::open_default()` (auto); thread
+//! count via `ParallelPolicy` (`--threads`, `runtime.threads`, or the
+//! `CONMEZO_THREADS` env var — 0 means all cores).
 
 pub mod autograd;
 pub mod manifest;
@@ -114,53 +139,162 @@ pub fn lit_copy_f32(v: &Value, dst: &mut [f32]) -> Result<()> {
     }
 }
 
-/// Backend-side executable for one manifest program.
+/// Worker-thread budget for the backend's dense kernels. Flows from
+/// cli/config/env through the [`Runtime`] into the `vecmath` GEMMs, which
+/// split output rows across `std::thread::scope` workers while keeping
+/// per-element accumulation order — and therefore results — bit-identical
+/// to the single-threaded kernels at every count.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ParallelPolicy {
+    pub threads: usize,
+}
+
+impl ParallelPolicy {
+    /// Single-threaded execution (the deterministic-by-construction default
+    /// — threading is bit-identical anyway, this just avoids spawn overhead
+    /// on small presets).
+    pub fn single() -> ParallelPolicy {
+        ParallelPolicy { threads: 1 }
+    }
+
+    /// One worker per available core.
+    pub fn auto() -> ParallelPolicy {
+        let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        ParallelPolicy { threads: n }
+    }
+
+    /// From an explicit count; 0 means "all cores".
+    pub fn from_count(threads: usize) -> ParallelPolicy {
+        if threads == 0 {
+            Self::auto()
+        } else {
+            ParallelPolicy { threads }
+        }
+    }
+
+    /// From the `CONMEZO_THREADS` env var (unset -> single; 0 -> all cores).
+    pub fn from_env() -> ParallelPolicy {
+        match std::env::var("CONMEZO_THREADS").ok().and_then(|s| s.trim().parse::<usize>().ok()) {
+            Some(n) => Self::from_count(n),
+            None => Self::single(),
+        }
+    }
+}
+
+impl Default for ParallelPolicy {
+    fn default() -> Self {
+        Self::single()
+    }
+}
+
+/// Validate typed args against a program's manifest signature — identical
+/// checking (and error text) on every backend; every [`Session::run`] goes
+/// through this.
+pub fn validate_args(spec: &ProgramSpec, args: &[Arg<'_>]) -> Result<()> {
+    if args.len() != spec.inputs.len() {
+        bail!(
+            "{}: expected {} args ({:?}), got {}",
+            spec.name,
+            spec.inputs.len(),
+            spec.inputs.iter().map(|i| i.name.as_str()).collect::<Vec<_>>(),
+            args.len()
+        );
+    }
+    for (a, ispec) in args.iter().zip(&spec.inputs) {
+        let got = a.shape_of();
+        if got != ispec.shape {
+            bail!(
+                "{}: arg {:?} shape mismatch: got {:?}, manifest says {:?}",
+                spec.name,
+                ispec.name,
+                got,
+                ispec.shape
+            );
+        }
+    }
+    Ok(())
+}
+
+/// A bound program: owns whatever workspaces its backend needs (forward
+/// scratch, autograd tape, output buffers) so repeated [`Session::run`]
+/// calls execute without steady-state buffer allocation. Bind once via
+/// [`Runtime::bind`] / [`Backend::bind`], run many times.
+pub trait Session {
+    /// The manifest spec this session is bound to.
+    fn spec(&self) -> &ProgramSpec;
+
+    /// Execute with typed args; returns output values in manifest order,
+    /// borrowed from the session's reusable output buffers (valid until the
+    /// next `run` / `two_point`).
+    fn run(&mut self, args: &[Arg<'_>]) -> Result<&[Value]>;
+
+    /// First-class antithetic-pair evaluation for `two_point`-kind
+    /// programs: (f(x + lam z), f(x - lam z)) on one batch in a single
+    /// call. Backends with native workspaces evaluate both points over one
+    /// scratch set (shared setup, no output materialization); the default
+    /// routes through [`Session::run`].
+    fn two_point(
+        &mut self,
+        x: &[f32],
+        z: &[f32],
+        lam: f32,
+        ids: &[i32],
+        targets: &[i32],
+        mask: &[f32],
+    ) -> Result<(f64, f64)> {
+        if self.spec().kind != "two_point" {
+            bail!(
+                "{}: the two_point entry point needs a two_point session, got kind {:?}",
+                self.spec().name,
+                self.spec().kind
+            );
+        }
+        let dims = self
+            .spec()
+            .inputs
+            .iter()
+            .find(|i| i.name == "input_ids")
+            .map(|i| i.shape.clone())
+            .ok_or_else(|| crate::anyhow!("{}: two_point program without input_ids", self.spec().name))?;
+        let outs = self.run(&[
+            Arg::VecF32(x),
+            Arg::VecF32(z),
+            Arg::F32(lam),
+            Arg::TensorI32(ids, dims.clone()),
+            Arg::TensorI32(targets, dims.clone()),
+            Arg::TensorF32(mask, dims),
+        ])?;
+        Ok((lit_f32(&outs[0])? as f64, lit_f32(&outs[1])? as f64))
+    }
+}
+
+/// Backend-side per-call executable (the pre-session surface; still what
+/// PJRT implements). [`CallSession`] adapts one into a [`Session`].
 pub trait ProgramImpl {
     fn call(&self, spec: &ProgramSpec, args: &[Arg<'_>]) -> Result<Vec<Value>>;
 }
 
-/// An execution backend: resolves manifest programs into executables.
-pub trait Backend {
-    /// Human-readable platform name ("native-cpu", PJRT platform, ...).
-    fn platform(&self) -> String;
-    /// The program/preset manifest this backend serves.
-    fn manifest(&self) -> &Manifest;
-    /// Prepare (compile/instantiate) one program. Called once per program
-    /// name; the [`Runtime`] caches the result.
-    fn instantiate(&self, spec: &ProgramSpec) -> Result<Box<dyn ProgramImpl>>;
-}
-
-/// A prepared program plus its manifest spec. Shape checking happens here,
-/// against the manifest, identically on every backend.
-pub struct Program {
-    pub spec: ProgramSpec,
+/// Adapter wrapping a per-call [`ProgramImpl`] into the [`Session`] API for
+/// backends without native workspace reuse (PJRT, the quad programs).
+pub struct CallSession {
+    spec: ProgramSpec,
     imp: Box<dyn ProgramImpl>,
+    outs: Vec<Value>,
 }
 
-impl Program {
-    /// Execute with typed args; returns output values in manifest order.
-    pub fn call(&self, args: &[Arg<'_>]) -> Result<Vec<Value>> {
-        if args.len() != self.spec.inputs.len() {
-            bail!(
-                "{}: expected {} args ({:?}), got {}",
-                self.spec.name,
-                self.spec.inputs.len(),
-                self.spec.inputs.iter().map(|i| i.name.as_str()).collect::<Vec<_>>(),
-                args.len()
-            );
-        }
-        for (a, spec) in args.iter().zip(&self.spec.inputs) {
-            let got = a.shape_of();
-            if got != spec.shape {
-                bail!(
-                    "{}: arg {:?} shape mismatch: got {:?}, manifest says {:?}",
-                    self.spec.name,
-                    spec.name,
-                    got,
-                    spec.shape
-                );
-            }
-        }
+impl CallSession {
+    pub fn new(spec: ProgramSpec, imp: Box<dyn ProgramImpl>) -> CallSession {
+        CallSession { spec, imp, outs: Vec::new() }
+    }
+}
+
+impl Session for CallSession {
+    fn spec(&self) -> &ProgramSpec {
+        &self.spec
+    }
+
+    fn run(&mut self, args: &[Arg<'_>]) -> Result<&[Value]> {
+        validate_args(&self.spec, args)?;
         let outs = self.imp.call(&self.spec, args)?;
         if outs.len() != self.spec.outputs.len() {
             bail!(
@@ -170,7 +304,35 @@ impl Program {
                 self.spec.outputs.len()
             );
         }
-        Ok(outs)
+        self.outs = outs;
+        Ok(&self.outs)
+    }
+}
+
+/// An execution backend: resolves manifest programs into bound sessions.
+pub trait Backend {
+    /// Human-readable platform name ("native-cpu", PJRT platform, ...).
+    fn platform(&self) -> String;
+    /// The program/preset manifest this backend serves.
+    fn manifest(&self) -> &Manifest;
+    /// Bind one program into a reusable [`Session`] owning its workspaces.
+    fn bind(&self, spec: &ProgramSpec) -> Result<Box<dyn Session>>;
+}
+
+/// Compat shim over the session API: the old `load`/`call` surface. Holds
+/// one bound session behind a `RefCell`, so even legacy call sites reuse
+/// workspaces across calls — `call` only pays an output `Vec<Value>` clone
+/// that [`Session::run`] avoids.
+pub struct Program {
+    pub spec: ProgramSpec,
+    sess: RefCell<Box<dyn Session>>,
+}
+
+impl Program {
+    /// Execute with typed args; returns output values in manifest order.
+    /// (Migration: prefer `Runtime::bind` + `Session::run` on hot paths.)
+    pub fn call(&self, args: &[Arg<'_>]) -> Result<Vec<Value>> {
+        Ok(self.sess.borrow_mut().run(args)?.to_vec())
     }
 }
 
@@ -188,7 +350,7 @@ pub fn enable_flush_to_zero() {
     }
 }
 
-/// The runtime façade: one backend + a prepared-program cache.
+/// The runtime façade: one backend + a bound compat-program cache.
 pub struct Runtime {
     backend: Box<dyn Backend>,
     cache: RefCell<HashMap<String, Rc<Program>>>,
@@ -202,9 +364,15 @@ impl Runtime {
     }
 
     /// The pure-Rust native backend over the built-in presets. Always
-    /// available; needs no artifacts on disk.
+    /// available; needs no artifacts on disk. Thread count comes from the
+    /// `CONMEZO_THREADS` env var (see [`ParallelPolicy::from_env`]).
     pub fn native() -> Runtime {
-        Runtime::from_backend(Box::new(NativeBackend::new()))
+        Runtime::native_with(ParallelPolicy::from_env())
+    }
+
+    /// The native backend with an explicit [`ParallelPolicy`].
+    pub fn native_with(policy: ParallelPolicy) -> Runtime {
+        Runtime::from_backend(Box::new(NativeBackend::with_policy(policy)))
     }
 
     /// Open a PJRT artifact directory (requires the `pjrt` cargo feature).
@@ -233,10 +401,17 @@ impl Runtime {
     /// Select a backend by name: "native", "pjrt", or "auto" (pjrt when the
     /// feature is compiled in AND artifacts exist, native otherwise).
     pub fn from_name(name: &str) -> Result<Runtime> {
+        Self::from_name_with(name, ParallelPolicy::from_env())
+    }
+
+    /// [`Runtime::from_name`] with an explicit [`ParallelPolicy`] (the
+    /// cli/config `--threads` / `runtime.threads` plumbing; PJRT manages its
+    /// own intra-op threading, so the policy only shapes native backends).
+    pub fn from_name_with(name: &str, policy: ParallelPolicy) -> Result<Runtime> {
         match name {
-            "native" => Ok(Runtime::native()),
+            "native" => Ok(Runtime::native_with(policy)),
             "pjrt" => Self::open_pjrt_default(),
-            "auto" | "" => Runtime::open_default(),
+            "auto" | "" => Runtime::open_default_with(policy),
             other => bail!("unknown backend {other:?} (expected native|pjrt|auto)"),
         }
     }
@@ -245,8 +420,13 @@ impl Runtime {
     /// ("native" or "pjrt"), otherwise PJRT if compiled in and artifacts are
     /// present, otherwise native.
     pub fn open_default() -> Result<Runtime> {
+        Self::open_default_with(ParallelPolicy::from_env())
+    }
+
+    /// [`Runtime::open_default`] with an explicit [`ParallelPolicy`].
+    pub fn open_default_with(policy: ParallelPolicy) -> Result<Runtime> {
         match std::env::var("CONMEZO_BACKEND").as_deref() {
-            Ok("native") => return Ok(Runtime::native()),
+            Ok("native") => return Ok(Runtime::native_with(policy)),
             Ok("pjrt") => return Self::open_pjrt_default(),
             Ok("auto") | Ok("") | Err(_) => {}
             Ok(other) => {
@@ -257,7 +437,7 @@ impl Runtime {
         if let Ok(b) = pjrt::PjrtBackend::open_default() {
             return Ok(Runtime::from_backend(Box::new(b)));
         }
-        Ok(Runtime::native())
+        Ok(Runtime::native_with(policy))
     }
 
     pub fn platform(&self) -> String {
@@ -268,20 +448,36 @@ impl Runtime {
         self.backend.manifest()
     }
 
-    /// Load (and prepare, once) a program by manifest name.
+    /// Bind a program by manifest name into a fresh [`Session`] owning its
+    /// own workspaces (the hot-path API; each caller gets an independent
+    /// session).
+    pub fn bind(&self, name: &str) -> Result<Box<dyn Session>> {
+        let spec = self.backend.manifest().program(name)?.clone();
+        let t0 = std::time::Instant::now();
+        let sess = self.backend.bind(&spec)?;
+        crate::debug!(
+            "runtime",
+            "bound {name} in {:.3}s",
+            t0.elapsed().as_secs_f64()
+        );
+        Ok(sess)
+    }
+
+    /// Bind a preset-scoped program, e.g. ("tiny", "conmezo_step").
+    pub fn bind_kind(&self, preset: &str, kind: &str) -> Result<Box<dyn Session>> {
+        self.bind(&format!("{preset}_{kind}"))
+    }
+
+    /// Load (and bind, once) a compat [`Program`] by manifest name. Legacy
+    /// surface: shares one cached session per name behind `call`'s output
+    /// clone — migrate hot paths to [`Runtime::bind`] + [`Session::run`].
     pub fn load(&self, name: &str) -> Result<Rc<Program>> {
         if let Some(p) = self.cache.borrow().get(name) {
             return Ok(p.clone());
         }
         let spec = self.backend.manifest().program(name)?.clone();
-        let t0 = std::time::Instant::now();
-        let imp = self.backend.instantiate(&spec)?;
-        crate::debug!(
-            "runtime",
-            "prepared {name} in {:.3}s",
-            t0.elapsed().as_secs_f64()
-        );
-        let prog = Rc::new(Program { spec, imp });
+        let sess = self.backend.bind(&spec)?;
+        let prog = Rc::new(Program { spec, sess: RefCell::new(sess) });
         self.cache.borrow_mut().insert(name.to_string(), prog.clone());
         Ok(prog)
     }
@@ -336,5 +532,23 @@ mod tests {
         let a = rt.load("nano_loss").unwrap();
         let b = rt.load("nano_loss").unwrap();
         assert!(Rc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    fn parallel_policy_resolution() {
+        assert_eq!(ParallelPolicy::default(), ParallelPolicy::single());
+        assert_eq!(ParallelPolicy::from_count(3).threads, 3);
+        assert!(ParallelPolicy::from_count(0).threads >= 1, "0 means all cores");
+    }
+
+    #[test]
+    fn bind_gives_independent_deterministic_sessions() {
+        let rt = Runtime::native();
+        let mut a = rt.bind("nano_sample_u").unwrap();
+        let mut b = rt.bind_kind("nano", "sample_u").unwrap();
+        assert_eq!(a.spec().name, "nano_sample_u");
+        let va = a.run(&[Arg::I32(1)]).unwrap()[0].clone();
+        let vb = b.run(&[Arg::I32(1)]).unwrap()[0].clone();
+        assert_eq!(va, vb, "independent sessions must agree");
     }
 }

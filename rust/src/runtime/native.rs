@@ -1,14 +1,22 @@
 //! NativeBackend: the manifest's program set executed in pure Rust.
 //!
-//! Implements `init`, `sample_u`, `loss`, `two_point`, `eval_logits`, the
-//! fused `conmezo_step` / `mezo_step` / `mezo_momentum_step` programs, the
+//! Implements `init`, `sample_u`, `loss`, `loss_pallas` (the
+//! kernel-composition attention ablation twin — ROADMAP's last pjrt-only
+//! program, now offline), `two_point`, `eval_logits`, the fused
+//! `conmezo_step` / `mezo_step` / `mezo_momentum_step` programs, the
 //! first-order programs (`fo_sgd_step`, `fo_adamw_step`, `grad_cos2` via
 //! the reverse-mode pass in [`crate::runtime::autograd`]) and the
 //! `quad_loss`/`quad_grad` synthetic objective for every built-in preset —
-//! no Python, no XLA, no artifacts on disk. This is the full PJRT program
-//! set except the `loss_pallas` kernel-ablation variant, so pretraining,
-//! the FO baselines of Table 1 and the Fig. 6 alignment probe all run
-//! offline.
+//! no Python, no XLA, no artifacts on disk.
+//!
+//! Programs bind into a [`NativeSession`]: one bound program owning its
+//! forward scratch, autograd workspace, direction buffers and output
+//! slots, so every `run` after the first executes without steady-state
+//! buffer allocation (the bind-once/run-many contract of
+//! [`crate::runtime::Session`]; the per-layer layout-name strings are the
+//! one remaining per-call allocation — see ROADMAP). The session also
+//! implements the antithetic-pair fast path `two_point` over a single
+//! scratch set.
 //!
 //! Fused-step emulation reuses the exact `vecmath` kernels the composed
 //! path uses (`cone_direction`, `zo_update`, `axpy_into`), so fused and
@@ -17,18 +25,21 @@
 
 use std::collections::BTreeMap;
 
-use crate::runtime::autograd;
+use crate::runtime::autograd::{self, GradWorkspace};
 use crate::runtime::manifest::{Manifest, PresetMeta, ProgramSpec, TensorSpec};
-use crate::runtime::model::{builtin_presets, NativeModel, QUAD_DIM};
-use crate::runtime::{Arg, Backend, ProgramImpl, Value};
+use crate::runtime::model::{builtin_presets, FwdScratch, NativeModel, QUAD_DIM};
+use crate::runtime::{
+    validate_args, Arg, Backend, CallSession, ParallelPolicy, ProgramImpl, Session, Value,
+};
 use crate::util::error::{bail, Result};
 use crate::vecmath;
 
 /// Program kinds the native backend implements per preset.
-pub const NATIVE_KINDS: [&str; 11] = [
+pub const NATIVE_KINDS: [&str; 12] = [
     "init",
     "sample_u",
     "loss",
+    "loss_pallas",
     "two_point",
     "eval_logits",
     "conmezo_step",
@@ -47,17 +58,28 @@ pub const ADAM_WD: f32 = 0.0;
 
 pub struct NativeBackend {
     manifest: Manifest,
+    policy: ParallelPolicy,
 }
 
 impl NativeBackend {
-    /// Backend over the built-in presets (nano/tiny/small/medium/xl).
+    /// Backend over the built-in presets (nano/tiny/small/medium/xl),
+    /// single-threaded kernels.
     pub fn new() -> NativeBackend {
-        Self::with_presets(builtin_presets())
+        Self::with_policy(ParallelPolicy::single())
+    }
+
+    /// Built-in presets with an explicit GEMM thread policy.
+    pub fn with_policy(policy: ParallelPolicy) -> NativeBackend {
+        Self::with_presets_policy(builtin_presets(), policy)
     }
 
     /// Backend over an explicit preset list (tests/fixtures use this to run
     /// custom geometries).
     pub fn with_presets(presets: Vec<PresetMeta>) -> NativeBackend {
+        Self::with_presets_policy(presets, ParallelPolicy::single())
+    }
+
+    pub fn with_presets_policy(presets: Vec<PresetMeta>, policy: ParallelPolicy) -> NativeBackend {
         let mut programs = BTreeMap::new();
         for (kind, outs) in [("loss", "loss"), ("grad", "grad")] {
             let name = format!("quad_{kind}");
@@ -81,7 +103,7 @@ impl NativeBackend {
             }
             preset_map.insert(meta.name.clone(), meta);
         }
-        NativeBackend { manifest: Manifest { programs, presets: preset_map } }
+        NativeBackend { manifest: Manifest { programs, presets: preset_map }, policy }
     }
 }
 
@@ -100,12 +122,15 @@ impl Backend for NativeBackend {
         &self.manifest
     }
 
-    fn instantiate(&self, spec: &ProgramSpec) -> Result<Box<dyn ProgramImpl>> {
+    fn bind(&self, spec: &ProgramSpec) -> Result<Box<dyn Session>> {
         if spec.preset == "quad" {
-            return Ok(Box::new(QuadProgram));
+            // the synthetic quadratic is microseconds per eval — the
+            // per-call adapter is plenty
+            return Ok(Box::new(CallSession::new(spec.clone(), Box::new(QuadProgram))));
         }
         let meta = self.manifest.preset(&spec.preset)?.clone();
-        Ok(Box::new(NativeProgram { model: NativeModel::new(meta) }))
+        let model = NativeModel::new(meta).with_threads(self.policy.threads);
+        Ok(Box::new(NativeSession::new(spec.clone(), model)))
     }
 }
 
@@ -131,7 +156,7 @@ fn program_spec(meta: &PresetMeta, kind: &str) -> ProgramSpec {
     let (inputs, outputs): (Vec<TensorSpec>, Vec<&str>) = match kind {
         "init" => (vec![iscalar("seed")], vec!["params"]),
         "sample_u" => (vec![iscalar("seed")], vec!["u"]),
-        "loss" => (with(vec![vec("params")], batch()), vec!["loss"]),
+        "loss" | "loss_pallas" => (with(vec![vec("params")], batch()), vec!["loss"]),
         "two_point" => (
             with(vec![vec("params"), vec("z"), scalar("lam")], batch()),
             vec!["loss_plus", "loss_minus"],
@@ -249,156 +274,265 @@ fn arg_i32(a: &Arg<'_>, what: &str) -> Result<i32> {
     }
 }
 
+/// (input_ids, targets, mask) starting at position `at`.
+fn batch_at<'a>(args: &[Arg<'a>], at: usize) -> Result<(&'a [i32], &'a [i32], &'a [f32])> {
+    Ok((
+        arg_i32s(&args[at], "input_ids")?,
+        arg_i32s(&args[at + 1], "targets")?,
+        arg_f32s(&args[at + 2], "mask")?,
+    ))
+}
+
 // ---------------------------------------------------------------------------
-// Per-preset program execution
+// Per-preset bound sessions
 // ---------------------------------------------------------------------------
 
-struct NativeProgram {
+/// One bound native program: the model plus every workspace its kind needs,
+/// allocated once at bind time.
+pub struct NativeSession {
+    spec: ProgramSpec,
     model: NativeModel,
+    /// transformer forward scratch (all kinds that run the model)
+    fwd: Option<FwdScratch>,
+    /// reverse-pass workspace (first-order kinds)
+    grad: Option<GradWorkspace>,
+    /// perturbed-parameter buffer x ± lam z for the antithetic pair
+    xs: Vec<f32>,
+    /// raw direction u (ZO step kinds)
+    u: Vec<f32>,
+    /// cone direction z (conmezo_step)
+    z: Vec<f32>,
+    /// reusable output slots, sized once from the manifest signature
+    outs: Vec<Value>,
 }
 
-impl NativeProgram {
-    fn batch<'a>(&self, args: &[Arg<'a>], at: usize) -> Result<(&'a [i32], &'a [i32], &'a [f32])> {
-        Ok((
-            arg_i32s(&args[at], "input_ids")?,
-            arg_i32s(&args[at + 1], "targets")?,
-            arg_f32s(&args[at + 2], "mask")?,
-        ))
-    }
+/// Output buffer size by manifest output name.
+fn out_slot(meta: &PresetMeta, name: &str) -> Value {
+    let n = match name {
+        "params" | "m" | "u" | "mu" | "nu" => meta.d_pad,
+        "logits" => meta.batch * meta.vocab,
+        _ => 1, // scalars: loss, loss_plus, loss_minus, proj_grad, cos2
+    };
+    Value::F32(vec![0.0; n])
+}
 
-    /// (f(x + lam z), f(x - lam z)) on one batch, reusing one scratch buffer.
-    fn two_point_losses(
-        &self,
-        params: &[f32],
-        z: &[f32],
-        lam: f32,
-        ids: &[i32],
-        tgt: &[i32],
-        mask: &[f32],
-    ) -> (f32, f32) {
-        let m = &self.model.meta;
-        let (b, s) = (m.batch, m.seq_len);
-        let mut xs = vec![0f32; params.len()];
-        vecmath::axpy_into(lam, z, params, &mut xs);
-        let lp = self.model.loss(&xs, ids, tgt, mask, b, s);
-        vecmath::axpy_into(-lam, z, params, &mut xs);
-        let lm = self.model.loss(&xs, ids, tgt, mask, b, s);
-        (lp, lm)
+/// The f32 payload of an output slot.
+fn f32_mut(v: &mut Value) -> &mut [f32] {
+    match v {
+        Value::F32(x) => x.as_mut_slice(),
+        Value::I32(_) => unreachable!("native output slots are f32"),
     }
 }
 
-impl ProgramImpl for NativeProgram {
-    fn call(&self, spec: &ProgramSpec, args: &[Arg<'_>]) -> Result<Vec<Value>> {
-        let meta = &self.model.meta;
-        let (b, s) = (meta.batch, meta.seq_len);
-        match spec.kind.as_str() {
+/// (f(x + lam z), f(x - lam z)) on one batch over one scratch set — the
+/// antithetic-pair core shared by the `two_point` program, the fused ZO
+/// steps and the [`Session::two_point`] fast path.
+#[allow(clippy::too_many_arguments)]
+fn pair_losses(
+    model: &NativeModel,
+    fwd: &mut FwdScratch,
+    xs: &mut [f32],
+    params: &[f32],
+    z: &[f32],
+    lam: f32,
+    ids: &[i32],
+    tgt: &[i32],
+    mask: &[f32],
+) -> (f32, f32) {
+    let (b, s) = (model.meta.batch, model.meta.seq_len);
+    vecmath::axpy_into(lam, z, params, xs);
+    let lp = model.loss_with(xs, ids, tgt, mask, b, s, fwd);
+    vecmath::axpy_into(-lam, z, params, xs);
+    let lm = model.loss_with(xs, ids, tgt, mask, b, s, fwd);
+    (lp, lm)
+}
+
+impl NativeSession {
+    fn new(spec: ProgramSpec, model: NativeModel) -> NativeSession {
+        let meta = &model.meta;
+        let kind = spec.kind.as_str();
+        let needs_fwd = !matches!(kind, "init" | "sample_u");
+        let needs_grad = matches!(kind, "fo_sgd_step" | "fo_adamw_step" | "grad_cos2");
+        let needs_pair =
+            matches!(kind, "two_point" | "conmezo_step" | "mezo_step" | "mezo_momentum_step");
+        let needs_u = matches!(kind, "conmezo_step" | "mezo_step" | "mezo_momentum_step");
+        let needs_z = kind == "conmezo_step";
+        let d = meta.d_pad;
+        let fwd = needs_fwd.then(|| FwdScratch::new(meta));
+        let grad = needs_grad.then(|| GradWorkspace::new(meta));
+        let outs: Vec<Value> = spec.outputs.iter().map(|name| out_slot(meta, name)).collect();
+        NativeSession {
+            spec,
+            fwd,
+            grad,
+            xs: vec![0.0; if needs_pair { d } else { 0 }],
+            u: vec![0.0; if needs_u { d } else { 0 }],
+            z: vec![0.0; if needs_z { d } else { 0 }],
+            outs,
+            model,
+        }
+    }
+
+    fn execute(&mut self, args: &[Arg<'_>]) -> Result<()> {
+        let (b, s) = (self.model.meta.batch, self.model.meta.seq_len);
+        let d_raw = self.model.meta.d_raw;
+        match self.spec.kind.as_str() {
             "init" => {
                 let seed = arg_i32(&args[0], "seed")?;
-                Ok(vec![Value::F32(self.model.init_flat(seed))])
+                self.model.init_into(seed, f32_mut(&mut self.outs[0]));
             }
             "sample_u" => {
                 let seed = arg_i32(&args[0], "seed")?;
-                Ok(vec![Value::F32(self.model.sample_u(seed))])
+                self.model.sample_u_into(seed, f32_mut(&mut self.outs[0]));
             }
-            "loss" => {
+            "loss" | "loss_pallas" => {
                 let params = arg_f32s(&args[0], "params")?;
-                let (ids, tgt, mask) = self.batch(args, 1)?;
-                let l = self.model.loss(params, ids, tgt, mask, b, s);
-                Ok(vec![Value::scalar(l)])
+                let (ids, tgt, mask) = batch_at(args, 1)?;
+                let fwd = self.fwd.as_mut().expect("loss session owns forward scratch");
+                let l = if self.spec.kind == "loss_pallas" {
+                    self.model.loss_pallas_with(params, ids, tgt, mask, b, s, fwd)
+                } else {
+                    self.model.loss_with(params, ids, tgt, mask, b, s, fwd)
+                };
+                f32_mut(&mut self.outs[0])[0] = l;
             }
             "two_point" => {
                 let params = arg_f32s(&args[0], "params")?;
                 let z = arg_f32s(&args[1], "z")?;
                 let lam = arg_f32(&args[2], "lam")?;
-                let (ids, tgt, mask) = self.batch(args, 3)?;
-                let (lp, lm) = self.two_point_losses(params, z, lam, ids, tgt, mask);
-                Ok(vec![Value::scalar(lp), Value::scalar(lm)])
+                let (ids, tgt, mask) = batch_at(args, 3)?;
+                let (lp, lm) = pair_losses(
+                    &self.model,
+                    self.fwd.as_mut().expect("two_point session owns forward scratch"),
+                    &mut self.xs,
+                    params,
+                    z,
+                    lam,
+                    ids,
+                    tgt,
+                    mask,
+                );
+                f32_mut(&mut self.outs[0])[0] = lp;
+                f32_mut(&mut self.outs[1])[0] = lm;
             }
             "eval_logits" => {
                 let params = arg_f32s(&args[0], "params")?;
                 let ids = arg_i32s(&args[1], "input_ids")?;
                 let pos = arg_i32s(&args[2], "pos")?;
-                Ok(vec![Value::F32(self.model.eval_logits(params, ids, pos, b, s))])
+                let fwd = self.fwd.as_mut().expect("eval session owns forward scratch");
+                self.model.eval_logits_with(params, ids, pos, b, s, fwd, f32_mut(&mut self.outs[0]));
             }
             "conmezo_step" => {
                 let params = arg_f32s(&args[0], "params")?;
-                let m = arg_f32s(&args[1], "m")?;
+                let m_in = arg_f32s(&args[1], "m")?;
                 let seed = arg_i32(&args[2], "seed")?;
                 let theta = arg_f32(&args[3], "theta")?;
                 let beta = arg_f32(&args[4], "beta")?;
                 let eta = arg_f32(&args[5], "eta")?;
                 let lam = arg_f32(&args[6], "lam")?;
-                let (ids, tgt, mask) = self.batch(args, 7)?;
-                let u = self.model.sample_u(seed);
-                let mut z = vec![0f32; meta.d_pad];
-                vecmath::cone_direction(m, &u, theta, meta.d_raw, &mut z);
-                let (lp, lm) = self.two_point_losses(params, &z, lam, ids, tgt, mask);
+                let (ids, tgt, mask) = batch_at(args, 7)?;
+                self.model.sample_u_into(seed, &mut self.u);
+                vecmath::cone_direction(m_in, &self.u, theta, d_raw, &mut self.z);
+                let (lp, lm) = pair_losses(
+                    &self.model,
+                    self.fwd.as_mut().expect("step session owns forward scratch"),
+                    &mut self.xs,
+                    params,
+                    &self.z,
+                    lam,
+                    ids,
+                    tgt,
+                    mask,
+                );
                 let g = ((lp as f64 - lm as f64) / (2.0 * lam as f64)) as f32;
-                let mut x_new = params.to_vec();
-                let mut m_new = m.to_vec();
-                vecmath::zo_update(&mut x_new, &mut m_new, &z, g, eta, beta);
-                Ok(vec![
-                    Value::F32(x_new),
-                    Value::F32(m_new),
-                    Value::scalar(lp),
-                    Value::scalar(lm),
-                    Value::scalar(g),
-                ])
+                let [o_x, o_m, o_lp, o_lm, o_g] = &mut self.outs[..] else {
+                    unreachable!("conmezo_step has 5 outputs")
+                };
+                let x_new = f32_mut(o_x);
+                let m_new = f32_mut(o_m);
+                x_new.copy_from_slice(params);
+                m_new.copy_from_slice(m_in);
+                vecmath::zo_update(x_new, m_new, &self.z, g, eta, beta);
+                f32_mut(o_lp)[0] = lp;
+                f32_mut(o_lm)[0] = lm;
+                f32_mut(o_g)[0] = g;
             }
             "mezo_step" => {
                 let params = arg_f32s(&args[0], "params")?;
                 let seed = arg_i32(&args[1], "seed")?;
                 let eta = arg_f32(&args[2], "eta")?;
                 let lam = arg_f32(&args[3], "lam")?;
-                let (ids, tgt, mask) = self.batch(args, 4)?;
-                let z = self.model.sample_u(seed);
-                let (lp, lm) = self.two_point_losses(params, &z, lam, ids, tgt, mask);
+                let (ids, tgt, mask) = batch_at(args, 4)?;
+                self.model.sample_u_into(seed, &mut self.u);
+                let (lp, lm) = pair_losses(
+                    &self.model,
+                    self.fwd.as_mut().expect("step session owns forward scratch"),
+                    &mut self.xs,
+                    params,
+                    &self.u,
+                    lam,
+                    ids,
+                    tgt,
+                    mask,
+                );
                 let g = ((lp as f64 - lm as f64) / (2.0 * lam as f64)) as f32;
-                let mut x_new = vec![0f32; params.len()];
-                vecmath::axpy_into(-eta * g, &z, params, &mut x_new);
-                Ok(vec![
-                    Value::F32(x_new),
-                    Value::scalar(lp),
-                    Value::scalar(lm),
-                    Value::scalar(g),
-                ])
+                let [o_x, o_lp, o_lm, o_g] = &mut self.outs[..] else {
+                    unreachable!("mezo_step has 4 outputs")
+                };
+                vecmath::axpy_into(-eta * g, &self.u, params, f32_mut(o_x));
+                f32_mut(o_lp)[0] = lp;
+                f32_mut(o_lm)[0] = lm;
+                f32_mut(o_g)[0] = g;
             }
             "mezo_momentum_step" => {
                 let params = arg_f32s(&args[0], "params")?;
-                let m = arg_f32s(&args[1], "m")?;
+                let m_in = arg_f32s(&args[1], "m")?;
                 let seed = arg_i32(&args[2], "seed")?;
                 let beta = arg_f32(&args[3], "beta")?;
                 let eta = arg_f32(&args[4], "eta")?;
                 let lam = arg_f32(&args[5], "lam")?;
-                let (ids, tgt, mask) = self.batch(args, 6)?;
-                let z = self.model.sample_u(seed);
-                let (lp, lm) = self.two_point_losses(params, &z, lam, ids, tgt, mask);
+                let (ids, tgt, mask) = batch_at(args, 6)?;
+                self.model.sample_u_into(seed, &mut self.u);
+                let (lp, lm) = pair_losses(
+                    &self.model,
+                    self.fwd.as_mut().expect("step session owns forward scratch"),
+                    &mut self.xs,
+                    params,
+                    &self.u,
+                    lam,
+                    ids,
+                    tgt,
+                    mask,
+                );
                 let g = ((lp as f64 - lm as f64) / (2.0 * lam as f64)) as f32;
-                // m' = beta m + (1-beta) g z ; x' = x - eta m'
+                // m' = beta m + (1-beta) g u ; x' = x - eta m'
                 // (same float ops as vecmath::zo_update's momentum pass)
                 let cm = (1.0 - beta) * g;
-                let mut m_new = vec![0f32; m.len()];
-                for i in 0..m.len() {
-                    m_new[i] = beta * m[i] + cm * z[i];
+                let [o_x, o_m, o_lp, o_lm, o_g] = &mut self.outs[..] else {
+                    unreachable!("mezo_momentum_step has 5 outputs")
+                };
+                let m_new = f32_mut(o_m);
+                for i in 0..m_in.len() {
+                    m_new[i] = beta * m_in[i] + cm * self.u[i];
                 }
-                let mut x_new = vec![0f32; params.len()];
-                vecmath::axpy_into(-eta, &m_new, params, &mut x_new);
-                Ok(vec![
-                    Value::F32(x_new),
-                    Value::F32(m_new),
-                    Value::scalar(lp),
-                    Value::scalar(lm),
-                    Value::scalar(g),
-                ])
+                vecmath::axpy_into(-eta, m_new, params, f32_mut(o_x));
+                f32_mut(o_lp)[0] = lp;
+                f32_mut(o_lm)[0] = lm;
+                f32_mut(o_g)[0] = g;
             }
             "fo_sgd_step" => {
                 let params = arg_f32s(&args[0], "params")?;
                 let eta = arg_f32(&args[1], "eta")?;
-                let (ids, tgt, mask) = self.batch(args, 2)?;
-                let lg = autograd::loss_and_grad(&self.model, params, ids, tgt, mask, b, s);
-                let mut x_new = vec![0f32; params.len()];
-                vecmath::axpy_into(-eta, &lg.grad, params, &mut x_new);
-                Ok(vec![Value::F32(x_new), Value::scalar(lg.loss)])
+                let (ids, tgt, mask) = batch_at(args, 2)?;
+                let fwd = self.fwd.as_mut().expect("fo session owns forward scratch");
+                let gw = self.grad.as_mut().expect("fo session owns grad workspace");
+                let loss =
+                    autograd::loss_and_grad_ws(&self.model, params, ids, tgt, mask, b, s, fwd, gw);
+                let [o_x, o_loss] = &mut self.outs[..] else {
+                    unreachable!("fo_sgd_step has 2 outputs")
+                };
+                vecmath::axpy_into(-eta, &gw.grad, params, f32_mut(o_x));
+                f32_mut(o_loss)[0] = loss;
             }
             "fo_adamw_step" => {
                 let params = arg_f32s(&args[0], "params")?;
@@ -406,17 +540,23 @@ impl ProgramImpl for NativeProgram {
                 let nu = arg_f32s(&args[2], "nu")?;
                 let t = arg_f32(&args[3], "t")?;
                 let eta = arg_f32(&args[4], "eta")?;
-                let (ids, tgt, mask) = self.batch(args, 5)?;
-                let lg = autograd::loss_and_grad(&self.model, params, ids, tgt, mask, b, s);
+                let (ids, tgt, mask) = batch_at(args, 5)?;
+                let fwd = self.fwd.as_mut().expect("fo session owns forward scratch");
+                let gw = self.grad.as_mut().expect("fo session owns grad workspace");
+                let loss =
+                    autograd::loss_and_grad_ws(&self.model, params, ids, tgt, mask, b, s, fwd, gw);
                 // AdamW with bias correction, t the 1-based step counter
                 // (same float ops as python/compile/steps.py::fo_adamw_step)
                 let bc1 = 1.0 - ADAM_B1.powf(t);
                 let bc2 = 1.0 - ADAM_B2.powf(t);
-                let mut x_new = vec![0f32; params.len()];
-                let mut mu_new = vec![0f32; params.len()];
-                let mut nu_new = vec![0f32; params.len()];
+                let [o_x, o_mu, o_nu, o_loss] = &mut self.outs[..] else {
+                    unreachable!("fo_adamw_step has 4 outputs")
+                };
+                let x_new = f32_mut(o_x);
+                let mu_new = f32_mut(o_mu);
+                let nu_new = f32_mut(o_nu);
                 for i in 0..params.len() {
-                    let g = lg.grad[i];
+                    let g = gw.grad[i];
                     let m1 = ADAM_B1 * mu[i] + (1.0 - ADAM_B1) * g;
                     let v1 = ADAM_B2 * nu[i] + (1.0 - ADAM_B2) * g * g;
                     let step = (m1 / bc1) / ((v1 / bc2).sqrt() + ADAM_EPS) + ADAM_WD * params[i];
@@ -424,25 +564,79 @@ impl ProgramImpl for NativeProgram {
                     mu_new[i] = m1;
                     nu_new[i] = v1;
                 }
-                Ok(vec![
-                    Value::F32(x_new),
-                    Value::F32(mu_new),
-                    Value::F32(nu_new),
-                    Value::scalar(lg.loss),
-                ])
+                f32_mut(o_loss)[0] = loss;
             }
             "grad_cos2" => {
                 let params = arg_f32s(&args[0], "params")?;
-                let m = arg_f32s(&args[1], "m")?;
-                let (ids, tgt, mask) = self.batch(args, 2)?;
-                let lg = autograd::loss_and_grad(&self.model, params, ids, tgt, mask, b, s);
-                Ok(vec![
-                    Value::scalar(vecmath::cos2(m, &lg.grad) as f32),
-                    Value::scalar(lg.loss),
-                ])
+                let m_in = arg_f32s(&args[1], "m")?;
+                let (ids, tgt, mask) = batch_at(args, 2)?;
+                let fwd = self.fwd.as_mut().expect("probe session owns forward scratch");
+                let gw = self.grad.as_mut().expect("probe session owns grad workspace");
+                let loss =
+                    autograd::loss_and_grad_ws(&self.model, params, ids, tgt, mask, b, s, fwd, gw);
+                let c = vecmath::cos2(m_in, &gw.grad) as f32;
+                f32_mut(&mut self.outs[0])[0] = c;
+                f32_mut(&mut self.outs[1])[0] = loss;
             }
             other => bail!("native backend cannot execute program kind {other:?}"),
         }
+        Ok(())
+    }
+}
+
+impl Session for NativeSession {
+    fn spec(&self) -> &ProgramSpec {
+        &self.spec
+    }
+
+    fn run(&mut self, args: &[Arg<'_>]) -> Result<&[Value]> {
+        validate_args(&self.spec, args)?;
+        self.execute(args)?;
+        Ok(&self.outs)
+    }
+
+    /// The antithetic-pair fast path: both SPSA evals over one scratch set,
+    /// no Arg packing, no output materialization.
+    fn two_point(
+        &mut self,
+        x: &[f32],
+        z: &[f32],
+        lam: f32,
+        ids: &[i32],
+        targets: &[i32],
+        mask: &[f32],
+    ) -> Result<(f64, f64)> {
+        if self.spec.kind != "two_point" {
+            bail!("{}: the two_point fast path needs a two_point session", self.spec.name);
+        }
+        let meta = &self.model.meta;
+        let r = meta.batch * meta.seq_len;
+        if x.len() != meta.d_pad || z.len() != meta.d_pad {
+            bail!(
+                "{}: two_point expects x/z of length {}, got {}/{}",
+                self.spec.name,
+                meta.d_pad,
+                x.len(),
+                z.len()
+            );
+        }
+        if ids.len() != r || targets.len() != r || mask.len() != r {
+            bail!("{}: two_point batch must have {r} tokens", self.spec.name);
+        }
+        let (lp, lm) = pair_losses(
+            &self.model,
+            self.fwd.as_mut().expect("two_point session owns forward scratch"),
+            &mut self.xs,
+            x,
+            z,
+            lam,
+            ids,
+            targets,
+            mask,
+        );
+        f32_mut(&mut self.outs[0])[0] = lp;
+        f32_mut(&mut self.outs[1])[0] = lm;
+        Ok((lp as f64, lm as f64))
     }
 }
 
@@ -477,7 +671,7 @@ mod tests {
     use crate::runtime::{lit_f32, lit_vec_f32, Runtime};
 
     fn rt() -> Runtime {
-        Runtime::native()
+        Runtime::native_with(ParallelPolicy::single())
     }
 
     #[test]
@@ -492,12 +686,20 @@ mod tests {
             }
         }
         assert!(rt.manifest().program("quad_loss").is_ok());
-        // the first-order programs are native now (reverse-mode autograd);
+        // loss_pallas is native now (kernel-composition attention twin);
         // only genuinely unknown names yield the named error
+        assert!(rt.manifest().program("nano_loss_pallas").is_ok());
         assert!(rt.manifest().program("nano_fo_sgd_step").is_ok());
-        assert!(rt.manifest().program("nano_grad_cos2").is_ok());
-        let err = rt.manifest().program("nano_loss_pallas").unwrap_err().to_string();
+        let err = rt.manifest().program("nano_flash_loss").unwrap_err().to_string();
         assert!(err.contains("not in this backend's manifest"), "{err}");
+    }
+
+    fn nano_batch(meta: &PresetMeta) -> (Vec<i32>, Vec<i32>, Vec<f32>, Vec<usize>) {
+        let ids = vec![1i32; meta.batch * meta.seq_len];
+        let tgt = vec![4i32; meta.batch * meta.seq_len];
+        let mut mask = vec![0f32; meta.batch * meta.seq_len];
+        mask[meta.seq_len - 1] = 1.0;
+        (ids, tgt, mask, vec![meta.batch, meta.seq_len])
     }
 
     #[test]
@@ -508,11 +710,7 @@ mod tests {
         let params = lit_vec_f32(&init.call(&[Arg::I32(1)]).unwrap()[0]).unwrap();
         assert_eq!(params.len(), meta.d_pad);
         let loss = rt.load_kind("nano", "loss").unwrap();
-        let ids = vec![1i32; meta.batch * meta.seq_len];
-        let tgt = vec![4i32; meta.batch * meta.seq_len];
-        let mut mask = vec![0f32; meta.batch * meta.seq_len];
-        mask[meta.seq_len - 1] = 1.0;
-        let dims = vec![meta.batch, meta.seq_len];
+        let (ids, tgt, mask, dims) = nano_batch(&meta);
         let outs = loss
             .call(&[
                 Arg::VecF32(&params),
@@ -523,6 +721,96 @@ mod tests {
             .unwrap();
         let l = lit_f32(&outs[0]).unwrap();
         assert!(l.is_finite() && l > 0.0);
+    }
+
+    #[test]
+    fn loss_pallas_program_matches_loss() {
+        // the kernel-ablation twin: same loss within f32 kernel-schedule
+        // tolerance, so the ablation bench runs fully offline
+        let rt = rt();
+        let meta = rt.preset("nano").unwrap().clone();
+        let init = rt.load_kind("nano", "init").unwrap();
+        let params = lit_vec_f32(&init.call(&[Arg::I32(8)]).unwrap()[0]).unwrap();
+        let (ids, tgt, mask, dims) = nano_batch(&meta);
+        let call = |kind: &str| {
+            let prog = rt.load_kind("nano", kind).unwrap();
+            let outs = prog
+                .call(&[
+                    Arg::VecF32(&params),
+                    Arg::TensorI32(&ids, dims.clone()),
+                    Arg::TensorI32(&tgt, dims.clone()),
+                    Arg::TensorF32(&mask, dims.clone()),
+                ])
+                .unwrap();
+            lit_f32(&outs[0]).unwrap()
+        };
+        let (l, lp) = (call("loss"), call("loss_pallas"));
+        assert!(
+            (l - lp).abs() <= 1e-5 * l.abs().max(1.0),
+            "pallas twin diverged: {l} vs {lp}"
+        );
+    }
+
+    #[test]
+    fn session_outputs_are_reused_not_regrown() {
+        // the workspace-reuse contract: repeated run() returns bit-identical
+        // results from the SAME output buffers (no allocation growth)
+        let rt = rt();
+        let meta = rt.preset("nano").unwrap().clone();
+        let mut init = rt.bind_kind("nano", "init").unwrap();
+        let params = lit_vec_f32(&init.run(&[Arg::I32(1)]).unwrap()[0]).unwrap();
+        let mut sess = rt.bind_kind("nano", "loss").unwrap();
+        let (ids, tgt, mask, dims) = nano_batch(&meta);
+        let args = |d: &Vec<usize>| {
+            [
+                Arg::VecF32(&params),
+                Arg::TensorI32(&ids, d.clone()),
+                Arg::TensorI32(&tgt, d.clone()),
+                Arg::TensorF32(&mask, d.clone()),
+            ]
+        };
+        let (p1, v1) = match &sess.run(&args(&dims)).unwrap()[0] {
+            Value::F32(v) => (v.as_ptr(), v[0]),
+            _ => panic!("loss output must be f32"),
+        };
+        for _ in 0..3 {
+            let (p2, v2) = match &sess.run(&args(&dims)).unwrap()[0] {
+                Value::F32(v) => (v.as_ptr(), v[0]),
+                _ => panic!("loss output must be f32"),
+            };
+            assert_eq!(v1, v2, "repeated run must replay exactly");
+            assert_eq!(p1, p2, "output buffer must be reused, not reallocated");
+        }
+    }
+
+    #[test]
+    fn two_point_fast_path_matches_run() {
+        let rt = rt();
+        let meta = rt.preset("nano").unwrap().clone();
+        let init = rt.load_kind("nano", "init").unwrap();
+        let params = lit_vec_f32(&init.call(&[Arg::I32(2)]).unwrap()[0]).unwrap();
+        let sample = rt.load_kind("nano", "sample_u").unwrap();
+        let z = lit_vec_f32(&sample.call(&[Arg::I32(5)]).unwrap()[0]).unwrap();
+        let (ids, tgt, mask, dims) = nano_batch(&meta);
+        let lam = 1e-3f32;
+        let mut sess = rt.bind_kind("nano", "two_point").unwrap();
+        let (lp_fast, lm_fast) = sess.two_point(&params, &z, lam, &ids, &tgt, &mask).unwrap();
+        let outs = sess
+            .run(&[
+                Arg::VecF32(&params),
+                Arg::VecF32(&z),
+                Arg::F32(lam),
+                Arg::TensorI32(&ids, dims.clone()),
+                Arg::TensorI32(&tgt, dims.clone()),
+                Arg::TensorF32(&mask, dims),
+            ])
+            .unwrap();
+        assert_eq!(lp_fast as f32, lit_f32(&outs[0]).unwrap());
+        assert_eq!(lm_fast as f32, lit_f32(&outs[1]).unwrap());
+        // wrong-kind sessions refuse the fast path with a named error
+        let mut loss_sess = rt.bind_kind("nano", "loss").unwrap();
+        let err = loss_sess.two_point(&params, &z, lam, &ids, &tgt, &mask).unwrap_err();
+        assert!(err.to_string().contains("two_point"), "{err}");
     }
 
     #[test]

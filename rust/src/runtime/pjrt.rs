@@ -18,7 +18,7 @@
 use std::path::{Path, PathBuf};
 
 use crate::runtime::manifest::Manifest;
-use crate::runtime::{Arg, Backend, ProgramImpl, ProgramSpec, Value};
+use crate::runtime::{Arg, Backend, CallSession, ProgramImpl, ProgramSpec, Session, Value};
 use crate::util::error::{anyhow, bail, Context, Result};
 
 #[cfg(not(feature = "xla"))]
@@ -190,7 +190,7 @@ impl Backend for PjrtBackend {
         &self.manifest
     }
 
-    fn instantiate(&self, spec: &ProgramSpec) -> Result<Box<dyn ProgramImpl>> {
+    fn bind(&self, spec: &ProgramSpec) -> Result<Box<dyn Session>> {
         let path = self.dir.join(&spec.file);
         let proto = xla::HloModuleProto::from_text_file(&path)
             .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
@@ -199,7 +199,9 @@ impl Backend for PjrtBackend {
             .client
             .compile(&comp)
             .map_err(|e| anyhow!("compiling {}: {e:?}", spec.name))?;
-        Ok(Box::new(PjrtProgram { exe }))
+        // PJRT buffers stay device-managed, so the per-call adapter is the
+        // session here; workspace reuse is XLA's job on this backend
+        Ok(Box::new(CallSession::new(spec.clone(), Box::new(PjrtProgram { exe }))))
     }
 }
 

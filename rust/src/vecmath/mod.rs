@@ -6,6 +6,14 @@
 //! math. Loops are written as chunked, multiplier-accumulator-friendly code
 //! that LLVM auto-vectorizes; `cargo bench optimizer_math` tracks their
 //! throughput against the memory-bandwidth roofline (EXPERIMENTS.md §Perf).
+//!
+//! The dense GEMMs (`matmul` / `matmul_at` / `matmul_bt`) additionally have
+//! `*_threaded` twins that split the output rows across scoped threads
+//! (`runtime::ParallelPolicy` supplies the count). Each output element is
+//! produced by exactly one thread with the same per-element accumulation
+//! order as the single-threaded kernel, so threaded results are
+//! bit-identical at every thread count — pinned by
+//! `threaded_gemms_bit_identical_across_thread_counts`.
 
 /// y <- y + a * x (BLAS axpy).
 pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
@@ -116,6 +124,97 @@ const MATMUL_MR: usize = 4;
 /// registers/L1 across the whole k-loop.
 const MATMUL_NR: usize = 64;
 
+/// Minimum per-thread MAC count before a threaded GEMM actually spawns:
+/// below this, `std::thread::scope` setup dominates the kernel itself
+/// (nano/tiny-preset GEMMs always stay single-threaded).
+const PAR_MIN_MACS_PER_THREAD: usize = 1 << 18;
+
+/// Effective worker count for a row-parallel GEMM over `rows` output rows
+/// with `macs_per_row` multiply-accumulates each.
+fn effective_threads(threads: usize, rows: usize, macs_per_row: usize) -> usize {
+    if threads <= 1 || rows == 0 {
+        return 1;
+    }
+    let by_work = (rows.saturating_mul(macs_per_row) / PAR_MIN_MACS_PER_THREAD).max(1);
+    threads.min(rows).min(by_work)
+}
+
+/// Split `out` into `t` contiguous row-chunks and run `span` on each from
+/// its own scoped thread. Every output element is written by exactly one
+/// thread with the identical per-element accumulation order the
+/// single-threaded kernel uses, so the result is bit-identical for every
+/// thread count.
+fn par_rows(
+    out: &mut [f32],
+    rows: usize,
+    n: usize,
+    t: usize,
+    span: impl Fn(usize, usize, &mut [f32]) + Sync,
+) {
+    if t <= 1 {
+        span(0, rows, out);
+        return;
+    }
+    let base = rows / t;
+    let extra = rows % t;
+    std::thread::scope(|scope| {
+        let mut rest = out;
+        let mut row0 = 0usize;
+        for i in 0..t {
+            let chunk_rows = base + usize::from(i < extra);
+            let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(chunk_rows * n);
+            rest = tail;
+            let span = &span;
+            scope.spawn(move || span(row0, chunk_rows, chunk));
+            row0 += chunk_rows;
+        }
+    });
+}
+
+/// Rows `row0..row0+rows` of a[m, k] @ b[k, n]; `out` holds exactly that
+/// row range. The register-blocked core shared by [`matmul`] and
+/// [`matmul_threaded`].
+fn matmul_span(a: &[f32], b: &[f32], k: usize, n: usize, row0: usize, rows: usize, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), rows * n);
+    let mut acc = [[0f32; MATMUL_NR]; MATMUL_MR];
+    let mut j0 = 0;
+    while j0 < n {
+        let nb = MATMUL_NR.min(n - j0);
+        let mut i0 = 0;
+        while i0 + MATMUL_MR <= rows {
+            for row in acc.iter_mut() {
+                row[..nb].fill(0.0);
+            }
+            for p in 0..k {
+                let brow = &b[p * n + j0..p * n + j0 + nb];
+                for (rr, row) in acc.iter_mut().enumerate() {
+                    let av = a[(row0 + i0 + rr) * k + p];
+                    for (o, &bv) in row[..nb].iter_mut().zip(brow) {
+                        *o += av * bv;
+                    }
+                }
+            }
+            for (rr, row) in acc.iter().enumerate() {
+                out[(i0 + rr) * n + j0..(i0 + rr) * n + j0 + nb].copy_from_slice(&row[..nb]);
+            }
+            i0 += MATMUL_MR;
+        }
+        // remainder rows: plain saxpy over the same j-tile
+        for i in i0..rows {
+            let orow = &mut out[i * n + j0..i * n + j0 + nb];
+            orow.fill(0.0);
+            for p in 0..k {
+                let av = a[(row0 + i) * k + p];
+                let brow = &b[p * n + j0..p * n + j0 + nb];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+        }
+        j0 += nb;
+    }
+}
+
 /// out[m, n] = a[m, k] @ b[k, n], all row-major, register-blocked: a
 /// `MATMUL_MR x MATMUL_NR` accumulator tile is filled across the full inner
 /// dimension before touching `out`, so `b`'s rows are read once per
@@ -129,43 +228,21 @@ pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32
     assert_eq!(a.len(), m * k);
     assert_eq!(b.len(), k * n);
     assert_eq!(out.len(), m * n);
-    let mut acc = [[0f32; MATMUL_NR]; MATMUL_MR];
-    let mut j0 = 0;
-    while j0 < n {
-        let nb = MATMUL_NR.min(n - j0);
-        let mut i0 = 0;
-        while i0 + MATMUL_MR <= m {
-            for row in acc.iter_mut() {
-                row[..nb].fill(0.0);
-            }
-            for p in 0..k {
-                let brow = &b[p * n + j0..p * n + j0 + nb];
-                for (rr, row) in acc.iter_mut().enumerate() {
-                    let av = a[(i0 + rr) * k + p];
-                    for (o, &bv) in row[..nb].iter_mut().zip(brow) {
-                        *o += av * bv;
-                    }
-                }
-            }
-            for (rr, row) in acc.iter().enumerate() {
-                out[(i0 + rr) * n + j0..(i0 + rr) * n + j0 + nb].copy_from_slice(&row[..nb]);
-            }
-            i0 += MATMUL_MR;
-        }
-        // remainder rows: plain saxpy over the same j-tile
-        for i in i0..m {
-            let orow = &mut out[i * n + j0..i * n + j0 + nb];
-            orow.fill(0.0);
-            for p in 0..k {
-                let av = a[i * k + p];
-                let brow = &b[p * n + j0..p * n + j0 + nb];
-                for (o, &bv) in orow.iter_mut().zip(brow) {
-                    *o += av * bv;
-                }
-            }
-        }
-        j0 += nb;
-    }
+    matmul_span(a, b, k, n, 0, m, out);
+}
+
+/// [`matmul`] parallelized over output rows with `std::thread::scope`
+/// (the `ParallelPolicy` thread count flows here from the runtime). Each
+/// thread runs the identical blocked kernel on a disjoint row range, so the
+/// result is bit-identical to [`matmul`] for every `threads` value; tiny
+/// shapes fall back to the single-threaded path (see
+/// [`PAR_MIN_MACS_PER_THREAD`]).
+pub fn matmul_threaded(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32], threads: usize) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(out.len(), m * n);
+    let t = effective_threads(threads, m, k * n);
+    par_rows(out, m, n, t, |row0, rows, chunk| matmul_span(a, b, k, n, row0, rows, chunk));
 }
 
 /// out[k, n] = a[m, k]^T @ d[m, n] — the weight-gradient half of the
@@ -181,19 +258,36 @@ pub fn matmul_at(a: &[f32], d: &[f32], m: usize, k: usize, n: usize, out: &mut [
     assert_eq!(a.len(), m * k);
     assert_eq!(d.len(), m * n);
     assert_eq!(out.len(), k * n);
+    matmul_at_span(a, d, m, k, n, 0, k, out);
+}
+
+/// [`matmul_at`] parallelized over the k output rows (see
+/// [`matmul_threaded`] for the bit-identity contract).
+pub fn matmul_at_threaded(a: &[f32], d: &[f32], m: usize, k: usize, n: usize, out: &mut [f32], threads: usize) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(d.len(), m * n);
+    assert_eq!(out.len(), k * n);
+    let t = effective_threads(threads, k, m * n);
+    par_rows(out, k, n, t, |p0, prows, chunk| matmul_at_span(a, d, m, k, n, p0, prows, chunk));
+}
+
+/// Output rows `p_base..p_base+prows` of a^T @ d; `out` holds exactly that
+/// row range of the [k, n] result.
+fn matmul_at_span(a: &[f32], d: &[f32], m: usize, k: usize, n: usize, p_base: usize, prows: usize, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), prows * n);
     let mut acc = [[0f32; MATMUL_NR]; MATMUL_MR];
     let mut j0 = 0;
     while j0 < n {
         let nb = MATMUL_NR.min(n - j0);
         let mut p0 = 0;
-        while p0 + MATMUL_MR <= k {
+        while p0 + MATMUL_MR <= prows {
             for row in acc.iter_mut() {
                 row[..nb].fill(0.0);
             }
             for i in 0..m {
                 let drow = &d[i * n + j0..i * n + j0 + nb];
                 for (rr, row) in acc.iter_mut().enumerate() {
-                    let av = a[i * k + p0 + rr];
+                    let av = a[i * k + p_base + p0 + rr];
                     for (o, &dv) in row[..nb].iter_mut().zip(drow) {
                         *o += av * dv;
                     }
@@ -205,11 +299,11 @@ pub fn matmul_at(a: &[f32], d: &[f32], m: usize, k: usize, n: usize, out: &mut [
             p0 += MATMUL_MR;
         }
         // remainder out-rows: accumulate the j-tile directly in place
-        for p in p0..k {
+        for p in p0..prows {
             let orow = &mut out[p * n + j0..p * n + j0 + nb];
             orow.fill(0.0);
             for i in 0..m {
-                let av = a[i * k + p];
+                let av = a[i * k + p_base + p];
                 let drow = &d[i * n + j0..i * n + j0 + nb];
                 for (o, &dv) in orow.iter_mut().zip(drow) {
                     *o += av * dv;
@@ -227,8 +321,25 @@ pub fn matmul_bt(a: &[f32], bt: &[f32], m: usize, k: usize, n: usize, out: &mut 
     assert_eq!(a.len(), m * k);
     assert_eq!(bt.len(), n * k);
     assert_eq!(out.len(), m * n);
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
+    matmul_bt_span(a, bt, k, n, 0, m, out);
+}
+
+/// [`matmul_bt`] parallelized over output rows (see [`matmul_threaded`] for
+/// the bit-identity contract). This is the LM-head GEMM — the widest matmul
+/// of the forward — so it threads alongside the projection GEMMs.
+pub fn matmul_bt_threaded(a: &[f32], bt: &[f32], m: usize, k: usize, n: usize, out: &mut [f32], threads: usize) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(bt.len(), n * k);
+    assert_eq!(out.len(), m * n);
+    let t = effective_threads(threads, m, k * n);
+    par_rows(out, m, n, t, |row0, rows, chunk| matmul_bt_span(a, bt, k, n, row0, rows, chunk));
+}
+
+/// Rows `row0..row0+rows` of a @ bt^T; `out` holds exactly that row range.
+fn matmul_bt_span(a: &[f32], bt: &[f32], k: usize, n: usize, row0: usize, rows: usize, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), rows * n);
+    for i in 0..rows {
+        let arow = &a[(row0 + i) * k..(row0 + i + 1) * k];
         let orow = &mut out[i * n..(i + 1) * n];
         for j in 0..n {
             let brow = &bt[j * k..(j + 1) * k];
@@ -790,6 +901,52 @@ mod tests {
             }
             true
         });
+    }
+
+    #[test]
+    fn threaded_gemms_bit_identical_across_thread_counts() {
+        // big enough that the per-thread work gate actually spawns threads
+        // (see PAR_MIN_MACS_PER_THREAD); odd dims straddle the MR/NR tiles
+        // so the per-thread row partition differs from the tile partition
+        let (m, k, n) = (256usize, 96usize, 130usize);
+        let a = randv(m * k, 41);
+        let b = randv(k * n, 42);
+        let mut want = vec![0f32; m * n];
+        matmul(&a, &b, m, k, n, &mut want);
+        let d = randv(m * n, 43);
+        let mut want_at = vec![0f32; k * n];
+        matmul_at(&a, &d, m, k, n, &mut want_at);
+        let bt = randv(n * k, 44);
+        let mut want_bt = vec![0f32; m * n];
+        matmul_bt(&a, &bt, m, k, n, &mut want_bt);
+        for t in [1usize, 2, 3, 5, 8, 64] {
+            assert!(effective_threads(t, m, k * n) >= t.min(8).min(m), "gate too strict for t={t}");
+            let mut got = vec![0f32; m * n];
+            matmul_threaded(&a, &b, m, k, n, &mut got, t);
+            assert_eq!(got, want, "matmul_threaded({t}) != matmul");
+            let mut got_at = vec![0f32; k * n];
+            matmul_at_threaded(&a, &d, m, k, n, &mut got_at, t);
+            assert_eq!(got_at, want_at, "matmul_at_threaded({t}) != matmul_at");
+            let mut got_bt = vec![0f32; m * n];
+            matmul_bt_threaded(&a, &bt, m, k, n, &mut got_bt, t);
+            assert_eq!(got_bt, want_bt, "matmul_bt_threaded({t}) != matmul_bt");
+        }
+    }
+
+    #[test]
+    fn threaded_gemm_small_shapes_fall_back_single() {
+        // below the work gate the threaded entry points must not spawn and
+        // must still be exact; also covers rows < threads
+        for (m, k, n) in [(1usize, 3usize, 2usize), (5, 7, 9), (3, 64, 65)] {
+            let a = randv(m * k, (m * 100 + n) as u64);
+            let b = randv(k * n, (k * 100 + n) as u64);
+            let mut want = vec![0f32; m * n];
+            matmul(&a, &b, m, k, n, &mut want);
+            let mut got = vec![0f32; m * n];
+            matmul_threaded(&a, &b, m, k, n, &mut got, 16);
+            assert_eq!(got, want);
+            assert_eq!(effective_threads(16, m, k * n), 1);
+        }
     }
 
     #[test]

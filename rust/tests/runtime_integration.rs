@@ -19,7 +19,7 @@
 use conmezo::coordinator::{FusedConMeZo, FusedMezo};
 use conmezo::data::{spec, TaskGen, TrainSampler};
 use conmezo::objective::{BatchSource, ModelObjective, NativeQuadratic, Objective};
-use conmezo::runtime::{lit_f32, lit_vec_f32, Arg, Runtime};
+use conmezo::runtime::{lit_f32, lit_vec_f32, Arg, Runtime, Session};
 use conmezo::util::json::Json;
 use conmezo::vecmath;
 
@@ -291,6 +291,127 @@ fn native_first_order_programs_match_jax_fixture() {
 // ---------------------------------------------------------------------------
 // program semantics on the native backend
 // ---------------------------------------------------------------------------
+
+// ---------------------------------------------------------------------------
+// session API: bind-once/run-many vs the legacy Program::call shim
+// ---------------------------------------------------------------------------
+
+#[test]
+fn session_matches_legacy_program_call_bitwise() {
+    // the redesign contract: a bound Session and the legacy load/call shim
+    // must produce byte-identical outputs for the same program + args
+    let rt = runtime();
+    let meta = rt.preset("nano").unwrap().clone();
+    let init = rt.load_kind("nano", "init").unwrap();
+    let params = lit_vec_f32(&init.call(&[Arg::I32(1)]).unwrap()[0]).unwrap();
+    let sample = rt.load_kind("nano", "sample_u").unwrap();
+    let z = lit_vec_f32(&sample.call(&[Arg::I32(7)]).unwrap()[0]).unwrap();
+    let gen = TaskGen::new(spec("sst2").unwrap(), meta.vocab, meta.seq_len);
+    let mut sampler = TrainSampler::new(gen.dataset(32, 1), meta.batch, meta.seq_len, 1, 0);
+    let batch = sampler.next_batch();
+    let dims = vec![meta.batch, meta.seq_len];
+
+    // loss
+    let legacy = rt.load_kind("nano", "loss").unwrap();
+    let want = legacy
+        .call(&[
+            Arg::VecF32(&params),
+            Arg::TensorI32(&batch.input_ids, dims.clone()),
+            Arg::TensorI32(&batch.targets, dims.clone()),
+            Arg::TensorF32(&batch.mask, dims.clone()),
+        ])
+        .unwrap();
+    let mut sess = rt.bind_kind("nano", "loss").unwrap();
+    let got = sess
+        .run(&[
+            Arg::VecF32(&params),
+            Arg::TensorI32(&batch.input_ids, dims.clone()),
+            Arg::TensorI32(&batch.targets, dims.clone()),
+            Arg::TensorF32(&batch.mask, dims.clone()),
+        ])
+        .unwrap();
+    assert_eq!(got, want.as_slice(), "session loss != legacy call loss");
+
+    // two_point (run and the antithetic fast path)
+    let legacy_tp = rt.load_kind("nano", "two_point").unwrap();
+    let want = legacy_tp
+        .call(&[
+            Arg::VecF32(&params),
+            Arg::VecF32(&z),
+            Arg::F32(1e-3),
+            Arg::TensorI32(&batch.input_ids, dims.clone()),
+            Arg::TensorI32(&batch.targets, dims.clone()),
+            Arg::TensorF32(&batch.mask, dims.clone()),
+        ])
+        .unwrap();
+    let mut tp = rt.bind_kind("nano", "two_point").unwrap();
+    let (lp, lm) = tp
+        .two_point(&params, &z, 1e-3, &batch.input_ids, &batch.targets, &batch.mask)
+        .unwrap();
+    assert_eq!(lp as f32, lit_f32(&want[0]).unwrap());
+    assert_eq!(lm as f32, lit_f32(&want[1]).unwrap());
+}
+
+#[test]
+fn session_repeated_runs_replay_exactly() {
+    // workspace-reuse invariant at the objective level: the same (params,
+    // batch) evaluated over and over through one ModelObjective session
+    // set must be bit-stable
+    let rt = runtime();
+    let meta = rt.preset("nano").unwrap().clone();
+    let gen = TaskGen::new(spec("sst2").unwrap(), meta.vocab, meta.seq_len);
+    let batch = TrainSampler::new(gen.dataset(16, 3), meta.batch, meta.seq_len, 3, 0).next_batch();
+    let mut obj = ModelObjective::new(
+        &rt,
+        "nano",
+        Box::new(conmezo::objective::CyclicBatches { batches: vec![batch], i: 0 }),
+    )
+    .unwrap();
+    let init = rt.load_kind("nano", "init").unwrap();
+    let params = lit_vec_f32(&init.call(&[Arg::I32(3)]).unwrap()[0]).unwrap();
+    let sample = rt.load_kind("nano", "sample_u").unwrap();
+    let z = lit_vec_f32(&sample.call(&[Arg::I32(9)]).unwrap()[0]).unwrap();
+    let l0 = obj.loss(&params).unwrap();
+    let p0 = obj.two_point(&params, &z, 1e-3).unwrap();
+    for _ in 0..4 {
+        assert_eq!(obj.loss(&params).unwrap(), l0);
+        assert_eq!(obj.two_point(&params, &z, 1e-3).unwrap(), p0);
+    }
+    // 5 rounds of loss (1 eval) + two_point (2 evals)
+    assert_eq!(obj.evals(), 15, "eval accounting must track the fast path");
+}
+
+#[test]
+fn threaded_runtime_loss_is_bit_identical_to_single() {
+    // end-to-end bit-identity of the ParallelPolicy plumbing: the small
+    // preset has 512 forward rows, enough for the GEMM work gate to
+    // actually spawn threads
+    use conmezo::runtime::ParallelPolicy;
+    let single = Runtime::native_with(ParallelPolicy::single());
+    let meta = single.preset("small").unwrap().clone();
+    let init = single.load_kind("small", "init").unwrap();
+    let params = lit_vec_f32(&init.call(&[Arg::I32(2)]).unwrap()[0]).unwrap();
+    let gen = TaskGen::new(spec("sst2").unwrap(), meta.vocab, meta.seq_len);
+    let batch = TrainSampler::new(gen.dataset(16, 2), meta.batch, meta.seq_len, 2, 0).next_batch();
+    let dims = vec![meta.batch, meta.seq_len];
+    let run = |rt: &Runtime| {
+        let mut sess = rt.bind_kind("small", "loss").unwrap();
+        let outs = sess
+            .run(&[
+                Arg::VecF32(&params),
+                Arg::TensorI32(&batch.input_ids, dims.clone()),
+                Arg::TensorI32(&batch.targets, dims.clone()),
+                Arg::TensorF32(&batch.mask, dims.clone()),
+            ])
+            .unwrap();
+        lit_f32(&outs[0]).unwrap()
+    };
+    let want = run(&single);
+    for t in [2usize, 4, 8] {
+        let rt_mt = Runtime::native_with(ParallelPolicy::from_count(t));
+        assert_eq!(run(&rt_mt), want, "threads={t} diverged");
+    }
+}
 
 #[test]
 fn quad_programs_match_native_objective() {
