@@ -10,9 +10,9 @@
 //!   cargo run --release --example distributed_zo
 
 use conmezo::util::error::Result;
-use conmezo::coordinator::{DistHypers, Evaluator, LocalCluster, ZoWorker};
+use conmezo::coordinator::{model_workers_shared, DistHypers, Evaluator, LocalCluster};
 use conmezo::data::{spec, TaskGen, TrainSampler};
-use conmezo::objective::ModelObjective;
+use conmezo::objective::BatchSource;
 use conmezo::optimizer::BetaSchedule;
 use conmezo::runtime::{lit_vec_f32, Arg, Runtime};
 
@@ -35,20 +35,24 @@ fn main() -> Result<()> {
     );
 
     // each worker gets a private data shard (its own sampler stream) and a
-    // full parameter replica; eval is sharded too
-    let mut workers = Vec::new();
-    for id in 0..n_workers {
-        let train = gen.dataset(512, seed);
-        let sampler = TrainSampler::new(train, meta.batch, meta.seq_len, seed, id as u64);
-        let obj = ModelObjective::new(&rt, preset, Box::new(sampler))?;
-        let mut w = ZoWorker::new(id, x0.clone(), Box::new(obj));
+    // full parameter replica, while all replicas in this process share ONE
+    // bound two_point session (one forward scratch, one WorkerPool); eval
+    // is sharded too
+    let samplers: Vec<Box<dyn BatchSource>> = (0..n_workers)
+        .map(|id| {
+            let train = gen.dataset(512, seed);
+            Box::new(TrainSampler::new(train, meta.batch, meta.seq_len, seed, id as u64))
+                as Box<dyn BatchSource>
+        })
+        .collect();
+    let mut workers = model_workers_shared(&rt, preset, &x0, samplers)?;
+    for (id, w) in workers.iter_mut().enumerate() {
         let shard = gen.dataset(32, seed ^ 0xE0 ^ id as u64);
         let evaluator = Evaluator::new(&rt, preset, shard)?;
         w.eval_fn = Some(Box::new(move |x: &[f32]| match evaluator.evaluate(x) {
             Ok(r) => (r.correct as u64, r.total as u64),
             Err(_) => (0, 0),
         }));
-        workers.push(w);
     }
 
     let mut cluster = LocalCluster::new(workers, seed);

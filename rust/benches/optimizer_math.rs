@@ -7,6 +7,7 @@
 use conmezo::bench::{consume, write_bench_json, write_results, BenchArgs};
 use conmezo::objective::NativeQuadratic;
 use conmezo::optimizer::{self, BetaSchedule, ZoOptimizer};
+use conmezo::parallel::WorkerPool;
 use conmezo::runtime::ParallelPolicy;
 use conmezo::util::rng::Xoshiro256pp;
 use conmezo::vecmath;
@@ -100,6 +101,7 @@ fn main() -> conmezo::util::error::Result<()> {
         }
     }
     let threads = ParallelPolicy::auto().threads;
+    let pool = WorkerPool::new(threads);
     for (m, k, n) in [(128usize, 64usize, 256usize), (512, 256, 768)] {
         let a = randv(m * k, 31);
         let bm = randv(k * n, 32);
@@ -117,7 +119,7 @@ fn main() -> conmezo::util::error::Result<()> {
         results.push(r);
         if threads > 1 {
             let r = b.run_items(&format!("matmul/threaded{threads}/{m}x{k}x{n}"), items, &mut || {
-                vecmath::matmul_threaded(&a, &bm, m, k, n, &mut out, threads);
+                vecmath::matmul_threaded(&a, &bm, m, k, n, &mut out, &pool);
             });
             println!("{}", r.report());
             results.push(r);
@@ -131,10 +133,86 @@ fn main() -> conmezo::util::error::Result<()> {
         results.push(r);
         if threads > 1 {
             let r = b.run_items(&format!("matmul/backward_at_threaded{threads}/{m}x{k}x{n}"), items, &mut || {
-                vecmath::matmul_at_threaded(&a, &d, m, k, n, &mut dw, threads);
+                vecmath::matmul_at_threaded(&a, &d, m, k, n, &mut dw, &pool);
             });
             println!("{}", r.report());
             results.push(r);
+        }
+    }
+
+    // -----------------------------------------------------------------------
+    // worker-pool dispatch: pooled vs per-call scoped spawning, and single-
+    // vs multi-thread attention at the medium preset (the `parallel` section
+    // of BENCH_native.json)
+    // -----------------------------------------------------------------------
+
+    // the pre-pool dispatch for reference: spawn scoped OS threads per
+    // call, each running the blocked kernel on a contiguous row chunk
+    fn matmul_scoped(a: &[f32], bm: &[f32], m: usize, k: usize, n: usize, out: &mut [f32], t: usize) {
+        let base = m / t;
+        let extra = m % t;
+        std::thread::scope(|scope| {
+            let mut rest = out;
+            let mut row0 = 0usize;
+            for i in 0..t {
+                let rows = base + usize::from(i < extra);
+                let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(rows * n);
+                rest = tail;
+                let a_rows = &a[row0 * k..(row0 + rows) * k];
+                scope.spawn(move || vecmath::matmul(a_rows, bm, rows, k, n, chunk));
+                row0 += rows;
+            }
+        });
+    }
+    let mut par_results = Vec::new();
+    if threads > 1 {
+        // the medium-preset QKV projection shape: dispatch overhead is the
+        // pooled-vs-scoped delta at identical math
+        let (m, k, n) = (512usize, 256usize, 768usize);
+        let a = randv(m * k, 61);
+        let bm = randv(k * n, 62);
+        let mut out = vec![0f32; m * n];
+        let items = Some((m * k * n) as f64);
+        let r = b.run_items(&format!("gemm_dispatch/scoped{threads}/{m}x{k}x{n}"), items, &mut || {
+            matmul_scoped(&a, &bm, m, k, n, &mut out, threads);
+        });
+        println!("{}", r.report());
+        par_results.push(r);
+        let r = b.run_items(&format!("gemm_dispatch/pooled{threads}/{m}x{k}x{n}"), items, &mut || {
+            vecmath::matmul_threaded(&a, &bm, m, k, n, &mut out, &pool);
+        });
+        println!("{}", r.report());
+        par_results.push(r);
+    }
+    {
+        // the medium-preset forward at pool sizes 1 vs N: the GEMMs thread
+        // in both, so the multi/single delta is dominated by the newly
+        // threaded per-(batch, head) attention core
+        use conmezo::runtime::model::{build_preset, NativeModel};
+        let meta = build_preset("medium", 512, 256, 8, 8, 64, 8);
+        let (bsz, s) = (meta.batch, meta.seq_len);
+        let ids: Vec<i32> = (0..bsz * s).map(|i| ((i * 13) % 509) as i32).collect();
+        let tgt: Vec<i32> = (0..bsz * s).map(|i| ((i * 7) % 509) as i32).collect();
+        let mut mask = vec![0f32; bsz * s];
+        for i in 0..bsz {
+            mask[i * s + s - 1] = 1.0;
+        }
+        let single = NativeModel::new(meta.clone());
+        let params = single.init_flat(1);
+        let mut ws = single.scratch();
+        let r = b.run_items("attention/medium_loss/threads1", Some(1.0), &mut || {
+            consume(single.loss_with(&params, &ids, &tgt, &mask, bsz, s, &mut ws));
+        });
+        println!("{}", r.report());
+        par_results.push(r);
+        if threads > 1 {
+            let multi = NativeModel::new(meta).with_threads(threads);
+            let mut ws = multi.scratch();
+            let r = b.run_items(&format!("attention/medium_loss/threads{threads}"), Some(1.0), &mut || {
+                consume(multi.loss_with(&params, &ids, &tgt, &mask, bsz, s, &mut ws));
+            });
+            println!("{}", r.report());
+            par_results.push(r);
         }
     }
 
@@ -187,5 +265,7 @@ fn main() -> conmezo::util::error::Result<()> {
 
     write_results("optimizer_math.jsonl", &results)?;
     write_bench_json("optimizer_math", &results)?;
+    write_results("parallel.jsonl", &par_results)?;
+    write_bench_json("parallel", &par_results)?;
     Ok(())
 }

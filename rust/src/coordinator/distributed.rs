@@ -15,13 +15,22 @@
 //! * 1-worker cluster ≡ single-node composed ConMeZO, bit-for-bit;
 //! * N workers stay bit-identical across all steps;
 //! * N-worker aggregate ≡ single node stepping with the N shards'
-//!   mean projected gradient.
+//!   mean projected gradient;
+//! * shared-session replicas ([`model_workers_shared`]) ≡ replicas with
+//!   private sessions, bit-for-bit.
+//!
+//! Model-objective replicas in ONE process share one bound `two_point`
+//! session — and therefore one forward scratch and the `Runtime`'s one
+//! `WorkerPool` — via [`model_workers_shared`] instead of binding a full
+//! session set per replica (each worker keeps its private data shard; only
+//! the stateless execution workspaces are shared).
 
 use crate::util::error::{bail, Result};
 
 use crate::net::{Msg, Transport};
-use crate::objective::Objective;
+use crate::objective::{BatchSource, ModelObjective, Objective};
 use crate::optimizer::{sample_direction, BetaSchedule};
+use crate::runtime::Runtime;
 use crate::vecmath;
 
 /// Worker-side replica state + step math (transport-agnostic).
@@ -79,6 +88,38 @@ impl ZoWorker {
             None => (0, 0),
         }
     }
+}
+
+/// Build N full-replica model workers for one process, all sharing ONE
+/// bound `loss`/`two_point` session pair — hence one forward scratch and
+/// the runtime's one `WorkerPool` — instead of binding a session set per
+/// replica (the ROADMAP per-process sharing item). Worker `i` owns
+/// `samplers[i]` as its private data shard and starts from the same `x0`
+/// replica. Bit-identical to per-worker sessions because session
+/// workspaces carry no state across calls (pinned by
+/// `shared_session_workers_match_private_session_workers`).
+pub fn model_workers_shared(
+    rt: &Runtime,
+    preset: &str,
+    x0: &[f32],
+    samplers: Vec<Box<dyn BatchSource>>,
+) -> Result<Vec<ZoWorker>> {
+    let mut shared = None;
+    let mut workers = Vec::with_capacity(samplers.len());
+    for (id, src) in samplers.into_iter().enumerate() {
+        let obj = match &shared {
+            None => {
+                let first = ModelObjective::new(rt, preset, src)?;
+                shared = Some(first.sessions());
+                first
+            }
+            Some((loss, two_point)) => {
+                ModelObjective::with_sessions(rt, preset, src, loss.clone(), two_point.clone())?
+            }
+        };
+        workers.push(ZoWorker::new(id as u32, x0.to_vec(), Box::new(obj)));
+    }
+    Ok(workers)
 }
 
 /// Per-step hyperparameters broadcast by the leader.

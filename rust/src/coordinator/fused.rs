@@ -5,9 +5,11 @@
 //! update all execute inside a single bound program; Rust only moves the
 //! state buffers and O(1) scalars. Every engine owns its step program as a
 //! [`Session`] (bind once at construction, run every step over reused
-//! workspaces — no steady-state buffer allocation on the native backend).
-//! Semantically equivalent to the composed-mode optimizers (cross-checked
-//! in rust/tests/).
+//! workspaces and bind-time-resolved layout offsets — zero steady-state
+//! allocation on the native backend, with GEMMs + attention dispatched
+//! onto the `Runtime`'s one persistent `WorkerPool`). Semantically
+//! equivalent to the composed-mode optimizers (cross-checked in
+//! rust/tests/).
 
 use crate::util::error::Result;
 

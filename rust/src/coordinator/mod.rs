@@ -7,7 +7,9 @@ pub mod metrics;
 pub mod sweep;
 pub mod trainer;
 
-pub use distributed::{run_leader, run_worker, DistHypers, DistSummary, LocalCluster, ZoWorker};
+pub use distributed::{
+    model_workers_shared, run_leader, run_worker, DistHypers, DistSummary, LocalCluster, ZoWorker,
+};
 pub use fused::{FoAdamW, FoSgd, FusedConMeZo, FusedMezo, FusedMezoMomentum, GradProbe};
 pub use metrics::{render_table, RunRecord};
 pub use sweep::{run_sweep, Axis, Grid, SweepResult};

@@ -4,7 +4,11 @@
 //! or checkpoint), few-shot dataset construction, the step loop (fused or
 //! composed engine), the β warm-up schedule, periodic candidate-restricted
 //! evaluation, the Fig. 6 alignment probe, memory accounting, checkpointing
-//! and metrics. Python is never on this path.
+//! and metrics. Python is never on this path. All sessions the trainer
+//! binds (step engine, evaluator, probe) execute over the `Runtime`'s one
+//! persistent `WorkerPool` (`--threads` / `runtime.threads` /
+//! `CONMEZO_THREADS`), so multi-core runs spawn their workers once at
+//! startup, never per step.
 
 use std::cell::RefCell;
 use std::path::PathBuf;

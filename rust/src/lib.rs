@@ -41,6 +41,7 @@ pub mod eval;
 pub mod net;
 pub mod objective;
 pub mod optimizer;
+pub mod parallel;
 pub mod runtime;
 pub mod testing;
 pub mod util;

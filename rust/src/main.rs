@@ -29,7 +29,7 @@ fn app() -> App {
         .subcommand("worker", "join a distributed ZO run")
         .subcommand("info", "print artifacts / platform info")
         .opt_default("backend", "auto", "execution backend (native|pjrt|auto)")
-        .opt("threads", "native GEMM worker threads (0 = all cores; default: runtime.threads config, CONMEZO_THREADS env, or 1)")
+        .opt("threads", "native worker-pool size for GEMMs + attention (0 = all cores, clamped to available cores; precedence: --threads > runtime.threads > CONMEZO_THREADS > 1)")
         .opt("config", "TOML config file")
         .repeated("set", "config override key=value")
         .opt_default("preset", "tiny", "model preset (nano|tiny|small|medium)")
@@ -86,9 +86,11 @@ fn load_file_cfg(p: &conmezo::cli::Parsed) -> Result<Config> {
 }
 
 /// ParallelPolicy from the layered sources: explicit `--threads` beats the
-/// config's `runtime.threads` beats the `CONMEZO_THREADS` env var (0 means
-/// all cores at every layer). An unparsable `--threads` is a hard error,
-/// not a silent fallthrough.
+/// config's `runtime.threads` beats the `CONMEZO_THREADS` env var. Every
+/// layer resolves identically through `ParallelPolicy::from_count`: 0
+/// means all cores, and explicit counts are clamped to
+/// `std::thread::available_parallelism()`. An unparsable `--threads` is a
+/// hard error, not a silent fallthrough.
 fn thread_policy(p: &conmezo::cli::Parsed, file_cfg: &Config) -> Result<ParallelPolicy> {
     if let Some(s) = p.value("threads") {
         let n: usize = s.trim().parse().map_err(|_| {

@@ -10,16 +10,29 @@
 //! * [`ModelObjective`] — the transformer loss, executing the
 //!   `{preset}_loss` / `{preset}_two_point` programs through bound
 //!   [`Session`]s on whichever runtime backend is active (native CPU by
-//!   default, PJRT with `--features pjrt`). Each objective owns its
-//!   sessions, so the eval hot path reuses one workspace per program and
-//!   the antithetic pair runs through the first-class
-//!   [`Session::two_point`] entry point. (Formerly named `HloObjective`,
-//!   then a `Program::call` wrapper; migrated when execution grew the
-//!   bind-once/run-many session API.)
+//!   default, PJRT with `--features pjrt`). Sessions are held behind
+//!   [`SharedSession`] handles: [`ModelObjective::new`] binds a private
+//!   pair, while [`ModelObjective::with_sessions`] builds additional
+//!   replicas over an EXISTING pair — distributed workers in one process
+//!   share one bound two_point session (one forward scratch, one
+//!   `WorkerPool`) instead of one per replica. Sharing is sound because
+//!   session workspaces carry no state across calls (the workspace-reuse
+//!   invariant pinned in rust/tests), so shared-session replicas stay
+//!   bit-identical to private-session ones. The antithetic pair runs
+//!   through the first-class [`Session::two_point`] entry point. (Formerly
+//!   named `HloObjective`, then a `Program::call` wrapper; migrated when
+//!   execution grew the bind-once/run-many session API.)
 
-use crate::util::error::Result;
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use crate::util::error::{bail, Result};
 
 use crate::runtime::{lit_f32, Arg, Runtime, Session};
+
+/// A bound session shareable by several objectives in one process
+/// (single-threaded interior mutability; the step loop never re-enters).
+pub type SharedSession = Rc<RefCell<Box<dyn Session>>>;
 
 /// Fixed-shape token batch fed to the runtime loss programs.
 #[derive(Clone, Debug, PartialEq)]
@@ -147,11 +160,13 @@ impl Objective for NativeQuadratic {
 // ---------------------------------------------------------------------------
 
 /// Transformer loss via bound `loss`/`two_point` [`Session`]s (any
-/// backend). Owns its sessions — workspaces bind once and every eval after
-/// that runs allocation-free — plus the current minibatch.
+/// backend). Holds [`SharedSession`] handles — workspaces bind once and
+/// every eval after that runs allocation-free — plus the current
+/// minibatch. Each objective keeps its OWN batch source (data shard);
+/// only the stateless execution sessions can be shared.
 pub struct ModelObjective {
-    loss_sess: Box<dyn Session>,
-    two_point_sess: Box<dyn Session>,
+    loss_sess: SharedSession,
+    two_point_sess: SharedSession,
     pub batch: Batch,
     source: Box<dyn BatchSource>,
     d_pad: usize,
@@ -171,18 +186,51 @@ fn batch_args(batch: &Batch) -> [Arg<'_>; 3] {
 
 impl ModelObjective {
     pub fn new(rt: &Runtime, preset: &str, source: Box<dyn BatchSource>) -> Result<Self> {
+        let loss_sess = Rc::new(RefCell::new(rt.bind_kind(preset, "loss")?));
+        let two_point_sess = Rc::new(RefCell::new(rt.bind_kind(preset, "two_point")?));
+        Self::with_sessions(rt, preset, source, loss_sess, two_point_sess)
+    }
+
+    /// Build a replica over an EXISTING session pair (see
+    /// [`ModelObjective::sessions`]): N distributed workers in one process
+    /// share one bound two_point session — one forward scratch, one
+    /// `WorkerPool` — instead of binding one per replica.
+    pub fn with_sessions(
+        rt: &Runtime,
+        preset: &str,
+        source: Box<dyn BatchSource>,
+        loss_sess: SharedSession,
+        two_point_sess: SharedSession,
+    ) -> Result<Self> {
         let meta = rt.preset(preset)?.clone();
+        for (sess, kind) in [(&loss_sess, "loss"), (&two_point_sess, "two_point")] {
+            let spec = sess.borrow().spec().clone();
+            if spec.preset != preset || spec.kind != kind {
+                bail!(
+                    "shared session {} (preset {:?}, kind {:?}) cannot serve a {preset} {kind} objective",
+                    spec.name,
+                    spec.preset,
+                    spec.kind
+                );
+            }
+        }
         let mut source = source;
         let batch = source.next_batch();
         Ok(ModelObjective {
-            loss_sess: rt.bind_kind(preset, "loss")?,
-            two_point_sess: rt.bind_kind(preset, "two_point")?,
+            loss_sess,
+            two_point_sess,
             batch,
             source,
             d_pad: meta.d_pad,
             d_raw: meta.d_raw,
             evals: 0,
         })
+    }
+
+    /// Clone handles to this objective's bound sessions for sharing with
+    /// further replicas.
+    pub fn sessions(&self) -> (SharedSession, SharedSession) {
+        (self.loss_sess.clone(), self.two_point_sess.clone())
     }
 }
 
@@ -198,7 +246,8 @@ impl Objective for ModelObjective {
     fn loss(&mut self, x: &[f32]) -> Result<f64> {
         self.evals += 1;
         let [ids, tgt, mask] = batch_args(&self.batch);
-        let outs = self.loss_sess.run(&[Arg::VecF32(x), ids, tgt, mask])?;
+        let mut sess = self.loss_sess.borrow_mut();
+        let outs = sess.run(&[Arg::VecF32(x), ids, tgt, mask])?;
         Ok(lit_f32(&outs[0])? as f64)
     }
 
@@ -206,7 +255,7 @@ impl Objective for ModelObjective {
         self.evals += 2;
         // the paired fast path: one session call, shared scratch, same
         // minibatch for both evals (Definition 1)
-        self.two_point_sess.two_point(
+        self.two_point_sess.borrow_mut().two_point(
             x,
             z,
             lam,

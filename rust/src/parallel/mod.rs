@@ -1,0 +1,382 @@
+//! Persistent worker-pool substrate for the native backend.
+//!
+//! ConMeZO's step cost is two transformer forwards, and each forward used
+//! to pay `std::thread::scope` OS-thread spawns for every GEMM (~10 spawns
+//! per forward at the medium preset). A [`WorkerPool`] is created ONCE per
+//! `Runtime` (sized by `runtime::ParallelPolicy`) and every threaded
+//! kernel — the `vecmath` GEMMs plus the per-(batch, head) attention loops
+//! in `runtime::model` / `runtime::autograd` — dispatches onto it through
+//! [`WorkerPool::run`], a deterministic parallel-for over chunks. Steady
+//! state spawns zero threads (pinned by [`WorkerPool::os_threads_spawned`]
+//! instrumentation tests) and allocates nothing per dispatch.
+//!
+//! ## Determinism contract
+//!
+//! `run(parts, chunks, task)` executes `task(c)` exactly once for every
+//! chunk `c in 0..chunks`; chunk `c` is handled by participant `c % parts`
+//! (participant 0 is the calling thread, participants `1..parts` are pool
+//! workers). Which OS thread computes a chunk never changes WHAT it
+//! computes: callers partition output buffers into disjoint regions by
+//! chunk index and keep per-element accumulation order identical to the
+//! sequential loop, so results are bit-identical at every pool size. The
+//! chunk→participant mapping is also how callers carve per-task scratch:
+//! slot `c % parts` is only ever touched by one participant, so `parts`
+//! scratch slots suffice (see `FwdScratch`/`GradWorkspace`).
+//!
+//! Tasks must not dispatch onto the pool they run on (no nesting); the
+//! kernels never do.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// A dispatched parallel-for: a type-erased pointer to the caller's
+/// closure plus the chunk geometry. The caller blocks inside
+/// [`WorkerPool::run`] until every worker acknowledged the epoch, so the
+/// borrow behind `data` outlives all uses.
+#[derive(Clone, Copy)]
+struct Job {
+    data: *const (),
+    call: unsafe fn(*const (), usize),
+    chunks: usize,
+    parts: usize,
+}
+
+// The raw pointer crosses threads only while `run` keeps the referent
+// alive on the calling stack frame.
+unsafe impl Send for Job {}
+
+struct State {
+    /// bumped once per dispatch; workers run a job exactly once per epoch
+    epoch: u64,
+    job: Option<Job>,
+    /// PARTICIPATING workers (`participant < parts`) that have not yet
+    /// acknowledged the current epoch — idle workers note the epoch and go
+    /// straight back to sleep without joining the barrier
+    outstanding: usize,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// workers wait here for a new epoch (or shutdown)
+    work: Condvar,
+    /// the dispatching caller waits here for `outstanding == 0`
+    done: Condvar,
+    /// a worker task panicked (re-raised on the calling thread)
+    panicked: AtomicBool,
+}
+
+/// A persistent pool of `threads - 1` OS workers plus the calling thread.
+/// Created once (per `Runtime` on the native backend) and reused for every
+/// GEMM/attention dispatch; see the module docs for the determinism
+/// contract.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    threads: usize,
+    /// OS threads spawned over this pool's lifetime — stays at
+    /// `threads - 1` forever (the no-steady-state-spawning pin).
+    spawned: AtomicUsize,
+    /// serializes concurrent `run` callers (dispatch state is per-pool)
+    run_lock: Mutex<()>,
+}
+
+/// Poison-tolerant lock: a panicked task already records its failure via
+/// `Shared::panicked`; the pool state itself stays consistent.
+fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn worker_loop(shared: Arc<Shared>, participant: usize) {
+    // workers must match the main thread's FTZ/DAZ mode or threaded and
+    // single-threaded results could diverge on denormals
+    crate::runtime::enable_flush_to_zero();
+    let mut seen_epoch = 0u64;
+    loop {
+        let job = {
+            let mut st = lock(&shared.state);
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != seen_epoch {
+                    seen_epoch = st.epoch;
+                    break st.job.expect("pool epoch advanced without a job");
+                }
+                st = shared.work.wait(st).unwrap_or_else(|e| e.into_inner());
+            }
+        };
+        // idle epochs (participant >= parts) are only noted — the worker
+        // goes straight back to sleep without touching the ack barrier, so
+        // narrow dispatches on a wide pool never wait on idle workers
+        if participant < job.parts {
+            let ran = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                let mut c = participant;
+                while c < job.chunks {
+                    unsafe { (job.call)(job.data, c) };
+                    c += job.parts;
+                }
+            }));
+            if ran.is_err() {
+                shared.panicked.store(true, Ordering::SeqCst);
+            }
+            let mut st = lock(&shared.state);
+            st.outstanding -= 1;
+            if st.outstanding == 0 {
+                shared.done.notify_all();
+            }
+        }
+    }
+}
+
+impl WorkerPool {
+    /// Pool with `threads` participants: the caller plus `threads - 1`
+    /// spawned OS workers (`threads <= 1` spawns nothing and runs every
+    /// dispatch inline). Also enables FTZ/DAZ on the constructing thread so
+    /// caller-computed chunks use the same float mode as worker chunks.
+    pub fn new(threads: usize) -> WorkerPool {
+        crate::runtime::enable_flush_to_zero();
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State { epoch: 0, job: None, outstanding: 0, shutdown: false }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+            panicked: AtomicBool::new(false),
+        });
+        let mut handles = Vec::with_capacity(threads - 1);
+        let spawned = AtomicUsize::new(0);
+        for w in 1..threads {
+            let sh = shared.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("conmezo-pool-{w}"))
+                    .spawn(move || worker_loop(sh, w))
+                    .expect("spawning pool worker"),
+            );
+            spawned.fetch_add(1, Ordering::SeqCst);
+        }
+        WorkerPool { shared, handles, threads, spawned, run_lock: Mutex::new(()) }
+    }
+
+    /// A no-worker pool: every dispatch runs inline on the caller (the
+    /// deterministic-by-construction default; threading is bit-identical
+    /// anyway, this just avoids idle workers).
+    pub fn sequential() -> WorkerPool {
+        WorkerPool::new(1)
+    }
+
+    /// Participant count (caller + workers); the thread budget kernels
+    /// split work across.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Total OS threads this pool has ever spawned. Constant after
+    /// construction — the instrumentation behind the
+    /// no-steady-state-spawning tests.
+    pub fn os_threads_spawned(&self) -> usize {
+        self.spawned.load(Ordering::SeqCst)
+    }
+
+    /// Deterministic parallel-for over `chunks` chunks using `parts`
+    /// participants (`parts` must be <= [`WorkerPool::threads`]): `task(c)`
+    /// runs exactly once per chunk, chunk `c` on participant `c % parts`,
+    /// participant 0 being the calling thread. Blocks until every chunk
+    /// completed. Allocation-free on the dispatch path.
+    pub fn run<F: Fn(usize) + Sync>(&self, parts: usize, chunks: usize, task: &F) {
+        let parts = parts.max(1).min(chunks.max(1));
+        assert!(
+            parts <= self.threads,
+            "pool dispatch with {parts} participants on a {}-thread pool",
+            self.threads
+        );
+        if parts <= 1 || self.handles.is_empty() {
+            for c in 0..chunks {
+                task(c);
+            }
+            return;
+        }
+        unsafe fn call_erased<F: Fn(usize)>(data: *const (), chunk: usize) {
+            (*(data as *const F))(chunk)
+        }
+        let job = Job {
+            data: task as *const F as *const (),
+            call: call_erased::<F>,
+            chunks,
+            parts,
+        };
+        let _dispatch = lock(&self.run_lock);
+        {
+            let mut st = lock(&self.shared.state);
+            st.job = Some(job);
+            st.epoch += 1;
+            // only participants join the completion barrier (workers are
+            // participants 1..parts); parts <= threads = handles + 1
+            st.outstanding = parts - 1;
+            self.shared.work.notify_all();
+        }
+        // participant 0: the caller computes its own chunk stride while the
+        // workers run theirs. A caller-side panic is deferred until every
+        // worker finished — the job borrows this stack frame.
+        let caller = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut c = 0usize;
+            while c < chunks {
+                task(c);
+                c += parts;
+            }
+        }));
+        let mut st = lock(&self.shared.state);
+        while st.outstanding != 0 {
+            st = self.shared.done.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+        st.job = None;
+        drop(st);
+        // clear the worker-panic flag BEFORE re-raising a caller-side
+        // panic, so a failed dispatch can never leak a stale flag into the
+        // next (clean) one
+        let worker_panicked = self.shared.panicked.swap(false, Ordering::SeqCst);
+        if let Err(payload) = caller {
+            std::panic::resume_unwind(payload);
+        }
+        if worker_panicked {
+            panic!("a worker-pool task panicked");
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = lock(&self.shared.state);
+            st.shutdown = true;
+            self.shared.work.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Raw-pointer wrapper that lets `run` tasks carve disjoint `&mut` regions
+/// of one buffer by chunk index (the chunks are guaranteed disjoint by the
+/// caller's partition, so handing each task its own slice is sound).
+#[derive(Clone, Copy)]
+pub struct SendPtr<T>(pub *mut T);
+
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+impl<T> SendPtr<T> {
+    /// The task-side slice `[off, off + len)` of the shared buffer. Safety:
+    /// the caller's chunk partition must make concurrently-live regions
+    /// disjoint, and the underlying buffer must outlive the dispatch.
+    pub unsafe fn slice_mut<'a>(&self, off: usize, len: usize) -> &'a mut [T] {
+        std::slice::from_raw_parts_mut(self.0.add(off), len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU32;
+
+    #[test]
+    fn every_chunk_runs_exactly_once() {
+        let pool = WorkerPool::new(4);
+        for &(parts, chunks) in &[(1usize, 7usize), (2, 2), (3, 17), (4, 4), (4, 1), (2, 0)] {
+            let counts: Vec<AtomicU32> = (0..chunks).map(|_| AtomicU32::new(0)).collect();
+            pool.run(parts, chunks, &|c| {
+                counts[c].fetch_add(1, Ordering::SeqCst);
+            });
+            assert!(
+                counts.iter().all(|c| c.load(Ordering::SeqCst) == 1),
+                "parts={parts} chunks={chunks}"
+            );
+        }
+    }
+
+    #[test]
+    fn chunk_to_participant_mapping_is_deterministic() {
+        // chunk c runs on participant c % parts: two chunks with the same
+        // residue never run concurrently, which is what makes slot-indexed
+        // scratch (slot = c % parts) race-free
+        let pool = WorkerPool::new(3);
+        let slots: Vec<AtomicU32> = (0..3).map(|_| AtomicU32::new(0)).collect();
+        pool.run(3, 12, &|c| {
+            let slot = &slots[c % 3];
+            let inflight = slot.fetch_add(1, Ordering::SeqCst);
+            assert_eq!(inflight, 0, "slot {} entered concurrently", c % 3);
+            std::thread::sleep(std::time::Duration::from_micros(200));
+            slot.fetch_sub(1, Ordering::SeqCst);
+        });
+    }
+
+    #[test]
+    fn disjoint_writes_through_send_ptr() {
+        let pool = WorkerPool::new(4);
+        let mut buf = vec![0u32; 64];
+        let ptr = SendPtr(buf.as_mut_ptr());
+        pool.run(4, 8, &|c| {
+            let chunk = unsafe { ptr.slice_mut(c * 8, 8) };
+            for (j, v) in chunk.iter_mut().enumerate() {
+                *v = (c * 8 + j) as u32;
+            }
+        });
+        assert!(buf.iter().enumerate().all(|(i, &v)| v == i as u32));
+    }
+
+    #[test]
+    fn pool_reuse_spawns_no_new_threads() {
+        let pool = WorkerPool::new(3);
+        assert_eq!(pool.os_threads_spawned(), 2);
+        let hits = AtomicU32::new(0);
+        for _ in 0..200 {
+            pool.run(3, 6, &|_| {
+                hits.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        assert_eq!(hits.load(Ordering::SeqCst), 200 * 6);
+        assert_eq!(pool.os_threads_spawned(), 2, "dispatch must never respawn");
+    }
+
+    #[test]
+    fn sequential_pool_runs_inline() {
+        let pool = WorkerPool::sequential();
+        assert_eq!(pool.threads(), 1);
+        assert_eq!(pool.os_threads_spawned(), 0);
+        let order = Mutex::new(Vec::new());
+        pool.run(1, 5, &|c| order.lock().unwrap().push(c));
+        assert_eq!(*order.lock().unwrap(), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    #[should_panic(expected = "worker-pool task panicked")]
+    fn worker_panic_is_reraised_on_caller() {
+        let pool = WorkerPool::new(2);
+        pool.run(2, 2, &|c| {
+            if c == 1 {
+                panic!("boom");
+            }
+        });
+    }
+
+    #[test]
+    fn pool_survives_a_panicked_dispatch() {
+        let pool = WorkerPool::new(2);
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(2, 2, &|c| {
+                if c == 1 {
+                    panic!("boom");
+                }
+            })
+        }));
+        assert!(res.is_err());
+        // the pool is still functional afterwards
+        let hits = AtomicU32::new(0);
+        pool.run(2, 4, &|_| {
+            hits.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 4);
+        assert_eq!(pool.os_threads_spawned(), 1);
+    }
+}

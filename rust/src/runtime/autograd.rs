@@ -13,13 +13,20 @@
 //!
 //! All buffers the reverse pass touches live in a [`GradWorkspace`] that
 //! sessions allocate once at bind time and reuse every step (the pretrain
-//! allocation-traffic item from ROADMAP). Gradients are pinned two ways:
-//! central-difference gradchecks in this module and the vecmath kernel
-//! tests, and the jax golden fixture `rust/tests/fixtures/fo_parity.json`
-//! (regenerate with `python -m compile.gen_fixtures`).
+//! allocation-traffic item from ROADMAP). Layout offsets come from the
+//! model's bind-time `ModelPlan` (no per-call `format!` lookups), the
+//! backward GEMMs and the per-(batch, head) attention backward dispatch
+//! onto the model's persistent `WorkerPool`, and results are bit-identical
+//! at every pool size (each gradient element is produced by exactly one
+//! task in the sequential accumulation order). Gradients are pinned two
+//! ways: central-difference gradchecks in this module and the vecmath
+//! kernel tests, and the jax golden fixture
+//! `rust/tests/fixtures/fo_parity.json` (regenerate with
+//! `python -m compile.gen_fixtures`).
 
+use crate::parallel::SendPtr;
 use crate::runtime::manifest::PresetMeta;
-use crate::runtime::model::{masked_mean_xent, FwdScratch, NativeModel, Tape};
+use crate::runtime::model::{masked_mean_xent, FwdScratch, NativeModel, Span, Tape};
 use crate::vecmath;
 
 /// Loss plus its gradient over the padded flat parameter buffer.
@@ -30,9 +37,13 @@ pub struct LossGrad {
 }
 
 /// Reusable reverse-pass workspace: the activation tape plus every
-/// gradient buffer, allocated once per session.
+/// gradient buffer, allocated once per session. The per-(batch, head)
+/// attention-backward scratch (`dw_seg`/`dscore`) carries `slots`
+/// independent copies — one per worker-pool participant.
 pub struct GradWorkspace {
     tape: Tape,
+    /// attention-backward scratch slots this workspace was sized for
+    slots: usize,
     /// dloss/dparams, length `d_pad` — the reverse pass leaves its result
     /// here; pad lanes zero.
     pub grad: Vec<f32>,
@@ -50,11 +61,26 @@ pub struct GradWorkspace {
 }
 
 impl GradWorkspace {
+    /// Single-slot workspace (sequential attention backward); sessions
+    /// size slots from the model's pool via [`GradWorkspace::for_model`].
     pub fn new(meta: &PresetMeta) -> GradWorkspace {
+        Self::with_slots(meta, 1)
+    }
+
+    /// Workspace sized for `model`'s worker pool.
+    pub fn for_model(model: &NativeModel) -> GradWorkspace {
+        Self::with_slots(&model.meta, model.pool().threads())
+    }
+
+    /// Workspace with `slots` independent attention-backward scratch
+    /// copies (one per worker-pool participant).
+    pub fn with_slots(meta: &PresetMeta, slots: usize) -> GradWorkspace {
         let (b, s, d, ff, v) = (meta.batch, meta.seq_len, meta.d_model, meta.d_ff, meta.vocab);
         let r = b * s;
+        let p = slots.max(1);
         GradWorkspace {
             tape: Tape::new(meta),
+            slots: p,
             grad: vec![0.0; meta.d_pad],
             dlogits: vec![0.0; r * v],
             dx: vec![0.0; r * d],
@@ -65,27 +91,10 @@ impl GradWorkspace {
             dqkv: vec![0.0; r * 3 * d],
             dg: vec![0.0; d],
             db: vec![0.0; d],
-            dw_seg: vec![0.0; s],
-            dscore: vec![0.0; s],
+            dw_seg: vec![0.0; p * s],
+            dscore: vec![0.0; p * s],
         }
     }
-}
-
-/// (offset, element count) of a layout tensor.
-fn entry(model: &NativeModel, name: &str) -> (usize, usize) {
-    let ent = model
-        .meta
-        .layout
-        .iter()
-        .find(|e| e.name == name)
-        .unwrap_or_else(|| panic!("layout has no tensor {name:?}"));
-    (ent.offset, ent.shape.iter().product())
-}
-
-/// View of one layout tensor inside a flat buffer.
-fn param_slice<'a>(model: &NativeModel, params: &'a [f32], name: &str) -> &'a [f32] {
-    let (off, n) = entry(model, name);
-    &params[off..off + n]
 }
 
 /// dloss/dlogits of the masked mean cross-entropy:
@@ -148,10 +157,14 @@ pub fn loss_and_grad_ws(
     ws: &mut GradWorkspace,
 ) -> f32 {
     let m = &model.meta;
+    let plan = &model.plan;
     let (v, d, h, ff) = (m.vocab, m.d_model, m.n_heads, m.d_ff);
     let hd = d / h;
     let r = b * s;
-    let threads = model.threads;
+    let pool = model.pool();
+    // attention-backward dispatch width: same work gate as the forward,
+    // capped by this workspace's scratch slots
+    let att_parts = vecmath::effective_threads(pool.threads().min(ws.slots), b * h, s * s * hd);
 
     model.forward_into(params, ids, b, s, fwd, Some(&mut ws.tape));
     let logits = &fwd.logits[..r * v];
@@ -166,18 +179,15 @@ pub fn loss_and_grad_ws(
     softmax_xent_backward(logits, targets, mask, r, v, dlogits);
     let mut dx: &mut [f32] = &mut ws.dx[..r * d];
     let mut dx_ln: &mut [f32] = &mut ws.dx_ln[..r * d];
-    vecmath::matmul_threaded(dlogits, param_slice(model, params, "tok_emb"), r, v, d, dx, threads); // dhf
-    {
-        let (off, n) = entry(model, "tok_emb");
-        vecmath::matmul_at_threaded(dlogits, &tape.hf, r, v, d, &mut grad[off..off + n], threads);
-    }
+    vecmath::matmul_threaded(dlogits, plan.tok_emb.of(params), r, v, d, dx, pool); // dhf
+    vecmath::matmul_at_threaded(dlogits, &tape.hf, r, v, d, plan.tok_emb.of_mut(grad), pool);
 
     // --- final LayerNorm ---
     let dg = &mut ws.dg;
     let db = &mut ws.db;
     vecmath::layernorm_rows_backward(
         &tape.xf,
-        param_slice(model, params, "ln_f.g"),
+        plan.ln_f_g.of(params),
         r,
         d,
         1e-5,
@@ -186,8 +196,8 @@ pub fn loss_and_grad_ws(
         dg,
         db,
     );
-    write_grad(model, grad, "ln_f.g", dg);
-    write_grad(model, grad, "ln_f.b", db);
+    write_grad(grad, plan.ln_f_g, dg);
+    write_grad(grad, plan.ln_f_b, db);
     std::mem::swap(&mut dx, &mut dx_ln); // dx is now d(loss)/d(xf)
 
     // --- layers in reverse ---
@@ -200,32 +210,20 @@ pub fn loss_and_grad_ws(
     let scale = 1.0 / (hd as f32).sqrt();
 
     for l in (0..m.n_layers).rev() {
-        let name = |suffix: &str| format!("layer{l}.{suffix}");
+        let lp = &plan.layers[l];
         let lt = &tape.layers[l];
 
         // --- MLP block backward: x_out = x_mid + gelu(ln2(x_mid) @ w1 + b1) @ w2 + b2 ---
-        {
-            let (off, n) = entry(model, &name("mlp.b2"));
-            vecmath::add_bias_rows_backward(dx, r, d, &mut grad[off..off + n]);
-        }
-        vecmath::matmul_bt_threaded(dx, param_slice(model, params, &name("mlp.w2")), r, d, ff, dff, threads);
-        {
-            let (off, n) = entry(model, &name("mlp.w2"));
-            vecmath::matmul_at_threaded(&lt.ffact, dx, r, ff, d, &mut grad[off..off + n], threads);
-        }
+        vecmath::add_bias_rows_backward(dx, r, d, lp.b2.of_mut(grad));
+        vecmath::matmul_bt_threaded(dx, lp.w2.of(params), r, d, ff, dff, pool);
+        vecmath::matmul_at_threaded(&lt.ffact, dx, r, ff, d, lp.w2.of_mut(grad), pool);
         vecmath::gelu_backward(&lt.ffpre, dff, dffpre);
-        {
-            let (off, n) = entry(model, &name("mlp.b1"));
-            vecmath::add_bias_rows_backward(dffpre, r, ff, &mut grad[off..off + n]);
-        }
-        vecmath::matmul_bt_threaded(dffpre, param_slice(model, params, &name("mlp.w1")), r, ff, d, dh, threads);
-        {
-            let (off, n) = entry(model, &name("mlp.w1"));
-            vecmath::matmul_at_threaded(&lt.h2, dffpre, r, d, ff, &mut grad[off..off + n], threads);
-        }
+        vecmath::add_bias_rows_backward(dffpre, r, ff, lp.b1.of_mut(grad));
+        vecmath::matmul_bt_threaded(dffpre, lp.w1.of(params), r, ff, d, dh, pool);
+        vecmath::matmul_at_threaded(&lt.h2, dffpre, r, d, ff, lp.w1.of_mut(grad), pool);
         vecmath::layernorm_rows_backward(
             &lt.x_mid,
-            param_slice(model, params, &name("ln2.g")),
+            lp.ln2_g.of(params),
             r,
             d,
             1e-5,
@@ -234,38 +232,45 @@ pub fn loss_and_grad_ws(
             dg,
             db,
         );
-        write_grad(model, grad, &name("ln2.g"), dg);
-        write_grad(model, grad, &name("ln2.b"), db);
+        write_grad(grad, lp.ln2_g, dg);
+        write_grad(grad, lp.ln2_b, db);
         vecmath::axpy(1.0, dx_ln, dx); // residual: d(x_mid) = d(x_out) + LN path
 
         // --- attention block backward: x_mid = x_in + attn(ln1(x_in)) @ wo + bo ---
-        {
-            let (off, n) = entry(model, &name("attn.bo"));
-            vecmath::add_bias_rows_backward(dx, r, d, &mut grad[off..off + n]);
-        }
-        vecmath::matmul_bt_threaded(dx, param_slice(model, params, &name("attn.wo")), r, d, d, dh, threads); // dattn
-        {
-            let (off, n) = entry(model, &name("attn.wo"));
-            vecmath::matmul_at_threaded(&lt.attn, dx, r, d, d, &mut grad[off..off + n], threads);
-        }
-        // attention core: per (batch, head, query) softmax-attention backward
+        vecmath::add_bias_rows_backward(dx, r, d, lp.bo.of_mut(grad));
+        vecmath::matmul_bt_threaded(dx, lp.wo.of(params), r, d, d, dh, pool); // dattn
+        vecmath::matmul_at_threaded(&lt.attn, dx, r, d, d, lp.wo.of_mut(grad), pool);
+        // attention core: per (batch, head, query) softmax-attention
+        // backward, one (batch, head) pair per pool task — every task
+        // writes a disjoint (batch-row, head-column) region of dqkv with
+        // the sequential loop's accumulation order, so pooled gradients
+        // are bit-identical at every pool size
         for dv in dqkv.iter_mut() {
             *dv = 0.0;
         }
-        for i in 0..b {
-            for head in 0..h {
+        {
+            let dh_ro: &[f32] = dh;
+            let dqkv_ptr = SendPtr(dqkv.as_mut_ptr());
+            let dw_ptr = SendPtr(dw_seg.as_mut_ptr());
+            let dsc_ptr = SendPtr(dscore.as_mut_ptr());
+            pool.run(att_parts, b * h, &|task| {
+                let i = task / h;
+                let head = task % h;
+                let slot = task % att_parts;
+                let dw_seg = unsafe { dw_ptr.slice_mut(slot * s, s) };
+                let dscore = unsafe { dsc_ptr.slice_mut(slot * s, s) };
                 let qoff = head * hd;
                 let koff = d + head * hd;
                 let voff = 2 * d + head * hd;
                 for t in 0..s {
-                    let dorow = &dh[(i * s + t) * d + head * hd..][..hd];
+                    let dorow = &dh_ro[(i * s + t) * d + head * hd..][..hd];
                     let prow = &lt.probs[((i * h + head) * s + t) * s..][..t + 1];
                     // dv[t2] += w[t2] * dout ; dw[t2] = <dout, v[t2]>
                     for t2 in 0..=t {
                         let vrow = &lt.qkv[(i * s + t2) * 3 * d + voff..][..hd];
                         dw_seg[t2] = vecmath::dot(dorow, vrow) as f32;
                         let w = prow[t2];
-                        let dvrow = &mut dqkv[(i * s + t2) * 3 * d + voff..][..hd];
+                        let dvrow = unsafe { dqkv_ptr.slice_mut((i * s + t2) * 3 * d + voff, hd) };
                         for (dvj, &doj) in dvrow.iter_mut().zip(dorow) {
                             *dvj += w * doj;
                         }
@@ -280,29 +285,27 @@ pub fn loss_and_grad_ws(
                     );
                     // dq[t] += scale * sum_t2 dscore[t2] k[t2] ; dk[t2] += scale * dscore[t2] q[t]
                     let qrow_off = (i * s + t) * 3 * d + qoff;
+                    let qrow = &lt.qkv[qrow_off..qrow_off + hd];
+                    let dqrow = unsafe { dqkv_ptr.slice_mut(qrow_off, hd) };
                     for t2 in 0..=t {
                         let ds = dscore[t2] * scale;
-                        let krow = (i * s + t2) * 3 * d + koff;
+                        let krow_off = (i * s + t2) * 3 * d + koff;
+                        let krow = &lt.qkv[krow_off..krow_off + hd];
+                        let dkrow = unsafe { dqkv_ptr.slice_mut(krow_off, hd) };
                         for j in 0..hd {
-                            dqkv[qrow_off + j] += ds * lt.qkv[krow + j];
-                            dqkv[krow + j] += ds * lt.qkv[qrow_off + j];
+                            dqrow[j] += ds * krow[j];
+                            dkrow[j] += ds * qrow[j];
                         }
                     }
                 }
-            }
+            });
         }
-        {
-            let (off, n) = entry(model, &name("attn.bqkv"));
-            vecmath::add_bias_rows_backward(dqkv, r, 3 * d, &mut grad[off..off + n]);
-        }
-        vecmath::matmul_bt_threaded(dqkv, param_slice(model, params, &name("attn.wqkv")), r, 3 * d, d, dh, threads); // dh1
-        {
-            let (off, n) = entry(model, &name("attn.wqkv"));
-            vecmath::matmul_at_threaded(&lt.h1, dqkv, r, d, 3 * d, &mut grad[off..off + n], threads);
-        }
+        vecmath::add_bias_rows_backward(dqkv, r, 3 * d, lp.bqkv.of_mut(grad));
+        vecmath::matmul_bt_threaded(dqkv, lp.wqkv.of(params), r, 3 * d, d, dh, pool); // dh1
+        vecmath::matmul_at_threaded(&lt.h1, dqkv, r, d, 3 * d, lp.wqkv.of_mut(grad), pool);
         vecmath::layernorm_rows_backward(
             &lt.x_in,
-            param_slice(model, params, &name("ln1.g")),
+            lp.ln1_g.of(params),
             r,
             d,
             1e-5,
@@ -311,15 +314,15 @@ pub fn loss_and_grad_ws(
             dg,
             db,
         );
-        write_grad(model, grad, &name("ln1.g"), dg);
-        write_grad(model, grad, &name("ln1.b"), db);
+        write_grad(grad, lp.ln1_g, dg);
+        write_grad(grad, lp.ln1_b, db);
         vecmath::axpy(1.0, dx_ln, dx); // d(x_in) = d(x_mid) + LN path
     }
 
     // --- embeddings: x0[i*s+t] = tok_emb[ids[i,t]] + pos_emb[t] ---
     {
-        let (toff, _) = entry(model, "tok_emb");
-        let (poff, _) = entry(model, "pos_emb");
+        let toff = plan.tok_emb.off;
+        let poff = plan.pos_emb.off;
         for i in 0..b {
             for t in 0..s {
                 let id = ids[i * s + t] as usize;
@@ -345,17 +348,17 @@ pub fn loss_and_grad(
     b: usize,
     s: usize,
 ) -> LossGrad {
-    let mut fwd = FwdScratch::new(&model.meta);
-    let mut ws = GradWorkspace::new(&model.meta);
+    let mut fwd = model.scratch();
+    let mut ws = GradWorkspace::for_model(model);
     let loss = loss_and_grad_ws(model, params, ids, targets, mask, b, s, &mut fwd, &mut ws);
     LossGrad { loss, grad: ws.grad }
 }
 
-/// Copy a tensor gradient into its slot of the flat gradient buffer.
-fn write_grad(model: &NativeModel, grad: &mut [f32], name: &str, src: &[f32]) {
-    let (off, n) = entry(model, name);
-    debug_assert_eq!(src.len(), n);
-    grad[off..off + n].copy_from_slice(src);
+/// Copy a tensor gradient into its resolved span of the flat gradient
+/// buffer.
+fn write_grad(grad: &mut [f32], sp: Span, src: &[f32]) {
+    debug_assert_eq!(src.len(), sp.len);
+    grad[sp.off..sp.off + sp.len].copy_from_slice(src);
 }
 
 #[cfg(test)]
@@ -477,10 +480,10 @@ mod tests {
         let (ids, tgt, mask) = test_batch(&model, 17);
         let lg = loss_and_grad(&model, &params, &ids, &tgt, &mask, b, s);
         let probe: Vec<usize> = vec![
-            entry(&model, "tok_emb").0 + 3,
-            entry(&model, "layer0.attn.wqkv").0 + 5,
-            entry(&model, "layer1.mlp.w1").0 + 7,
-            entry(&model, "ln_f.g").0 + 1,
+            model.plan.tok_emb.off + 3,
+            model.plan.layers[0].wqkv.off + 5,
+            model.plan.layers[1].w1.off + 7,
+            model.plan.ln_f_g.off + 1,
         ];
         let eps = 3e-3f32;
         for i in probe {
@@ -494,6 +497,25 @@ mod tests {
             let an = lg.grad[i] as f64;
             let rel = (fd - an).abs() / an.abs().max(1e-3);
             assert!(rel < 1e-1, "coord {i}: analytic {an} vs fd {fd} (rel {rel:.2e})");
+        }
+    }
+
+    #[test]
+    fn gradients_bit_identical_across_pool_sizes() {
+        // the threaded attention backward (and pooled backward GEMMs) must
+        // reproduce the sequential gradient bitwise; geometry sized so both
+        // the GEMM and attention work gates actually engage the pool
+        let meta = build_preset("grad-thr", 64, 64, 2, 2, 64, 8);
+        let single = NativeModel::new(meta.clone());
+        let (b, s) = (single.meta.batch, single.meta.seq_len);
+        let params = single.init_flat(41);
+        let (ids, tgt, mask) = test_batch(&single, 43);
+        let want = loss_and_grad(&single, &params, &ids, &tgt, &mask, b, s);
+        for t in [2usize, 4] {
+            let m = NativeModel::new(meta.clone()).with_threads(t);
+            let got = loss_and_grad(&m, &params, &ids, &tgt, &mask, b, s);
+            assert_eq!(got.loss, want.loss, "threads={t}");
+            assert_eq!(got.grad, want.grad, "threads={t}");
         }
     }
 

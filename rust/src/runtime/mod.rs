@@ -19,10 +19,10 @@
 //! ConMeZO's cost profile is two forward evals per step across millions of
 //! steps, so the per-call surface is the hot path of the whole system. A
 //! program is *bound* once into a [`Session`] — which owns its forward
-//! scratch, autograd tape workspace and output buffers — and then *run*
-//! many times with no steady-state buffer allocation (the only per-call
-//! allocations left on the native path are the small per-layer
-//! layout-name strings; see ROADMAP):
+//! scratch, autograd tape workspace, output buffers and (on the native
+//! backend) a bind-time `ModelPlan` of resolved layout offsets — and then
+//! *run* many times with zero steady-state allocation and zero string
+//! formatting:
 //!
 //! ```ignore
 //! let mut sess = rt.bind_kind("tiny", "loss")?;          // bind once
@@ -39,13 +39,18 @@
 //! backend, resolves program names through the manifest, validates argument
 //! shapes identically on every backend (turning silent size mismatches into
 //! named errors), and caches bound compat programs. A [`ParallelPolicy`]
-//! chosen by cli/config/env flows through the backend into the `vecmath`
-//! GEMMs, which are row-parallel and bit-identical at every thread count.
+//! chosen by cli/config/env sizes the backend's ONE persistent
+//! [`crate::parallel::WorkerPool`]; the `vecmath` GEMMs and the
+//! per-(batch, head) attention loops (forward, `loss_pallas` and the
+//! autograd backward) dispatch onto it, spawn no threads in steady state,
+//! and stay bit-identical at every pool size.
 //!
 //! Backend selection: `Runtime::from_name("native"|"pjrt"|"auto")`, the
 //! `CONMEZO_BACKEND` env var, or `Runtime::open_default()` (auto); thread
 //! count via `ParallelPolicy` (`--threads`, `runtime.threads`, or the
-//! `CONMEZO_THREADS` env var — 0 means all cores).
+//! `CONMEZO_THREADS` env var — 0 means all cores; explicit counts are
+//! clamped to `std::thread::available_parallelism()`, identically at every
+//! layer).
 
 pub mod autograd;
 pub mod manifest;
@@ -81,6 +86,16 @@ impl Arg<'_> {
             Arg::F32(_) | Arg::I32(_) => vec![],
             Arg::VecF32(v) => vec![v.len()],
             Arg::TensorI32(_, d) | Arg::TensorF32(_, d) => d.clone(),
+        }
+    }
+
+    /// Shape check without materializing the shape (`validate_args` runs
+    /// per call on the hot path; [`Arg::shape_of`] stays for error text).
+    fn matches_shape(&self, shape: &[usize]) -> bool {
+        match self {
+            Arg::F32(_) | Arg::I32(_) => shape.is_empty(),
+            Arg::VecF32(v) => shape.len() == 1 && shape[0] == v.len(),
+            Arg::TensorI32(_, d) | Arg::TensorF32(_, d) => d == shape,
         }
     }
 }
@@ -139,11 +154,17 @@ pub fn lit_copy_f32(v: &Value, dst: &mut [f32]) -> Result<()> {
     }
 }
 
-/// Worker-thread budget for the backend's dense kernels. Flows from
-/// cli/config/env through the [`Runtime`] into the `vecmath` GEMMs, which
-/// split output rows across `std::thread::scope` workers while keeping
-/// per-element accumulation order — and therefore results — bit-identical
-/// to the single-threaded kernels at every count.
+/// Worker-thread budget for the backend's dense kernels: sizes the ONE
+/// persistent [`crate::parallel::WorkerPool`] a native backend creates,
+/// onto which the `vecmath` GEMMs and the attention loops dispatch while
+/// keeping per-element accumulation order — and therefore results —
+/// bit-identical to the single-threaded kernels at every count.
+///
+/// Resolution is identical across every source (`--threads`,
+/// `runtime.threads`, `CONMEZO_THREADS`): 0 means one worker per available
+/// core, and explicit counts are clamped to
+/// `std::thread::available_parallelism()` — oversubscribing cores only
+/// ever slows the GEMMs down.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ParallelPolicy {
     pub threads: usize,
@@ -151,28 +172,27 @@ pub struct ParallelPolicy {
 
 impl ParallelPolicy {
     /// Single-threaded execution (the deterministic-by-construction default
-    /// — threading is bit-identical anyway, this just avoids spawn overhead
-    /// on small presets).
+    /// — threading is bit-identical anyway, this just avoids idle pool
+    /// workers on small presets).
     pub fn single() -> ParallelPolicy {
         ParallelPolicy { threads: 1 }
     }
 
     /// One worker per available core.
     pub fn auto() -> ParallelPolicy {
-        let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-        ParallelPolicy { threads: n }
+        Self::from_count(0)
     }
 
-    /// From an explicit count; 0 means "all cores".
+    /// From an explicit count; 0 means "all cores", and any count is
+    /// clamped to the machine's available parallelism.
     pub fn from_count(threads: usize) -> ParallelPolicy {
-        if threads == 0 {
-            Self::auto()
-        } else {
-            ParallelPolicy { threads }
-        }
+        let avail = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let t = if threads == 0 { avail } else { threads.min(avail) };
+        ParallelPolicy { threads: t.max(1) }
     }
 
-    /// From the `CONMEZO_THREADS` env var (unset -> single; 0 -> all cores).
+    /// From the `CONMEZO_THREADS` env var (unset -> single; 0 -> all
+    /// cores; clamped like every other source).
     pub fn from_env() -> ParallelPolicy {
         match std::env::var("CONMEZO_THREADS").ok().and_then(|s| s.trim().parse::<usize>().ok()) {
             Some(n) => Self::from_count(n),
@@ -201,13 +221,12 @@ pub fn validate_args(spec: &ProgramSpec, args: &[Arg<'_>]) -> Result<()> {
         );
     }
     for (a, ispec) in args.iter().zip(&spec.inputs) {
-        let got = a.shape_of();
-        if got != ispec.shape {
+        if !a.matches_shape(&ispec.shape) {
             bail!(
                 "{}: arg {:?} shape mismatch: got {:?}, manifest says {:?}",
                 spec.name,
                 ispec.name,
-                got,
+                a.shape_of(),
                 ispec.shape
             );
         }
@@ -336,11 +355,13 @@ impl Program {
     }
 }
 
-/// Enable FTZ + DAZ on this thread BEFORE any execution threads spawn
-/// (children inherit MXCSR). ZO momentum buffers decay geometrically
-/// (beta = 0.99), and denormal f32 arithmetic on x86 traps to microcode at
-/// ~100x the cost — measured as a progressive 4-5x slowdown over long
-/// ConMeZO runs before this was set (EXPERIMENTS.md §Perf).
+/// Enable FTZ + DAZ on this thread. ZO momentum buffers decay
+/// geometrically (beta = 0.99), and denormal f32 arithmetic on x86 traps
+/// to microcode at ~100x the cost — measured as a progressive 4-5x
+/// slowdown over long ConMeZO runs before this was set (EXPERIMENTS.md
+/// §Perf). Worker-pool threads call this themselves on startup
+/// (`crate::parallel`), so pooled and caller-computed chunks always share
+/// one float mode.
 pub fn enable_flush_to_zero() {
     #[cfg(target_arch = "x86_64")]
     unsafe {
@@ -536,9 +557,14 @@ mod tests {
 
     #[test]
     fn parallel_policy_resolution() {
+        let avail = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
         assert_eq!(ParallelPolicy::default(), ParallelPolicy::single());
-        assert_eq!(ParallelPolicy::from_count(3).threads, 3);
-        assert!(ParallelPolicy::from_count(0).threads >= 1, "0 means all cores");
+        assert_eq!(ParallelPolicy::from_count(1).threads, 1);
+        assert_eq!(ParallelPolicy::from_count(3).threads, 3.min(avail));
+        assert_eq!(ParallelPolicy::from_count(0).threads, avail, "0 means all cores");
+        assert_eq!(ParallelPolicy::auto().threads, avail);
+        // explicit counts clamp to the machine instead of oversubscribing
+        assert_eq!(ParallelPolicy::from_count(1_000_000).threads, avail);
     }
 
     #[test]

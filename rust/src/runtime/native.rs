@@ -11,12 +11,15 @@
 //!
 //! Programs bind into a [`NativeSession`]: one bound program owning its
 //! forward scratch, autograd workspace, direction buffers and output
-//! slots, so every `run` after the first executes without steady-state
-//! buffer allocation (the bind-once/run-many contract of
-//! [`crate::runtime::Session`]; the per-layer layout-name strings are the
-//! one remaining per-call allocation — see ROADMAP). The session also
-//! implements the antithetic-pair fast path `two_point` over a single
-//! scratch set.
+//! slots, with every per-layer layout offset resolved at bind time into
+//! the model's `ModelPlan` — so steady-state `run`/`two_point` executes
+//! with zero allocation and zero string formatting (the bind-once/run-many
+//! contract of [`crate::runtime::Session`]). The session also implements
+//! the antithetic-pair fast path `two_point` over a single scratch set.
+//! All sessions of one backend share ONE persistent
+//! [`crate::parallel::WorkerPool`] (sized by [`ParallelPolicy`]) for the
+//! GEMMs and the threaded attention loops; no OS thread is ever spawned on
+//! the step path.
 //!
 //! Fused-step emulation reuses the exact `vecmath` kernels the composed
 //! path uses (`cone_direction`, `zo_update`, `axpy_into`), so fused and
@@ -24,7 +27,9 @@
 //! integration tests assert exactly rather than within tolerance.
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
+use crate::parallel::WorkerPool;
 use crate::runtime::autograd::{self, GradWorkspace};
 use crate::runtime::manifest::{Manifest, PresetMeta, ProgramSpec, TensorSpec};
 use crate::runtime::model::{builtin_presets, FwdScratch, NativeModel, QUAD_DIM};
@@ -59,6 +64,10 @@ pub const ADAM_WD: f32 = 0.0;
 pub struct NativeBackend {
     manifest: Manifest,
     policy: ParallelPolicy,
+    /// ONE persistent worker pool per backend (hence per `Runtime`),
+    /// shared by every bound session's model — workers spawn here once and
+    /// serve all GEMM/attention dispatches forever.
+    pool: Arc<WorkerPool>,
 }
 
 impl NativeBackend {
@@ -77,6 +86,17 @@ impl NativeBackend {
     /// custom geometries).
     pub fn with_presets(presets: Vec<PresetMeta>) -> NativeBackend {
         Self::with_presets_policy(presets, ParallelPolicy::single())
+    }
+
+    /// This backend's [`ParallelPolicy`].
+    pub fn policy(&self) -> ParallelPolicy {
+        self.policy
+    }
+
+    /// A handle to the backend's shared worker pool (tests use this to pin
+    /// the no-steady-state-spawning invariant).
+    pub fn pool_handle(&self) -> Arc<WorkerPool> {
+        self.pool.clone()
     }
 
     pub fn with_presets_policy(presets: Vec<PresetMeta>, policy: ParallelPolicy) -> NativeBackend {
@@ -103,7 +123,8 @@ impl NativeBackend {
             }
             preset_map.insert(meta.name.clone(), meta);
         }
-        NativeBackend { manifest: Manifest { programs, presets: preset_map }, policy }
+        let pool = Arc::new(WorkerPool::new(policy.threads));
+        NativeBackend { manifest: Manifest { programs, presets: preset_map }, policy, pool }
     }
 }
 
@@ -129,7 +150,7 @@ impl Backend for NativeBackend {
             return Ok(Box::new(CallSession::new(spec.clone(), Box::new(QuadProgram))));
         }
         let meta = self.manifest.preset(&spec.preset)?.clone();
-        let model = NativeModel::new(meta).with_threads(self.policy.threads);
+        let model = NativeModel::new(meta).with_pool(self.pool.clone());
         Ok(Box::new(NativeSession::new(spec.clone(), model)))
     }
 }
@@ -358,8 +379,8 @@ impl NativeSession {
         let needs_u = matches!(kind, "conmezo_step" | "mezo_step" | "mezo_momentum_step");
         let needs_z = kind == "conmezo_step";
         let d = meta.d_pad;
-        let fwd = needs_fwd.then(|| FwdScratch::new(meta));
-        let grad = needs_grad.then(|| GradWorkspace::new(meta));
+        let fwd = needs_fwd.then(|| model.scratch());
+        let grad = needs_grad.then(|| GradWorkspace::for_model(&model));
         let outs: Vec<Value> = spec.outputs.iter().map(|name| out_slot(meta, name)).collect();
         NativeSession {
             spec,
@@ -668,10 +689,108 @@ impl ProgramImpl for QuadProgram {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::model::build_preset;
     use crate::runtime::{lit_f32, lit_vec_f32, Runtime};
 
     fn rt() -> Runtime {
         Runtime::native_with(ParallelPolicy::single())
+    }
+
+    /// Geometry big enough that both the GEMM and attention work gates
+    /// engage the pool (512 forward rows, 16 attention tasks of 128Ki MACs).
+    fn thr_preset() -> PresetMeta {
+        build_preset("thr", 64, 64, 2, 2, 64, 8)
+    }
+
+    fn thr_batch(meta: &PresetMeta) -> (Vec<i32>, Vec<i32>, Vec<f32>) {
+        let r = meta.batch * meta.seq_len;
+        let ids: Vec<i32> = (0..r).map(|i| ((i * 7) % 63) as i32).collect();
+        let tgt: Vec<i32> = (0..r).map(|i| ((i * 11) % 63) as i32).collect();
+        let mut mask = vec![0f32; r];
+        for i in 0..meta.batch {
+            mask[i * meta.seq_len + (5 * i + 2) % meta.seq_len] = 1.0;
+        }
+        (ids, tgt, mask)
+    }
+
+    #[test]
+    fn two_point_step_bit_identical_across_pool_sizes() {
+        // the full antithetic pair — perturb, forward (pooled GEMMs +
+        // threaded attention), loss — must be bit-identical at pool sizes
+        // {1, 2, 4}. ParallelPolicy is constructed directly so core-count
+        // clamping on small CI machines cannot shrink the pool under test.
+        let meta = thr_preset();
+        let (ids, tgt, mask) = thr_batch(&meta);
+        let run_with = |threads: usize| -> (f64, f64) {
+            let be =
+                NativeBackend::with_presets_policy(vec![meta.clone()], ParallelPolicy { threads });
+            let rt = Runtime::from_backend(Box::new(be));
+            let mut init = rt.bind_kind("thr", "init").unwrap();
+            let params = lit_vec_f32(&init.run(&[Arg::I32(3)]).unwrap()[0]).unwrap();
+            let mut sample = rt.bind_kind("thr", "sample_u").unwrap();
+            let z = lit_vec_f32(&sample.run(&[Arg::I32(9)]).unwrap()[0]).unwrap();
+            let mut sess = rt.bind_kind("thr", "two_point").unwrap();
+            sess.two_point(&params, &z, 1e-3, &ids, &tgt, &mask).unwrap()
+        };
+        let want = run_with(1);
+        for t in [2usize, 4] {
+            assert_eq!(run_with(t), want, "pool size {t} diverged");
+        }
+    }
+
+    #[test]
+    fn planned_session_reuses_pool_and_output_slots() {
+        // the pool-reuse contract: repeated run()/two_point() on a bound
+        // session spawns zero OS threads beyond the pool's initial workers
+        // and returns results from the SAME output buffers every time
+        let meta = thr_preset();
+        let (ids, tgt, mask) = thr_batch(&meta);
+        let be = NativeBackend::with_presets_policy(vec![meta], ParallelPolicy { threads: 3 });
+        let pool = be.pool_handle();
+        let rt = Runtime::from_backend(Box::new(be));
+        let mut init = rt.bind_kind("thr", "init").unwrap();
+        let params = lit_vec_f32(&init.run(&[Arg::I32(4)]).unwrap()[0]).unwrap();
+        let mut sample = rt.bind_kind("thr", "sample_u").unwrap();
+        let z = lit_vec_f32(&sample.run(&[Arg::I32(5)]).unwrap()[0]).unwrap();
+        let mut sess = rt.bind_kind("thr", "two_point").unwrap();
+        let first = sess.two_point(&params, &z, 1e-3, &ids, &tgt, &mask).unwrap();
+        let p0 = match &sess.run(&[
+            Arg::VecF32(&params),
+            Arg::VecF32(&z),
+            Arg::F32(1e-3),
+            Arg::TensorI32(&ids, vec![8, 64]),
+            Arg::TensorI32(&tgt, vec![8, 64]),
+            Arg::TensorF32(&mask, vec![8, 64]),
+        ])
+        .unwrap()[0]
+        {
+            Value::F32(v) => v.as_ptr(),
+            _ => panic!("loss_plus must be f32"),
+        };
+        let spawned = pool.os_threads_spawned();
+        assert_eq!(spawned, 2, "a 3-thread policy spawns exactly 2 workers");
+        for _ in 0..10 {
+            assert_eq!(sess.two_point(&params, &z, 1e-3, &ids, &tgt, &mask).unwrap(), first);
+            let outs = sess
+                .run(&[
+                    Arg::VecF32(&params),
+                    Arg::VecF32(&z),
+                    Arg::F32(1e-3),
+                    Arg::TensorI32(&ids, vec![8, 64]),
+                    Arg::TensorI32(&tgt, vec![8, 64]),
+                    Arg::TensorF32(&mask, vec![8, 64]),
+                ])
+                .unwrap();
+            match &outs[0] {
+                Value::F32(v) => assert_eq!(v.as_ptr(), p0, "output slot must be stable"),
+                _ => panic!("loss_plus must be f32"),
+            }
+        }
+        assert_eq!(
+            pool.os_threads_spawned(),
+            spawned,
+            "steady-state run()/two_point() must never spawn threads"
+        );
     }
 
     #[test]

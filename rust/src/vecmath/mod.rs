@@ -8,12 +8,15 @@
 //! throughput against the memory-bandwidth roofline (EXPERIMENTS.md §Perf).
 //!
 //! The dense GEMMs (`matmul` / `matmul_at` / `matmul_bt`) additionally have
-//! `*_threaded` twins that split the output rows across scoped threads
-//! (`runtime::ParallelPolicy` supplies the count). Each output element is
-//! produced by exactly one thread with the same per-element accumulation
-//! order as the single-threaded kernel, so threaded results are
-//! bit-identical at every thread count — pinned by
-//! `threaded_gemms_bit_identical_across_thread_counts`.
+//! `*_threaded` twins that split the output rows into contiguous chunks and
+//! dispatch them onto a persistent [`crate::parallel::WorkerPool`] (created
+//! once per `Runtime` from `runtime::ParallelPolicy` — no per-call thread
+//! spawning). Each output element is produced by exactly one task with the
+//! same per-element accumulation order as the single-threaded kernel, so
+//! pooled results are bit-identical at every pool size — pinned by
+//! `threaded_gemms_bit_identical_across_pool_sizes`.
+
+use crate::parallel::{SendPtr, WorkerPool};
 
 /// y <- y + a * x (BLAS axpy).
 pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
@@ -124,14 +127,17 @@ const MATMUL_MR: usize = 4;
 /// registers/L1 across the whole k-loop.
 const MATMUL_NR: usize = 64;
 
-/// Minimum per-thread MAC count before a threaded GEMM actually spawns:
-/// below this, `std::thread::scope` setup dominates the kernel itself
-/// (nano/tiny-preset GEMMs always stay single-threaded).
-const PAR_MIN_MACS_PER_THREAD: usize = 1 << 18;
+/// Minimum per-participant MAC count before a threaded kernel actually
+/// dispatches onto the pool: below this, wake-up/synchronization overhead
+/// dominates the kernel itself (nano/tiny-preset GEMMs always stay
+/// single-threaded).
+pub(crate) const PAR_MIN_MACS_PER_THREAD: usize = 1 << 18;
 
-/// Effective worker count for a row-parallel GEMM over `rows` output rows
-/// with `macs_per_row` multiply-accumulates each.
-fn effective_threads(threads: usize, rows: usize, macs_per_row: usize) -> usize {
+/// Effective participant count for a row-parallel kernel over `rows` units
+/// of work with `macs_per_row` multiply-accumulates each. Shared by the
+/// GEMMs here and the per-(batch, head) attention dispatch in
+/// `runtime::model` / `runtime::autograd`.
+pub(crate) fn effective_threads(threads: usize, rows: usize, macs_per_row: usize) -> usize {
     if threads <= 1 || rows == 0 {
         return 1;
     }
@@ -140,34 +146,37 @@ fn effective_threads(threads: usize, rows: usize, macs_per_row: usize) -> usize 
 }
 
 /// Split `out` into `t` contiguous row-chunks and run `span` on each from
-/// its own scoped thread. Every output element is written by exactly one
-/// thread with the identical per-element accumulation order the
-/// single-threaded kernel uses, so the result is bit-identical for every
-/// thread count.
+/// the persistent worker pool (one chunk per participant — zero thread
+/// spawns, zero allocation on the dispatch path). Every output element is
+/// written by exactly one task with the identical per-element accumulation
+/// order the single-threaded kernel uses, so the result is bit-identical
+/// for every pool size.
 fn par_rows(
     out: &mut [f32],
     rows: usize,
     n: usize,
     t: usize,
+    pool: &WorkerPool,
     span: impl Fn(usize, usize, &mut [f32]) + Sync,
 ) {
     if t <= 1 {
         span(0, rows, out);
         return;
     }
+    debug_assert_eq!(out.len(), rows * n);
     let base = rows / t;
     let extra = rows % t;
-    std::thread::scope(|scope| {
-        let mut rest = out;
-        let mut row0 = 0usize;
-        for i in 0..t {
-            let chunk_rows = base + usize::from(i < extra);
-            let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(chunk_rows * n);
-            rest = tail;
-            let span = &span;
-            scope.spawn(move || span(row0, chunk_rows, chunk));
-            row0 += chunk_rows;
+    let ptr = SendPtr(out.as_mut_ptr());
+    pool.run(t, t, &|chunk| {
+        // the same contiguous partition the scoped implementation used:
+        // the first `extra` chunks carry one extra row
+        let row0 = chunk * base + chunk.min(extra);
+        let chunk_rows = base + usize::from(chunk < extra);
+        if chunk_rows == 0 {
+            return;
         }
+        let slice = unsafe { ptr.slice_mut(row0 * n, chunk_rows * n) };
+        span(row0, chunk_rows, slice);
     });
 }
 
@@ -231,18 +240,18 @@ pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32
     matmul_span(a, b, k, n, 0, m, out);
 }
 
-/// [`matmul`] parallelized over output rows with `std::thread::scope`
-/// (the `ParallelPolicy` thread count flows here from the runtime). Each
-/// thread runs the identical blocked kernel on a disjoint row range, so the
-/// result is bit-identical to [`matmul`] for every `threads` value; tiny
-/// shapes fall back to the single-threaded path (see
+/// [`matmul`] parallelized over output rows on the persistent
+/// [`WorkerPool`] (the `ParallelPolicy`-sized pool flows here from the
+/// runtime). Each task runs the identical blocked kernel on a disjoint row
+/// range, so the result is bit-identical to [`matmul`] for every pool
+/// size; tiny shapes fall back to the single-threaded path (see
 /// [`PAR_MIN_MACS_PER_THREAD`]).
-pub fn matmul_threaded(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32], threads: usize) {
+pub fn matmul_threaded(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32], pool: &WorkerPool) {
     assert_eq!(a.len(), m * k);
     assert_eq!(b.len(), k * n);
     assert_eq!(out.len(), m * n);
-    let t = effective_threads(threads, m, k * n);
-    par_rows(out, m, n, t, |row0, rows, chunk| matmul_span(a, b, k, n, row0, rows, chunk));
+    let t = effective_threads(pool.threads(), m, k * n);
+    par_rows(out, m, n, t, pool, |row0, rows, chunk| matmul_span(a, b, k, n, row0, rows, chunk));
 }
 
 /// out[k, n] = a[m, k]^T @ d[m, n] — the weight-gradient half of the
@@ -263,12 +272,12 @@ pub fn matmul_at(a: &[f32], d: &[f32], m: usize, k: usize, n: usize, out: &mut [
 
 /// [`matmul_at`] parallelized over the k output rows (see
 /// [`matmul_threaded`] for the bit-identity contract).
-pub fn matmul_at_threaded(a: &[f32], d: &[f32], m: usize, k: usize, n: usize, out: &mut [f32], threads: usize) {
+pub fn matmul_at_threaded(a: &[f32], d: &[f32], m: usize, k: usize, n: usize, out: &mut [f32], pool: &WorkerPool) {
     assert_eq!(a.len(), m * k);
     assert_eq!(d.len(), m * n);
     assert_eq!(out.len(), k * n);
-    let t = effective_threads(threads, k, m * n);
-    par_rows(out, k, n, t, |p0, prows, chunk| matmul_at_span(a, d, m, k, n, p0, prows, chunk));
+    let t = effective_threads(pool.threads(), k, m * n);
+    par_rows(out, k, n, t, pool, |p0, prows, chunk| matmul_at_span(a, d, m, k, n, p0, prows, chunk));
 }
 
 /// Output rows `p_base..p_base+prows` of a^T @ d; `out` holds exactly that
@@ -327,12 +336,12 @@ pub fn matmul_bt(a: &[f32], bt: &[f32], m: usize, k: usize, n: usize, out: &mut 
 /// [`matmul_bt`] parallelized over output rows (see [`matmul_threaded`] for
 /// the bit-identity contract). This is the LM-head GEMM — the widest matmul
 /// of the forward — so it threads alongside the projection GEMMs.
-pub fn matmul_bt_threaded(a: &[f32], bt: &[f32], m: usize, k: usize, n: usize, out: &mut [f32], threads: usize) {
+pub fn matmul_bt_threaded(a: &[f32], bt: &[f32], m: usize, k: usize, n: usize, out: &mut [f32], pool: &WorkerPool) {
     assert_eq!(a.len(), m * k);
     assert_eq!(bt.len(), n * k);
     assert_eq!(out.len(), m * n);
-    let t = effective_threads(threads, m, k * n);
-    par_rows(out, m, n, t, |row0, rows, chunk| matmul_bt_span(a, bt, k, n, row0, rows, chunk));
+    let t = effective_threads(pool.threads(), m, k * n);
+    par_rows(out, m, n, t, pool, |row0, rows, chunk| matmul_bt_span(a, bt, k, n, row0, rows, chunk));
 }
 
 /// Rows `row0..row0+rows` of a @ bt^T; `out` holds exactly that row range.
@@ -904,10 +913,11 @@ mod tests {
     }
 
     #[test]
-    fn threaded_gemms_bit_identical_across_thread_counts() {
-        // big enough that the per-thread work gate actually spawns threads
-        // (see PAR_MIN_MACS_PER_THREAD); odd dims straddle the MR/NR tiles
-        // so the per-thread row partition differs from the tile partition
+    fn threaded_gemms_bit_identical_across_pool_sizes() {
+        // big enough that the per-participant work gate actually engages the
+        // pool (see PAR_MIN_MACS_PER_THREAD); odd dims straddle the MR/NR
+        // tiles so the per-chunk row partition differs from the tile
+        // partition
         let (m, k, n) = (256usize, 96usize, 130usize);
         let a = randv(m * k, 41);
         let b = randv(k * n, 42);
@@ -919,34 +929,55 @@ mod tests {
         let bt = randv(n * k, 44);
         let mut want_bt = vec![0f32; m * n];
         matmul_bt(&a, &bt, m, k, n, &mut want_bt);
-        for t in [1usize, 2, 3, 5, 8, 64] {
+        for t in [1usize, 2, 3, 4, 8] {
+            let pool = WorkerPool::new(t);
             assert!(effective_threads(t, m, k * n) >= t.min(8).min(m), "gate too strict for t={t}");
             let mut got = vec![0f32; m * n];
-            matmul_threaded(&a, &b, m, k, n, &mut got, t);
+            matmul_threaded(&a, &b, m, k, n, &mut got, &pool);
             assert_eq!(got, want, "matmul_threaded({t}) != matmul");
             let mut got_at = vec![0f32; k * n];
-            matmul_at_threaded(&a, &d, m, k, n, &mut got_at, t);
+            matmul_at_threaded(&a, &d, m, k, n, &mut got_at, &pool);
             assert_eq!(got_at, want_at, "matmul_at_threaded({t}) != matmul_at");
             let mut got_bt = vec![0f32; m * n];
-            matmul_bt_threaded(&a, &bt, m, k, n, &mut got_bt, t);
+            matmul_bt_threaded(&a, &bt, m, k, n, &mut got_bt, &pool);
             assert_eq!(got_bt, want_bt, "matmul_bt_threaded({t}) != matmul_bt");
         }
     }
 
     #[test]
     fn threaded_gemm_small_shapes_fall_back_single() {
-        // below the work gate the threaded entry points must not spawn and
-        // must still be exact; also covers rows < threads
+        // below the work gate the threaded entry points must not dispatch
+        // and must still be exact; also covers rows < pool size
+        let pool = WorkerPool::new(4);
         for (m, k, n) in [(1usize, 3usize, 2usize), (5, 7, 9), (3, 64, 65)] {
             let a = randv(m * k, (m * 100 + n) as u64);
             let b = randv(k * n, (k * 100 + n) as u64);
             let mut want = vec![0f32; m * n];
             matmul(&a, &b, m, k, n, &mut want);
             let mut got = vec![0f32; m * n];
-            matmul_threaded(&a, &b, m, k, n, &mut got, 16);
+            matmul_threaded(&a, &b, m, k, n, &mut got, &pool);
             assert_eq!(got, want);
-            assert_eq!(effective_threads(16, m, k * n), 1);
+            assert_eq!(effective_threads(pool.threads(), m, k * n), 1);
         }
+    }
+
+    #[test]
+    fn pooled_gemms_reuse_threads_across_calls() {
+        // the ROADMAP item this PR closes: repeated threaded GEMMs must not
+        // spawn any OS thread beyond the pool's initial workers
+        let (m, k, n) = (256usize, 96usize, 130usize);
+        let a = randv(m * k, 51);
+        let b = randv(k * n, 52);
+        let mut want = vec![0f32; m * n];
+        matmul(&a, &b, m, k, n, &mut want);
+        let pool = WorkerPool::new(4);
+        assert_eq!(pool.os_threads_spawned(), 3);
+        let mut got = vec![0f32; m * n];
+        for _ in 0..50 {
+            matmul_threaded(&a, &b, m, k, n, &mut got, &pool);
+            assert_eq!(got, want);
+        }
+        assert_eq!(pool.os_threads_spawned(), 3, "steady-state GEMMs must not spawn");
     }
 
     #[test]

@@ -103,18 +103,21 @@ fn checkpoint_resume_equivalence() {
 
 #[test]
 fn distributed_workers_stay_identical_and_learn() {
+    // replicas share ONE bound two_point session per process (one forward
+    // scratch, one WorkerPool) via model_workers_shared
     let rt = runtime();
     let meta = rt.preset("nano").unwrap().clone();
     let gen = TaskGen::new(spec("sst2").unwrap(), meta.vocab, meta.seq_len);
     let init = rt.load_kind("nano", "init").unwrap();
     let x0 = lit_vec_f32(&init.call(&[Arg::I32(9)]).unwrap()[0]).unwrap();
 
-    let mut workers = Vec::new();
-    for id in 0..3u32 {
-        let sampler = TrainSampler::new(gen.dataset(64, 9), meta.batch, meta.seq_len, 9, id as u64);
-        let obj = ModelObjective::new(&rt, "nano", Box::new(sampler)).unwrap();
-        workers.push(ZoWorker::new(id, x0.clone(), Box::new(obj)));
-    }
+    let samplers: Vec<Box<dyn conmezo::objective::BatchSource>> = (0..3u64)
+        .map(|id| {
+            Box::new(TrainSampler::new(gen.dataset(64, 9), meta.batch, meta.seq_len, 9, id))
+                as Box<dyn conmezo::objective::BatchSource>
+        })
+        .collect();
+    let workers = conmezo::coordinator::model_workers_shared(&rt, "nano", &x0, samplers).unwrap();
     let mut cluster = LocalCluster::new(workers, 11);
     let hypers = DistHypers { theta: 1.35, eta: 3e-4, lam: 1e-3 };
     let summary = cluster.run(150, hypers, &BetaSchedule::Constant(0.99), 0).unwrap();
@@ -124,6 +127,48 @@ fn distributed_workers_stay_identical_and_learn() {
     assert!(last < first - 0.3, "distributed loss did not decrease: {first} -> {last}");
     // O(1) communication
     assert!(summary.wire_bytes < 150 * 3 * 200, "wire bytes too high: {}", summary.wire_bytes);
+}
+
+#[test]
+fn shared_session_workers_match_private_session_workers() {
+    // THE sharing invariant: a cluster whose replicas share one bound
+    // session pair must be bit-identical, step for step, to one where
+    // every replica binds its own sessions — session workspaces carry no
+    // state across calls
+    let rt = runtime();
+    let meta = rt.preset("nano").unwrap().clone();
+    let gen = TaskGen::new(spec("sst2").unwrap(), meta.vocab, meta.seq_len);
+    let init = rt.load_kind("nano", "init").unwrap();
+    let x0 = lit_vec_f32(&init.call(&[Arg::I32(13)]).unwrap()[0]).unwrap();
+    let sampler = |id: u64| {
+        Box::new(TrainSampler::new(gen.dataset(64, 13), meta.batch, meta.seq_len, 13, id))
+            as Box<dyn conmezo::objective::BatchSource>
+    };
+
+    let shared = conmezo::coordinator::model_workers_shared(
+        &rt,
+        "nano",
+        &x0,
+        (0..3).map(|id| sampler(id as u64)).collect(),
+    )
+    .unwrap();
+    let mut shared_cluster = LocalCluster::new(shared, 17);
+
+    let mut private = Vec::new();
+    for id in 0..3u32 {
+        let obj = ModelObjective::new(&rt, "nano", sampler(id as u64)).unwrap();
+        private.push(ZoWorker::new(id, x0.clone(), Box::new(obj)));
+    }
+    let mut private_cluster = LocalCluster::new(private, 17);
+
+    let hypers = DistHypers { theta: 1.35, eta: 3e-4, lam: 1e-3 };
+    shared_cluster.run(40, hypers, &BetaSchedule::Constant(0.99), 0).unwrap();
+    private_cluster.run(40, hypers, &BetaSchedule::Constant(0.99), 0).unwrap();
+    assert!(shared_cluster.replicas_identical());
+    for (a, b) in shared_cluster.workers.iter().zip(&private_cluster.workers) {
+        assert_eq!(a.x, b.x, "shared-session replica diverged from private-session replica");
+        assert_eq!(a.m, b.m);
+    }
 }
 
 #[test]
