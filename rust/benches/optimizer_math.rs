@@ -185,10 +185,12 @@ fn main() -> conmezo::util::error::Result<()> {
         par_results.push(r);
     }
     {
-        // the medium-preset forward at pool sizes 1 vs N: the GEMMs thread
-        // in both, so the multi/single delta is dominated by the newly
-        // threaded per-(batch, head) attention core
-        use conmezo::runtime::model::{build_preset, NativeModel};
+        // the medium-preset forward with the GEMMs pooled in BOTH runs; the
+        // baseline pins attention to one participant via a single-slot
+        // scratch (att_parts is capped by ws.slots), so the multi/single
+        // delta isolates the threaded per-(batch, head) attention core
+        // instead of re-measuring the GEMM row-parallel win
+        use conmezo::runtime::model::{build_preset, FwdScratch, NativeModel};
         let meta = build_preset("medium", 512, 256, 8, 8, 64, 8);
         let (bsz, s) = (meta.batch, meta.seq_len);
         let ids: Vec<i32> = (0..bsz * s).map(|i| ((i * 13) % 509) as i32).collect();
@@ -197,19 +199,18 @@ fn main() -> conmezo::util::error::Result<()> {
         for i in 0..bsz {
             mask[i * s + s - 1] = 1.0;
         }
-        let single = NativeModel::new(meta.clone());
-        let params = single.init_flat(1);
-        let mut ws = single.scratch();
-        let r = b.run_items("attention/medium_loss/threads1", Some(1.0), &mut || {
-            consume(single.loss_with(&params, &ids, &tgt, &mask, bsz, s, &mut ws));
+        let model = NativeModel::new(meta.clone()).with_threads(threads);
+        let params = model.init_flat(1);
+        let mut ws1 = FwdScratch::with_slots(&meta, 1);
+        let r = b.run_items("attention/medium_loss/att_threads1", Some(1.0), &mut || {
+            consume(model.loss_with(&params, &ids, &tgt, &mask, bsz, s, &mut ws1));
         });
         println!("{}", r.report());
         par_results.push(r);
         if threads > 1 {
-            let multi = NativeModel::new(meta).with_threads(threads);
-            let mut ws = multi.scratch();
-            let r = b.run_items(&format!("attention/medium_loss/threads{threads}"), Some(1.0), &mut || {
-                consume(multi.loss_with(&params, &ids, &tgt, &mask, bsz, s, &mut ws));
+            let mut ws = model.scratch();
+            let r = b.run_items(&format!("attention/medium_loss/att_threads{threads}"), Some(1.0), &mut || {
+                consume(model.loss_with(&params, &ids, &tgt, &mask, bsz, s, &mut ws));
             });
             println!("{}", r.report());
             par_results.push(r);

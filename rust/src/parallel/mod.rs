@@ -101,7 +101,18 @@ fn worker_loop(shared: Arc<Shared>, participant: usize) {
                 }
                 if st.epoch != seen_epoch {
                     seen_epoch = st.epoch;
-                    break st.job.expect("pool epoch advanced without a job");
+                    // `None` here means the epoch was dispatched AND retired
+                    // (run() returned and cleared the job) before this worker
+                    // woke. That only happens when the worker sat out that
+                    // dispatch (participant >= parts): run() waits for every
+                    // participating ack before clearing the job, so a
+                    // participant always finds it Some. Note the epoch and
+                    // keep sleeping — panicking would kill the worker and
+                    // hang the next wide dispatch on its missing ack.
+                    if let Some(job) = st.job {
+                        break job;
+                    }
+                    continue;
                 }
                 st = shared.work.wait(st).unwrap_or_else(|e| e.into_inner());
             }
@@ -132,8 +143,10 @@ fn worker_loop(shared: Arc<Shared>, participant: usize) {
 impl WorkerPool {
     /// Pool with `threads` participants: the caller plus `threads - 1`
     /// spawned OS workers (`threads <= 1` spawns nothing and runs every
-    /// dispatch inline). Also enables FTZ/DAZ on the constructing thread so
-    /// caller-computed chunks use the same float mode as worker chunks.
+    /// dispatch inline). FTZ/DAZ is enabled on the constructing thread, in
+    /// every worker, and re-pinned on the calling thread by each
+    /// [`WorkerPool::run`], so caller-computed chunks always share the
+    /// workers' float mode no matter which thread dispatches.
     pub fn new(threads: usize) -> WorkerPool {
         crate::runtime::enable_flush_to_zero();
         let threads = threads.max(1);
@@ -184,6 +197,13 @@ impl WorkerPool {
     /// participant 0 being the calling thread. Blocks until every chunk
     /// completed. Allocation-free on the dispatch path.
     pub fn run<F: Fn(usize) + Sync>(&self, parts: usize, chunks: usize, task: &F) {
+        // pin the CALLING thread's float mode on every dispatch, not just at
+        // pool construction: a bound session can be moved to a thread that
+        // never enabled FTZ/DAZ, and participant 0's chunks must use the
+        // same denormal handling as the pool workers (and as a pool-size-1
+        // run) or bit-identity breaks. One MXCSR read+write — noise next to
+        // any kernel that clears the work gate.
+        crate::runtime::enable_flush_to_zero();
         let parts = parts.max(1).min(chunks.max(1));
         assert!(
             parts <= self.threads,
@@ -337,6 +357,31 @@ mod tests {
         }
         assert_eq!(hits.load(Ordering::SeqCst), 200 * 6);
         assert_eq!(pool.os_threads_spawned(), 2, "dispatch must never respawn");
+    }
+
+    #[test]
+    fn narrow_dispatches_do_not_strand_idle_workers() {
+        // Regression: a narrow dispatch (parts < threads) retires its epoch
+        // as soon as the PARTICIPATING workers ack. An idle worker woken by
+        // the dispatch's notify_all can observe the advanced epoch only
+        // after the job is cleared; it must treat that as a retired epoch
+        // and keep sleeping (not die), or the next wide dispatch counts a
+        // dead worker in its barrier and hangs forever.
+        let pool = WorkerPool::new(4);
+        let hits = AtomicU32::new(0);
+        for _ in 0..500 {
+            pool.run(2, 2, &|_| {
+                hits.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        // wide dispatches still complete: every worker is alive and acks
+        for _ in 0..50 {
+            pool.run(4, 8, &|_| {
+                hits.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        assert_eq!(hits.load(Ordering::SeqCst), 500 * 2 + 50 * 8);
+        assert_eq!(pool.os_threads_spawned(), 3);
     }
 
     #[test]
