@@ -7,15 +7,20 @@
 //! `loss_pallas` kernel-composition ablation, fused conmezo/mezo steps,
 //! the composed two-point path (the `Session::two_point` antithetic fast
 //! path), and — when the thread policy allows — a threaded two_point.
+//! A separate `two_point` section records the materialized-vs-fused
+//! antithetic pair at the medium preset (the `ParamView` win: zero
+//! parameter-sized writes per pair) with a derived parameter-stream
+//! bytes-per-pair estimate as the throughput denominator.
 //!
 //! `cargo bench --bench step_latency [-- --quick] [presets...]`; `--quick`
 //! runs a few iterations of everything (the CI smoke mode).
 
-use conmezo::bench::{write_bench_json, write_results, BenchArgs};
+use conmezo::bench::{consume, write_bench_json, write_results, BenchArgs};
 use conmezo::coordinator::{FusedConMeZo, FusedMezo};
 use conmezo::data::{spec, TaskGen, TrainSampler};
 use conmezo::objective::{BatchSource, ModelObjective, Objective};
 use conmezo::runtime::{lit_f32, lit_vec_f32, Arg, ParallelPolicy, Runtime, Session};
+use conmezo::vecmath::{self, ParamView};
 
 fn main() -> conmezo::util::error::Result<()> {
     let args = BenchArgs::parse();
@@ -142,5 +147,96 @@ fn main() -> conmezo::util::error::Result<()> {
 
     write_results("step_latency.jsonl", &results)?;
     write_bench_json("step_latency", &results)?;
+
+    // -----------------------------------------------------------------------
+    // materialized-vs-fused antithetic pair at the medium preset (the
+    // `two_point` section of BENCH_native.json, asserted by CI): the
+    // retired path writes x ± λz to a d-sized buffer the forward re-reads
+    // (~5 full-d parameter streams per pair: 2 writes + 3 reads), the
+    // ParamView path streams params and z straight through the kernels
+    // (~2 reads, zero parameter-sized writes). items_per_iter carries the
+    // derived bytes-per-pair estimate, so the throughput line reads as
+    // perturbation-stream bandwidth. Runs regardless of the preset args so
+    // the section always lands.
+    // -----------------------------------------------------------------------
+    {
+        use conmezo::runtime::model::{build_preset, NativeModel};
+        let meta = build_preset("medium", 512, 256, 8, 8, 64, 8);
+        let threads = ParallelPolicy::auto().threads;
+        let model = NativeModel::new(meta.clone()).with_threads(threads);
+        let params = model.init_flat(1);
+        let z = model.sample_u(2);
+        let (bsz, s) = (meta.batch, meta.seq_len);
+        let ids: Vec<i32> = (0..bsz * s).map(|i| ((i * 13) % 509) as i32).collect();
+        let tgt: Vec<i32> = (0..bsz * s).map(|i| ((i * 7) % 509) as i32).collect();
+        let mut mask = vec![0f32; bsz * s];
+        for i in 0..bsz {
+            mask[i * s + s - 1] = 1.0;
+        }
+        let mut ws = model.scratch();
+        let lam = 1e-3f32;
+        let d = meta.d_pad;
+
+        // sanity: the two paths must agree bitwise before we time them
+        let mut xs = vec![0f32; d];
+        vecmath::axpy_into(lam, &z, &params, &mut xs);
+        let want = model.loss_with(&xs, &ids, &tgt, &mask, bsz, s, &mut ws);
+        let got = model.loss_view_with(
+            ParamView::perturbed(&params, &z, lam),
+            &ids,
+            &tgt,
+            &mask,
+            bsz,
+            s,
+            &mut ws,
+        );
+        assert_eq!(got, want, "fused two_point diverged from materialized");
+
+        let mut tp_results = Vec::new();
+        let bytes_materialized = (5 * d * 4) as f64;
+        let r = b.run_items(
+            &format!("two_point/medium/materialized_pair_threads{threads}"),
+            Some(bytes_materialized),
+            &mut || {
+                vecmath::axpy_into(lam, &z, &params, &mut xs);
+                let lp = model.loss_with(&xs, &ids, &tgt, &mask, bsz, s, &mut ws);
+                vecmath::axpy_into(-lam, &z, &params, &mut xs);
+                let lm = model.loss_with(&xs, &ids, &tgt, &mask, bsz, s, &mut ws);
+                consume((lp, lm));
+            },
+        );
+        println!("{}", r.report());
+        tp_results.push(r);
+        let bytes_fused = (2 * d * 4) as f64;
+        let r = b.run_items(
+            &format!("two_point/medium/fused_view_pair_threads{threads}"),
+            Some(bytes_fused),
+            &mut || {
+                let lp = model.loss_view_with(
+                    ParamView::perturbed(&params, &z, lam),
+                    &ids,
+                    &tgt,
+                    &mask,
+                    bsz,
+                    s,
+                    &mut ws,
+                );
+                let lm = model.loss_view_with(
+                    ParamView::perturbed(&params, &z, -lam),
+                    &ids,
+                    &tgt,
+                    &mask,
+                    bsz,
+                    s,
+                    &mut ws,
+                );
+                consume((lp, lm));
+            },
+        );
+        println!("{}", r.report());
+        tp_results.push(r);
+        write_results("two_point.jsonl", &tp_results)?;
+        write_bench_json("two_point", &tp_results)?;
+    }
     Ok(())
 }

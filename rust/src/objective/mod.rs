@@ -19,9 +19,12 @@
 //!   session workspaces carry no state across calls (the workspace-reuse
 //!   invariant pinned in rust/tests), so shared-session replicas stay
 //!   bit-identical to private-session ones. The antithetic pair runs
-//!   through the first-class [`Session::two_point`] entry point. (Formerly
-//!   named `HloObjective`, then a `Program::call` wrapper; migrated when
-//!   execution grew the bind-once/run-many session API.)
+//!   through the first-class [`Session::two_point`] entry point — on the
+//!   native backend that pair is materialization-free (`x ± λz` streams
+//!   through `vecmath::ParamView`s; zero parameter-sized writes per
+//!   step). (Formerly named `HloObjective`, then a `Program::call`
+//!   wrapper; migrated when execution grew the bind-once/run-many session
+//!   API.)
 
 use std::cell::RefCell;
 use std::rc::Rc;

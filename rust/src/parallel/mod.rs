@@ -4,8 +4,10 @@
 //! to pay `std::thread::scope` OS-thread spawns for every GEMM (~10 spawns
 //! per forward at the medium preset). A [`WorkerPool`] is created ONCE per
 //! `Runtime` (sized by `runtime::ParallelPolicy`) and every threaded
-//! kernel — the `vecmath` GEMMs plus the per-(batch, head) attention loops
-//! in `runtime::model` / `runtime::autograd` — dispatches onto it through
+//! kernel — the `vecmath` GEMMs plus the attention loops in
+//! `runtime::model` ((batch, head, query-block) tasks on the streaming
+//! forward, whole (batch, head) pairs on the kernel-composition twin) and
+//! `runtime::autograd` — dispatches onto it through
 //! [`WorkerPool::run`], a deterministic parallel-for over chunks. Steady
 //! state spawns zero threads (pinned by [`WorkerPool::os_threads_spawned`]
 //! instrumentation tests) and allocates nothing per dispatch.

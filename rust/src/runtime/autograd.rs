@@ -12,8 +12,10 @@
 //! padded flat buffer (pad lanes structurally zero).
 //!
 //! All buffers the reverse pass touches live in a [`GradWorkspace`] that
-//! sessions allocate once at bind time and reuse every step (the pretrain
-//! allocation-traffic item from ROADMAP). Layout offsets come from the
+//! sessions allocate once at bind time and reuse every step — including
+//! the f64 column accumulators `layernorm_rows_backward_ws` fills, which
+//! the kernel used to heap-allocate per call — so the first-order step
+//! path is allocation-free in steady state. Layout offsets come from the
 //! model's bind-time `ModelPlan` (no per-call `format!` lookups), the
 //! backward GEMMs and the per-(batch, head) attention backward dispatch
 //! onto the model's persistent `WorkerPool`, and results are bit-identical
@@ -56,6 +58,11 @@ pub struct GradWorkspace {
     dqkv: Vec<f32>,
     dg: Vec<f32>,
     db: Vec<f32>,
+    /// f64 column accumulators for `layernorm_rows_backward_ws` — bound
+    /// here so the reverse pass allocates nothing per call (the kernel
+    /// used to heap-allocate these two buffers every LayerNorm backward)
+    dg64: Vec<f64>,
+    db64: Vec<f64>,
     dw_seg: Vec<f32>,
     dscore: Vec<f32>,
 }
@@ -91,6 +98,8 @@ impl GradWorkspace {
             dqkv: vec![0.0; r * 3 * d],
             dg: vec![0.0; d],
             db: vec![0.0; d],
+            dg64: vec![0.0; d],
+            db64: vec![0.0; d],
             dw_seg: vec![0.0; p * s],
             dscore: vec![0.0; p * s],
         }
@@ -162,8 +171,11 @@ pub fn loss_and_grad_ws(
     let hd = d / h;
     let r = b * s;
     let pool = model.pool();
-    // attention-backward dispatch width: same work gate as the forward,
-    // capped by this workspace's scratch slots
+    // attention-backward dispatch width: whole (batch, head) pairs (dk/dv
+    // accumulate across the causal query loop, so a query split here would
+    // need per-participant accumulators + a deterministic reduction; see
+    // ROADMAP), gated like the GEMMs and capped by this workspace's
+    // scratch slots
     let att_parts = vecmath::effective_threads(pool.threads().min(ws.slots), b * h, s * s * hd);
 
     model.forward_into(params, ids, b, s, fwd, Some(&mut ws.tape));
@@ -185,7 +197,9 @@ pub fn loss_and_grad_ws(
     // --- final LayerNorm ---
     let dg = &mut ws.dg;
     let db = &mut ws.db;
-    vecmath::layernorm_rows_backward(
+    let dg64 = &mut ws.dg64;
+    let db64 = &mut ws.db64;
+    vecmath::layernorm_rows_backward_ws(
         &tape.xf,
         plan.ln_f_g.of(params),
         r,
@@ -195,6 +209,8 @@ pub fn loss_and_grad_ws(
         dx_ln,
         dg,
         db,
+        dg64,
+        db64,
     );
     write_grad(grad, plan.ln_f_g, dg);
     write_grad(grad, plan.ln_f_b, db);
@@ -221,7 +237,7 @@ pub fn loss_and_grad_ws(
         vecmath::add_bias_rows_backward(dffpre, r, ff, lp.b1.of_mut(grad));
         vecmath::matmul_bt_threaded(dffpre, lp.w1.of(params), r, ff, d, dh, pool);
         vecmath::matmul_at_threaded(&lt.h2, dffpre, r, d, ff, lp.w1.of_mut(grad), pool);
-        vecmath::layernorm_rows_backward(
+        vecmath::layernorm_rows_backward_ws(
             &lt.x_mid,
             lp.ln2_g.of(params),
             r,
@@ -231,6 +247,8 @@ pub fn loss_and_grad_ws(
             dx_ln,
             dg,
             db,
+            dg64,
+            db64,
         );
         write_grad(grad, lp.ln2_g, dg);
         write_grad(grad, lp.ln2_b, db);
@@ -303,7 +321,7 @@ pub fn loss_and_grad_ws(
         vecmath::add_bias_rows_backward(dqkv, r, 3 * d, lp.bqkv.of_mut(grad));
         vecmath::matmul_bt_threaded(dqkv, lp.wqkv.of(params), r, 3 * d, d, dh, pool); // dh1
         vecmath::matmul_at_threaded(&lt.h1, dqkv, r, d, 3 * d, lp.wqkv.of_mut(grad), pool);
-        vecmath::layernorm_rows_backward(
+        vecmath::layernorm_rows_backward_ws(
             &lt.x_in,
             lp.ln1_g.of(params),
             r,
@@ -313,6 +331,8 @@ pub fn loss_and_grad_ws(
             dx_ln,
             dg,
             db,
+            dg64,
+            db64,
         );
         write_grad(grad, lp.ln1_g, dg);
         write_grad(grad, lp.ln1_b, db);

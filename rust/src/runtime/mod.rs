@@ -31,19 +31,24 @@
 //!
 //! [`Session::two_point`] is the first-class antithetic-pair entry point:
 //! both SPSA evals of one step execute in a single call over one scratch
-//! set. [`Program::call`] remains as a thin compat shim (`load`/`call`
-//! call sites work unchanged) that delegates to an internally cached
-//! session.
+//! set, and on the native backend the pair is **materialization-free** —
+//! `f(x ± λz)` streams through [`crate::vecmath::ParamView`]s with the
+//! perturbation fused into the weight loads, so no perturbed parameter
+//! buffer is ever written (bit-identical to the materialized path by
+//! construction). [`Program::call`] remains as a thin compat shim
+//! (`load`/`call` call sites work unchanged) that delegates to an
+//! internally cached session.
 //!
 //! [`Runtime`] is the façade the rest of the crate talks to: it owns one
 //! backend, resolves program names through the manifest, validates argument
 //! shapes identically on every backend (turning silent size mismatches into
 //! named errors), and caches bound compat programs. A [`ParallelPolicy`]
 //! chosen by cli/config/env sizes the backend's ONE persistent
-//! [`crate::parallel::WorkerPool`]; the `vecmath` GEMMs and the
-//! per-(batch, head) attention loops (forward, `loss_pallas` and the
-//! autograd backward) dispatch onto it, spawn no threads in steady state,
-//! and stay bit-identical at every pool size.
+//! [`crate::parallel::WorkerPool`]; the `vecmath` GEMMs and the threaded
+//! attention loops ((batch, head, query-block) tasks on the streaming
+//! forward; whole (batch, head) pairs on `loss_pallas` and the autograd
+//! backward) dispatch onto it, spawn no threads in steady state, and stay
+//! bit-identical at every pool size.
 //!
 //! Backend selection: `Runtime::from_name("native"|"pjrt"|"auto")`, the
 //! `CONMEZO_BACKEND` env var, or `Runtime::open_default()` (auto); thread

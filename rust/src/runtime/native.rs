@@ -18,13 +18,24 @@
 //! the antithetic-pair fast path `two_point` over a single scratch set.
 //! All sessions of one backend share ONE persistent
 //! [`crate::parallel::WorkerPool`] (sized by [`ParallelPolicy`]) for the
-//! GEMMs and the threaded attention loops; no OS thread is ever spawned on
+//! GEMMs and the threaded attention tasks; no OS thread is ever spawned on
 //! the step path.
 //!
+//! Antithetic pairs are **materialization-free**: `pair_losses`
+//! evaluates `f(x + λz)` and `f(x − λz)` through
+//! [`crate::vecmath::ParamView`]s — the perturbation is fused into the
+//! forward's weight loads, so a pair performs ZERO parameter-sized writes
+//! (the old `d`-sized `xs` scratch is gone from the session entirely).
+//! Because the fused expression is exactly what `axpy_into` materializes,
+//! the pair losses are bit-identical to the retired materialized path
+//! (pinned by `pair_losses_match_materialized_reference` at pool sizes
+//! {1, 2, 4}).
+//!
 //! Fused-step emulation reuses the exact `vecmath` kernels the composed
-//! path uses (`cone_direction`, `zo_update`, `axpy_into`), so fused and
-//! composed modes are bit-consistent on this backend — the equivalence the
-//! integration tests assert exactly rather than within tolerance.
+//! path uses (`cone_direction`, `zo_update`, `axpy_into` for the parameter
+//! update), so fused and composed modes are bit-consistent on this backend
+//! — the equivalence the integration tests assert exactly rather than
+//! within tolerance.
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -37,7 +48,7 @@ use crate::runtime::{
     validate_args, Arg, Backend, CallSession, ParallelPolicy, ProgramImpl, Session, Value,
 };
 use crate::util::error::{bail, Result};
-use crate::vecmath;
+use crate::vecmath::{self, ParamView};
 
 /// Program kinds the native backend implements per preset.
 pub const NATIVE_KINDS: [&str; 12] = [
@@ -309,7 +320,10 @@ fn batch_at<'a>(args: &[Arg<'a>], at: usize) -> Result<(&'a [i32], &'a [i32], &'
 // ---------------------------------------------------------------------------
 
 /// One bound native program: the model plus every workspace its kind needs,
-/// allocated once at bind time.
+/// allocated once at bind time. Antithetic-pair kinds own NO perturbed-
+/// parameter buffer — `x ± λz` streams through the forward via
+/// [`ParamView`], so the only parameter-sized session buffers are the
+/// direction(s) the step kinds sample.
 pub struct NativeSession {
     spec: ProgramSpec,
     model: NativeModel,
@@ -317,8 +331,6 @@ pub struct NativeSession {
     fwd: Option<FwdScratch>,
     /// reverse-pass workspace (first-order kinds)
     grad: Option<GradWorkspace>,
-    /// perturbed-parameter buffer x ± lam z for the antithetic pair
-    xs: Vec<f32>,
     /// raw direction u (ZO step kinds)
     u: Vec<f32>,
     /// cone direction z (conmezo_step)
@@ -347,12 +359,14 @@ fn f32_mut(v: &mut Value) -> &mut [f32] {
 
 /// (f(x + lam z), f(x - lam z)) on one batch over one scratch set — the
 /// antithetic-pair core shared by the `two_point` program, the fused ZO
-/// steps and the [`Session::two_point`] fast path.
+/// steps and the [`Session::two_point`] fast path. Both evals stream
+/// `x ± λz` through [`ParamView`]s with the perturbation fused into the
+/// weight loads: zero parameter-sized writes per pair, bit-identical to
+/// the retired materialize-into-`xs` path.
 #[allow(clippy::too_many_arguments)]
 fn pair_losses(
     model: &NativeModel,
     fwd: &mut FwdScratch,
-    xs: &mut [f32],
     params: &[f32],
     z: &[f32],
     lam: f32,
@@ -361,10 +375,8 @@ fn pair_losses(
     mask: &[f32],
 ) -> (f32, f32) {
     let (b, s) = (model.meta.batch, model.meta.seq_len);
-    vecmath::axpy_into(lam, z, params, xs);
-    let lp = model.loss_with(xs, ids, tgt, mask, b, s, fwd);
-    vecmath::axpy_into(-lam, z, params, xs);
-    let lm = model.loss_with(xs, ids, tgt, mask, b, s, fwd);
+    let lp = model.loss_view_with(ParamView::perturbed(params, z, lam), ids, tgt, mask, b, s, fwd);
+    let lm = model.loss_view_with(ParamView::perturbed(params, z, -lam), ids, tgt, mask, b, s, fwd);
     (lp, lm)
 }
 
@@ -374,8 +386,8 @@ impl NativeSession {
         let kind = spec.kind.as_str();
         let needs_fwd = !matches!(kind, "init" | "sample_u");
         let needs_grad = matches!(kind, "fo_sgd_step" | "fo_adamw_step" | "grad_cos2");
-        let needs_pair =
-            matches!(kind, "two_point" | "conmezo_step" | "mezo_step" | "mezo_momentum_step");
+        // pair kinds need NO perturbed-parameter buffer: x ± λz streams
+        // through ParamViews (see pair_losses)
         let needs_u = matches!(kind, "conmezo_step" | "mezo_step" | "mezo_momentum_step");
         let needs_z = kind == "conmezo_step";
         let d = meta.d_pad;
@@ -386,7 +398,6 @@ impl NativeSession {
             spec,
             fwd,
             grad,
-            xs: vec![0.0; if needs_pair { d } else { 0 }],
             u: vec![0.0; if needs_u { d } else { 0 }],
             z: vec![0.0; if needs_z { d } else { 0 }],
             outs,
@@ -425,7 +436,6 @@ impl NativeSession {
                 let (lp, lm) = pair_losses(
                     &self.model,
                     self.fwd.as_mut().expect("two_point session owns forward scratch"),
-                    &mut self.xs,
                     params,
                     z,
                     lam,
@@ -457,7 +467,6 @@ impl NativeSession {
                 let (lp, lm) = pair_losses(
                     &self.model,
                     self.fwd.as_mut().expect("step session owns forward scratch"),
-                    &mut self.xs,
                     params,
                     &self.z,
                     lam,
@@ -488,7 +497,6 @@ impl NativeSession {
                 let (lp, lm) = pair_losses(
                     &self.model,
                     self.fwd.as_mut().expect("step session owns forward scratch"),
-                    &mut self.xs,
                     params,
                     &self.u,
                     lam,
@@ -517,7 +525,6 @@ impl NativeSession {
                 let (lp, lm) = pair_losses(
                     &self.model,
                     self.fwd.as_mut().expect("step session owns forward scratch"),
-                    &mut self.xs,
                     params,
                     &self.u,
                     lam,
@@ -647,7 +654,6 @@ impl Session for NativeSession {
         let (lp, lm) = pair_losses(
             &self.model,
             self.fwd.as_mut().expect("two_point session owns forward scratch"),
-            &mut self.xs,
             x,
             z,
             lam,
@@ -697,7 +703,8 @@ mod tests {
     }
 
     /// Geometry big enough that both the GEMM and attention work gates
-    /// engage the pool (512 forward rows, 16 attention tasks of 128Ki MACs).
+    /// engage the pool (512 forward rows, 64 (batch, head, query-block)
+    /// attention tasks of 32Ki MACs).
     fn thr_preset() -> PresetMeta {
         build_preset("thr", 64, 64, 2, 2, 64, 8)
     }
@@ -711,6 +718,122 @@ mod tests {
             mask[i * meta.seq_len + (5 * i + 2) % meta.seq_len] = 1.0;
         }
         (ids, tgt, mask)
+    }
+
+    /// The retired materialized pair path — `axpy_into` a `d`-sized
+    /// scratch the forward then re-reads — kept as the test-only reference
+    /// the fused [`ParamView`] pair is pinned against bitwise.
+    #[allow(clippy::too_many_arguments)]
+    fn pair_losses_materialized(
+        model: &NativeModel,
+        fwd: &mut FwdScratch,
+        params: &[f32],
+        z: &[f32],
+        lam: f32,
+        ids: &[i32],
+        tgt: &[i32],
+        mask: &[f32],
+    ) -> (f32, f32) {
+        let (b, s) = (model.meta.batch, model.meta.seq_len);
+        let mut xs = vec![0f32; params.len()];
+        vecmath::axpy_into(lam, z, params, &mut xs);
+        let lp = model.loss_with(&xs, ids, tgt, mask, b, s, fwd);
+        vecmath::axpy_into(-lam, z, params, &mut xs);
+        let lm = model.loss_with(&xs, ids, tgt, mask, b, s, fwd);
+        (lp, lm)
+    }
+
+    #[test]
+    fn pair_losses_match_materialized_reference() {
+        // session-level tentpole pin: the materialization-free pair (the
+        // two_point fast path AND the fused step kinds' internal pair)
+        // must equal the retired materialized path BITWISE at pool sizes
+        // {1, 2, 4}
+        let meta = thr_preset();
+        let (ids, tgt, mask) = thr_batch(&meta);
+        let dims = vec![meta.batch, meta.seq_len];
+        let lam = 1e-3f32;
+        for threads in [1usize, 2, 4] {
+            let be =
+                NativeBackend::with_presets_policy(vec![meta.clone()], ParallelPolicy { threads });
+            let rt = Runtime::from_backend(Box::new(be));
+            let mut init = rt.bind_kind("thr", "init").unwrap();
+            let params = lit_vec_f32(&init.run(&[Arg::I32(3)]).unwrap()[0]).unwrap();
+            let mut sample = rt.bind_kind("thr", "sample_u").unwrap();
+            let z = lit_vec_f32(&sample.run(&[Arg::I32(9)]).unwrap()[0]).unwrap();
+            // reference over a private model with the same pool size
+            let model = NativeModel::new(meta.clone()).with_threads(threads);
+            let mut fwd = model.scratch();
+            let (want_lp, want_lm) =
+                pair_losses_materialized(&model, &mut fwd, &params, &z, lam, &ids, &tgt, &mask);
+            let mut sess = rt.bind_kind("thr", "two_point").unwrap();
+            let (lp, lm) = sess.two_point(&params, &z, lam, &ids, &tgt, &mask).unwrap();
+            assert_eq!((lp as f32, lm as f32), (want_lp, want_lm), "two_point threads={threads}");
+
+            // mezo_step runs the same pair core on its sampled direction
+            let u = lit_vec_f32(&sample.run(&[Arg::I32(21)]).unwrap()[0]).unwrap();
+            let (mlp, mlm) =
+                pair_losses_materialized(&model, &mut fwd, &params, &u, lam, &ids, &tgt, &mask);
+            let mut step = rt.bind_kind("thr", "mezo_step").unwrap();
+            let outs = step
+                .run(&[
+                    Arg::VecF32(&params),
+                    Arg::I32(21),
+                    Arg::F32(1e-3),
+                    Arg::F32(lam),
+                    Arg::TensorI32(&ids, dims.clone()),
+                    Arg::TensorI32(&tgt, dims.clone()),
+                    Arg::TensorF32(&mask, dims.clone()),
+                ])
+                .unwrap();
+            assert_eq!(lit_f32(&outs[1]).unwrap(), mlp, "mezo lp threads={threads}");
+            assert_eq!(lit_f32(&outs[2]).unwrap(), mlm, "mezo lm threads={threads}");
+
+            // conmezo_step: reproduce its cone direction, then the same pin
+            let m_in = lit_vec_f32(&sample.run(&[Arg::I32(5)]).unwrap()[0]).unwrap();
+            let u2 = lit_vec_f32(&sample.run(&[Arg::I32(33)]).unwrap()[0]).unwrap();
+            let theta = 1.1f32;
+            let mut zc = vec![0f32; meta.d_pad];
+            vecmath::cone_direction(&m_in, &u2, theta, meta.d_raw, &mut zc);
+            let (clp, clm) =
+                pair_losses_materialized(&model, &mut fwd, &params, &zc, lam, &ids, &tgt, &mask);
+            let mut cstep = rt.bind_kind("thr", "conmezo_step").unwrap();
+            let outs = cstep
+                .run(&[
+                    Arg::VecF32(&params),
+                    Arg::VecF32(&m_in),
+                    Arg::I32(33),
+                    Arg::F32(theta),
+                    Arg::F32(0.9),
+                    Arg::F32(1e-3),
+                    Arg::F32(lam),
+                    Arg::TensorI32(&ids, dims.clone()),
+                    Arg::TensorI32(&tgt, dims.clone()),
+                    Arg::TensorF32(&mask, dims.clone()),
+                ])
+                .unwrap();
+            assert_eq!(lit_f32(&outs[2]).unwrap(), clp, "conmezo lp threads={threads}");
+            assert_eq!(lit_f32(&outs[3]).unwrap(), clm, "conmezo lm threads={threads}");
+        }
+    }
+
+    #[test]
+    fn pair_sessions_own_no_perturbation_buffer() {
+        // the removed-xs pin: pair kinds stream x ± λz through ParamViews,
+        // so a bound session holds NO perturbed-parameter scratch — the
+        // only parameter-sized buffers are the directions step kinds sample
+        let meta = thr_preset();
+        let sess =
+            NativeSession::new(program_spec(&meta, "two_point"), NativeModel::new(meta.clone()));
+        assert!(sess.u.is_empty() && sess.z.is_empty(), "two_point owns no param-sized scratch");
+        let sess =
+            NativeSession::new(program_spec(&meta, "mezo_step"), NativeModel::new(meta.clone()));
+        assert_eq!(sess.u.len(), meta.d_pad, "mezo_step holds its sampled direction");
+        assert!(sess.z.is_empty());
+        let sess =
+            NativeSession::new(program_spec(&meta, "conmezo_step"), NativeModel::new(meta.clone()));
+        assert_eq!(sess.u.len(), meta.d_pad);
+        assert_eq!(sess.z.len(), meta.d_pad, "conmezo_step holds its cone direction");
     }
 
     #[test]
@@ -742,7 +865,10 @@ mod tests {
     fn planned_session_reuses_pool_and_output_slots() {
         // the pool-reuse contract: repeated run()/two_point() on a bound
         // session spawns zero OS threads beyond the pool's initial workers
-        // and returns results from the SAME output buffers every time
+        // and returns results from the SAME output buffers every time.
+        // Since the xs slot was removed, a two_point session's only
+        // buffers are the forward scratch and these output slots — there
+        // is no perturbed-parameter buffer left to realloc or write.
         let meta = thr_preset();
         let (ids, tgt, mask) = thr_batch(&meta);
         let be = NativeBackend::with_presets_policy(vec![meta], ParallelPolicy { threads: 3 });

@@ -15,8 +15,104 @@
 //! same per-element accumulation order as the single-threaded kernel, so
 //! pooled results are bit-identical at every pool size — pinned by
 //! `threaded_gemms_bit_identical_across_pool_sizes`.
+//!
+//! ## [`ParamView`]: materialization-free antithetic perturbations
+//!
+//! The ZO hot loop evaluates `f(x + λz)` and `f(x − λz)` once per step.
+//! Materializing the perturbed buffer (`axpy_into` into a `d`-sized
+//! scratch the forward then re-reads) costs two full-`d` writes plus an
+//! extra read per pair on a bandwidth-bound path. A [`ParamView`] —
+//! `{base, dir, scale}` — instead fuses the perturbation into the
+//! streaming loads: every weight-consuming kernel has a `*_view` variant
+//! (`matmul_view_threaded`, `matmul_at_view_threaded`,
+//! `matmul_bt_view_threaded`, `add_bias_rows_view`, `layernorm_rows_view`)
+//! that computes `base[i] + scale * dir[i]` in-register at load time.
+//! Because that is the exact FMA-free expression `axpy_into` writes,
+//! fused-view results are **bit-identical** to running the plain kernel on
+//! a materialized buffer — pinned here by
+//! `view_gemms_match_materialized_across_pool_sizes` /
+//! `view_bias_and_layernorm_match_materialized` and by model-/session-
+//! level twins. A plain view (`dir = None`) dispatches straight to the
+//! unfused kernel, so the non-perturbed paths pay nothing.
 
 use crate::parallel::{SendPtr, WorkerPool};
+
+/// A flat parameter buffer viewed through an optional rank-one
+/// perturbation: element `i` reads as `base[i] + scale * dir[i]` (or just
+/// `base[i]` when `dir` is `None`). The antithetic-pair core builds two of
+/// these per step (`scale = ±λ`) so the forward streams `x ± λz` straight
+/// out of `params` and `z` without ever writing a perturbed copy.
+///
+/// The fused expression is evaluated exactly as [`axpy_into`] evaluates it
+/// (one f32 multiply, one f32 add, no FMA contraction), so view-kernel
+/// results are bit-identical to materialize-then-run.
+#[derive(Clone, Copy, Debug)]
+pub struct ParamView<'a> {
+    base: &'a [f32],
+    dir: Option<&'a [f32]>,
+    scale: f32,
+}
+
+impl<'a> ParamView<'a> {
+    /// An unperturbed view: reads are plain `base[i]` loads and every
+    /// `*_view` kernel dispatches to its unfused twin.
+    pub fn plain(base: &'a [f32]) -> ParamView<'a> {
+        ParamView { base, dir: None, scale: 0.0 }
+    }
+
+    /// The perturbed view `base + scale * dir` (lengths must match).
+    pub fn perturbed(base: &'a [f32], dir: &'a [f32], scale: f32) -> ParamView<'a> {
+        assert_eq!(base.len(), dir.len());
+        ParamView { base, dir: Some(dir), scale }
+    }
+
+    pub fn len(&self) -> usize {
+        self.base.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.base.is_empty()
+    }
+
+    /// The unperturbed payload.
+    pub fn base(&self) -> &'a [f32] {
+        self.base
+    }
+
+    /// `(dir, scale)` when this view carries a perturbation.
+    pub fn dir(&self) -> Option<(&'a [f32], f32)> {
+        self.dir.map(|d| (d, self.scale))
+    }
+
+    /// The sub-view `[off, off + len)` — how per-tensor views are carved
+    /// out of the flat buffer (`runtime::model::Span::view`).
+    pub fn slice(&self, off: usize, len: usize) -> ParamView<'a> {
+        ParamView {
+            base: &self.base[off..off + len],
+            dir: self.dir.map(|d| &d[off..off + len]),
+            scale: self.scale,
+        }
+    }
+
+    /// Element `i` with the perturbation fused into the load.
+    #[inline(always)]
+    pub fn at(&self, i: usize) -> f32 {
+        match self.dir {
+            Some(d) => self.base[i] + self.scale * d[i],
+            None => self.base[i],
+        }
+    }
+
+    /// Write the viewed values into `out` (the materialized reference the
+    /// bit-identity tests compare against; cold paths only — the point of
+    /// the view is NOT doing this on the step path).
+    pub fn materialize_into(&self, out: &mut [f32]) {
+        match self.dir {
+            Some(d) => axpy_into(self.scale, d, self.base, out),
+            None => out.copy_from_slice(self.base),
+        }
+    }
+}
 
 /// y <- y + a * x (BLAS axpy).
 pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
@@ -135,8 +231,9 @@ pub(crate) const PAR_MIN_MACS_PER_THREAD: usize = 1 << 18;
 
 /// Effective participant count for a row-parallel kernel over `rows` units
 /// of work with `macs_per_row` multiply-accumulates each. Shared by the
-/// GEMMs here and the per-(batch, head) attention dispatch in
-/// `runtime::model` / `runtime::autograd`.
+/// GEMMs here and the attention dispatches in `runtime::model` /
+/// `runtime::autograd` ((batch, head, query-block) units on the streaming
+/// forward, whole (batch, head) pairs elsewhere).
 pub(crate) fn effective_threads(threads: usize, rows: usize, macs_per_row: usize) -> usize {
     if threads <= 1 || rows == 0 {
         return 1;
@@ -224,6 +321,74 @@ fn matmul_span(a: &[f32], b: &[f32], k: usize, n: usize, row0: usize, rows: usiz
     }
 }
 
+/// [`matmul_span`] with the weight operand perturbed in-register: every
+/// load of `w` becomes `w[i] + sc * z[i]` (the exact expression
+/// [`axpy_into`] materializes, evaluated per element before the multiply),
+/// with the identical tile walk and per-element accumulation order — so
+/// the result is bit-identical to materializing `w + sc z` and running
+/// [`matmul_span`], without the `d`-sized write. The perturbed j-tile is
+/// hoisted into a register/L1 temp once per `p` and reused by all
+/// `MATMUL_MR` accumulator rows (the recompute would be deterministic and
+/// identical anyway, so hoisting cannot change bits).
+#[allow(clippy::too_many_arguments)]
+fn matmul_span_fused(
+    a: &[f32],
+    w: &[f32],
+    z: &[f32],
+    sc: f32,
+    k: usize,
+    n: usize,
+    row0: usize,
+    rows: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), rows * n);
+    debug_assert_eq!(w.len(), z.len());
+    let mut acc = [[0f32; MATMUL_NR]; MATMUL_MR];
+    let mut wtile = [0f32; MATMUL_NR];
+    let mut j0 = 0;
+    while j0 < n {
+        let nb = MATMUL_NR.min(n - j0);
+        let mut i0 = 0;
+        while i0 + MATMUL_MR <= rows {
+            for row in acc.iter_mut() {
+                row[..nb].fill(0.0);
+            }
+            for p in 0..k {
+                let wrow = &w[p * n + j0..p * n + j0 + nb];
+                let zrow = &z[p * n + j0..p * n + j0 + nb];
+                for ((t, &wv), &zv) in wtile[..nb].iter_mut().zip(wrow).zip(zrow) {
+                    *t = wv + sc * zv;
+                }
+                for (rr, row) in acc.iter_mut().enumerate() {
+                    let av = a[(row0 + i0 + rr) * k + p];
+                    for (o, &wv) in row[..nb].iter_mut().zip(&wtile[..nb]) {
+                        *o += av * wv;
+                    }
+                }
+            }
+            for (rr, row) in acc.iter().enumerate() {
+                out[(i0 + rr) * n + j0..(i0 + rr) * n + j0 + nb].copy_from_slice(&row[..nb]);
+            }
+            i0 += MATMUL_MR;
+        }
+        // remainder rows: plain saxpy over the same j-tile
+        for i in i0..rows {
+            let orow = &mut out[i * n + j0..i * n + j0 + nb];
+            orow.fill(0.0);
+            for p in 0..k {
+                let av = a[(row0 + i) * k + p];
+                let wrow = &w[p * n + j0..p * n + j0 + nb];
+                let zrow = &z[p * n + j0..p * n + j0 + nb];
+                for ((o, &wv), &zv) in orow.iter_mut().zip(wrow).zip(zrow) {
+                    *o += av * (wv + sc * zv);
+                }
+            }
+        }
+        j0 += nb;
+    }
+}
+
 /// out[m, n] = a[m, k] @ b[k, n], all row-major, register-blocked: a
 /// `MATMUL_MR x MATMUL_NR` accumulator tile is filled across the full inner
 /// dimension before touching `out`, so `b`'s rows are read once per
@@ -247,11 +412,42 @@ pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32
 /// size; tiny shapes fall back to the single-threaded path (see
 /// [`PAR_MIN_MACS_PER_THREAD`]).
 pub fn matmul_threaded(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32], pool: &WorkerPool) {
+    matmul_view_threaded(a, ParamView::plain(b), m, k, n, out, pool);
+}
+
+/// [`matmul_threaded`] with the weight operand behind a [`ParamView`]:
+/// `out = a @ (b.base + b.scale * b.dir)` with the perturbation fused into
+/// the weight loads (no materialized `b`). A plain view runs the unfused
+/// kernel; a perturbed view runs [`matmul_span_fused`], which keeps the
+/// identical per-element accumulation order, so results are bit-identical
+/// to materialize-then-[`matmul`] at every pool size.
+pub fn matmul_view_threaded(
+    a: &[f32],
+    b: ParamView<'_>,
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+    pool: &WorkerPool,
+) {
     assert_eq!(a.len(), m * k);
     assert_eq!(b.len(), k * n);
     assert_eq!(out.len(), m * n);
     let t = effective_threads(pool.threads(), m, k * n);
-    par_rows(out, m, n, t, pool, |row0, rows, chunk| matmul_span(a, b, k, n, row0, rows, chunk));
+    match b.dir() {
+        None => {
+            let w = b.base();
+            par_rows(out, m, n, t, pool, |row0, rows, chunk| {
+                matmul_span(a, w, k, n, row0, rows, chunk)
+            });
+        }
+        Some((z, sc)) => {
+            let w = b.base();
+            par_rows(out, m, n, t, pool, |row0, rows, chunk| {
+                matmul_span_fused(a, w, z, sc, k, n, row0, rows, chunk)
+            });
+        }
+    }
 }
 
 /// out[k, n] = a[m, k]^T @ d[m, n] — the weight-gradient half of the
@@ -273,11 +469,40 @@ pub fn matmul_at(a: &[f32], d: &[f32], m: usize, k: usize, n: usize, out: &mut [
 /// [`matmul_at`] parallelized over the k output rows (see
 /// [`matmul_threaded`] for the bit-identity contract).
 pub fn matmul_at_threaded(a: &[f32], d: &[f32], m: usize, k: usize, n: usize, out: &mut [f32], pool: &WorkerPool) {
+    matmul_at_view_threaded(ParamView::plain(a), d, m, k, n, out, pool);
+}
+
+/// [`matmul_at_threaded`] with the transposed operand behind a
+/// [`ParamView`]: `out = (a.base + a.scale * a.dir)^T @ d`, perturbation
+/// fused into the `a` loads (same accumulation order — bit-identical to
+/// materialize-then-[`matmul_at`] at every pool size).
+pub fn matmul_at_view_threaded(
+    a: ParamView<'_>,
+    d: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+    pool: &WorkerPool,
+) {
     assert_eq!(a.len(), m * k);
     assert_eq!(d.len(), m * n);
     assert_eq!(out.len(), k * n);
     let t = effective_threads(pool.threads(), k, m * n);
-    par_rows(out, k, n, t, pool, |p0, prows, chunk| matmul_at_span(a, d, m, k, n, p0, prows, chunk));
+    match a.dir() {
+        None => {
+            let w = a.base();
+            par_rows(out, k, n, t, pool, |p0, prows, chunk| {
+                matmul_at_span(w, d, m, k, n, p0, prows, chunk)
+            });
+        }
+        Some((z, sc)) => {
+            let w = a.base();
+            par_rows(out, k, n, t, pool, |p0, prows, chunk| {
+                matmul_at_span_fused(w, z, sc, d, m, k, n, p0, prows, chunk)
+            });
+        }
+    }
 }
 
 /// Output rows `p_base..p_base+prows` of a^T @ d; `out` holds exactly that
@@ -323,6 +548,65 @@ fn matmul_at_span(a: &[f32], d: &[f32], m: usize, k: usize, n: usize, p_base: us
     }
 }
 
+/// [`matmul_at_span`] with the transposed operand perturbed in-register
+/// (`a[i] -> w[i] + sc * z[i]` at load time; identical tile walk and
+/// accumulation order as the unfused span).
+#[allow(clippy::too_many_arguments)]
+fn matmul_at_span_fused(
+    w: &[f32],
+    z: &[f32],
+    sc: f32,
+    d: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    p_base: usize,
+    prows: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), prows * n);
+    debug_assert_eq!(w.len(), z.len());
+    let mut acc = [[0f32; MATMUL_NR]; MATMUL_MR];
+    let mut j0 = 0;
+    while j0 < n {
+        let nb = MATMUL_NR.min(n - j0);
+        let mut p0 = 0;
+        while p0 + MATMUL_MR <= prows {
+            for row in acc.iter_mut() {
+                row[..nb].fill(0.0);
+            }
+            for i in 0..m {
+                let drow = &d[i * n + j0..i * n + j0 + nb];
+                for (rr, row) in acc.iter_mut().enumerate() {
+                    let idx = i * k + p_base + p0 + rr;
+                    let av = w[idx] + sc * z[idx];
+                    for (o, &dv) in row[..nb].iter_mut().zip(drow) {
+                        *o += av * dv;
+                    }
+                }
+            }
+            for (rr, row) in acc.iter().enumerate() {
+                out[(p0 + rr) * n + j0..(p0 + rr) * n + j0 + nb].copy_from_slice(&row[..nb]);
+            }
+            p0 += MATMUL_MR;
+        }
+        // remainder out-rows: accumulate the j-tile directly in place
+        for p in p0..prows {
+            let orow = &mut out[p * n + j0..p * n + j0 + nb];
+            orow.fill(0.0);
+            for i in 0..m {
+                let idx = i * k + p_base + p;
+                let av = w[idx] + sc * z[idx];
+                let drow = &d[i * n + j0..i * n + j0 + nb];
+                for (o, &dv) in orow.iter_mut().zip(drow) {
+                    *o += av * dv;
+                }
+            }
+        }
+        j0 += nb;
+    }
+}
+
 /// out[m, n] = a[m, k] @ bt[n, k]^T — `bt` stores the TRANSPOSE of b
 /// row-major (e.g. the tied LM head: logits = x @ tok_emb^T with tok_emb
 /// stored [vocab, d_model]). Inner loop is a dot of two contiguous rows.
@@ -337,11 +621,41 @@ pub fn matmul_bt(a: &[f32], bt: &[f32], m: usize, k: usize, n: usize, out: &mut 
 /// the bit-identity contract). This is the LM-head GEMM — the widest matmul
 /// of the forward — so it threads alongside the projection GEMMs.
 pub fn matmul_bt_threaded(a: &[f32], bt: &[f32], m: usize, k: usize, n: usize, out: &mut [f32], pool: &WorkerPool) {
+    matmul_bt_view_threaded(a, ParamView::plain(bt), m, k, n, out, pool);
+}
+
+/// [`matmul_bt_threaded`] with the transposed weight operand behind a
+/// [`ParamView`]: `out = a @ (bt.base + bt.scale * bt.dir)^T`, perturbation
+/// fused into the weight loads (the tied-LM-head path of the perturbed
+/// forward; same accumulation order — bit-identical to
+/// materialize-then-[`matmul_bt`] at every pool size).
+pub fn matmul_bt_view_threaded(
+    a: &[f32],
+    bt: ParamView<'_>,
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+    pool: &WorkerPool,
+) {
     assert_eq!(a.len(), m * k);
     assert_eq!(bt.len(), n * k);
     assert_eq!(out.len(), m * n);
     let t = effective_threads(pool.threads(), m, k * n);
-    par_rows(out, m, n, t, pool, |row0, rows, chunk| matmul_bt_span(a, bt, k, n, row0, rows, chunk));
+    match bt.dir() {
+        None => {
+            let w = bt.base();
+            par_rows(out, m, n, t, pool, |row0, rows, chunk| {
+                matmul_bt_span(a, w, k, n, row0, rows, chunk)
+            });
+        }
+        Some((z, sc)) => {
+            let w = bt.base();
+            par_rows(out, m, n, t, pool, |row0, rows, chunk| {
+                matmul_bt_span_fused(a, w, z, sc, k, n, row0, rows, chunk)
+            });
+        }
+    }
 }
 
 /// Rows `row0..row0+rows` of a @ bt^T; `out` holds exactly that row range.
@@ -355,6 +669,38 @@ fn matmul_bt_span(a: &[f32], bt: &[f32], k: usize, n: usize, row0: usize, rows: 
             let mut acc = 0f32;
             for p in 0..k {
                 acc += arow[p] * brow[p];
+            }
+            orow[j] = acc;
+        }
+    }
+}
+
+/// [`matmul_bt_span`] with the transposed operand perturbed in-register
+/// (`bt[i] -> w[i] + sc * z[i]` at load time; the dot accumulates p
+/// ascending exactly like the unfused span).
+#[allow(clippy::too_many_arguments)]
+fn matmul_bt_span_fused(
+    a: &[f32],
+    w: &[f32],
+    z: &[f32],
+    sc: f32,
+    k: usize,
+    n: usize,
+    row0: usize,
+    rows: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), rows * n);
+    debug_assert_eq!(w.len(), z.len());
+    for i in 0..rows {
+        let arow = &a[(row0 + i) * k..(row0 + i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for j in 0..n {
+            let wrow = &w[j * k..(j + 1) * k];
+            let zrow = &z[j * k..(j + 1) * k];
+            let mut acc = 0f32;
+            for ((&av, &wv), &zv) in arow.iter().zip(wrow).zip(zrow) {
+                acc += av * (wv + sc * zv);
             }
             orow[j] = acc;
         }
@@ -414,6 +760,49 @@ pub fn layernorm_rows(x: &[f32], g: &[f32], b: &[f32], rows: usize, cols: usize,
     }
 }
 
+/// [`layernorm_rows`] with the gain/bias behind [`ParamView`]s: the row
+/// statistics come from the activation `x` exactly as in the plain kernel,
+/// and the affine step reads `g`/`b` with the perturbation fused into each
+/// load — bit-identical to materializing the perturbed gain/bias first.
+#[allow(clippy::too_many_arguments)]
+pub fn layernorm_rows_view(
+    x: &[f32],
+    g: ParamView<'_>,
+    b: ParamView<'_>,
+    rows: usize,
+    cols: usize,
+    eps: f32,
+    out: &mut [f32],
+) {
+    if g.dir().is_none() && b.dir().is_none() {
+        return layernorm_rows(x, g.base(), b.base(), rows, cols, eps, out);
+    }
+    assert_eq!(x.len(), rows * cols);
+    assert_eq!(out.len(), rows * cols);
+    assert_eq!(g.len(), cols);
+    assert_eq!(b.len(), cols);
+    for i in 0..rows {
+        let row = &x[i * cols..(i + 1) * cols];
+        let orow = &mut out[i * cols..(i + 1) * cols];
+        let mut mean = 0f64;
+        for &v in row {
+            mean += v as f64;
+        }
+        mean /= cols as f64;
+        let mut var = 0f64;
+        for &v in row {
+            let d = v as f64 - mean;
+            var += d * d;
+        }
+        var /= cols as f64;
+        let inv = 1.0 / (var + eps as f64).sqrt();
+        let (mean, inv) = (mean as f32, inv as f32);
+        for j in 0..cols {
+            orow[j] = (row[j] - mean) * inv * g.at(j) + b.at(j);
+        }
+    }
+}
+
 /// GELU (tanh approximation — the jax.nn.gelu default used by the L2 model),
 /// applied in place.
 pub fn gelu(x: &mut [f32]) {
@@ -432,6 +821,30 @@ pub fn add_bias_rows(x: &mut [f32], bias: &[f32], rows: usize, cols: usize) {
         let row = &mut x[i * cols..(i + 1) * cols];
         for j in 0..cols {
             row[j] += bias[j];
+        }
+    }
+}
+
+/// [`add_bias_rows`] with the bias behind a [`ParamView`]: each row gains
+/// `bias.base[j] + bias.scale * bias.dir[j]`, the perturbed value computed
+/// per element before the add — bit-identical to materializing the bias
+/// and calling [`add_bias_rows`]. The per-row recompute is deliberate:
+/// this kernel is bound on the `x` stream (bias/dir stay L1-resident), and
+/// hoisting the perturbed bias would need a heap temp on the
+/// allocation-free step path.
+pub fn add_bias_rows_view(x: &mut [f32], bias: ParamView<'_>, rows: usize, cols: usize) {
+    match bias.dir() {
+        None => add_bias_rows(x, bias.base(), rows, cols),
+        Some((z, sc)) => {
+            assert_eq!(x.len(), rows * cols);
+            assert_eq!(bias.len(), cols);
+            let b = bias.base();
+            for i in 0..rows {
+                let row = &mut x[i * cols..(i + 1) * cols];
+                for j in 0..cols {
+                    row[j] += b[j] + sc * z[j];
+                }
+            }
         }
     }
 }
@@ -478,6 +891,10 @@ pub fn softmax_rows_backward(y: &[f32], dy: &[f32], rows: usize, cols: usize, dx
 ///   db[j]    = sum_i dy[i,j]                    (overwrite, f64 accum)
 ///   dx[i,:]  = inv_i * (dxhat - mean(dxhat) - xhat * mean(dxhat * xhat))
 /// where dxhat = dy * g and xhat = (x - mu_i) * inv_i.
+///
+/// Allocating wrapper over [`layernorm_rows_backward_ws`] (tests /
+/// one-shot callers); the first-order hot path passes the f64 column
+/// accumulators from `GradWorkspace` instead.
 #[allow(clippy::too_many_arguments)]
 pub fn layernorm_rows_backward(
     x: &[f32],
@@ -490,14 +907,39 @@ pub fn layernorm_rows_backward(
     dg: &mut [f32],
     db: &mut [f32],
 ) {
+    let mut dg64 = vec![0f64; cols];
+    let mut db64 = vec![0f64; cols];
+    layernorm_rows_backward_ws(x, g, rows, cols, eps, dy, dx, dg, db, &mut dg64, &mut db64);
+}
+
+/// [`layernorm_rows_backward`] over caller-owned f64 column accumulators
+/// (`dg64`/`db64`, length `cols`, contents overwritten) — the autograd
+/// reverse pass passes buffers bound once in its `GradWorkspace`, so the
+/// first-order step path is allocation-free in steady state.
+#[allow(clippy::too_many_arguments)]
+pub fn layernorm_rows_backward_ws(
+    x: &[f32],
+    g: &[f32],
+    rows: usize,
+    cols: usize,
+    eps: f32,
+    dy: &[f32],
+    dx: &mut [f32],
+    dg: &mut [f32],
+    db: &mut [f32],
+    dg64: &mut [f64],
+    db64: &mut [f64],
+) {
     assert_eq!(x.len(), rows * cols);
     assert_eq!(dy.len(), rows * cols);
     assert_eq!(dx.len(), rows * cols);
     assert_eq!(g.len(), cols);
     assert_eq!(dg.len(), cols);
     assert_eq!(db.len(), cols);
-    let mut dg64 = vec![0f64; cols];
-    let mut db64 = vec![0f64; cols];
+    assert_eq!(dg64.len(), cols);
+    assert_eq!(db64.len(), cols);
+    dg64.fill(0.0);
+    db64.fill(0.0);
     for i in 0..rows {
         let row = &x[i * cols..(i + 1) * cols];
         let dyr = &dy[i * cols..(i + 1) * cols];
@@ -941,6 +1383,198 @@ mod tests {
             let mut got_bt = vec![0f32; m * n];
             matmul_bt_threaded(&a, &bt, m, k, n, &mut got_bt, &pool);
             assert_eq!(got_bt, want_bt, "matmul_bt_threaded({t}) != matmul_bt");
+        }
+    }
+
+    #[test]
+    fn param_view_basics() {
+        let base = randv(64, 60);
+        let dir = randv(64, 61);
+        let v = ParamView::perturbed(&base, &dir, 0.5);
+        assert_eq!(v.len(), 64);
+        assert!(!v.is_empty());
+        for i in 0..64 {
+            assert_eq!(v.at(i), base[i] + 0.5 * dir[i]);
+        }
+        // slicing carves base AND dir
+        let s = v.slice(8, 16);
+        assert_eq!(s.len(), 16);
+        for i in 0..16 {
+            assert_eq!(s.at(i), v.at(8 + i));
+        }
+        // materialize_into IS axpy_into
+        let mut mat = vec![0f32; 64];
+        v.materialize_into(&mut mat);
+        let mut want = vec![0f32; 64];
+        axpy_into(0.5, &dir, &base, &mut want);
+        assert_eq!(mat, want);
+        // a plain view reads base verbatim
+        let p = ParamView::plain(&base);
+        assert!(p.dir().is_none());
+        for i in 0..64 {
+            assert_eq!(p.at(i), base[i]);
+        }
+    }
+
+    #[test]
+    fn view_gemms_match_materialized_across_pool_sizes() {
+        // THE ParamView contract: the fused in-register perturbation must
+        // equal materialize-then-run BITWISE, at every pool size and for
+        // both antithetic scales. m = 254 and k = 97 leave remainder rows
+        // in every chunk partition so the MR-tile and tail paths of all
+        // three fused spans are exercised; n = 130 straddles the NR
+        // j-tiles.
+        let (m, k, n) = (254usize, 97usize, 130usize);
+        let a = randv(m * k, 71);
+        let w = randv(k * n, 72);
+        let z = randv(k * n, 73);
+        let wa = randv(m * k, 74);
+        let za = randv(m * k, 75);
+        let d = randv(m * n, 76);
+        let wbt = randv(n * k, 77);
+        let zbt = randv(n * k, 78);
+        let lam = 1e-3f32;
+        for sc in [lam, -lam] {
+            let mut wmat = vec![0f32; k * n];
+            axpy_into(sc, &z, &w, &mut wmat);
+            let mut want = vec![0f32; m * n];
+            matmul(&a, &wmat, m, k, n, &mut want);
+            let mut wa_mat = vec![0f32; m * k];
+            axpy_into(sc, &za, &wa, &mut wa_mat);
+            let mut want_at = vec![0f32; k * n];
+            matmul_at(&wa_mat, &d, m, k, n, &mut want_at);
+            let mut wbt_mat = vec![0f32; n * k];
+            axpy_into(sc, &zbt, &wbt, &mut wbt_mat);
+            let mut want_bt = vec![0f32; m * n];
+            matmul_bt(&a, &wbt_mat, m, k, n, &mut want_bt);
+            for t in [1usize, 2, 4] {
+                let pool = WorkerPool::new(t);
+                let mut got = vec![0f32; m * n];
+                let wview = ParamView::perturbed(&w, &z, sc);
+                matmul_view_threaded(&a, wview, m, k, n, &mut got, &pool);
+                assert_eq!(got, want, "matmul_view (t={t}, sc={sc})");
+                let mut got_at = vec![0f32; k * n];
+                matmul_at_view_threaded(
+                    ParamView::perturbed(&wa, &za, sc),
+                    &d,
+                    m,
+                    k,
+                    n,
+                    &mut got_at,
+                    &pool,
+                );
+                assert_eq!(got_at, want_at, "matmul_at_view (t={t}, sc={sc})");
+                let mut got_bt = vec![0f32; m * n];
+                matmul_bt_view_threaded(
+                    &a,
+                    ParamView::perturbed(&wbt, &zbt, sc),
+                    m,
+                    k,
+                    n,
+                    &mut got_bt,
+                    &pool,
+                );
+                assert_eq!(got_bt, want_bt, "matmul_bt_view (t={t}, sc={sc})");
+            }
+        }
+    }
+
+    #[test]
+    fn plain_view_gemms_dispatch_to_unfused_kernels() {
+        // a dir-less view must reproduce the plain threaded entry points
+        // exactly (they now share one implementation)
+        let (m, k, n) = (256usize, 96usize, 130usize);
+        let a = randv(m * k, 81);
+        let w = randv(k * n, 82);
+        let pool = WorkerPool::new(3);
+        let mut want = vec![0f32; m * n];
+        matmul_threaded(&a, &w, m, k, n, &mut want, &pool);
+        let mut got = vec![0f32; m * n];
+        matmul_view_threaded(&a, ParamView::plain(&w), m, k, n, &mut got, &pool);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn view_bias_and_layernorm_match_materialized() {
+        let (rows, cols) = (7usize, 96usize);
+        let x = randv(rows * cols, 83);
+        let bias = randv(cols, 84);
+        let zb = randv(cols, 85);
+        let g = randv(cols, 86);
+        let zg = randv(cols, 87);
+        for sc in [2e-3f32, -2e-3f32] {
+            let mut bias_mat = vec![0f32; cols];
+            axpy_into(sc, &zb, &bias, &mut bias_mat);
+            let mut g_mat = vec![0f32; cols];
+            axpy_into(sc, &zg, &g, &mut g_mat);
+
+            let mut want = x.clone();
+            add_bias_rows(&mut want, &bias_mat, rows, cols);
+            let mut got = x.clone();
+            add_bias_rows_view(&mut got, ParamView::perturbed(&bias, &zb, sc), rows, cols);
+            assert_eq!(got, want, "add_bias_rows_view (sc={sc})");
+
+            let mut want_ln = vec![0f32; rows * cols];
+            layernorm_rows(&x, &g_mat, &bias_mat, rows, cols, 1e-5, &mut want_ln);
+            let mut got_ln = vec![0f32; rows * cols];
+            layernorm_rows_view(
+                &x,
+                ParamView::perturbed(&g, &zg, sc),
+                ParamView::perturbed(&bias, &zb, sc),
+                rows,
+                cols,
+                1e-5,
+                &mut got_ln,
+            );
+            assert_eq!(got_ln, want_ln, "layernorm_rows_view (sc={sc})");
+        }
+        // plain views dispatch to the unfused kernels
+        let mut want = x.clone();
+        add_bias_rows(&mut want, &bias, rows, cols);
+        let mut got = x.clone();
+        add_bias_rows_view(&mut got, ParamView::plain(&bias), rows, cols);
+        assert_eq!(got, want);
+        let mut want_ln = vec![0f32; rows * cols];
+        layernorm_rows(&x, &g, &bias, rows, cols, 1e-5, &mut want_ln);
+        let mut got_ln = vec![0f32; rows * cols];
+        layernorm_rows_view(
+            &x,
+            ParamView::plain(&g),
+            ParamView::plain(&bias),
+            rows,
+            cols,
+            1e-5,
+            &mut got_ln,
+        );
+        assert_eq!(got_ln, want_ln);
+    }
+
+    #[test]
+    fn layernorm_backward_ws_matches_allocating_wrapper() {
+        // the GradWorkspace-scratch variant must be the same math with the
+        // accumulators overwritten per call (stale contents ignored)
+        let (rows, cols) = (5usize, 24usize);
+        let x = randv(rows * cols, 91);
+        let g = randv(cols, 92);
+        let dy = randv(rows * cols, 93);
+        let mut dx_a = vec![0f32; rows * cols];
+        let mut dg_a = vec![0f32; cols];
+        let mut db_a = vec![0f32; cols];
+        layernorm_rows_backward(&x, &g, rows, cols, 1e-5, &dy, &mut dx_a, &mut dg_a, &mut db_a);
+        let mut dx_b = vec![0f32; rows * cols];
+        let mut dg_b = vec![0f32; cols];
+        let mut db_b = vec![0f32; cols];
+        // poison the scratch to prove it is overwritten, not accumulated
+        let mut dg64 = vec![7.5f64; cols];
+        let mut db64 = vec![-3.25f64; cols];
+        for _ in 0..2 {
+            layernorm_rows_backward_ws(
+                &x, &g, rows, cols, 1e-5, &dy, &mut dx_b, &mut dg_b, &mut db_b, &mut dg64,
+                &mut db64,
+            );
+            assert_eq!(dx_b, dx_a);
+            assert_eq!(dg_b, dg_a);
+            assert_eq!(db_b, db_a);
         }
     }
 
