@@ -1,0 +1,81 @@
+#!/usr/bin/env bash
+# Fault-injection smoke run for the multi-process ZO cluster.
+#
+# Launches 1 leader + 3 workers as real OS processes over localhost TCP.
+# Worker 2 checkpoints periodically and crashes mid-run (--die-at-step);
+# the leader drops it, renormalizes the step average over the survivors,
+# and keeps training. The worker is then relaunched from its checkpoint
+# and rejoins via seed replay (the leader ships the missed (seed, g,
+# theta, eta, beta) records — O(1) bytes per missed step). The leader's
+# divergence tripwire re-verifies parameter hashes right after the rejoin
+# and periodically thereafter.
+#
+# PASS iff the run completes AND all three workers print the same final
+# params_hash (bit-identical replicas despite the crash), AND the leader
+# observed at least one rejoin.
+#
+#   examples/run_cluster.sh            # build if needed, then run
+#   STEPS=300 DIE_AT=80 examples/run_cluster.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+ADDR="${ADDR:-127.0.0.1:7391}"
+STEPS="${STEPS:-150}"
+PRESET="${PRESET:-nano}"
+DIE_AT="${DIE_AT:-40}"
+WORK="$(mktemp -d)"
+trap 'kill $(jobs -p) 2>/dev/null || true; rm -rf "$WORK"' EXIT
+
+BIN="${BIN:-rust/target/release/conmezo}"
+if [ ! -x "$BIN" ]; then
+    cargo build --release --manifest-path rust/Cargo.toml
+fi
+
+common=(--preset "$PRESET" --steps "$STEPS" --seed 42 --eta 3e-4 --lam 1e-3 --eval-every 0)
+
+"$BIN" leader --listen "$ADDR" --workers 3 "${common[@]}" \
+    --proj-timeout-ms 2000 --max-strikes 2 --hash-check-every 25 \
+    --step-log "$WORK/steps.cmzl" >"$WORK/leader.log" 2>&1 &
+LEADER=$!
+
+"$BIN" worker --connect "$ADDR" --worker-id 0 "${common[@]}" >"$WORK/w0.log" 2>&1 &
+"$BIN" worker --connect "$ADDR" --worker-id 1 "${common[@]}" >"$WORK/w1.log" 2>&1 &
+
+# worker 2: checkpoint every 10 steps, injected crash at step $DIE_AT
+# (runs in the foreground so the relaunch happens right after it dies)
+if "$BIN" worker --connect "$ADDR" --worker-id 2 "${common[@]}" \
+    --ckpt "$WORK/w2.ckpt" --ckpt-every 10 --die-at-step "$DIE_AT" \
+    >"$WORK/w2_crash.log" 2>&1; then
+    echo "FAIL: worker 2 was supposed to crash at step $DIE_AT" >&2
+    exit 1
+fi
+echo "worker 2 crashed at step $DIE_AT; relaunching from its checkpoint"
+
+"$BIN" worker --connect "$ADDR" --worker-id 2 "${common[@]}" \
+    --init-from "$WORK/w2.ckpt" --ckpt "$WORK/w2.ckpt" >"$WORK/w2.log" 2>&1 &
+
+fail() {
+    echo "FAIL: $1" >&2
+    echo "--- leader.log ---" >&2; cat "$WORK/leader.log" >&2 || true
+    for w in w0 w1 w2_crash w2; do
+        echo "--- $w.log ---" >&2; cat "$WORK/$w.log" >&2 || true
+    done
+    exit 1
+}
+
+wait "$LEADER" || fail "leader exited nonzero"
+wait || fail "a worker exited nonzero"
+
+# bit-identity: every worker's final parameter hash must match
+h0=$(grep -o 'params_hash=[0-9a-f]*' "$WORK/w0.log" | tail -1 || true)
+h1=$(grep -o 'params_hash=[0-9a-f]*' "$WORK/w1.log" | tail -1 || true)
+h2=$(grep -o 'params_hash=[0-9a-f]*' "$WORK/w2.log" | tail -1 || true)
+[ -n "$h0" ] || fail "worker 0 reported no final hash"
+[ "$h0" = "$h1" ] || fail "worker 1 diverged: $h1 != $h0"
+[ "$h0" = "$h2" ] || fail "rejoined worker 2 diverged: $h2 != $h0"
+
+# and the leader must have actually exercised the recovery path
+grep -q 'rejoins' "$WORK/leader.log" || fail "leader saw no rejoin"
+[ -s "$WORK/steps.cmzl" ] || fail "step log was not persisted"
+
+echo "PASS: crash at step $DIE_AT, rejoin via seed replay, 3 replicas bit-identical ($h0)"

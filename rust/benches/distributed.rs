@@ -1,0 +1,121 @@
+//! Distributed-layer cost model — the `distributed` section of
+//! `BENCH_native.json` (asserted by CI's bench-smoke job).
+//!
+//! Three measurements back the paper's O(1)-bytes/step claim and ISSUE-6's
+//! recovery-path costs:
+//!
+//! * `local_cluster/step_nN` — per-step cost of the shared-randomness
+//!   protocol math in-process (no transport): direction regen, antithetic
+//!   pair, projected-gradient average, lockstep update, at N ∈ {1, 2, 4}
+//!   replicas. items_per_iter carries the leader-side wire bytes the same
+//!   steps would cost over sockets (91 B/step/worker steady state), so the
+//!   throughput line reads as protocol bandwidth.
+//! * `cluster/channel_step_nN` — the same steps end-to-end through the
+//!   framed transport layer (encode/decode + channel hop + leader
+//!   collect), workers on real threads: the coordination overhead on top
+//!   of the math.
+//! * `replay/fast_forward` — seed-replay rejoin throughput: steps/sec a
+//!   rejoining replica fast-forwards through leader `StepRecord`s with
+//!   ZERO function evaluations (items = replayed steps).
+//!
+//! `cargo bench --bench distributed [-- --quick]`; `--quick` is the CI
+//! smoke mode.
+
+use conmezo::bench::{write_bench_json, write_results, BenchArgs};
+use conmezo::checkpoint::StepRecord;
+use conmezo::coordinator::{
+    run_worker, step_seed, DistHypers, Leader, LeaderConfig, LocalCluster, ZoWorker,
+};
+use conmezo::net::{channel_pair, Transport};
+use conmezo::objective::NativeQuadratic;
+use conmezo::optimizer::BetaSchedule;
+
+const D: usize = 4096;
+const HYP: DistHypers = DistHypers { theta: 1.2, eta: 1e-3, lam: 1e-2 };
+
+fn x0() -> Vec<f32> {
+    (0..D).map(|i| ((i * 37 + 11) as f32 * 0.1).sin()).collect()
+}
+
+fn workers(n: usize) -> Vec<ZoWorker> {
+    (0..n)
+        .map(|id| ZoWorker::new(id as u32, x0(), Box::new(NativeQuadratic::new(D))))
+        .collect()
+}
+
+fn main() -> conmezo::util::error::Result<()> {
+    let args = BenchArgs::parse();
+    let b = args.bencher();
+    let beta = BetaSchedule::Constant(0.9);
+    let mut results = Vec::new();
+
+    // per-iteration step count: enough to amortize per-run setup, small
+    // enough that --quick stays a smoke test
+    let steps_per_iter = 16u64;
+
+    for &n in &[1usize, 2, 4] {
+        // calibrate the wire-byte denominator from the accounting itself
+        // (pinned elsewhere to equal the TCP leader's) instead of
+        // hardcoding frame sizes
+        let mut cal = LocalCluster::new(workers(n), 42);
+        let bytes_per_iter = cal.run(steps_per_iter, HYP, &beta, 0)?.wire_bytes as f64;
+
+        let mut cluster = LocalCluster::new(workers(n), 42);
+        let r = b.run_items(&format!("local_cluster/step_n{n}_d{D}"), Some(bytes_per_iter), &mut || {
+            cluster.run(steps_per_iter, HYP, &beta, 0).unwrap();
+        });
+        println!("{}", r.report());
+        results.push(r);
+
+        // the same protocol through framed channel transports + threads:
+        // each iteration is a full cluster lifecycle (handshake, steps,
+        // shutdown), so this upper-bounds the per-step coordination cost
+        let r = b.run_items(&format!("cluster/channel_step_n{n}_d{D}"), Some(bytes_per_iter), &mut || {
+            let mut conns: Vec<Box<dyn Transport>> = Vec::new();
+            let mut handles = Vec::new();
+            for id in 0..n as u32 {
+                let (wside, lside) = channel_pair();
+                conns.push(Box::new(lside));
+                handles.push(std::thread::spawn(move || {
+                    let mut wside = wside;
+                    let mut w = ZoWorker::new(id, x0(), Box::new(NativeQuadratic::new(D)));
+                    run_worker(&mut wside, &mut w).unwrap();
+                }));
+            }
+            let cfg = LeaderConfig::new(n as u32, 42, steps_per_iter, HYP, beta.clone());
+            Leader::new(cfg).run(conns).unwrap();
+            for h in handles {
+                h.join().unwrap();
+            }
+        });
+        println!("{}", r.report());
+        results.push(r);
+    }
+
+    // rejoin cost: fast-forward a fresh replica through a leader step log
+    // (pure record-stream math, zero function evaluations)
+    let replay_steps = 64u64;
+    let records: Vec<StepRecord> = (0..replay_steps)
+        .map(|t| StepRecord {
+            seed: step_seed(42, t),
+            g: 0.01,
+            theta: HYP.theta,
+            eta: HYP.eta,
+            beta: 0.9,
+        })
+        .collect();
+    let r = b.run_items(
+        &format!("replay/fast_forward_{replay_steps}steps_d{D}"),
+        Some(replay_steps as f64),
+        &mut || {
+            let mut w = ZoWorker::new(0, x0(), Box::new(NativeQuadratic::new(D)));
+            w.replay(0, &records).unwrap();
+        },
+    );
+    println!("{}", r.report());
+    results.push(r);
+
+    write_results("distributed.jsonl", &results)?;
+    write_bench_json("distributed", &results)?;
+    Ok(())
+}

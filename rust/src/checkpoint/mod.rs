@@ -1,13 +1,27 @@
-//! Binary checkpoint format for flat parameter/optimizer state.
+//! Binary checkpoint + step-log formats for the distributed trainer's
+//! crash/rejoin story.
 //!
-//! Layout (little-endian):
+//! Checkpoint layout (little-endian):
 //!   magic "CMZ1" | preset_len u32 | preset bytes | step u64 | n_bufs u32 |
 //!   per buf: name_len u32 | name | len u64 | f32 data |
 //!   crc32 u32 over everything after the magic
 //!
-//! CRC is checked on load; truncated or bit-flipped files are rejected —
-//! the distributed trainer relies on checkpoint+seed-log replay for worker
-//! rejoin, so silent corruption is unacceptable.
+//! Step-log layout ([`StepLog`], magic "CMZL"): a flat run of 28-byte
+//! [`StepRecord`]s — `(seed, g, theta, eta, beta)` per step — with the same
+//! trailing CRC. Because the ZO update is a pure function of the start
+//! state and that record stream (direction regenerated from `seed`, update
+//! applied with the broadcast `g`), a worker's exact `(x, m)` at step `t`
+//! is reproducible by replaying records `0..t` with **zero** function
+//! evaluations. This is the implemented rejoin path (see
+//! `coordinator::cluster` and `ZoWorker::replay`): the leader persists the
+//! log next to its checkpoint, and a (re)joining worker either replays from
+//! scratch, or loads a CRC-checked [`Checkpoint`] snapshot and replays only
+//! the gap `ckpt.step..t` shipped in a `Replay` message — O(1) bytes per
+//! missed step either way.
+//!
+//! CRCs are checked on load; truncated or bit-flipped files are rejected,
+//! and all length fields are treated as untrusted (checked arithmetic, so a
+//! crafted header errors instead of wrapping into an out-of-bounds panic).
 
 use std::collections::BTreeMap;
 use std::io::{Read, Write};
@@ -16,6 +30,7 @@ use std::path::Path;
 use crate::util::error::{bail, Context, Result};
 
 const MAGIC: &[u8; 4] = b"CMZ1";
+const LOG_MAGIC: &[u8; 4] = b"CMZL";
 
 /// CRC-32 (IEEE) with a lazily built table.
 pub fn crc32(data: &[u8]) -> u32 {
@@ -32,6 +47,135 @@ pub fn crc32(data: &[u8]) -> u32 {
         crc = table[((crc ^ b as u32) & 0xFF) as usize] ^ (crc >> 8);
     }
     crc ^ 0xFFFF_FFFF
+}
+
+/// FNV-1a 64 over the little-endian bytes of a parameter vector: the cheap
+/// deterministic hash behind the cluster's divergence tripwire and the
+/// rejoin `params_hash` comparison. Identical replicas hash identically on
+/// every platform (f32 bit patterns, not values, are hashed).
+pub fn params_hash(x: &[f32]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for v in x {
+        for b in v.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    }
+    h
+}
+
+/// Everything needed to reproduce one ZO update without function evals:
+/// the direction seed, the aggregated projected gradient, and the hypers
+/// the step actually used (theta for the cone mix, eta/beta for the
+/// update). 28 bytes on the wire and on disk.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StepRecord {
+    pub seed: u64,
+    pub g: f64,
+    pub theta: f32,
+    pub eta: f32,
+    pub beta: f32,
+}
+
+/// Encoded size of a [`StepRecord`].
+pub const STEP_RECORD_BYTES: usize = 28;
+
+impl StepRecord {
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        out.extend(self.seed.to_le_bytes());
+        out.extend(self.g.to_le_bytes());
+        out.extend(self.theta.to_le_bytes());
+        out.extend(self.eta.to_le_bytes());
+        out.extend(self.beta.to_le_bytes());
+    }
+
+    /// Decode from exactly [`STEP_RECORD_BYTES`] bytes (caller-validated).
+    pub fn decode(b: &[u8]) -> StepRecord {
+        debug_assert_eq!(b.len(), STEP_RECORD_BYTES);
+        StepRecord {
+            seed: u64::from_le_bytes(b[0..8].try_into().unwrap()),
+            g: f64::from_le_bytes(b[8..16].try_into().unwrap()),
+            theta: f32::from_le_bytes(b[16..20].try_into().unwrap()),
+            eta: f32::from_le_bytes(b[20..24].try_into().unwrap()),
+            beta: f32::from_le_bytes(b[24..28].try_into().unwrap()),
+        }
+    }
+}
+
+/// The leader's persistent per-step record log (O(1) bytes/step). Record
+/// `i` reproduces the update taking step `i` to step `i+1`.
+#[derive(Clone, Debug, Default)]
+pub struct StepLog {
+    pub records: Vec<StepRecord>,
+}
+
+impl StepLog {
+    pub fn new() -> Self {
+        StepLog { records: Vec::new() }
+    }
+
+    /// Number of logged steps (= the step the log replays up to).
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    fn payload(&self) -> Vec<u8> {
+        let mut p = Vec::with_capacity(8 + self.records.len() * STEP_RECORD_BYTES);
+        p.extend((self.records.len() as u64).to_le_bytes());
+        for r in &self.records {
+            r.encode_into(&mut p);
+        }
+        p
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let payload = self.payload();
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        f.write_all(LOG_MAGIC)?;
+        f.write_all(&payload)?;
+        f.write_all(&crc32(&payload).to_le_bytes())?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<StepLog> {
+        let mut bytes = Vec::new();
+        std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?
+            .read_to_end(&mut bytes)?;
+        if bytes.len() < 8 || &bytes[..4] != LOG_MAGIC {
+            bail!("{}: not a CMZL step log", path.display());
+        }
+        let payload = &bytes[4..bytes.len() - 4];
+        let stored_crc = u32::from_le_bytes(bytes[bytes.len() - 4..].try_into().unwrap());
+        if crc32(payload) != stored_crc {
+            bail!("{}: CRC mismatch (corrupt step log)", path.display());
+        }
+        let mut r = Reader { b: payload, i: 0 };
+        let n = r.u64()? as usize;
+        let need = n
+            .checked_mul(STEP_RECORD_BYTES)
+            .ok_or_else(|| crate::anyhow!("step log record count {n} overflows"))?;
+        if need != r.remaining() {
+            bail!(
+                "{}: log claims {n} records ({need} B) but carries {} B",
+                path.display(),
+                r.remaining()
+            );
+        }
+        let mut records = Vec::with_capacity(n);
+        for _ in 0..n {
+            records.push(StepRecord::decode(r.take(STEP_RECORD_BYTES)?));
+        }
+        Ok(StepLog { records })
+    }
 }
 
 #[derive(Clone, Debug, Default)]
@@ -109,8 +253,14 @@ impl Checkpoint {
         for _ in 0..n {
             let nlen = r.u32()? as usize;
             let name = String::from_utf8(r.take(nlen)?.to_vec())?;
+            // dlen is untrusted: checked_mul so a crafted u64 errors instead
+            // of wrapping `dlen * 4` into a tiny in-bounds read (or a
+            // release-mode OOB panic in the old unchecked guard)
             let dlen = r.u64()? as usize;
-            let raw = r.take(dlen * 4)?;
+            let nbytes = dlen
+                .checked_mul(4)
+                .ok_or_else(|| crate::anyhow!("buffer {name:?} length {dlen} overflows"))?;
+            let raw = r.take(nbytes)?;
             let mut data = Vec::with_capacity(dlen);
             for c in raw.chunks_exact(4) {
                 data.push(f32::from_le_bytes(c.try_into().unwrap()));
@@ -128,12 +278,19 @@ struct Reader<'a> {
 
 impl<'a> Reader<'a> {
     fn take(&mut self, n: usize) -> Result<&'a [u8]> {
-        if self.i + n > self.b.len() {
-            bail!("truncated checkpoint");
-        }
-        let s = &self.b[self.i..self.i + n];
-        self.i += n;
+        // checked_add: `self.i + n` with a crafted n wraps in release mode
+        // and turns this guard into an out-of-bounds panic — error instead
+        let end = match self.i.checked_add(n) {
+            Some(e) if e <= self.b.len() => e,
+            _ => bail!("truncated checkpoint"),
+        };
+        let s = &self.b[self.i..end];
+        self.i = end;
         Ok(s)
+    }
+
+    fn remaining(&self) -> usize {
+        self.b.len() - self.i
     }
 
     fn u32(&mut self) -> Result<u32> {
@@ -207,5 +364,110 @@ mod tests {
     fn crc32_known_vector() {
         // standard test vector: crc32("123456789") = 0xCBF43926
         assert_eq!(crc32(b"123456789"), 0xCBF43926);
+    }
+
+    #[test]
+    fn crafted_buffer_length_errors_cleanly() {
+        // hand-build a CMZ1 file whose single buffer claims dlen =
+        // u64::MAX: `dlen * 4` would wrap to 0x...FFFC — the old unchecked
+        // reader either OOB-panicked (release) or overflow-panicked
+        // (debug); now it must return an error
+        let mut payload = Vec::new();
+        payload.extend(4u32.to_le_bytes());
+        payload.extend(b"tiny");
+        payload.extend(7u64.to_le_bytes()); // step
+        payload.extend(1u32.to_le_bytes()); // n_bufs
+        payload.extend(1u32.to_le_bytes());
+        payload.extend(b"x");
+        payload.extend(u64::MAX.to_le_bytes()); // crafted dlen
+        let mut bytes = Vec::new();
+        bytes.extend(MAGIC);
+        bytes.extend(&payload);
+        bytes.extend(crc32(&payload).to_le_bytes());
+        let p = tmpfile("crafted_dlen.ckpt");
+        std::fs::write(&p, &bytes).unwrap();
+        let err = Checkpoint::load(&p).unwrap_err().to_string();
+        assert!(err.contains("overflow") || err.contains("truncated"), "{err}");
+    }
+
+    #[test]
+    fn crafted_name_length_errors_cleanly() {
+        // nlen near usize::MAX exercises the checked_add in Reader::take
+        let mut payload = Vec::new();
+        payload.extend(4u32.to_le_bytes());
+        payload.extend(b"tiny");
+        payload.extend(7u64.to_le_bytes());
+        payload.extend(1u32.to_le_bytes());
+        payload.extend(u32::MAX.to_le_bytes()); // crafted nlen
+        let mut bytes = Vec::new();
+        bytes.extend(MAGIC);
+        bytes.extend(&payload);
+        bytes.extend(crc32(&payload).to_le_bytes());
+        let p = tmpfile("crafted_nlen.ckpt");
+        std::fs::write(&p, &bytes).unwrap();
+        let err = Checkpoint::load(&p).unwrap_err().to_string();
+        assert!(err.contains("truncated"), "{err}");
+    }
+
+    #[test]
+    fn step_record_roundtrip() {
+        let r = StepRecord { seed: 0xABCD, g: -0.125, theta: 1.35, eta: 1e-3, beta: 0.97 };
+        let mut buf = Vec::new();
+        r.encode_into(&mut buf);
+        assert_eq!(buf.len(), STEP_RECORD_BYTES);
+        assert_eq!(StepRecord::decode(&buf), r);
+    }
+
+    #[test]
+    fn step_log_roundtrip_and_crc() {
+        let mut log = StepLog::new();
+        for t in 0..50u64 {
+            log.records.push(StepRecord {
+                seed: t.wrapping_mul(0x9E3779B97F4A7C15),
+                g: (t as f64) * 0.01 - 0.2,
+                theta: 1.35,
+                eta: 1e-3,
+                beta: 0.9 + (t as f32) * 1e-3,
+            });
+        }
+        let p = tmpfile("steps.cmzl");
+        log.save(&p).unwrap();
+        let l = StepLog::load(&p).unwrap();
+        assert_eq!(l.records, log.records);
+        assert_eq!(l.len(), 50);
+        // bit-flip → CRC failure
+        let mut bytes = std::fs::read(&p).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x01;
+        std::fs::write(&p, &bytes).unwrap();
+        let err = StepLog::load(&p).unwrap_err().to_string();
+        assert!(err.contains("CRC"), "{err}");
+    }
+
+    #[test]
+    fn step_log_crafted_count_rejected() {
+        // count disagreeing with the byte run must error (even with a
+        // valid CRC over the crafted payload)
+        let mut payload = Vec::new();
+        payload.extend(1000u64.to_le_bytes()); // claims 1000 records, has 0
+        let mut bytes = Vec::new();
+        bytes.extend(LOG_MAGIC);
+        bytes.extend(&payload);
+        bytes.extend(crc32(&payload).to_le_bytes());
+        let p = tmpfile("crafted_count.cmzl");
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(StepLog::load(&p).is_err());
+    }
+
+    #[test]
+    fn params_hash_is_deterministic_and_sensitive() {
+        let a = vec![1.0f32, -2.5, 3.25, 0.0];
+        let b = vec![1.0f32, -2.5, 3.25, 0.0];
+        let mut c = a.clone();
+        c[3] = f32::from_bits(1); // one-ulp-from-zero flips the hash
+        assert_eq!(params_hash(&a), params_hash(&b));
+        assert_ne!(params_hash(&a), params_hash(&c));
+        // FNV-1a offset basis for the empty input
+        assert_eq!(params_hash(&[]), 0xcbf29ce484222325);
     }
 }

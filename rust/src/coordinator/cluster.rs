@@ -1,0 +1,684 @@
+//! Fault-tolerant multi-process cluster engine (ISSUE-6 tentpole).
+//!
+//! [`Leader`] generalizes the lockstep `run_leader` loop with the failure
+//! semantics a real deployment needs, all riding on the shared-randomness
+//! property that makes recovery nearly free:
+//!
+//! * **Stragglers** — `Proj` collection runs under `proj_timeout`; a worker
+//!   that misses the window is simply skipped for that step and the
+//!   projected gradient is renormalized by the count actually heard from
+//!   (`g = Σ gᵢ / |received|`). The straggler still gets the `Apply`, so
+//!   its replica stays bit-identical; `max_strikes` consecutive timeouts
+//!   drop it for good.
+//! * **Worker death** — a dead socket (send/recv error, EOF, protocol
+//!   violation) drops the worker; training continues while at least one
+//!   replica is live.
+//! * **Rejoin via seed replay** — the leader appends a 28-byte
+//!   [`StepRecord`] `(seed, g, theta, eta, beta)` per step to a
+//!   [`StepLog`] (optionally persisted, CRC-checked). A worker that
+//!   (re)connects at leader step `T` announcing its own step `t ≤ T`
+//!   (0 fresh, or `ckpt.step` when warm-started from a snapshot) receives
+//!   the gap `t..T` in chunked `Replay` frames and fast-forwards with
+//!   ZERO function evaluations ([`ZoWorker::replay`]) — O(1) bytes per
+//!   missed step.
+//! * **Divergence tripwire** — every `hash_check_every` steps (and
+//!   immediately after every rejoin) the leader collects an FNV-1a hash of
+//!   each replica's parameters; any disagreement aborts the run rather
+//!   than silently training divergent replicas. The last agreed hash also
+//!   rides in `Welcome`, letting a rejoining worker verify itself before
+//!   taking any step.
+//!
+//! Wire accounting stays split: `wire_bytes` counts only the steady-state
+//! `Step`/`Proj`/`Apply` frames (identical to `LocalCluster`, pinned by a
+//! parity test); registration, replay, eval, hash checks and heartbeats
+//! land in `control_bytes`.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use crate::checkpoint::{StepLog, StepRecord};
+use crate::net::{Msg, Transport, PROTO_VERSION, REPLAY_CHUNK};
+use crate::optimizer::BetaSchedule;
+use crate::util::error::{bail, Result};
+
+use super::distributed::{step_seed, DistHypers, DistSummary, ZoWorker};
+
+/// Leader-side configuration. [`LeaderConfig::new`] yields lockstep
+/// semantics (no timeouts, no tripwire, no persistence) — the behavior of
+/// the original `run_leader`; flip the public fields for fault tolerance.
+#[derive(Clone, Debug)]
+pub struct LeaderConfig {
+    pub n_workers: u32,
+    pub run_seed: u64,
+    pub steps: u64,
+    pub hypers: DistHypers,
+    pub beta: BetaSchedule,
+    /// eval every this many steps (0 = never)
+    pub eval_every: u64,
+    /// max wait for each worker's `Proj` (None = block forever, lockstep)
+    pub proj_timeout: Option<Duration>,
+    /// max wait for each worker's `EvalResult` (evals run long; heartbeats
+    /// refresh this window)
+    pub eval_timeout: Option<Duration>,
+    /// consecutive Proj timeouts before a straggler is dropped for good
+    pub max_strikes: u32,
+    /// divergence tripwire period in steps (0 = only after rejoins)
+    pub hash_check_every: u64,
+    /// persist the step log here (the on-disk rejoin substrate)
+    pub step_log: Option<PathBuf>,
+    /// save the step log every this many steps (and at shutdown)
+    pub log_save_every: u64,
+}
+
+impl LeaderConfig {
+    pub fn new(n_workers: u32, run_seed: u64, steps: u64, hypers: DistHypers, beta: BetaSchedule) -> Self {
+        LeaderConfig {
+            n_workers,
+            run_seed,
+            steps,
+            hypers,
+            beta,
+            eval_every: 0,
+            proj_timeout: None,
+            eval_timeout: None,
+            max_strikes: 3,
+            hash_check_every: 0,
+            step_log: None,
+            log_save_every: 100,
+        }
+    }
+}
+
+struct Slot {
+    conn: Option<Box<dyn Transport>>,
+    strikes: u32,
+}
+
+/// Outcome of draining one worker's connection for an expected message.
+enum Polled<R> {
+    Got(R, u64),
+    Timeout,
+    Dead(String),
+}
+
+pub struct Leader {
+    cfg: LeaderConfig,
+    slots: Vec<Slot>,
+    log: StepLog,
+    t: u64,
+    /// (step, hash) agreed by all live replicas at the last tripwire
+    consensus: Option<(u64, u64)>,
+    /// force a tripwire round before the next step (set on rejoin)
+    verify_hash: bool,
+    summary: DistSummary,
+}
+
+impl Leader {
+    pub fn new(cfg: LeaderConfig) -> Self {
+        let slots = (0..cfg.n_workers).map(|_| Slot { conn: None, strikes: 0 }).collect();
+        Leader { cfg, slots, log: StepLog::new(), t: 0, consensus: None, verify_hash: false, summary: DistSummary::default() }
+    }
+
+    /// Current step (= records logged so far).
+    pub fn t(&self) -> u64 {
+        self.t
+    }
+
+    fn live(&self) -> usize {
+        self.slots.iter().filter(|s| s.conn.is_some()).count()
+    }
+
+    /// Register a (re)connecting worker: validate the v2 handshake, ship
+    /// the replay gap, and await its `Ready`. Errors leave the cluster
+    /// untouched (the offending connection is simply dropped by the
+    /// caller). This is where the old `run_leader` bugs die: the
+    /// `Hello { worker_id }` payload is actually validated — version,
+    /// range, duplicates, and a step claim ahead of the leader all bail
+    /// with a clear message.
+    pub fn admit(&mut self, mut conn: Box<dyn Transport>) -> Result<u32> {
+        let hello = conn.recv()?;
+        self.summary.control_bytes += hello.wire_bytes() as u64;
+        let (wid, wt) = match hello {
+            Msg::Hello { proto, worker_id, t } => {
+                if proto != PROTO_VERSION {
+                    bail!("worker {worker_id}: protocol version mismatch (worker v{proto}, leader v{PROTO_VERSION})");
+                }
+                (worker_id, t)
+            }
+            other => bail!("expected Hello, got {other:?}"),
+        };
+        if wid >= self.cfg.n_workers {
+            bail!("worker id {wid} out of range: cluster has {} data shards (ids 0..{})", self.cfg.n_workers, self.cfg.n_workers);
+        }
+        if self.slots[wid as usize].conn.is_some() {
+            bail!("duplicate worker id {wid}: that data shard is already registered (two workers on one shard would skew the average)");
+        }
+        if wt > self.t {
+            bail!("worker {wid} claims step {wt} but the leader is at step {}", self.t);
+        }
+        let welcome_hash = match self.consensus {
+            Some((ct, h)) if ct == self.t => h,
+            _ => 0, // unknown at this exact step
+        };
+        let welcome = Msg::Welcome {
+            proto: PROTO_VERSION,
+            n_workers: self.cfg.n_workers,
+            run_seed: self.cfg.run_seed,
+            t: self.t,
+            params_hash: welcome_hash,
+        };
+        conn.send(&welcome)?;
+        self.summary.control_bytes += welcome.wire_bytes() as u64;
+        // ship the gap wt..t as chunked Replay frames (O(1) bytes/step)
+        let mut from = wt as usize;
+        while from < self.t as usize {
+            let upto = (from + REPLAY_CHUNK).min(self.t as usize);
+            let msg = Msg::Replay { from_t: from as u64, records: self.log.records[from..upto].to_vec() };
+            conn.send(&msg)?;
+            self.summary.control_bytes += msg.wire_bytes() as u64;
+            from = upto;
+        }
+        let ready = conn.recv()?;
+        self.summary.control_bytes += ready.wire_bytes() as u64;
+        match ready {
+            Msg::Ready { t, worker_id, params_hash } => {
+                if worker_id != wid {
+                    bail!("Ready from worker {worker_id} on worker {wid}'s connection");
+                }
+                if t != self.t {
+                    bail!("worker {wid} reports step {t} after replay but the leader is at {}", self.t);
+                }
+                if welcome_hash != 0 && params_hash != welcome_hash {
+                    bail!("worker {wid} rejoined with divergent parameters: {params_hash:016x} != consensus {welcome_hash:016x}");
+                }
+            }
+            other => bail!("expected Ready from worker {wid}, got {other:?}"),
+        }
+        self.slots[wid as usize] = Slot { conn: Some(conn), strikes: 0 };
+        if self.t > 0 {
+            self.summary.rejoins += 1;
+            // pin the rejoin at runtime: the very next thing the cluster
+            // does is a tripwire round, so a diverged rejoiner aborts the
+            // run instead of polluting the average
+            self.verify_hash = true;
+            crate::info!("leader", "worker {wid} rejoined at step {} via seed replay ({} records)", self.t, self.t - wt);
+        } else {
+            crate::info!("leader", "worker {wid} registered ({}/{} shards live)", self.live(), self.cfg.n_workers);
+        }
+        Ok(wid)
+    }
+
+    /// Run to completion with a static worker set (no mid-run joins).
+    pub fn run(self, initial: Vec<Box<dyn Transport>>) -> Result<DistSummary> {
+        self.run_with_joiner(initial, |_| Vec::new())
+    }
+
+    /// Run to completion; `joiner(t)` is polled between steps and returns
+    /// any newly accepted connections (e.g. from a non-blocking TCP accept
+    /// loop). Initial registration errors are fatal; a failed mid-run
+    /// (re)join only drops that connection.
+    pub fn run_with_joiner(
+        mut self,
+        initial: Vec<Box<dyn Transport>>,
+        mut joiner: impl FnMut(u64) -> Vec<Box<dyn Transport>>,
+    ) -> Result<DistSummary> {
+        self.summary.steps = self.cfg.steps;
+        for conn in initial {
+            self.admit(conn)?;
+        }
+        while self.t < self.cfg.steps {
+            for conn in joiner(self.t) {
+                if let Err(e) = self.admit(conn) {
+                    crate::warn_!("leader", "rejected (re)join at step {}: {e}", self.t);
+                }
+            }
+            if self.live() == 0 {
+                self.save_log();
+                bail!("all {} workers lost at step {} (step log {})", self.cfg.n_workers, self.t,
+                    match &self.cfg.step_log { Some(p) => format!("saved to {}", p.display()), None => "not persisted".into() });
+            }
+            if self.verify_hash
+                || (self.cfg.hash_check_every > 0 && self.t > 0 && self.t % self.cfg.hash_check_every == 0)
+            {
+                self.verify_hash = false;
+                self.hash_round()?;
+            }
+            self.train_step()?;
+            if self.cfg.eval_every > 0 && self.t % self.cfg.eval_every == 0 {
+                self.eval_round();
+            }
+            if self.cfg.log_save_every > 0 && self.t % self.cfg.log_save_every == 0 {
+                self.save_log();
+            }
+        }
+        self.broadcast(&Msg::Shutdown, false);
+        self.save_log();
+        Ok(self.summary)
+    }
+
+    fn train_step(&mut self) -> Result<()> {
+        let t = self.t;
+        let seed = step_seed(self.cfg.run_seed, t);
+        let beta = self.cfg.beta.at(t as usize);
+        let hy = self.cfg.hypers;
+        let msg = Msg::Step { t, seed, theta: hy.theta, beta, eta: hy.eta, lam: hy.lam };
+        self.broadcast(&msg, true);
+        let projs = loop {
+            if self.live() == 0 {
+                self.save_log();
+                bail!("all {} workers lost at step {t}", self.cfg.n_workers);
+            }
+            let p = self.collect(t, self.cfg.proj_timeout, true, "Proj", |wid, m| match *m {
+                Msg::Proj { t: pt, worker_id, loss_plus, loss_minus } if pt == t && worker_id == wid => {
+                    Some((loss_plus, loss_minus))
+                }
+                _ => None,
+            });
+            if !p.is_empty() {
+                break p;
+            }
+            // every live worker straggled this round (strikes were applied
+            // inside collect) — wait out another window
+        };
+        let k = projs.len() as f64;
+        let mut g_sum = 0f64;
+        let mut loss_sum = 0f64;
+        for (lp, lm) in &projs {
+            g_sum += (lp - lm) / (2.0 * hy.lam as f64);
+            loss_sum += 0.5 * (lp + lm);
+        }
+        // renormalize by the replicas actually heard from, not the nominal
+        // cluster size — a straggler's missing shard must not bias g to 0
+        let g = g_sum / k;
+        self.log.records.push(StepRecord { seed, g, theta: hy.theta, eta: hy.eta, beta });
+        // EVERY live replica gets the Apply — including stragglers whose
+        // Proj was skipped — so all replicas stay bit-identical
+        self.broadcast(&Msg::Apply { t, g }, true);
+        if t % 10 == 0 || t + 1 == self.cfg.steps {
+            self.summary.loss_curve.push((t, loss_sum / k));
+        }
+        self.t += 1;
+        Ok(())
+    }
+
+    /// Divergence tripwire at the current step boundary: every live
+    /// replica reports its parameter hash; any disagreement is fatal
+    /// (bit-identity is the protocol's core invariant — training through a
+    /// divergence would silently corrupt the run).
+    fn hash_round(&mut self) -> Result<()> {
+        let t = self.t;
+        self.broadcast(&Msg::HashCheck { t }, false);
+        let hashes = self.collect(t, self.cfg.proj_timeout, false, "HashReport", |wid, m| match *m {
+            Msg::HashReport { t: ht, worker_id, hash } if ht == t && worker_id == wid => Some(hash),
+            _ => None,
+        });
+        if let Some((&h0, rest)) = hashes.split_first() {
+            if rest.iter().any(|&h| h != h0) {
+                self.save_log();
+                bail!("divergence tripwire at step {t}: replica parameter hashes disagree: {hashes:x?}");
+            }
+            self.consensus = Some((t, h0));
+            crate::debug!("leader", "tripwire at step {t}: {} replicas agree on {h0:016x}", hashes.len());
+        }
+        Ok(())
+    }
+
+    fn eval_round(&mut self) {
+        // tag eval frames with the last APPLIED step so a late EvalResult
+        // reads as stale (not a protocol violation) at the next collect
+        let te = self.t - 1;
+        self.broadcast(&Msg::Eval { t: te }, false);
+        let results = self.collect(te, self.cfg.eval_timeout, false, "EvalResult", |wid, m| match *m {
+            Msg::EvalResult { t: mt, worker_id, correct, total } if mt == te && worker_id == wid => {
+                Some((correct, total))
+            }
+            _ => None,
+        });
+        let (mut c, mut tot) = (0u64, 0u64);
+        for (wc, wt) in results {
+            c += wc;
+            tot += wt;
+        }
+        if tot > 0 {
+            self.summary.eval_curve.push((te + 1, c as f64 / tot as f64));
+        }
+    }
+
+    /// Drain each live worker's connection until `want` matches, the
+    /// timeout window closes, or the connection proves dead. Heartbeats
+    /// refresh the window; out-of-phase messages (a straggler's late
+    /// `Proj`, a slow `EvalResult`) are skipped as control traffic.
+    fn collect<R>(
+        &mut self,
+        t: u64,
+        timeout: Option<Duration>,
+        wire: bool,
+        what: &str,
+        mut want: impl FnMut(u32, &Msg) -> Option<R>,
+    ) -> Vec<R> {
+        let mut out = Vec::new();
+        for i in 0..self.slots.len() {
+            let wid = i as u32;
+            let mut control = 0u64;
+            let polled = {
+                let conn = match self.slots[i].conn.as_deref_mut() {
+                    Some(c) => c,
+                    None => continue,
+                };
+                loop {
+                    let res = match timeout {
+                        Some(d) => conn.recv_timeout(d),
+                        None => conn.recv().map(Some),
+                    };
+                    match res {
+                        Err(e) => break Polled::Dead(e.to_string()),
+                        Ok(None) => break Polled::Timeout,
+                        Ok(Some(msg)) => {
+                            let bytes = msg.wire_bytes() as u64;
+                            if matches!(msg, Msg::Heartbeat { .. }) {
+                                control += bytes;
+                                continue; // alive; restart the window
+                            }
+                            match want(wid, &msg) {
+                                Some(r) => break Polled::Got(r, bytes),
+                                None if out_of_phase(t, &msg) => {
+                                    control += bytes;
+                                    continue;
+                                }
+                                None => break Polled::Dead(format!("protocol violation: expected {what}, got {msg:?}")),
+                            }
+                        }
+                    }
+                }
+            };
+            self.summary.control_bytes += control;
+            match polled {
+                Polled::Got(r, bytes) => {
+                    if wire {
+                        self.summary.wire_bytes += bytes;
+                    } else {
+                        self.summary.control_bytes += bytes;
+                    }
+                    self.slots[i].strikes = 0;
+                    out.push(r);
+                }
+                Polled::Timeout => {
+                    self.summary.straggler_events += 1;
+                    self.slots[i].strikes += 1;
+                    let s = self.slots[i].strikes;
+                    if s >= self.cfg.max_strikes {
+                        self.drop_worker(i, &format!("unresponsive: {s} consecutive {what} timeouts"));
+                    } else {
+                        crate::warn_!("leader", "worker {wid} straggled on {what} at step {t} (strike {s}/{}); skipping it this round", self.cfg.max_strikes);
+                    }
+                }
+                Polled::Dead(reason) => self.drop_worker(i, &reason),
+            }
+        }
+        out
+    }
+
+    fn drop_worker(&mut self, i: usize, reason: &str) {
+        if self.slots[i].conn.take().is_some() {
+            self.summary.workers_lost += 1;
+            crate::warn_!("leader", "dropping worker {i} at step {}: {reason} ({} live workers remain)", self.t, self.live());
+        }
+    }
+
+    fn broadcast(&mut self, msg: &Msg, wire: bool) {
+        let bytes = msg.wire_bytes() as u64;
+        for i in 0..self.slots.len() {
+            let res = match self.slots[i].conn.as_deref_mut() {
+                Some(c) => c.send(msg),
+                None => continue,
+            };
+            match res {
+                Ok(()) => {
+                    if wire {
+                        self.summary.wire_bytes += bytes;
+                    } else {
+                        self.summary.control_bytes += bytes;
+                    }
+                }
+                Err(e) => self.drop_worker(i, &format!("send failed: {e}")),
+            }
+        }
+    }
+
+    fn save_log(&mut self) {
+        if let Some(path) = &self.cfg.step_log {
+            if let Err(e) = self.log.save(path) {
+                crate::warn_!("leader", "failed to persist step log to {}: {e}", path.display());
+            }
+        }
+    }
+}
+
+/// Worker->leader messages carry the step they answer; anything at or
+/// before the leader's current collection step may legitimately arrive
+/// late (straggler Proj, slow EvalResult) and is drained, not fatal.
+fn out_of_phase(t: u64, msg: &Msg) -> bool {
+    match *msg {
+        Msg::Proj { t: mt, .. }
+        | Msg::HashReport { t: mt, .. }
+        | Msg::EvalResult { t: mt, .. }
+        | Msg::Ready { t: mt, .. } => mt <= t,
+        _ => false,
+    }
+}
+
+/// Worker-side runtime options (checkpointing + fault-injection hook).
+#[derive(Clone, Debug, Default)]
+pub struct WorkerOpts {
+    /// preset name stamped into saved checkpoints
+    pub preset: String,
+    /// save the replica snapshot here (every `ckpt_every` steps + shutdown)
+    pub ckpt: Option<PathBuf>,
+    /// checkpoint period in applied steps (0 = shutdown only)
+    pub ckpt_every: u64,
+    /// fault injection: error out upon receiving `Step{t}` — simulates a
+    /// worker crash mid-step for the cluster smoke script and tests
+    pub die_at_step: Option<u64>,
+}
+
+/// Worker side of the v2 protocol: handshake (+ seed-replay catch-up when
+/// behind the leader), then serve Step/Apply/Eval/HashCheck until
+/// Shutdown. The `worker` keeps its state across calls, so a reconnect
+/// loop can re-invoke this with the same replica after an error and only
+/// the missed steps get replayed.
+pub fn run_worker_with(conn: &mut dyn Transport, worker: &mut ZoWorker, opts: &WorkerOpts) -> Result<()> {
+    conn.send(&Msg::Hello { proto: PROTO_VERSION, worker_id: worker.id, t: worker.t })?;
+    let (leader_t, expect_hash) = match conn.recv()? {
+        Msg::Welcome { proto, t, params_hash, .. } => {
+            if proto != PROTO_VERSION {
+                bail!("protocol version mismatch: leader speaks v{proto}, this worker speaks v{PROTO_VERSION}");
+            }
+            (t, params_hash)
+        }
+        other => bail!("expected Welcome, got {other:?}"),
+    };
+    if worker.t < leader_t {
+        crate::info!("worker", "replica {} catching up from step {} to {} via seed replay", worker.id, worker.t, leader_t);
+    }
+    while worker.t < leader_t {
+        match conn.recv()? {
+            Msg::Replay { from_t, records } => worker.replay(from_t, &records)?,
+            other => bail!("expected Replay records to reach step {leader_t}, got {other:?}"),
+        }
+    }
+    let h = worker.params_hash();
+    if expect_hash != 0 && h != expect_hash {
+        bail!("rejoin diverged: local params hash {h:016x} != cluster consensus {expect_hash:016x}");
+    }
+    conn.send(&Msg::Ready { t: worker.t, worker_id: worker.id, params_hash: h })?;
+    let mut pending: Option<(u64, f32, f32)> = None; // (t, eta, beta)
+    loop {
+        match conn.recv()? {
+            Msg::Step { t, seed, theta, beta, eta, lam } => {
+                if t != worker.t {
+                    bail!("Step t={t} but this replica is at step {} (protocol desync)", worker.t);
+                }
+                if opts.die_at_step == Some(t) {
+                    bail!("fault injection: worker {} dying at step {t}", worker.id);
+                }
+                let (lp, lm) = worker.compute_proj(t, seed, theta, lam)?;
+                conn.send(&Msg::Proj { t, worker_id: worker.id, loss_plus: lp, loss_minus: lm })?;
+                pending = Some((t, eta, beta));
+            }
+            Msg::Apply { t, g } => {
+                match pending.take() {
+                    Some((pt, eta, beta)) if pt == t => worker.apply(g, eta, beta),
+                    _ => bail!("Apply{{t={t}}} without matching Step"),
+                }
+                if opts.ckpt_every > 0 && worker.t % opts.ckpt_every == 0 {
+                    save_ckpt(worker, opts);
+                }
+            }
+            Msg::Eval { t } => {
+                // liveness signal first: the local eval may outlast the
+                // leader's timeout window
+                conn.send(&Msg::Heartbeat { t })?;
+                let (c, tot) = worker.eval();
+                conn.send(&Msg::EvalResult { t, worker_id: worker.id, correct: c, total: tot })?;
+            }
+            Msg::HashCheck { t } => {
+                conn.send(&Msg::HashReport { t, worker_id: worker.id, hash: worker.params_hash() })?;
+            }
+            Msg::Shutdown => {
+                save_ckpt(worker, opts);
+                return Ok(());
+            }
+            other => bail!("unexpected message {other:?}"),
+        }
+    }
+}
+
+fn save_ckpt(worker: &ZoWorker, opts: &WorkerOpts) {
+    if let Some(path) = &opts.ckpt {
+        if let Err(e) = worker.to_checkpoint(&opts.preset).save(path) {
+            crate::warn_!("worker", "failed to save checkpoint to {}: {e}", path.display());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::channel_pair;
+    use crate::objective::NativeQuadratic;
+
+    const D: usize = 64;
+    const HYP: DistHypers = DistHypers { theta: 1.2, eta: 1e-3, lam: 1e-2 };
+
+    fn cfg(n: u32, steps: u64) -> LeaderConfig {
+        LeaderConfig::new(n, 42, steps, HYP, BetaSchedule::Constant(0.9))
+    }
+
+    fn fake_hello(conn: &mut dyn Transport, proto: u8, wid: u32, t: u64) {
+        conn.send(&Msg::Hello { proto, worker_id: wid, t }).unwrap();
+    }
+
+    // admission validation runs without threads: pre-queue the worker side
+    // of the handshake on a channel transport, then drive admit()
+
+    #[test]
+    fn admit_validates_protocol_version() {
+        let (mut w, l) = channel_pair();
+        fake_hello(&mut w, 1, 0, 0); // stale protocol
+        let err = Leader::new(cfg(2, 10)).admit(Box::new(l)).unwrap_err().to_string();
+        assert!(err.contains("protocol version mismatch"), "{err}");
+    }
+
+    #[test]
+    fn admit_rejects_out_of_range_id() {
+        let (mut w, l) = channel_pair();
+        fake_hello(&mut w, PROTO_VERSION, 5, 0);
+        let err = Leader::new(cfg(2, 10)).admit(Box::new(l)).unwrap_err().to_string();
+        assert!(err.contains("out of range"), "{err}");
+    }
+
+    #[test]
+    fn admit_rejects_duplicate_worker_id() {
+        // the registration bugfix regression: the old run_leader discarded
+        // Hello{worker_id} entirely, silently accepting two workers on one
+        // shard — now the second one bails with a clear message
+        let mut leader = Leader::new(cfg(2, 10));
+        let (mut w0, l0) = channel_pair();
+        fake_hello(&mut w0, PROTO_VERSION, 0, 0);
+        w0.send(&Msg::Ready { t: 0, worker_id: 0, params_hash: 7 }).unwrap();
+        leader.admit(Box::new(l0)).unwrap();
+        // same id again on a fresh connection
+        let (mut w1, l1) = channel_pair();
+        fake_hello(&mut w1, PROTO_VERSION, 0, 0);
+        let err = leader.admit(Box::new(l1)).unwrap_err().to_string();
+        assert!(err.contains("duplicate worker id 0"), "{err}");
+    }
+
+    #[test]
+    fn admit_rejects_step_claim_ahead_of_leader() {
+        let (mut w, l) = channel_pair();
+        fake_hello(&mut w, PROTO_VERSION, 0, 99); // leader is at step 0
+        let err = Leader::new(cfg(2, 10)).admit(Box::new(l)).unwrap_err().to_string();
+        assert!(err.contains("claims step 99"), "{err}");
+    }
+
+    #[test]
+    fn worker_rejects_version_mismatch() {
+        let (mut lside, mut wside) = channel_pair();
+        lside.send(&Msg::Welcome { proto: 1, n_workers: 1, run_seed: 0, t: 0, params_hash: 0 }).unwrap();
+        let mut w = ZoWorker::new(0, vec![0.0; D], Box::new(NativeQuadratic::new(D)));
+        let err = run_worker_with(&mut wside, &mut w, &WorkerOpts::default())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("protocol version mismatch"), "{err}");
+    }
+
+    #[test]
+    fn lockstep_leader_over_channels_matches_local_cluster() {
+        // the wire-accounting bugfix regression: the old run_leader counted
+        // a received Proj as 29 B (the frame is 33 B), so leader and
+        // LocalCluster disagreed on the headline metric. Now both count
+        // Step/Proj/Apply via wire_bytes() and must agree exactly — and the
+        // replicas must be bit-identical across the two paths.
+        use super::super::distributed::{run_leader, run_worker, LocalCluster};
+
+        let n = 3u32;
+        let steps = 25u64;
+        let mut x0 = vec![0f32; D];
+        let mut rng = crate::util::rng::Xoshiro256pp::seed_from_u64(8);
+        rng.fill_normal_f32(&mut x0);
+
+        let mut conns: Vec<Box<dyn Transport>> = Vec::new();
+        let mut handles = Vec::new();
+        for id in 0..n {
+            let (wside, lside) = channel_pair();
+            conns.push(Box::new(lside));
+            let x = x0.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut wside = wside;
+                let mut w = ZoWorker::new(id, x, Box::new(NativeQuadratic::new(D)));
+                run_worker(&mut wside, &mut w).unwrap();
+                (w.x, w.m)
+            }));
+        }
+        let summary = run_leader(conns, 42, steps, HYP, &BetaSchedule::Constant(0.9), 0).unwrap();
+        let states: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+
+        let workers = (0..n)
+            .map(|id| ZoWorker::new(id, x0.clone(), Box::new(NativeQuadratic::new(D))))
+            .collect();
+        let mut local = LocalCluster::new(workers, 42);
+        let local_summary = local.run(steps, HYP, &BetaSchedule::Constant(0.9), 0).unwrap();
+
+        assert_eq!(
+            summary.wire_bytes, local_summary.wire_bytes,
+            "leader and LocalCluster wire accounting diverged"
+        );
+        for (id, (x, m)) in states.iter().enumerate() {
+            assert_eq!(x, &local.workers[id].x, "worker {id} params diverged from LocalCluster");
+            assert_eq!(m, &local.workers[id].m, "worker {id} momentum diverged");
+        }
+        assert_eq!(summary.workers_lost, 0);
+        assert_eq!(summary.straggler_events, 0);
+    }
+}

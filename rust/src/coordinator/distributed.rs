@@ -8,8 +8,17 @@
 //! returns two scalars; the leader averages the projected gradient and
 //! broadcasts `Apply{g}`; every worker applies the *same* deterministic
 //! update, so replicas remain bit-identical without ever exchanging
-//! parameters. Total wire traffic per step ≈ 60 bytes/worker vs 4·d bytes
+//! parameters. Total wire traffic per step ≈ 90 bytes/worker vs 4·d bytes
 //! for gradient all-reduce (d = 10^6..10^13 in the paper's setting).
+//!
+//! The same purity enables the rejoin path: `(x, m)` at step t is a
+//! function of `x0` and the per-step `(seed, g, theta, eta, beta)` records,
+//! so [`ZoWorker::replay`] reconstructs a replica's exact state from the
+//! leader's [`crate::checkpoint::StepLog`] with zero function evaluations.
+//! The fault-tolerant leader (timeouts, straggler drop, mid-run rejoin,
+//! divergence tripwire) lives in [`super::cluster`]; this module keeps the
+//! replica math, the in-process [`LocalCluster`], and the lockstep
+//! [`run_leader`]/[`run_worker`] entry points.
 //!
 //! Invariants (enforced by tests):
 //! * 1-worker cluster ≡ single-node composed ConMeZO, bit-for-bit;
@@ -17,7 +26,8 @@
 //! * N-worker aggregate ≡ single node stepping with the N shards'
 //!   mean projected gradient;
 //! * shared-session replicas ([`model_workers_shared`]) ≡ replicas with
-//!   private sessions, bit-for-bit.
+//!   private sessions, bit-for-bit;
+//! * leader-side and [`LocalCluster`] `wire_bytes` accounting agree.
 //!
 //! Model-objective replicas in ONE process share one bound `two_point`
 //! session — and therefore one forward scratch and the `Runtime`'s one
@@ -27,11 +37,19 @@
 
 use crate::util::error::{bail, Result};
 
+use crate::checkpoint::{Checkpoint, StepRecord};
 use crate::net::{Msg, Transport};
 use crate::objective::{BatchSource, ModelObjective, Objective};
 use crate::optimizer::{sample_direction, BetaSchedule};
 use crate::runtime::Runtime;
 use crate::vecmath;
+
+/// Per-step broadcast seed: identical derivation on LocalCluster and the
+/// TCP leader (and in replay tests), so the two paths are bit-comparable.
+pub fn step_seed(run_seed: u64, t: u64) -> u64 {
+    let mut s = run_seed ^ t.rotate_left(17);
+    crate::util::rng::splitmix64(&mut s)
+}
 
 /// Worker-side replica state + step math (transport-agnostic).
 pub struct ZoWorker {
@@ -41,6 +59,8 @@ pub struct ZoWorker {
     u: Vec<f32>,
     z: Vec<f32>,
     started: bool,
+    /// completed (applied) steps; the protocol's step counter
+    pub t: u64,
     pub obj: Box<dyn Objective>,
     /// local eval closure: returns (correct, total); optional
     pub eval_fn: Option<Box<dyn FnMut(&[f32]) -> (u64, u64)>>,
@@ -56,9 +76,48 @@ impl ZoWorker {
             u: vec![0.0; d],
             z: vec![0.0; d],
             started: false,
+            t: 0,
             obj,
             eval_fn: None,
         }
+    }
+
+    /// Warm-start a replica from a CRC-checked snapshot (the snapshot-sync
+    /// rejoin path: load the checkpoint, then [`Self::replay`] only the gap
+    /// `ckpt.step..leader_t` shipped in a `Replay` message).
+    pub fn from_checkpoint(id: u32, ckpt: &Checkpoint, obj: Box<dyn Objective>) -> Result<ZoWorker> {
+        let x = ckpt.get("params")?.to_vec();
+        let m = ckpt.get("momentum")?.to_vec();
+        if x.len() != obj.dim() {
+            bail!(
+                "checkpoint params have {} entries but objective dim is {}",
+                x.len(),
+                obj.dim()
+            );
+        }
+        if m.len() != x.len() {
+            bail!("checkpoint momentum length {} != params length {}", m.len(), x.len());
+        }
+        let d = x.len();
+        Ok(ZoWorker {
+            id,
+            x,
+            m,
+            u: vec![0.0; d],
+            z: vec![0.0; d],
+            started: ckpt.step > 0,
+            t: ckpt.step,
+            obj,
+            eval_fn: None,
+        })
+    }
+
+    /// Snapshot this replica's full optimizer state at its current step.
+    pub fn to_checkpoint(&self, preset: &str) -> Checkpoint {
+        let mut c = Checkpoint::new(preset, self.t);
+        c.put("params", &self.x);
+        c.put("momentum", &self.m);
+        c
     }
 
     /// Phase 1 of a step: regenerate the direction from the broadcast seed
@@ -79,12 +138,51 @@ impl ZoWorker {
     /// replicas, so states never diverge.
     pub fn apply(&mut self, g: f64, eta: f32, beta: f32) {
         vecmath::zo_update(&mut self.x, &mut self.m, &self.z, g as f32, eta, beta);
+        self.t += 1;
     }
 
+    /// Fast-forward through logged steps with ZERO function evaluations:
+    /// the update is a pure function of the record stream, so this mirrors
+    /// [`Self::compute_proj`]+[`Self::apply`] exactly minus the `two_point`
+    /// call. Record `k` must correspond to step `from_t + k`, and `from_t`
+    /// must equal this replica's current step.
+    pub fn replay(&mut self, from_t: u64, records: &[StepRecord]) -> Result<()> {
+        if from_t != self.t {
+            bail!("replay starts at step {from_t} but this replica is at step {}", self.t);
+        }
+        let d_raw = self.obj.d_raw();
+        for (k, r) in records.iter().enumerate() {
+            let t = from_t + k as u64;
+            sample_direction(&mut self.u, d_raw, r.seed, t as usize);
+            if !self.started {
+                self.m.copy_from_slice(&self.u);
+                self.started = true;
+            }
+            vecmath::cone_direction(&self.m, &self.u, r.theta, d_raw, &mut self.z);
+            self.obj.advance(); // keep the shard stream in step with live peers
+            vecmath::zo_update(&mut self.x, &mut self.m, &self.z, r.g as f32, r.eta, r.beta);
+            self.t = t + 1;
+        }
+        Ok(())
+    }
+
+    /// Cheap deterministic hash of the parameter replica (the divergence
+    /// tripwire / rejoin comparison value).
+    pub fn params_hash(&self) -> u64 {
+        crate::checkpoint::params_hash(&self.x)
+    }
+
+    /// Run the local sharded eval. Temporarily takes the closure out of
+    /// `self` so it can borrow `self.x` directly — zero parameter-sized
+    /// allocations (the old version cloned all of `x` per eval purely to
+    /// appease the borrow checker).
     pub fn eval(&mut self) -> (u64, u64) {
-        let x = self.x.clone();
-        match &mut self.eval_fn {
-            Some(f) => f(&x),
+        match self.eval_fn.take() {
+            Some(mut f) => {
+                let r = f(&self.x);
+                self.eval_fn = Some(f);
+                r
+            }
             None => (0, 0),
         }
     }
@@ -135,8 +233,18 @@ pub struct DistSummary {
     pub steps: u64,
     pub loss_curve: Vec<(u64, f64)>,
     pub eval_curve: Vec<(u64, f64)>,
-    /// leader-side wire bytes sent + received (the O(1)/step claim)
+    /// leader-side per-step wire bytes (`Step`/`Proj`/`Apply` only — the
+    /// O(1)/step claim; identical accounting in LocalCluster and Leader)
     pub wire_bytes: u64,
+    /// non-step traffic: registration, replay, eval, hash checks, heartbeats
+    pub control_bytes: u64,
+    /// Proj timeouts survived (the worker was skipped for that step's
+    /// average but kept alive)
+    pub straggler_events: u64,
+    /// workers dropped (dead socket, protocol violation, or strike-out)
+    pub workers_lost: u64,
+    /// successful mid-run (re)admissions via seed replay
+    pub rejoins: u64,
 }
 
 /// In-process cluster: drives N replicas deterministically on one thread
@@ -153,8 +261,7 @@ impl LocalCluster {
     }
 
     fn step_seed(&self, t: u64) -> u64 {
-        let mut s = self.run_seed ^ t.rotate_left(17);
-        crate::util::rng::splitmix64(&mut s)
+        step_seed(self.run_seed, t)
     }
 
     /// Run `steps` iterations; eval every `eval_every` (0 = never).
@@ -208,115 +315,28 @@ impl LocalCluster {
 }
 
 // ---------------------------------------------------------------------------
-// TCP leader / worker
+// TCP leader / worker (lockstep entry points)
 // ---------------------------------------------------------------------------
 
-/// Leader side: drive registered worker connections through the protocol.
+/// Leader side, lockstep flavor: no timeouts, any worker failure is fatal.
+/// A thin wrapper over [`super::cluster::Leader`] — the fault-tolerant
+/// engine with straggler drop / rejoin / tripwire enabled lives there.
 pub fn run_leader(
-    conns: &mut [Box<dyn Transport>],
+    conns: Vec<Box<dyn Transport>>,
     run_seed: u64,
     steps: u64,
     hypers: DistHypers,
     beta: &BetaSchedule,
     eval_every: u64,
 ) -> Result<DistSummary> {
-    // registration
-    let n_workers = conns.len() as u32;
-    for (i, c) in conns.iter_mut().enumerate() {
-        match c.recv()? {
-            Msg::Hello { .. } => {}
-            other => bail!("worker {i}: expected Hello, got {other:?}"),
-        }
-        c.send(&Msg::Welcome { n_workers, run_seed })?;
-    }
-    let mut summary = DistSummary::default();
-    summary.steps = steps;
-    let n = conns.len() as f64;
-    for t in 0..steps {
-        let mut s = run_seed ^ t.rotate_left(17);
-        let seed = crate::util::rng::splitmix64(&mut s);
-        let b = beta.at(t as usize);
-        let msg = Msg::Step { t, seed, theta: hypers.theta, beta: b, eta: hypers.eta, lam: hypers.lam };
-        for c in conns.iter_mut() {
-            c.send(&msg)?;
-            summary.wire_bytes += msg.wire_bytes() as u64;
-        }
-        let mut g_sum = 0f64;
-        let mut loss_sum = 0f64;
-        for c in conns.iter_mut() {
-            match c.recv()? {
-                Msg::Proj { t: pt, loss_plus, loss_minus, .. } if pt == t => {
-                    g_sum += (loss_plus - loss_minus) / (2.0 * hypers.lam as f64);
-                    loss_sum += 0.5 * (loss_plus + loss_minus);
-                    summary.wire_bytes += 29; // Proj frame size
-                }
-                other => bail!("step {t}: expected Proj, got {other:?}"),
-            }
-        }
-        let g = g_sum / n;
-        let apply = Msg::Apply { t, g };
-        for c in conns.iter_mut() {
-            c.send(&apply)?;
-            summary.wire_bytes += apply.wire_bytes() as u64;
-        }
-        if t % 10 == 0 || t + 1 == steps {
-            summary.loss_curve.push((t, loss_sum / n));
-        }
-        if eval_every > 0 && (t + 1) % eval_every == 0 {
-            let (mut corr, mut tot) = (0u64, 0u64);
-            let emsg = Msg::Eval { t };
-            for c in conns.iter_mut() {
-                c.send(&emsg)?;
-            }
-            for c in conns.iter_mut() {
-                match c.recv()? {
-                    Msg::EvalResult { correct, total, .. } => {
-                        corr += correct;
-                        tot += total;
-                    }
-                    other => bail!("expected EvalResult, got {other:?}"),
-                }
-            }
-            if tot > 0 {
-                summary.eval_curve.push((t + 1, corr as f64 / tot as f64));
-            }
-        }
-    }
-    for c in conns.iter_mut() {
-        c.send(&Msg::Shutdown)?;
-    }
-    Ok(summary)
+    let mut cfg = super::cluster::LeaderConfig::new(conns.len() as u32, run_seed, steps, hypers, beta.clone());
+    cfg.eval_every = eval_every;
+    super::cluster::Leader::new(cfg).run(conns)
 }
 
-/// Worker side: serve the protocol until Shutdown.
+/// Worker side: serve the protocol until Shutdown (no checkpointing).
 pub fn run_worker(conn: &mut dyn Transport, worker: &mut ZoWorker) -> Result<()> {
-    conn.send(&Msg::Hello { worker_id: worker.id })?;
-    match conn.recv()? {
-        Msg::Welcome { .. } => {}
-        other => bail!("expected Welcome, got {other:?}"),
-    }
-    let mut pending: Option<(u64, f32, f32)> = None; // (t, eta, beta)
-    loop {
-        match conn.recv()? {
-            Msg::Step { t, seed, theta, beta, eta, lam } => {
-                let (lp, lm) = worker.compute_proj(t, seed, theta, lam)?;
-                conn.send(&Msg::Proj { t, worker_id: worker.id, loss_plus: lp, loss_minus: lm })?;
-                pending = Some((t, eta, beta));
-            }
-            Msg::Apply { t, g } => {
-                match pending.take() {
-                    Some((pt, eta, beta)) if pt == t => worker.apply(g, eta, beta),
-                    _ => bail!("Apply{{t={t}}} without matching Step"),
-                }
-            }
-            Msg::Eval { t } => {
-                let (c, tot) = worker.eval();
-                conn.send(&Msg::EvalResult { t, worker_id: worker.id, correct: c, total: tot })?;
-            }
-            Msg::Shutdown => return Ok(()),
-            other => bail!("unexpected message {other:?}"),
-        }
-    }
+    super::cluster::run_worker_with(conn, worker, &super::cluster::WorkerOpts::default())
 }
 
 #[cfg(test)]
@@ -411,9 +431,6 @@ mod tests {
         assert_eq!(w0.x, w1.x);
 
         let mut cluster = LocalCluster::new(vec![worker(0, x0.clone()), worker(1, x0)], 0);
-        // reproduce: force the same seed via run_seed so that step_seed(0)
-        // equals `seed`? Not needed — just check the cluster's own first
-        // step keeps replicas identical and applies a mean.
         cluster.run(1, HYP, &BetaSchedule::Constant(0.9), 0).unwrap();
         assert!(cluster.replicas_identical());
     }
@@ -427,6 +444,77 @@ mod tests {
         assert!(per_step_per_worker < 200.0, "{per_step_per_worker} B");
         // vs shipping the direction: 4*D bytes
         assert!(per_step_per_worker < (4 * D) as f64 / 2.0);
+    }
+
+    #[test]
+    fn eval_borrows_params_in_place() {
+        // the per-eval O(d) clone fix: the closure must see self.x ITSELF,
+        // not a copy — pin via pointer identity
+        let x0 = start(6);
+        let mut w = worker(0, x0);
+        let expect = w.x.as_ptr() as usize;
+        let seen = std::rc::Rc::new(std::cell::Cell::new(0usize));
+        let seen2 = seen.clone();
+        w.eval_fn = Some(Box::new(move |x: &[f32]| {
+            seen2.set(x.as_ptr() as usize);
+            (1, 2)
+        }));
+        assert_eq!(w.eval(), (1, 2));
+        assert_eq!(seen.get(), expect, "eval saw a copied parameter buffer");
+        // the closure is put back: a second eval still works
+        assert_eq!(w.eval(), (1, 2));
+    }
+
+    #[test]
+    fn replay_matches_live_run_bitwise() {
+        // the rejoin substrate: replaying the logged (seed, g, theta, eta,
+        // beta) records reproduces a live replica's (x, m) exactly
+        let x0 = start(7);
+        let steps = 40u64;
+        let run_seed = 77u64;
+        let mut live = worker(0, x0.clone());
+        let mut records = Vec::new();
+        for t in 0..steps {
+            let seed = step_seed(run_seed, t);
+            let (lp, lm) = live.compute_proj(t, seed, HYP.theta, HYP.lam).unwrap();
+            let g = (lp - lm) / (2.0 * HYP.lam as f64);
+            let beta = 0.9 + (t as f32) * 1e-4;
+            live.apply(g, HYP.eta, beta);
+            records.push(StepRecord { seed, g, theta: HYP.theta, eta: HYP.eta, beta });
+        }
+        let mut replayed = worker(0, x0.clone());
+        replayed.replay(0, &records).unwrap();
+        assert_eq!(replayed.x, live.x, "replayed params diverged");
+        assert_eq!(replayed.m, live.m, "replayed momentum diverged");
+        assert_eq!(replayed.t, steps);
+        assert_eq!(replayed.params_hash(), live.params_hash());
+
+        // and the snapshot+gap path: checkpoint at the midpoint, replay the
+        // back half only
+        let mut half = worker(0, x0);
+        half.replay(0, &records[..20]).unwrap();
+        let ckpt = half.to_checkpoint("test");
+        let mut resumed =
+            ZoWorker::from_checkpoint(0, &ckpt, Box::new(NativeQuadratic::new(D))).unwrap();
+        assert_eq!(resumed.t, 20);
+        resumed.replay(20, &records[20..]).unwrap();
+        assert_eq!(resumed.x, live.x, "snapshot+gap replay diverged");
+        assert_eq!(resumed.m, live.m);
+
+        // replay from the wrong offset is rejected
+        let mut wrong = ZoWorker::from_checkpoint(0, &ckpt, Box::new(NativeQuadratic::new(D))).unwrap();
+        assert!(wrong.replay(0, &records).is_err());
+    }
+
+    #[test]
+    fn from_checkpoint_validates_dims() {
+        let mut c = Checkpoint::new("test", 5);
+        c.put("params", &[0.0; 7]); // wrong size for D
+        c.put("momentum", &[0.0; 7]);
+        assert!(ZoWorker::from_checkpoint(0, &c, Box::new(NativeQuadratic::new(D))).is_err());
+        let mut c2 = Checkpoint::new("test", 5);
+        c2.put("params", &[0.0; D]);
+        assert!(ZoWorker::from_checkpoint(0, &c2, Box::new(NativeQuadratic::new(D))).is_err());
     }
 
     #[test]
@@ -446,8 +534,8 @@ mod tests {
             w.x
         });
         let (s, _) = listener.accept().unwrap();
-        let mut conns: Vec<Box<dyn Transport>> = vec![Box::new(TcpTransport::new(s).unwrap())];
-        let summary = run_leader(&mut conns, 11, 30, HYP, &BetaSchedule::Constant(0.9), 0).unwrap();
+        let conns: Vec<Box<dyn Transport>> = vec![Box::new(TcpTransport::new(s).unwrap())];
+        let summary = run_leader(conns, 11, 30, HYP, &BetaSchedule::Constant(0.9), 0).unwrap();
         let x_worker = wh.join().unwrap();
 
         // equivalence with LocalCluster under the same run seed

@@ -1,14 +1,17 @@
 //! L3 coordination: training orchestration (single-node + distributed),
 //! fused-step engines, metrics. See DESIGN.md §4.
 
+pub mod cluster;
 pub mod distributed;
 pub mod fused;
 pub mod metrics;
 pub mod sweep;
 pub mod trainer;
 
+pub use cluster::{run_worker_with, Leader, LeaderConfig, WorkerOpts};
 pub use distributed::{
-    model_workers_shared, run_leader, run_worker, DistHypers, DistSummary, LocalCluster, ZoWorker,
+    model_workers_shared, run_leader, run_worker, step_seed, DistHypers, DistSummary, LocalCluster,
+    ZoWorker,
 };
 pub use fused::{FoAdamW, FoSgd, FusedConMeZo, FusedMezo, FusedMezoMomentum, GradProbe};
 pub use metrics::{render_table, RunRecord};

@@ -49,7 +49,16 @@ fn app() -> App {
         .opt_default("listen", "127.0.0.1:7070", "leader bind address")
         .opt_default("connect", "127.0.0.1:7070", "worker connect address")
         .opt_default("workers", "2", "expected worker count (leader)")
-        .opt_default("worker-id", "0", "worker id")
+        .opt_default("worker-id", "0", "worker id = data shard index")
+        .opt_default("proj-timeout-ms", "30000", "leader: max wait for a worker's Proj before skipping it (0 = block forever)")
+        .opt_default("eval-timeout-ms", "120000", "leader: max wait for a worker's EvalResult (0 = block forever)")
+        .opt_default("max-strikes", "3", "leader: consecutive timeouts before dropping a straggler")
+        .opt_default("hash-check-every", "100", "leader: divergence tripwire period in steps (0 = only after rejoins)")
+        .opt("step-log", "leader: persist the per-step replay log here (rejoin substrate)")
+        .opt("ckpt", "worker: replica checkpoint path")
+        .opt_default("ckpt-every", "0", "worker: checkpoint every N applied steps (0 = shutdown only)")
+        .opt("die-at-step", "worker: fault injection - crash upon receiving Step N")
+        .opt_default("reconnect", "0", "worker: reconnect attempts after a lost leader connection")
         .opt_default("out", "", "output JSON path for the run summary")
 }
 
@@ -183,6 +192,14 @@ fn cmd_pretrain(p: &conmezo::cli::Parsed) -> Result<()> {
     Ok(())
 }
 
+/// `--*-timeout-ms` flags: 0 means "block forever" (lockstep semantics).
+fn timeout_opt(p: &conmezo::cli::Parsed, name: &str, default: usize) -> Option<std::time::Duration> {
+    match p.usize_or(name, default) {
+        0 => None,
+        ms => Some(std::time::Duration::from_millis(ms as u64)),
+    }
+}
+
 fn cmd_leader(p: &conmezo::cli::Parsed) -> Result<()> {
     let addr = p.str_or("listen", "127.0.0.1:7070");
     let n = p.usize_or("workers", 2);
@@ -196,22 +213,71 @@ fn cmd_leader(p: &conmezo::cli::Parsed) -> Result<()> {
         beta_final: p.f64_or("beta", 0.99) as f32,
         total_steps: steps as usize,
     };
-    println!("leader: waiting for {n} workers on {addr}");
+    let seed = p.usize_or("seed", 42) as u64;
+    let mut cfg = coordinator::LeaderConfig::new(n as u32, seed, steps, hypers, beta);
+    cfg.eval_every = p.usize_or("eval-every", 200) as u64;
+    cfg.proj_timeout = timeout_opt(p, "proj-timeout-ms", 30_000);
+    cfg.eval_timeout = timeout_opt(p, "eval-timeout-ms", 120_000);
+    cfg.max_strikes = p.usize_or("max-strikes", 3) as u32;
+    cfg.hash_check_every = p.usize_or("hash-check-every", 100) as u64;
+    cfg.step_log = p.value("step-log").map(|s| s.into());
+    // socket-level I/O bound: hung peers error out instead of blocking the
+    // whole cluster (handshakes and sends included)
+    let io_timeout = cfg.proj_timeout;
+
+    println!(
+        "leader: waiting for {n} workers on {addr} (protocol v{})",
+        conmezo::net::PROTO_VERSION
+    );
     let listener = std::net::TcpListener::bind(&addr)?;
     let mut conns: Vec<Box<dyn Transport>> = Vec::new();
     for i in 0..n {
         let (s, peer) = listener.accept()?;
-        println!("worker {i} connected from {peer}");
-        conns.push(Box::new(TcpTransport::new(s)?));
+        println!("leader: worker connection {i} from {peer}");
+        let mut t = TcpTransport::new(s)?;
+        t.set_timeouts(io_timeout, io_timeout)?;
+        conns.push(Box::new(t));
     }
-    let seed = p.usize_or("seed", 42) as u64;
-    let summary = coordinator::run_leader(&mut conns, seed, steps, hypers, &beta, p.usize_or("eval-every", 200) as u64)?;
+    // after initial registration the accept loop goes non-blocking: the
+    // leader polls it between steps so crashed workers can rejoin mid-run
+    listener.set_nonblocking(true)?;
+    let summary = coordinator::Leader::new(cfg).run_with_joiner(conns, |_t| {
+        let mut joined: Vec<Box<dyn Transport>> = Vec::new();
+        loop {
+            match listener.accept() {
+                Ok((s, peer)) => {
+                    println!("leader: (re)join connection from {peer}");
+                    match TcpTransport::new(s) {
+                        Ok(mut t) => {
+                            if t.set_timeouts(io_timeout, io_timeout).is_ok() {
+                                joined.push(Box::new(t));
+                            }
+                        }
+                        Err(e) => eprintln!("leader: bad connection from {peer}: {e}"),
+                    }
+                }
+                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) => {
+                    eprintln!("leader: accept failed: {e}");
+                    break;
+                }
+            }
+        }
+        joined
+    })?;
     println!(
-        "distributed run done: {} steps, {:.1} B/step/worker on the wire, final loss {:.4}",
+        "distributed run done: {} steps, {:.1} B/step/worker wire (+{} B control), final loss {:.4}",
         summary.steps,
         summary.wire_bytes as f64 / summary.steps as f64 / n as f64,
+        summary.control_bytes,
         summary.loss_curve.last().map(|x| x.1).unwrap_or(f64::NAN)
     );
+    if summary.straggler_events + summary.workers_lost + summary.rejoins > 0 {
+        println!(
+            "fault events: {} straggler timeouts, {} workers dropped, {} rejoins",
+            summary.straggler_events, summary.workers_lost, summary.rejoins
+        );
+    }
     for (t, acc) in &summary.eval_curve {
         println!("  eval@{t}: {acc:.3}");
     }
@@ -234,10 +300,24 @@ fn cmd_worker(p: &conmezo::cli::Parsed) -> Result<()> {
     let sampler = TrainSampler::new(train, meta.batch, meta.seq_len, seed, id as u64);
     let obj = ModelObjective::new(&rt, &preset, Box::new(sampler))?;
 
-    // identical initial params on every worker: the shared init program
-    let init = rt.load_kind(&preset, "init")?;
-    let params = lit_vec_f32(&init.call(&[Arg::I32(seed as i32)])?[0])?;
-    let mut w = ZoWorker::new(id, params, Box::new(obj));
+    // warm-start from a snapshot when one exists (rejoin after a crash);
+    // otherwise the shared init program gives every worker identical
+    // initial params
+    let mut w = match p.value("init-from").map(Path::new) {
+        Some(path) if path.exists() => {
+            let ckpt = conmezo::checkpoint::Checkpoint::load(path)?;
+            println!("worker {id}: warm-starting from {} (step {})", path.display(), ckpt.step);
+            ZoWorker::from_checkpoint(id, &ckpt, Box::new(obj))?
+        }
+        other => {
+            if let Some(path) = other {
+                println!("worker {id}: {} not found, starting fresh", path.display());
+            }
+            let init = rt.load_kind(&preset, "init")?;
+            let params = lit_vec_f32(&init.call(&[Arg::I32(seed as i32)])?[0])?;
+            ZoWorker::new(id, params, Box::new(obj))
+        }
+    };
     let evaluator = coordinator::Evaluator::new(&rt, &preset, evalset)?;
     w.eval_fn = Some(Box::new(move |x: &[f32]| {
         match evaluator.evaluate(x) {
@@ -246,11 +326,36 @@ fn cmd_worker(p: &conmezo::cli::Parsed) -> Result<()> {
         }
     }));
 
+    let opts = coordinator::WorkerOpts {
+        preset: preset.clone(),
+        ckpt: p.value("ckpt").map(|s| s.into()),
+        ckpt_every: p.usize_or("ckpt-every", 0) as u64,
+        die_at_step: p.value("die-at-step").and_then(|s| s.parse().ok()),
+    };
     let addr = p.str_or("connect", "127.0.0.1:7070");
-    println!("worker {id}: connecting to {addr}");
-    let mut conn = TcpTransport::connect(&addr)?;
-    coordinator::run_worker(&mut conn, &mut w)?;
-    println!("worker {id}: shutdown");
+    let mut reconnects = p.usize_or("reconnect", 0);
+    loop {
+        println!("worker {id}: connecting to {addr} (at step {})", w.t);
+        let mut conn =
+            TcpTransport::connect_retry(&addr, 20, std::time::Duration::from_millis(250))?;
+        match coordinator::run_worker_with(&mut conn, &mut w, &opts) {
+            Ok(()) => break,
+            Err(e) => {
+                // injected crashes and handshake rejections must not loop
+                let msg = e.to_string();
+                if reconnects == 0 || msg.contains("fault injection") || msg.contains("mismatch") {
+                    return Err(e);
+                }
+                reconnects -= 1;
+                eprintln!(
+                    "worker {id}: connection lost at step {}: {e}; reconnecting ({reconnects} retries left)",
+                    w.t
+                );
+                std::thread::sleep(std::time::Duration::from_millis(500));
+            }
+        }
+    }
+    println!("worker {id}: shutdown at t={} params_hash={:016x}", w.t, w.params_hash());
     Ok(())
 }
 

@@ -6,23 +6,60 @@
 //! shard with the locally regenerated direction, returns two f64 scalars,
 //! and applies the identical update after the leader broadcasts the
 //! aggregated projected gradient. Bytes per step are independent of d
-//! (~60 B/step/worker vs 4·d B for gradient all-reduce — the Zelikman et
+//! (~90 B/step/worker vs 4·d B for gradient all-reduce — the Zelikman et
 //! al. 2023 observation, cited in the paper's related work).
 //!
-//! Frame: `u32 payload_len | u8 tag | payload` (little-endian).
+//! Protocol v2 adds the fault-tolerance surface (see
+//! `coordinator::cluster`): a protocol-version byte in the
+//! [`Msg::Hello`]/[`Msg::Welcome`] handshake, seed-log replay for worker
+//! rejoin ([`Msg::Replay`]/[`Msg::Ready`]), a parameter-divergence
+//! tripwire ([`Msg::HashCheck`]/[`Msg::HashReport`]) and liveness
+//! [`Msg::Heartbeat`]s during long local evals.
+//!
+//! Frame: `u32 payload_len | u8 tag | payload` (little-endian). The
+//! steady-state per-step frames are `Step` = 37 B, `Proj` = 33 B and
+//! `Apply` = 21 B on the wire (5-byte header + payload); see the README
+//! wire-format table.
+//!
+//! Three [`Transport`] implementations:
+//! * [`TcpTransport`] — framing over a TCP stream with an internal reassembly
+//!   buffer, so [`Transport::recv_timeout`] can give up mid-frame without
+//!   corrupting the stream, plus configurable read/write timeouts;
+//! * [`ChannelTransport`] — an in-process mpsc pair for deterministic tests;
+//! * [`FaultTransport`] — a scripted fault injector (delay/kill at the nth
+//!   send/recv) wrapping any transport, used to pin every recovery path.
 
-use std::io::{Read, Write};
+use std::io::Read;
+use std::io::Write;
 use std::net::TcpStream;
+use std::time::{Duration, Instant};
 
+use crate::checkpoint::{StepRecord, STEP_RECORD_BYTES};
 use crate::util::error::{bail, Result};
+
+/// Wire-protocol version; carried in the `Hello`/`Welcome` handshake so a
+/// mismatched leader/worker pair fails with a clear error instead of a
+/// garbled decode.
+pub const PROTO_VERSION: u8 = 2;
+
+/// Hard cap on a single frame's payload (decode-side DoS guard).
+pub const MAX_FRAME_BYTES: usize = 1 << 20;
+
+/// Max `StepRecord`s per `Replay` frame (keeps frames well under
+/// [`MAX_FRAME_BYTES`]; a rejoin across T steps ships ceil(T/chunk) frames).
+pub const REPLAY_CHUNK: usize = 4096;
 
 /// Protocol messages.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Msg {
-    /// worker -> leader on connect
-    Hello { worker_id: u32 },
-    /// leader -> worker after registration
-    Welcome { n_workers: u32, run_seed: u64 },
+    /// worker -> leader on (re)connect; `t` is the worker's completed-step
+    /// count (0 for a fresh start, >0 when warm-started from a checkpoint)
+    Hello { proto: u8, worker_id: u32, t: u64 },
+    /// leader -> worker after registration; `t` is the leader's current
+    /// step (a rejoining worker must catch up to it via `Replay`) and
+    /// `params_hash` the consensus parameter hash AT step `t` when known
+    /// (0 = unknown; only filled when the last tripwire ran at exactly `t`)
+    Welcome { proto: u8, n_workers: u32, run_seed: u64, t: u64, params_hash: u64 },
     /// leader -> workers: compute the two-point projection for step t
     Step { t: u64, seed: u64, theta: f32, beta: f32, eta: f32, lam: f32 },
     /// worker -> leader: the two scalar losses on the local shard
@@ -35,6 +72,18 @@ pub enum Msg {
     EvalResult { t: u64, worker_id: u32, correct: u64, total: u64 },
     /// leader -> workers: clean shutdown
     Shutdown,
+    /// leader -> rejoining worker: logged step records `from_t..from_t+n`
+    /// for seed replay (O(1) bytes per step)
+    Replay { from_t: u64, records: Vec<StepRecord> },
+    /// worker -> leader: caught up to step `t` with the given params hash
+    Ready { t: u64, worker_id: u32, params_hash: u64 },
+    /// leader -> workers: report your parameter hash (divergence tripwire)
+    HashCheck { t: u64 },
+    /// worker -> leader
+    HashReport { t: u64, worker_id: u32, hash: u64 },
+    /// worker -> leader: still alive (sent around long local evals so the
+    /// leader's timeout does not misread a slow eval as a dead worker)
+    Heartbeat { t: u64 },
 }
 
 impl Msg {
@@ -48,16 +97,28 @@ impl Msg {
             Msg::Eval { .. } => 6,
             Msg::EvalResult { .. } => 7,
             Msg::Shutdown => 8,
+            Msg::Replay { .. } => 9,
+            Msg::Ready { .. } => 10,
+            Msg::HashCheck { .. } => 11,
+            Msg::HashReport { .. } => 12,
+            Msg::Heartbeat { .. } => 13,
         }
     }
 
     pub fn encode(&self) -> Vec<u8> {
         let mut p = Vec::with_capacity(64);
         match self {
-            Msg::Hello { worker_id } => p.extend(worker_id.to_le_bytes()),
-            Msg::Welcome { n_workers, run_seed } => {
+            Msg::Hello { proto, worker_id, t } => {
+                p.push(*proto);
+                p.extend(worker_id.to_le_bytes());
+                p.extend(t.to_le_bytes());
+            }
+            Msg::Welcome { proto, n_workers, run_seed, t, params_hash } => {
+                p.push(*proto);
                 p.extend(n_workers.to_le_bytes());
                 p.extend(run_seed.to_le_bytes());
+                p.extend(t.to_le_bytes());
+                p.extend(params_hash.to_le_bytes());
             }
             Msg::Step { t, seed, theta, beta, eta, lam } => {
                 p.extend(t.to_le_bytes());
@@ -85,6 +146,25 @@ impl Msg {
                 p.extend(total.to_le_bytes());
             }
             Msg::Shutdown => {}
+            Msg::Replay { from_t, records } => {
+                p.extend(from_t.to_le_bytes());
+                p.extend((records.len() as u32).to_le_bytes());
+                for r in records {
+                    r.encode_into(&mut p);
+                }
+            }
+            Msg::Ready { t, worker_id, params_hash } => {
+                p.extend(t.to_le_bytes());
+                p.extend(worker_id.to_le_bytes());
+                p.extend(params_hash.to_le_bytes());
+            }
+            Msg::HashCheck { t } => p.extend(t.to_le_bytes()),
+            Msg::HashReport { t, worker_id, hash } => {
+                p.extend(t.to_le_bytes());
+                p.extend(worker_id.to_le_bytes());
+                p.extend(hash.to_le_bytes());
+            }
+            Msg::Heartbeat { t } => p.extend(t.to_le_bytes()),
         }
         let mut frame = Vec::with_capacity(p.len() + 5);
         frame.extend((p.len() as u32).to_le_bytes());
@@ -96,8 +176,14 @@ impl Msg {
     pub fn decode(tag: u8, p: &[u8]) -> Result<Msg> {
         let mut r = Cursor { b: p, i: 0 };
         Ok(match tag {
-            1 => Msg::Hello { worker_id: r.u32()? },
-            2 => Msg::Welcome { n_workers: r.u32()?, run_seed: r.u64()? },
+            1 => Msg::Hello { proto: r.u8()?, worker_id: r.u32()?, t: r.u64()? },
+            2 => Msg::Welcome {
+                proto: r.u8()?,
+                n_workers: r.u32()?,
+                run_seed: r.u64()?,
+                t: r.u64()?,
+                params_hash: r.u64()?,
+            },
             3 => Msg::Step {
                 t: r.u64()?,
                 seed: r.u64()?,
@@ -111,6 +197,30 @@ impl Msg {
             6 => Msg::Eval { t: r.u64()? },
             7 => Msg::EvalResult { t: r.u64()?, worker_id: r.u32()?, correct: r.u64()?, total: r.u64()? },
             8 => Msg::Shutdown,
+            9 => {
+                let from_t = r.u64()?;
+                let count = r.u32()? as usize;
+                // validate the claimed count against the actual payload
+                // BEFORE allocating: a crafted count must error, not OOM
+                let need = count
+                    .checked_mul(STEP_RECORD_BYTES)
+                    .ok_or_else(|| crate::anyhow!("Replay record count {count} overflows"))?;
+                if r.remaining() != need {
+                    bail!(
+                        "Replay claims {count} records ({need} B) but carries {} B",
+                        r.remaining()
+                    );
+                }
+                let mut records = Vec::with_capacity(count);
+                for _ in 0..count {
+                    records.push(StepRecord::decode(r.take(STEP_RECORD_BYTES)?));
+                }
+                Msg::Replay { from_t, records }
+            }
+            10 => Msg::Ready { t: r.u64()?, worker_id: r.u32()?, params_hash: r.u64()? },
+            11 => Msg::HashCheck { t: r.u64()? },
+            12 => Msg::HashReport { t: r.u64()?, worker_id: r.u32()?, hash: r.u64()? },
+            13 => Msg::Heartbeat { t: r.u64()? },
             _ => bail!("unknown message tag {tag}"),
         })
     }
@@ -128,12 +238,21 @@ struct Cursor<'a> {
 
 impl<'a> Cursor<'a> {
     fn take(&mut self, n: usize) -> Result<&'a [u8]> {
-        if self.i + n > self.b.len() {
-            bail!("truncated message");
-        }
-        let s = &self.b[self.i..self.i + n];
-        self.i += n;
+        // checked_add: a crafted n must produce an error, never a wrapped
+        // bounds check that panics out-of-bounds in release mode
+        let end = match self.i.checked_add(n) {
+            Some(e) if e <= self.b.len() => e,
+            _ => bail!("truncated message"),
+        };
+        let s = &self.b[self.i..end];
+        self.i = end;
         Ok(s)
+    }
+    fn remaining(&self) -> usize {
+        self.b.len() - self.i
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
     }
     fn u32(&mut self) -> Result<u32> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
@@ -153,21 +272,106 @@ impl<'a> Cursor<'a> {
 pub trait Transport {
     fn send(&mut self, msg: &Msg) -> Result<()>;
     fn recv(&mut self) -> Result<Msg>;
+
+    /// Wait up to `timeout` for a message. `Ok(None)` means no complete
+    /// message arrived in time (the peer may merely be slow — a straggler);
+    /// `Err` means the connection is dead. The default implementation
+    /// blocks (transports without timeout support behave like lockstep).
+    fn recv_timeout(&mut self, _timeout: Duration) -> Result<Option<Msg>> {
+        self.recv().map(Some)
+    }
 }
 
-/// TCP framing over a connected stream.
+// ---------------------------------------------------------------------------
+// TCP
+// ---------------------------------------------------------------------------
+
+/// TCP framing over a connected stream with an internal reassembly buffer:
+/// `recv_timeout` can expire mid-frame and the partial bytes stay buffered,
+/// so a later recv picks up exactly where the stream left off (a naive
+/// `read_exact` + timeout would corrupt the framing).
 pub struct TcpTransport {
     stream: TcpStream,
+    rbuf: Vec<u8>,
+    read_timeout: Option<Duration>,
 }
 
 impl TcpTransport {
     pub fn new(stream: TcpStream) -> Result<Self> {
         stream.set_nodelay(true)?;
-        Ok(TcpTransport { stream })
+        // sockets accepted from a non-blocking listener inherit the flag on
+        // some platforms; the framing layer manages timeouts itself
+        stream.set_nonblocking(false)?;
+        Ok(TcpTransport { stream, rbuf: Vec::new(), read_timeout: None })
     }
 
     pub fn connect(addr: &str) -> Result<Self> {
         Self::new(TcpStream::connect(addr)?)
+    }
+
+    /// Connect with retries (worker-side reconnect loop): `attempts`
+    /// additional tries spaced by `backoff` after the first failure.
+    pub fn connect_retry(addr: &str, attempts: u32, backoff: Duration) -> Result<Self> {
+        let mut tries = 0u32;
+        loop {
+            match Self::connect(addr) {
+                Ok(t) => return Ok(t),
+                Err(e) => {
+                    if tries >= attempts {
+                        return Err(e);
+                    }
+                    tries += 1;
+                    std::thread::sleep(backoff);
+                }
+            }
+        }
+    }
+
+    /// Configure I/O timeouts: `read` bounds every blocking [`Transport::recv`]
+    /// (a peer silent for longer is reported as an error); `write` bounds
+    /// sends at the socket level. `None` = block forever (lockstep).
+    pub fn set_timeouts(&mut self, read: Option<Duration>, write: Option<Duration>) -> Result<()> {
+        self.read_timeout = read;
+        self.stream.set_write_timeout(write)?;
+        Ok(())
+    }
+
+    /// Decode one frame from the reassembly buffer if complete.
+    fn try_decode(&mut self) -> Result<Option<Msg>> {
+        if self.rbuf.len() < 5 {
+            return Ok(None);
+        }
+        let len = u32::from_le_bytes(self.rbuf[..4].try_into().unwrap()) as usize;
+        if len > MAX_FRAME_BYTES {
+            bail!("oversized frame: {len} bytes");
+        }
+        if self.rbuf.len() < 5 + len {
+            return Ok(None);
+        }
+        let msg = Msg::decode(self.rbuf[4], &self.rbuf[5..5 + len])?;
+        self.rbuf.drain(..5 + len);
+        Ok(Some(msg))
+    }
+
+    /// Pull more bytes into the buffer, waiting at most `wait` (`None` =
+    /// block). Returns false on timeout, errors on EOF / socket failure.
+    fn fill(&mut self, wait: Option<Duration>) -> Result<bool> {
+        self.stream.set_read_timeout(wait)?;
+        let mut tmp = [0u8; 4096];
+        match self.stream.read(&mut tmp) {
+            Ok(0) => bail!("connection closed by peer"),
+            Ok(n) => {
+                self.rbuf.extend_from_slice(&tmp[..n]);
+                Ok(true)
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                Ok(false)
+            }
+            Err(e) => Err(e.into()),
+        }
     }
 }
 
@@ -178,16 +382,176 @@ impl Transport for TcpTransport {
     }
 
     fn recv(&mut self) -> Result<Msg> {
-        let mut hdr = [0u8; 5];
-        self.stream.read_exact(&mut hdr)?;
-        let len = u32::from_le_bytes(hdr[..4].try_into().unwrap()) as usize;
-        if len > 1 << 20 {
-            bail!("oversized frame: {len} bytes");
+        match self.read_timeout {
+            Some(d) => match self.recv_timeout(d)? {
+                Some(m) => Ok(m),
+                None => bail!("recv timed out after {d:?} (peer unresponsive)"),
+            },
+            None => loop {
+                if let Some(msg) = self.try_decode()? {
+                    return Ok(msg);
+                }
+                self.fill(None)?;
+            },
         }
-        let tag = hdr[4];
-        let mut payload = vec![0u8; len];
-        self.stream.read_exact(&mut payload)?;
-        Msg::decode(tag, &payload)
+    }
+
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<Option<Msg>> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            if let Some(msg) = self.try_decode()? {
+                return Ok(Some(msg));
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Ok(None);
+            }
+            if !self.fill(Some(deadline - now))? {
+                return Ok(None);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// In-process channel transport (deterministic tests)
+// ---------------------------------------------------------------------------
+
+/// In-memory duplex transport over mpsc channels of encoded frames: real
+/// `recv_timeout` semantics without sockets, so cluster fault-handling
+/// tests stay deterministic and sandbox-friendly.
+pub struct ChannelTransport {
+    tx: std::sync::mpsc::Sender<Vec<u8>>,
+    rx: std::sync::mpsc::Receiver<Vec<u8>>,
+}
+
+/// Create a connected pair of in-memory transports.
+pub fn channel_pair() -> (ChannelTransport, ChannelTransport) {
+    let (atx, brx) = std::sync::mpsc::channel();
+    let (btx, arx) = std::sync::mpsc::channel();
+    (ChannelTransport { tx: atx, rx: arx }, ChannelTransport { tx: btx, rx: brx })
+}
+
+fn decode_frame(frame: &[u8]) -> Result<Msg> {
+    if frame.len() < 5 {
+        bail!("short frame: {} bytes", frame.len());
+    }
+    Msg::decode(frame[4], &frame[5..])
+}
+
+impl Transport for ChannelTransport {
+    fn send(&mut self, msg: &Msg) -> Result<()> {
+        self.tx
+            .send(msg.encode())
+            .map_err(|_| crate::anyhow!("connection closed by peer"))
+    }
+
+    fn recv(&mut self) -> Result<Msg> {
+        match self.rx.recv() {
+            Ok(frame) => decode_frame(&frame),
+            Err(_) => bail!("connection closed by peer"),
+        }
+    }
+
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<Option<Msg>> {
+        use std::sync::mpsc::RecvTimeoutError;
+        match self.rx.recv_timeout(timeout) {
+            Ok(frame) => decode_frame(&frame).map(Some),
+            Err(RecvTimeoutError::Timeout) => Ok(None),
+            Err(RecvTimeoutError::Disconnected) => bail!("connection closed by peer"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scripted fault injection
+// ---------------------------------------------------------------------------
+
+/// One scripted fault, keyed by the 0-based index of the send/recv call it
+/// fires at (each direction counts its own calls).
+#[derive(Clone, Copy, Debug)]
+pub enum Fault {
+    /// sleep before performing the nth send (straggler simulation: a
+    /// delayed `Proj` makes the leader's timeout fire while the message is
+    /// still in flight)
+    DelaySend { at: u64, by: Duration },
+    /// sleep before performing the nth recv
+    DelayRecv { at: u64, by: Duration },
+    /// fail the nth and all later sends (killed socket)
+    KillAtSend { at: u64 },
+    /// fail the nth and all later recvs
+    KillAtRecv { at: u64 },
+}
+
+/// Fault-injection wrapper: applies a script of [`Fault`]s around any
+/// transport. Once a kill fires the transport stays dead, like a closed
+/// socket. The harness behind the ISSUE-6 recovery-path tests.
+pub struct FaultTransport {
+    inner: Box<dyn Transport>,
+    faults: Vec<Fault>,
+    sends: u64,
+    recvs: u64,
+    dead: bool,
+}
+
+impl FaultTransport {
+    pub fn new(inner: Box<dyn Transport>, faults: Vec<Fault>) -> Self {
+        FaultTransport { inner, faults, sends: 0, recvs: 0, dead: false }
+    }
+
+    fn check_send(&mut self) -> Result<()> {
+        if self.dead {
+            bail!("fault injection: connection killed");
+        }
+        let n = self.sends;
+        self.sends += 1;
+        for f in &self.faults {
+            match *f {
+                Fault::DelaySend { at, by } if at == n => std::thread::sleep(by),
+                Fault::KillAtSend { at } if at <= n => {
+                    self.dead = true;
+                    bail!("fault injection: connection killed at send #{n}");
+                }
+                _ => {}
+            }
+        }
+        Ok(())
+    }
+
+    fn check_recv(&mut self) -> Result<()> {
+        if self.dead {
+            bail!("fault injection: connection killed");
+        }
+        let n = self.recvs;
+        self.recvs += 1;
+        for f in &self.faults {
+            match *f {
+                Fault::DelayRecv { at, by } if at == n => std::thread::sleep(by),
+                Fault::KillAtRecv { at } if at <= n => {
+                    self.dead = true;
+                    bail!("fault injection: connection killed at recv #{n}");
+                }
+                _ => {}
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Transport for FaultTransport {
+    fn send(&mut self, msg: &Msg) -> Result<()> {
+        self.check_send()?;
+        self.inner.send(msg)
+    }
+
+    fn recv(&mut self) -> Result<Msg> {
+        self.check_recv()?;
+        self.inner.recv()
+    }
+
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<Option<Msg>> {
+        self.check_recv()?;
+        self.inner.recv_timeout(timeout)
     }
 }
 
@@ -206,14 +570,31 @@ mod tests {
 
     #[test]
     fn all_messages_roundtrip() {
-        roundtrip(Msg::Hello { worker_id: 3 });
-        roundtrip(Msg::Welcome { n_workers: 4, run_seed: 0xDEADBEEF });
+        roundtrip(Msg::Hello { proto: PROTO_VERSION, worker_id: 3, t: 17 });
+        roundtrip(Msg::Welcome {
+            proto: PROTO_VERSION,
+            n_workers: 4,
+            run_seed: 0xDEADBEEF,
+            t: 9,
+            params_hash: 0xABCDEF,
+        });
         roundtrip(Msg::Step { t: 17, seed: 42, theta: 1.35, beta: 0.99, eta: 1e-6, lam: 1e-3 });
         roundtrip(Msg::Proj { t: 17, worker_id: 1, loss_plus: 0.5, loss_minus: 0.25 });
         roundtrip(Msg::Apply { t: 17, g: -1.5 });
         roundtrip(Msg::Eval { t: 100 });
         roundtrip(Msg::EvalResult { t: 100, worker_id: 2, correct: 80, total: 100 });
         roundtrip(Msg::Shutdown);
+        roundtrip(Msg::Replay {
+            from_t: 5,
+            records: vec![
+                StepRecord { seed: 1, g: -0.25, theta: 1.35, eta: 1e-3, beta: 0.9 },
+                StepRecord { seed: 2, g: 0.5, theta: 1.35, eta: 1e-3, beta: 0.99 },
+            ],
+        });
+        roundtrip(Msg::Ready { t: 7, worker_id: 2, params_hash: 0x1234 });
+        roundtrip(Msg::HashCheck { t: 50 });
+        roundtrip(Msg::HashReport { t: 50, worker_id: 0, hash: 0x5678 });
+        roundtrip(Msg::Heartbeat { t: 51 });
     }
 
     #[test]
@@ -226,9 +607,41 @@ mod tests {
     }
 
     #[test]
+    fn steady_state_frame_sizes_pinned() {
+        // the sizes the leader-side accounting and the README table quote;
+        // Proj is 33 B (5-byte len|tag header + 28-byte payload) — the old
+        // hardcoded 29 in run_leader undercounted by 4 B per recv
+        assert_eq!(Msg::Step { t: 0, seed: 0, theta: 0.0, beta: 0.0, eta: 0.0, lam: 0.0 }.wire_bytes(), 37);
+        assert_eq!(Msg::Proj { t: 0, worker_id: 0, loss_plus: 0.0, loss_minus: 0.0 }.wire_bytes(), 33);
+        assert_eq!(Msg::Apply { t: 0, g: 0.0 }.wire_bytes(), 21);
+        assert_eq!(Msg::Hello { proto: 2, worker_id: 0, t: 0 }.wire_bytes(), 18);
+        assert_eq!(
+            Msg::Welcome { proto: 2, n_workers: 0, run_seed: 0, t: 0, params_hash: 0 }.wire_bytes(),
+            34
+        );
+    }
+
+    #[test]
     fn bad_tag_rejected() {
         assert!(Msg::decode(99, &[]).is_err());
         assert!(Msg::decode(3, &[0u8; 4]).is_err()); // truncated Step
+    }
+
+    #[test]
+    fn crafted_replay_count_errors_without_allocating() {
+        // payload: from_t + count=u32::MAX but no records — must error
+        // cleanly (no OOM, no wrapped-length panic)
+        let mut p = Vec::new();
+        p.extend(0u64.to_le_bytes());
+        p.extend(u32::MAX.to_le_bytes());
+        let err = Msg::decode(9, &p).unwrap_err().to_string();
+        assert!(err.contains("Replay"), "{err}");
+        // count that disagrees with the payload length is also rejected
+        let mut p = Vec::new();
+        p.extend(0u64.to_le_bytes());
+        p.extend(2u32.to_le_bytes());
+        p.extend([0u8; STEP_RECORD_BYTES]); // only one record present
+        assert!(Msg::decode(9, &p).is_err());
     }
 
     #[test]
@@ -239,17 +652,88 @@ mod tests {
             let (s, _) = listener.accept().unwrap();
             let mut t = TcpTransport::new(s).unwrap();
             let m = t.recv().unwrap();
-            assert_eq!(m, Msg::Hello { worker_id: 7 });
-            t.send(&Msg::Welcome { n_workers: 1, run_seed: 5 }).unwrap();
+            assert_eq!(m, Msg::Hello { proto: PROTO_VERSION, worker_id: 7, t: 0 });
+            t.send(&Msg::Welcome {
+                proto: PROTO_VERSION,
+                n_workers: 1,
+                run_seed: 5,
+                t: 0,
+                params_hash: 0,
+            })
+            .unwrap();
             let m = t.recv().unwrap();
             assert!(matches!(m, Msg::Proj { worker_id: 7, .. }));
             t.send(&Msg::Shutdown).unwrap();
         });
         let mut c = TcpTransport::connect(&addr.to_string()).unwrap();
-        c.send(&Msg::Hello { worker_id: 7 }).unwrap();
-        assert_eq!(c.recv().unwrap(), Msg::Welcome { n_workers: 1, run_seed: 5 });
+        c.send(&Msg::Hello { proto: PROTO_VERSION, worker_id: 7, t: 0 }).unwrap();
+        assert_eq!(
+            c.recv().unwrap(),
+            Msg::Welcome { proto: PROTO_VERSION, n_workers: 1, run_seed: 5, t: 0, params_hash: 0 }
+        );
         c.send(&Msg::Proj { t: 0, worker_id: 7, loss_plus: 1.0, loss_minus: 2.0 }).unwrap();
         assert_eq!(c.recv().unwrap(), Msg::Shutdown);
         h.join().unwrap();
+    }
+
+    #[test]
+    fn tcp_recv_timeout_preserves_partial_frames() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let h = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let frame = Msg::Apply { t: 3, g: 1.5 }.encode();
+            // dribble the frame: 3 header bytes, pause, then the rest
+            s.write_all(&frame[..3]).unwrap();
+            s.flush().unwrap();
+            std::thread::sleep(Duration::from_millis(120));
+            s.write_all(&frame[3..]).unwrap();
+            s.flush().unwrap();
+            // hold the socket open until the client is done
+            std::thread::sleep(Duration::from_millis(300));
+        });
+        let mut c = TcpTransport::connect(&addr.to_string()).unwrap();
+        // nothing yet: a short timeout must report None, not an error
+        assert!(c.recv_timeout(Duration::from_millis(10)).unwrap().is_none());
+        // the partial header may arrive during this window; still incomplete
+        assert!(c.recv_timeout(Duration::from_millis(30)).unwrap().is_none());
+        // once the rest lands the SAME frame decodes — no bytes were lost
+        let got = c.recv_timeout(Duration::from_millis(500)).unwrap();
+        assert_eq!(got, Some(Msg::Apply { t: 3, g: 1.5 }));
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn channel_pair_roundtrip_and_timeout() {
+        let (mut a, mut b) = channel_pair();
+        a.send(&Msg::Heartbeat { t: 1 }).unwrap();
+        assert_eq!(b.recv().unwrap(), Msg::Heartbeat { t: 1 });
+        assert!(b.recv_timeout(Duration::from_millis(5)).unwrap().is_none());
+        drop(a);
+        assert!(b.recv().is_err()); // disconnected peer is an error
+    }
+
+    #[test]
+    fn fault_transport_kills_and_stays_dead() {
+        let (a, mut b) = channel_pair();
+        let mut f = FaultTransport::new(Box::new(a), vec![Fault::KillAtSend { at: 1 }]);
+        f.send(&Msg::Heartbeat { t: 0 }).unwrap();
+        assert_eq!(b.recv().unwrap(), Msg::Heartbeat { t: 0 });
+        assert!(f.send(&Msg::Heartbeat { t: 1 }).is_err());
+        assert!(f.send(&Msg::Heartbeat { t: 2 }).is_err()); // still dead
+        assert!(f.recv().is_err()); // both directions die together
+    }
+
+    #[test]
+    fn fault_transport_delays_send() {
+        let (a, mut b) = channel_pair();
+        let mut f = FaultTransport::new(
+            Box::new(a),
+            vec![Fault::DelaySend { at: 0, by: Duration::from_millis(60) }],
+        );
+        let t0 = Instant::now();
+        f.send(&Msg::Heartbeat { t: 0 }).unwrap();
+        assert!(t0.elapsed() >= Duration::from_millis(50));
+        assert_eq!(b.recv().unwrap(), Msg::Heartbeat { t: 0 });
     }
 }

@@ -1,0 +1,365 @@
+//! Integration tests for the fault-tolerant cluster engine (ISSUE 6):
+//! a real multi-worker TCP leader/worker run pinned bit-identical to
+//! `LocalCluster` (including the corrected wire accounting), plus
+//! fault-injection coverage over in-memory transports — worker death
+//! mid-step with live-count renormalization, straggler timeouts that
+//! skip-but-keep a slow replica, seed-replay rejoin after a kill, and the
+//! all-workers-lost abort. The injection harness is `FaultTransport`
+//! (scripted per-call delays/kills), so every failure mode is exercised
+//! deterministically without flaky socket games.
+
+use std::sync::mpsc;
+use std::thread;
+use std::time::Duration;
+
+use conmezo::checkpoint::StepLog;
+use conmezo::coordinator::{
+    run_leader, run_worker, run_worker_with, DistHypers, Leader, LeaderConfig, LocalCluster,
+    WorkerOpts, ZoWorker,
+};
+use conmezo::net::{channel_pair, ChannelTransport, Fault, FaultTransport, TcpTransport, Transport};
+use conmezo::objective::Objective;
+use conmezo::optimizer::BetaSchedule;
+use conmezo::util::error::Result;
+
+const D: usize = 48;
+const HYP: DistHypers = DistHypers { theta: 1.2, eta: 1e-3, lam: 1e-2 };
+
+fn beta() -> BetaSchedule {
+    BetaSchedule::Constant(0.9)
+}
+
+fn x0() -> Vec<f32> {
+    (0..D).map(|i| ((i * 37 + 11) as f32 * 0.1).sin()).collect()
+}
+
+/// Per-shard objective: 0.5‖x‖² + shift·Σx. The linear term makes each
+/// worker's projected gradient shard-dependent, so dropping one replica
+/// from the step average visibly changes g — renormalization by the live
+/// count is observable, unlike with identical quadratics.
+struct ShardQuad {
+    d: usize,
+    shift: f64,
+    evals: u64,
+}
+
+impl Objective for ShardQuad {
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn d_raw(&self) -> usize {
+        self.d
+    }
+
+    fn loss(&mut self, x: &[f32]) -> Result<f64> {
+        self.evals += 1;
+        let mut l = 0f64;
+        for &xi in x {
+            let xi = xi as f64;
+            l += 0.5 * xi * xi + self.shift * xi;
+        }
+        Ok(l)
+    }
+
+    fn two_point(&mut self, x: &[f32], z: &[f32], lam: f32) -> Result<(f64, f64)> {
+        self.evals += 2;
+        let lam = lam as f64;
+        let (mut lp, mut lm) = (0f64, 0f64);
+        for i in 0..self.d {
+            let (xi, zi) = (x[i] as f64, z[i] as f64);
+            let p = xi + lam * zi;
+            let m = xi - lam * zi;
+            lp += 0.5 * p * p + self.shift * p;
+            lm += 0.5 * m * m + self.shift * m;
+        }
+        Ok((lp, lm))
+    }
+
+    fn evals(&self) -> u64 {
+        self.evals
+    }
+}
+
+fn shard(id: u32) -> Box<dyn Objective> {
+    Box::new(ShardQuad { d: D, shift: (id as f64 + 1.0) * 0.05, evals: 0 })
+}
+
+fn temp_path(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("conmezo_cluster_tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(format!("{}_{}", std::process::id(), name))
+}
+
+/// Fast-forward a fresh replica through the leader's step log — the ground
+/// truth every live worker must agree with bitwise.
+fn replay_log(records: &[conmezo::checkpoint::StepRecord]) -> ZoWorker {
+    let mut w = ZoWorker::new(0, x0(), shard(0));
+    w.replay(0, records).unwrap();
+    w
+}
+
+#[test]
+fn tcp_cluster_matches_local_cluster_bitwise() {
+    // satellite (e): N=3 over real localhost TCP vs the in-process
+    // LocalCluster — replicas bit-identical AND the wire accounting equal
+    // (the old leader's hardcoded 29 B per Proj vs the actual 33 B frame)
+    let n = 3u32;
+    let steps = 30u64;
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+
+    let mut handles = Vec::new();
+    for id in 0..n {
+        let addr = addr.clone();
+        handles.push(thread::spawn(move || {
+            let mut conn = TcpTransport::connect_retry(&addr, 40, Duration::from_millis(50)).unwrap();
+            let mut w = ZoWorker::new(id, x0(), shard(id));
+            run_worker(&mut conn, &mut w).unwrap();
+            (w.x, w.m, w.t)
+        }));
+    }
+    let mut conns: Vec<Box<dyn Transport>> = Vec::new();
+    for _ in 0..n {
+        let (stream, _) = listener.accept().unwrap();
+        conns.push(Box::new(TcpTransport::new(stream).unwrap()));
+    }
+    let summary = run_leader(conns, 42, steps, HYP, &beta(), 0).unwrap();
+    let states: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+
+    let workers = (0..n).map(|id| ZoWorker::new(id, x0(), shard(id))).collect();
+    let mut local = LocalCluster::new(workers, 42);
+    let local_summary = local.run(steps, HYP, &beta(), 0).unwrap();
+
+    assert_eq!(
+        summary.wire_bytes, local_summary.wire_bytes,
+        "TCP leader and LocalCluster disagree on wire bytes"
+    );
+    for (id, (x, m, t)) in states.iter().enumerate() {
+        assert_eq!(*t, steps, "worker {id} stopped early");
+        assert_eq!(x, &local.workers[id].x, "worker {id} params diverged over TCP");
+        assert_eq!(m, &local.workers[id].m, "worker {id} momentum diverged over TCP");
+    }
+    assert_eq!(summary.workers_lost, 0);
+    assert_eq!(summary.straggler_events, 0);
+    assert_eq!(summary.rejoins, 0);
+}
+
+#[test]
+fn worker_death_renormalizes_over_survivors_and_log_replays() {
+    // worker 2 crashes receiving Step{die_at}; the leader must drop it,
+    // average g over the two survivors (NOT the nominal 3 — pinned bitwise
+    // below), finish the run, and persist a replayable step log
+    let n = 3u32;
+    let steps = 30u64;
+    let die_at = 7u64;
+    let log_path = temp_path("death.cmzl");
+    let _ = std::fs::remove_file(&log_path);
+
+    let mut conns: Vec<Box<dyn Transport>> = Vec::new();
+    let mut handles = Vec::new();
+    for id in 0..n {
+        let (wside, lside) = channel_pair();
+        conns.push(Box::new(lside));
+        handles.push(thread::spawn(move || {
+            let mut wside = wside;
+            let mut w = ZoWorker::new(id, x0(), shard(id));
+            let opts = WorkerOpts {
+                die_at_step: if id == 2 { Some(die_at) } else { None },
+                ..Default::default()
+            };
+            let res = run_worker_with(&mut wside, &mut w, &opts).map_err(|e| e.to_string());
+            (res, w.x, w.m, w.t)
+        }));
+    }
+
+    let mut cfg = LeaderConfig::new(n, 42, steps, HYP, beta());
+    cfg.proj_timeout = Some(Duration::from_secs(5));
+    cfg.step_log = Some(log_path.clone());
+    let summary = Leader::new(cfg).run(conns).unwrap();
+    let states: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+
+    assert_eq!(summary.workers_lost, 1);
+    assert_eq!(summary.rejoins, 0);
+    let (res2, _, _, t2) = &states[2];
+    let err = res2.as_ref().unwrap_err();
+    assert!(err.contains("fault injection"), "{err}");
+    assert_eq!(*t2, die_at, "crashed worker applied steps past its death");
+    for id in 0..2 {
+        let (res, x, m, t) = &states[id];
+        assert!(res.is_ok(), "survivor {id} errored: {res:?}");
+        assert_eq!(*t, steps);
+        assert_eq!(x, &states[0].1, "survivors diverged");
+        assert_eq!(m, &states[0].2, "survivor momentum diverged");
+    }
+
+    // the persisted log replays a fresh replica to the survivors' exact state
+    let log = StepLog::load(&log_path).unwrap();
+    assert_eq!(log.records.len() as u64, steps);
+    let replica = replay_log(&log.records);
+    assert_eq!(replica.x, states[0].1, "step-log replay diverged from survivors");
+    assert_eq!(replica.m, states[0].2);
+
+    // pin the renormalization bitwise: at the death step g must be the mean
+    // over the TWO live projections, computed exactly as the leader does
+    let r = &log.records[die_at as usize];
+    let mut g_sum = 0f64;
+    for id in 0..2u32 {
+        let mut w = ZoWorker::new(id, x0(), shard(id));
+        w.replay(0, &log.records[..die_at as usize]).unwrap();
+        let (lp, lm) = w.compute_proj(die_at, r.seed, r.theta, HYP.lam).unwrap();
+        g_sum += (lp - lm) / (2.0 * HYP.lam as f64);
+    }
+    let g_expected = g_sum / 2.0;
+    assert_eq!(
+        r.g.to_bits(),
+        g_expected.to_bits(),
+        "death-step g was not renormalized over the live count: {} vs {}",
+        r.g,
+        g_expected
+    );
+    let _ = std::fs::remove_file(&log_path);
+}
+
+#[test]
+fn straggler_is_skipped_but_stays_bit_identical() {
+    // worker 1's Proj for one step is delayed past the leader's window:
+    // the leader must skip it (strike, renormalize over the others), keep
+    // the replica in the cluster, and — because Apply still reaches it —
+    // end the run with all three replicas bit-identical
+    let n = 3u32;
+    let steps = 20u64;
+    let lag_step = 6u64;
+    let log_path = temp_path("straggler.cmzl");
+    let _ = std::fs::remove_file(&log_path);
+
+    let mut conns: Vec<Box<dyn Transport>> = Vec::new();
+    let mut handles = Vec::new();
+    for id in 0..n {
+        let (wside, lside) = channel_pair();
+        conns.push(Box::new(lside));
+        handles.push(thread::spawn(move || {
+            let mut w = ZoWorker::new(id, x0(), shard(id));
+            // worker 1's send sequence: 0=Hello, 1=Ready, 2+t=Proj{t};
+            // stall its Proj{lag_step} well past the leader's 80 ms window
+            let mut conn: Box<dyn Transport> = if id == 1 {
+                Box::new(FaultTransport::new(
+                    Box::new(wside),
+                    vec![Fault::DelaySend { at: 2 + lag_step, by: Duration::from_millis(400) }],
+                ))
+            } else {
+                Box::new(wside)
+            };
+            run_worker(conn.as_mut(), &mut w).unwrap();
+            (w.x, w.m, w.t)
+        }));
+    }
+
+    let mut cfg = LeaderConfig::new(n, 42, steps, HYP, beta());
+    cfg.proj_timeout = Some(Duration::from_millis(80));
+    // the stall spans a handful of 80 ms windows; plenty of headroom so the
+    // straggler is skipped, never dropped
+    cfg.max_strikes = 50;
+    cfg.step_log = Some(log_path.clone());
+    let summary = Leader::new(cfg).run(conns).unwrap();
+    let states: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+
+    assert!(summary.straggler_events >= 1, "the delayed Proj never timed out");
+    assert_eq!(summary.workers_lost, 0, "straggler must be skipped, not dropped");
+    for (id, (x, m, t)) in states.iter().enumerate() {
+        assert_eq!(*t, steps, "worker {id} stopped early");
+        assert_eq!(x, &states[0].0, "worker {id} diverged after straggling");
+        assert_eq!(m, &states[0].1);
+    }
+    // and the logged trajectory matches what every replica applied
+    let log = StepLog::load(&log_path).unwrap();
+    let replica = replay_log(&log.records);
+    assert_eq!(replica.x, states[0].0);
+    let _ = std::fs::remove_file(&log_path);
+}
+
+#[test]
+fn killed_worker_rejoins_via_seed_replay_bit_identical() {
+    // the acceptance scenario in-process: worker 2 is killed at step
+    // `die_at`, reconnects later with its retained state, catches up through
+    // chunked Replay records with zero function evals, survives the
+    // post-rejoin hash tripwire, and finishes bit-identical to the replicas
+    // that never died
+    let n = 3u32;
+    let steps = 60u64;
+    let die_at = 5u64;
+    let (jtx, jrx) = mpsc::channel::<ChannelTransport>();
+
+    let mut conns: Vec<Box<dyn Transport>> = Vec::new();
+    let mut handles = Vec::new();
+    for id in 0..n {
+        let (wside, lside) = channel_pair();
+        conns.push(Box::new(lside));
+        let jtx = jtx.clone();
+        handles.push(thread::spawn(move || {
+            let mut w = ZoWorker::new(id, x0(), shard(id));
+            if id == 2 {
+                let mut first = wside;
+                let opts = WorkerOpts { die_at_step: Some(die_at), ..Default::default() };
+                let err = run_worker_with(&mut first, &mut w, &opts).unwrap_err();
+                assert!(err.to_string().contains("fault injection"), "{err}");
+                drop(first); // the leader sees a dead connection
+                // reconnect with the same replica: only die_at..T replays
+                let (mut wside2, lside2) = channel_pair();
+                jtx.send(lside2).unwrap();
+                run_worker_with(&mut wside2, &mut w, &WorkerOpts::default()).unwrap();
+            } else {
+                let mut wside = wside;
+                run_worker(&mut wside, &mut w).unwrap();
+            }
+            (w.x, w.m, w.t)
+        }));
+    }
+    drop(jtx);
+
+    let mut cfg = LeaderConfig::new(n, 42, steps, HYP, beta());
+    cfg.proj_timeout = Some(Duration::from_secs(5));
+    let summary = Leader::new(cfg)
+        .run_with_joiner(conns, |_t| {
+            jrx.try_iter().map(|c| Box::new(c) as Box<dyn Transport>).collect()
+        })
+        .unwrap();
+    let states: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+
+    assert_eq!(summary.workers_lost, 1);
+    assert_eq!(summary.rejoins, 1, "the leader never saw the rejoin");
+    for (id, (x, m, t)) in states.iter().enumerate() {
+        assert_eq!(*t, steps, "worker {id} (rejoined: {}) stopped early", id == 2);
+        assert_eq!(x, &states[0].0, "worker {id} diverged — rejoin replay is broken");
+        assert_eq!(m, &states[0].1, "worker {id} momentum diverged after rejoin");
+    }
+}
+
+#[test]
+fn leader_bails_when_all_workers_lost() {
+    let n = 2u32;
+    let steps = 30u64;
+    let die_at = 3u64;
+
+    let mut conns: Vec<Box<dyn Transport>> = Vec::new();
+    let mut handles = Vec::new();
+    for id in 0..n {
+        let (wside, lside) = channel_pair();
+        conns.push(Box::new(lside));
+        handles.push(thread::spawn(move || {
+            let mut wside = wside;
+            let mut w = ZoWorker::new(id, x0(), shard(id));
+            let opts = WorkerOpts { die_at_step: Some(die_at), ..Default::default() };
+            run_worker_with(&mut wside, &mut w, &opts).map_err(|e| e.to_string())
+        }));
+    }
+
+    let mut cfg = LeaderConfig::new(n, 42, steps, HYP, beta());
+    cfg.proj_timeout = Some(Duration::from_secs(5));
+    let err = Leader::new(cfg).run(conns).unwrap_err().to_string();
+    assert!(err.contains("all 2 workers lost"), "{err}");
+    for h in handles {
+        let res = h.join().unwrap();
+        assert!(res.unwrap_err().contains("fault injection"));
+    }
+}
