@@ -25,6 +25,9 @@ PRESET="${PRESET:-nano}"
 DIE_AT="${DIE_AT:-40}"
 WORK="$(mktemp -d)"
 trap 'kill $(jobs -p) 2>/dev/null || true; rm -rf "$WORK"' EXIT
+# leader step trace (one JSONL record per step); point TRACE_OUT outside
+# $WORK to keep it after the cleanup trap (CI uploads it as an artifact)
+TRACE_OUT="${TRACE_OUT:-$WORK/leader_trace.jsonl}"
 
 BIN="${BIN:-rust/target/release/conmezo}"
 if [ ! -x "$BIN" ]; then
@@ -35,6 +38,7 @@ common=(--preset "$PRESET" --steps "$STEPS" --seed 42 --eta 3e-4 --lam 1e-3 --ev
 
 "$BIN" leader --listen "$ADDR" --workers 3 "${common[@]}" \
     --proj-timeout-ms 2000 --max-strikes 2 --hash-check-every 25 \
+    --metrics-every 25 --trace "$TRACE_OUT" \
     --step-log "$WORK/steps.cmzl" >"$WORK/leader.log" 2>&1 &
 LEADER=$!
 
@@ -77,5 +81,13 @@ h2=$(grep -o 'params_hash=[0-9a-f]*' "$WORK/w2.log" | tail -1 || true)
 # and the leader must have actually exercised the recovery path
 grep -q 'rejoins' "$WORK/leader.log" || fail "leader saw no rejoin"
 [ -s "$WORK/steps.cmzl" ] || fail "step log was not persisted"
+
+# telemetry: the health line fired and the step trace holds one JSONL
+# record per step (parseable by `conmezo trace-summary`)
+grep -q 'health t=' "$WORK/leader.log" || fail "leader printed no health line"
+[ -s "$TRACE_OUT" ] || fail "leader step trace was not written"
+tl=$(wc -l <"$TRACE_OUT")
+[ "$tl" -eq "$STEPS" ] || fail "trace has $tl records, expected $STEPS"
+"$BIN" trace-summary "$TRACE_OUT" >/dev/null || fail "trace-summary rejected the trace"
 
 echo "PASS: crash at step $DIE_AT, rejoin via seed replay, 3 replicas bit-identical ($h0)"

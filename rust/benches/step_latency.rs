@@ -10,12 +10,14 @@
 //! A separate `two_point` section records the materialized-vs-fused
 //! antithetic pair at the medium preset (the `ParamView` win: zero
 //! parameter-sized writes per pair) with a derived parameter-stream
-//! bytes-per-pair estimate as the throughput denominator.
+//! bytes-per-pair estimate as the throughput denominator. A `telemetry`
+//! section pins the Registry instrumentation's on-vs-off cost on the same
+//! two_point hot path (interleaved sampling; <1% p50 regression asserted).
 //!
 //! `cargo bench --bench step_latency [-- --quick] [presets...]`; `--quick`
 //! runs a few iterations of everything (the CI smoke mode).
 
-use conmezo::bench::{consume, write_bench_json, write_results, BenchArgs};
+use conmezo::bench::{consume, write_bench_json, write_results, BenchArgs, BenchResult};
 use conmezo::coordinator::{FusedConMeZo, FusedMezo};
 use conmezo::data::{spec, TaskGen, TrainSampler};
 use conmezo::objective::{BatchSource, ModelObjective, Objective};
@@ -237,6 +239,90 @@ fn main() -> conmezo::util::error::Result<()> {
         tp_results.push(r);
         write_results("two_point.jsonl", &tp_results)?;
         write_bench_json("two_point", &tp_results)?;
+    }
+
+    // -----------------------------------------------------------------------
+    // telemetry overhead: the zero-overhead claim behind the `telemetry`
+    // section of BENCH_native.json (asserted by CI bench-smoke). Same bound
+    // two_point session timed with Registry recording on vs off, toggled per
+    // sample in an interleaved pattern so thermal / scheduler drift cancels
+    // out of the comparison; the assert pins the p50 regression under 1%
+    // (plus a small absolute slack for timer granularity). Runs regardless
+    // of the preset args so the section always lands.
+    // -----------------------------------------------------------------------
+    {
+        use std::time::Instant;
+
+        use conmezo::util::{mean_std, percentile};
+
+        let auto = ParallelPolicy::auto();
+        let rt_t = Runtime::native_with(auto);
+        let preset = "small";
+        let meta = rt_t.preset(preset)?.clone();
+        let gen = TaskGen::new(spec("sst2").unwrap(), meta.vocab, meta.seq_len);
+        let mut sampler = TrainSampler::new(gen.dataset(64, 1), meta.batch, meta.seq_len, 1, 0);
+        let batch = sampler.next_batch();
+        let init = rt_t.load_kind(preset, "init")?;
+        let params = lit_vec_f32(&init.call(&[Arg::I32(1)])?[0])?;
+        let z = vec![0.01f32; meta.d_pad];
+        let mut tp = rt_t.bind_kind(preset, "two_point")?;
+        let reg = rt_t.telemetry().expect("native backend always carries a Registry").clone();
+
+        // sanity: recording must not perturb the numbers themselves
+        reg.set_enabled(true);
+        let on = tp.two_point(&params, &z, 1e-3, &batch.input_ids, &batch.targets, &batch.mask)?;
+        reg.set_enabled(false);
+        let off = tp.two_point(&params, &z, 1e-3, &batch.input_ids, &batch.targets, &batch.mask)?;
+        assert_eq!(on, off, "toggling telemetry changed two_point results");
+
+        let pairs = if args.quick { 25 } else { 300 };
+        let mut on_s = Vec::with_capacity(pairs);
+        let mut off_s = Vec::with_capacity(pairs);
+        for _ in 0..3 {
+            let _ =
+                tp.two_point(&params, &z, 1e-3, &batch.input_ids, &batch.targets, &batch.mask)?;
+        }
+        for _ in 0..pairs {
+            reg.set_enabled(true);
+            let t0 = Instant::now();
+            let _ =
+                tp.two_point(&params, &z, 1e-3, &batch.input_ids, &batch.targets, &batch.mask)?;
+            on_s.push(t0.elapsed().as_secs_f64());
+            reg.set_enabled(false);
+            let t0 = Instant::now();
+            let _ =
+                tp.two_point(&params, &z, 1e-3, &batch.input_ids, &batch.targets, &batch.mask)?;
+            off_s.push(t0.elapsed().as_secs_f64());
+        }
+        reg.set_enabled(true);
+
+        let mk = |name: String, s: &[f64]| {
+            let (mean, std) = mean_std(s);
+            BenchResult {
+                name,
+                samples: s.len(),
+                mean_s: mean,
+                std_s: std,
+                p50_s: percentile(s, 50.0),
+                p99_s: percentile(s, 99.0),
+                items_per_iter: None,
+            }
+        };
+        let r_on = mk(format!("telemetry/{preset}/two_point_on_threads{}", auto.threads), &on_s);
+        let r_off = mk(format!("telemetry/{preset}/two_point_off_threads{}", auto.threads), &off_s);
+        println!("{}", r_on.report());
+        println!("{}", r_off.report());
+        let overhead = r_on.p50_s / r_off.p50_s - 1.0;
+        println!("telemetry overhead (p50, interleaved): {:+.3}%", overhead * 100.0);
+        assert!(
+            r_on.p50_s <= r_off.p50_s * 1.01 + 25e-6,
+            "telemetry-on p50 {:.6}s vs off {:.6}s exceeds the 1% overhead budget",
+            r_on.p50_s,
+            r_off.p50_s
+        );
+        let tel_results = vec![r_on, r_off];
+        write_results("telemetry.jsonl", &tel_results)?;
+        write_bench_json("telemetry", &tel_results)?;
     }
     Ok(())
 }

@@ -34,12 +34,15 @@
 //! land in `control_bytes`.
 
 use std::path::PathBuf;
+use std::sync::Arc;
 use std::time::Duration;
 
 use crate::checkpoint::{StepLog, StepRecord};
 use crate::net::{Msg, Transport, PROTO_VERSION, REPLAY_CHUNK};
 use crate::optimizer::BetaSchedule;
+use crate::telemetry::{Registry, StepTrace, StepTracer};
 use crate::util::error::{bail, Result};
+use crate::util::Stopwatch;
 
 use super::distributed::{step_seed, DistHypers, DistSummary, ZoWorker};
 
@@ -68,6 +71,12 @@ pub struct LeaderConfig {
     pub step_log: Option<PathBuf>,
     /// save the step log every this many steps (and at shutdown)
     pub log_save_every: u64,
+    /// health/RTT period in steps (0 = off): each period the leader pings
+    /// every live worker with `Heartbeat`, records the round-trip time in
+    /// its [`Registry`], and logs a one-line cluster health summary
+    pub metrics_every: u64,
+    /// stream one leader-side [`StepTrace`] JSONL record per step here
+    pub trace: Option<PathBuf>,
 }
 
 impl LeaderConfig {
@@ -85,6 +94,8 @@ impl LeaderConfig {
             hash_check_every: 0,
             step_log: None,
             log_save_every: 100,
+            metrics_every: 0,
+            trace: None,
         }
     }
 }
@@ -111,17 +122,49 @@ pub struct Leader {
     /// force a tripwire round before the next step (set on rejoin)
     verify_hash: bool,
     summary: DistSummary,
+    telemetry: Arc<Registry>,
+    tracer: Option<StepTracer>,
 }
 
 impl Leader {
     pub fn new(cfg: LeaderConfig) -> Self {
         let slots = (0..cfg.n_workers).map(|_| Slot { conn: None, strikes: 0 }).collect();
-        Leader { cfg, slots, log: StepLog::new(), t: 0, consensus: None, verify_hash: false, summary: DistSummary::default() }
+        let telemetry = Arc::new(Registry::new(cfg.n_workers as usize));
+        Leader {
+            cfg,
+            slots,
+            log: StepLog::new(),
+            t: 0,
+            consensus: None,
+            verify_hash: false,
+            summary: DistSummary::default(),
+            telemetry,
+            tracer: None,
+        }
     }
 
     /// Current step (= records logged so far).
     pub fn t(&self) -> u64 {
         self.t
+    }
+
+    /// The leader's metric registry (per-worker RTT, byte and fault
+    /// counters). Clone the `Arc` before `run` consumes the leader to read
+    /// the metrics afterwards.
+    pub fn telemetry(&self) -> Arc<Registry> {
+        self.telemetry.clone()
+    }
+
+    /// Byte accounting, mirrored into the registry counters so the health
+    /// line and `DistSummary` always agree.
+    fn acct(&mut self, wire: bool, bytes: u64) {
+        if wire {
+            self.summary.wire_bytes += bytes;
+            self.telemetry.wire_bytes.add(bytes);
+        } else {
+            self.summary.control_bytes += bytes;
+            self.telemetry.control_bytes.add(bytes);
+        }
     }
 
     fn live(&self) -> usize {
@@ -137,7 +180,7 @@ impl Leader {
     /// with a clear message.
     pub fn admit(&mut self, mut conn: Box<dyn Transport>) -> Result<u32> {
         let hello = conn.recv()?;
-        self.summary.control_bytes += hello.wire_bytes() as u64;
+        self.acct(false, hello.wire_bytes() as u64);
         let (wid, wt) = match hello {
             Msg::Hello { proto, worker_id, t } => {
                 if proto != PROTO_VERSION {
@@ -168,18 +211,20 @@ impl Leader {
             params_hash: welcome_hash,
         };
         conn.send(&welcome)?;
-        self.summary.control_bytes += welcome.wire_bytes() as u64;
+        self.acct(false, welcome.wire_bytes() as u64);
         // ship the gap wt..t as chunked Replay frames (O(1) bytes/step)
         let mut from = wt as usize;
         while from < self.t as usize {
             let upto = (from + REPLAY_CHUNK).min(self.t as usize);
             let msg = Msg::Replay { from_t: from as u64, records: self.log.records[from..upto].to_vec() };
             conn.send(&msg)?;
-            self.summary.control_bytes += msg.wire_bytes() as u64;
+            let bytes = msg.wire_bytes() as u64;
+            self.telemetry.replay_bytes.add(bytes);
+            self.acct(false, bytes);
             from = upto;
         }
         let ready = conn.recv()?;
-        self.summary.control_bytes += ready.wire_bytes() as u64;
+        self.acct(false, ready.wire_bytes() as u64);
         match ready {
             Msg::Ready { t, worker_id, params_hash } => {
                 if worker_id != wid {
@@ -223,6 +268,9 @@ impl Leader {
         mut joiner: impl FnMut(u64) -> Vec<Box<dyn Transport>>,
     ) -> Result<DistSummary> {
         self.summary.steps = self.cfg.steps;
+        if let Some(path) = self.cfg.trace.clone() {
+            self.tracer = Some(StepTracer::new(Some(&path))?);
+        }
         for conn in initial {
             self.admit(conn)?;
         }
@@ -243,6 +291,10 @@ impl Leader {
                 self.verify_hash = false;
                 self.hash_round()?;
             }
+            if self.cfg.metrics_every > 0 && self.t % self.cfg.metrics_every == 0 {
+                self.rtt_round();
+                self.health_line();
+            }
             self.train_step()?;
             if self.cfg.eval_every > 0 && self.t % self.cfg.eval_every == 0 {
                 self.eval_round();
@@ -253,10 +305,87 @@ impl Leader {
         }
         self.broadcast(&Msg::Shutdown, false);
         self.save_log();
+        if let Some(tracer) = self.tracer.as_mut() {
+            tracer.flush()?;
+        }
         Ok(self.summary)
     }
 
+    /// Heartbeat ping/echo over every live connection: measures per-worker
+    /// round-trip time into the registry's `rtt` histogram. Runs at a step
+    /// boundary, so the only expected frame is our own echo — stale
+    /// straggler traffic is drained as control bytes; a timeout only bumps
+    /// the `timeouts` counter (the Proj window, not this probe, decides
+    /// strikes); a dead socket drops the worker.
+    fn rtt_round(&mut self) {
+        let t = self.t;
+        let ping = Msg::Heartbeat { t };
+        let ping_bytes = ping.wire_bytes() as u64;
+        let window = self.cfg.proj_timeout.unwrap_or(Duration::from_secs(5));
+        for i in 0..self.slots.len() {
+            let mut control = 0u64;
+            let outcome = {
+                let conn = match self.slots[i].conn.as_deref_mut() {
+                    Some(c) => c,
+                    None => continue,
+                };
+                let sw = Stopwatch::start();
+                match conn.send(&ping) {
+                    Err(e) => Err(format!("heartbeat send failed: {e}")),
+                    Ok(()) => {
+                        control += ping_bytes;
+                        loop {
+                            match conn.recv_timeout(window) {
+                                Err(e) => break Err(format!("heartbeat recv failed: {e}")),
+                                Ok(None) => break Ok(None),
+                                Ok(Some(Msg::Heartbeat { t: et })) if et == t => {
+                                    control += ping_bytes;
+                                    break Ok(Some(sw.secs()));
+                                }
+                                Ok(Some(msg))
+                                    if matches!(msg, Msg::Heartbeat { .. }) || out_of_phase(t, &msg) =>
+                                {
+                                    control += msg.wire_bytes() as u64;
+                                    continue;
+                                }
+                                Ok(Some(msg)) => {
+                                    break Err(format!("protocol violation: expected Heartbeat echo, got {msg:?}"))
+                                }
+                            }
+                        }
+                    }
+                }
+            };
+            self.acct(false, control);
+            match outcome {
+                Ok(Some(secs)) => self.telemetry.rtt.observe(Duration::from_secs_f64(secs)),
+                Ok(None) => self.telemetry.timeouts.inc(),
+                Err(reason) => self.drop_worker(i, &reason),
+            }
+        }
+    }
+
+    /// One-line cluster health summary (the `--metrics-every N` output).
+    fn health_line(&self) {
+        let r = &self.telemetry;
+        crate::info!(
+            "leader",
+            "health t={} live={}/{} rtt_p50={:.3}ms timeouts={} stragglers={} lost={} rejoins={} wire={}B control={}B",
+            self.t,
+            self.live(),
+            self.cfg.n_workers,
+            r.rtt.percentile_ns(50.0) as f64 / 1e6,
+            r.timeouts.get(),
+            self.summary.straggler_events,
+            self.summary.workers_lost,
+            self.summary.rejoins,
+            self.summary.wire_bytes,
+            self.summary.control_bytes,
+        );
+    }
+
     fn train_step(&mut self) -> Result<()> {
+        let sw = Stopwatch::start();
         let t = self.t;
         let seed = step_seed(self.cfg.run_seed, t);
         let beta = self.cfg.beta.at(t as usize);
@@ -283,9 +412,12 @@ impl Leader {
         let k = projs.len() as f64;
         let mut g_sum = 0f64;
         let mut loss_sum = 0f64;
+        let (mut lp_sum, mut lm_sum) = (0f64, 0f64);
         for (lp, lm) in &projs {
             g_sum += (lp - lm) / (2.0 * hy.lam as f64);
             loss_sum += 0.5 * (lp + lm);
+            lp_sum += lp;
+            lm_sum += lm;
         }
         // renormalize by the replicas actually heard from, not the nominal
         // cluster size — a straggler's missing shard must not bias g to 0
@@ -296,6 +428,23 @@ impl Leader {
         self.broadcast(&Msg::Apply { t, g }, true);
         if t % 10 == 0 || t + 1 == self.cfg.steps {
             self.summary.loss_curve.push((t, loss_sum / k));
+        }
+        // wall_s is frozen HERE: trace formatting/buffering happens after
+        // the step it measures
+        let wall_s = sw.secs();
+        self.telemetry.steps.inc();
+        if let Some(tracer) = self.tracer.as_mut() {
+            tracer.record(StepTrace {
+                step: t,
+                seed: seed as i64,
+                loss: loss_sum / k,
+                loss_plus: lp_sum / k,
+                loss_minus: lm_sum / k,
+                proj_grad: g,
+                cos_zm: f64::NAN,
+                eta: hy.eta as f64,
+                wall_s,
+            })?;
         }
         self.t += 1;
         Ok(())
@@ -391,24 +540,23 @@ impl Leader {
                     }
                 }
             };
-            self.summary.control_bytes += control;
+            self.acct(false, control);
             match polled {
                 Polled::Got(r, bytes) => {
-                    if wire {
-                        self.summary.wire_bytes += bytes;
-                    } else {
-                        self.summary.control_bytes += bytes;
-                    }
+                    self.acct(wire, bytes);
                     self.slots[i].strikes = 0;
                     out.push(r);
                 }
                 Polled::Timeout => {
                     self.summary.straggler_events += 1;
+                    self.telemetry.timeouts.inc();
+                    self.telemetry.strikes.inc();
                     self.slots[i].strikes += 1;
                     let s = self.slots[i].strikes;
                     if s >= self.cfg.max_strikes {
                         self.drop_worker(i, &format!("unresponsive: {s} consecutive {what} timeouts"));
                     } else {
+                        self.telemetry.skips.inc();
                         crate::warn_!("leader", "worker {wid} straggled on {what} at step {t} (strike {s}/{}); skipping it this round", self.cfg.max_strikes);
                     }
                 }
@@ -433,13 +581,7 @@ impl Leader {
                 None => continue,
             };
             match res {
-                Ok(()) => {
-                    if wire {
-                        self.summary.wire_bytes += bytes;
-                    } else {
-                        self.summary.control_bytes += bytes;
-                    }
-                }
+                Ok(()) => self.acct(wire, bytes),
                 Err(e) => self.drop_worker(i, &format!("send failed: {e}")),
             }
         }
@@ -543,6 +685,10 @@ pub fn run_worker_with(conn: &mut dyn Transport, worker: &mut ZoWorker, opts: &W
             }
             Msg::HashCheck { t } => {
                 conn.send(&Msg::HashReport { t, worker_id: worker.id, hash: worker.params_hash() })?;
+            }
+            Msg::Heartbeat { t } => {
+                // leader-side RTT probe: echo it straight back
+                conn.send(&Msg::Heartbeat { t })?;
             }
             Msg::Shutdown => {
                 save_ckpt(worker, opts);
@@ -680,5 +826,77 @@ mod tests {
         }
         assert_eq!(summary.workers_lost, 0);
         assert_eq!(summary.straggler_events, 0);
+    }
+
+    #[test]
+    fn heartbeat_rtt_and_leader_trace_over_channels() {
+        // PR-6 shipped the Heartbeat frame; this pins the PR-7 wiring: the
+        // leader pings every live worker each `metrics_every` boundary, the
+        // worker echoes, and the RTT lands in the leader's registry —
+        // WITHOUT perturbing the wire-bytes parity (heartbeats are control
+        // traffic) or the replicas' bit-identical trajectories.
+        let n = 2u32;
+        let steps = 12u64;
+        let mut x0 = vec![0f32; D];
+        let mut rng = crate::util::rng::Xoshiro256pp::seed_from_u64(9);
+        rng.fill_normal_f32(&mut x0);
+
+        let run = |metrics_every: u64, trace: Option<std::path::PathBuf>| {
+            let mut conns: Vec<Box<dyn Transport>> = Vec::new();
+            let mut handles = Vec::new();
+            for id in 0..n {
+                let (wside, lside) = channel_pair();
+                conns.push(Box::new(lside));
+                let x = x0.clone();
+                handles.push(std::thread::spawn(move || {
+                    let mut wside = wside;
+                    let mut w = ZoWorker::new(id, x, Box::new(NativeQuadratic::new(D)));
+                    run_worker_with(&mut wside, &mut w, &WorkerOpts::default()).unwrap();
+                    w.x
+                }));
+            }
+            let mut c = cfg(n, steps);
+            c.metrics_every = metrics_every;
+            c.trace = trace;
+            let leader = Leader::new(c);
+            let reg = leader.telemetry();
+            let summary = leader.run(conns).unwrap();
+            let states: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+            (summary, reg, states)
+        };
+
+        let dir = std::env::temp_dir().join(format!("conmezo_hb_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let trace_path = dir.join("leader_trace.jsonl");
+        let (s_on, reg_on, x_on) = run(3, Some(trace_path.clone()));
+        let (s_off, reg_off, x_off) = run(0, None);
+
+        // every metrics boundary pinged every worker, every echo came back
+        let rounds = steps.div_ceil(3); // t = 0, 3, 6, 9
+        assert_eq!(reg_on.rtt.count(), rounds * n as u64, "missing heartbeat echoes");
+        assert_eq!(reg_on.timeouts.get(), 0);
+        assert_eq!(s_on.workers_lost, 0, "heartbeats must not kill workers");
+        assert_eq!(reg_off.rtt.count(), 0);
+
+        // heartbeats are control traffic: the O(1)/step wire claim is intact
+        assert_eq!(s_on.wire_bytes, s_off.wire_bytes, "heartbeats leaked into wire accounting");
+        assert_eq!(reg_on.wire_bytes.get(), s_on.wire_bytes, "registry mirror diverged");
+        assert!(s_on.control_bytes > s_off.control_bytes);
+
+        // and the replicas never noticed
+        assert_eq!(x_on, x_off, "heartbeat rounds perturbed training");
+
+        // leader trace: one parseable record per step, matching the run
+        let trace = crate::telemetry::read_trace(&trace_path).unwrap();
+        assert_eq!(trace.len(), steps as usize);
+        for (t, rec) in trace.iter().enumerate() {
+            assert_eq!(rec.step, t as u64);
+            assert_eq!(rec.seed, step_seed(42, t as u64) as i64);
+            assert!(rec.loss.is_finite() && rec.proj_grad.is_finite());
+            assert!(rec.wall_s >= 0.0);
+            assert!(rec.cos_zm.is_nan(), "leader has no momentum buffer to compare against");
+        }
+        assert_eq!(reg_on.steps.get(), steps);
+        std::fs::remove_file(&trace_path).ok();
     }
 }

@@ -14,13 +14,59 @@
 use crate::util::error::Result;
 
 use crate::objective::Batch;
-use crate::runtime::{lit_copy_f32, lit_f32, Arg, Runtime, Session};
+use crate::runtime::{lit_copy_f32, lit_f32, Arg, Runtime, Session, Value};
 
 /// Outcome of one fused step.
 #[derive(Clone, Copy, Debug)]
 pub struct FusedStats {
     pub loss: f64,
     pub proj_grad: f64,
+    /// f(x + lam z) — the `+` arm of the antithetic pair
+    pub loss_plus: f64,
+    /// f(x - lam z)
+    pub loss_minus: f64,
+    /// cosine between the step direction z and the pre-step momentum;
+    /// `NaN` when unavailable (no momentum buffer, degenerate g, or cosine
+    /// telemetry disabled — see [`FusedConMeZo::trace_cos`])
+    pub cos_zm: f64,
+}
+
+impl FusedStats {
+    fn new(lp: f64, lm: f64, g: f64) -> FusedStats {
+        FusedStats {
+            loss: 0.5 * (lp + lm),
+            proj_grad: g,
+            loss_plus: lp,
+            loss_minus: lm,
+            cos_zm: f64::NAN,
+        }
+    }
+}
+
+/// cos(z, m_old) reconstructed WITHOUT materializing z: the momentum
+/// update is `m' = beta m + (1-beta) g z`, so `(1-beta) g z = m' - beta m`
+/// and the cosine needs only three dot products over the two momentum
+/// buffers (the sign of the scalar `(1-beta) g` flips the direction).
+/// Returns `NaN` when degenerate (g ~ 0, beta = 1, or zero norms).
+fn cos_z_momentum(m_new: &[f32], m_old: &[f32], beta: f64, g: f64) -> f64 {
+    let scale = (1.0 - beta) * g;
+    if !scale.is_finite() || scale == 0.0 {
+        return f64::NAN;
+    }
+    let (mut ww, mut wv, mut vv) = (0f64, 0f64, 0f64);
+    for (&w, &v) in m_new.iter().zip(m_old) {
+        let (w, v) = (w as f64, v as f64);
+        ww += w * w;
+        wv += w * v;
+        vv += v * v;
+    }
+    // |z|^2 (1-beta)^2 g^2 = |m' - beta m|^2
+    let zz = ww - 2.0 * beta * wv + beta * beta * vv;
+    let den = zz.max(0.0).sqrt() * vv.sqrt();
+    if den <= 0.0 || !den.is_finite() {
+        return f64::NAN;
+    }
+    (scale.signum() * (wv - beta * vv) / den).clamp(-1.0, 1.0)
 }
 
 fn batch_args(batch: &Batch) -> [Arg<'_>; 3] {
@@ -40,6 +86,10 @@ pub struct FusedConMeZo {
     /// CPU testbed; see EXPERIMENTS.md §Perf for the measured overhead)
     pub m: Vec<f32>,
     pub theta: f32,
+    /// when set, every step also reports `cos(z, m)` in its stats (three
+    /// extra length-d dot products; off by default so untraced runs pay
+    /// nothing)
+    pub trace_cos: bool,
     started: bool,
 }
 
@@ -52,6 +102,7 @@ impl FusedConMeZo {
             sample_u: rt.bind_kind(preset, "sample_u")?,
             m: vec![0.0; d_pad],
             theta,
+            trace_cos: false,
             started: false,
         })
     }
@@ -89,9 +140,15 @@ impl FusedConMeZo {
         let lp = lit_f32(&outs[2])? as f64;
         let lm = lit_f32(&outs[3])? as f64;
         let g = lit_f32(&outs[4])? as f64;
+        let mut stats = FusedStats::new(lp, lm, g);
         let m_new = &outs[1];
+        if self.trace_cos {
+            if let Value::F32(w) = m_new {
+                stats.cos_zm = cos_z_momentum(w, &self.m, beta as f64, g);
+            }
+        }
         lit_copy_f32(m_new, &mut self.m)?;
-        Ok(FusedStats { loss: 0.5 * (lp + lm), proj_grad: g })
+        Ok(stats)
     }
 }
 
@@ -120,7 +177,7 @@ impl FusedMezo {
         let lp = lit_f32(&outs[1])? as f64;
         let lm = lit_f32(&outs[2])? as f64;
         let g = lit_f32(&outs[3])? as f64;
-        Ok(FusedStats { loss: 0.5 * (lp + lm), proj_grad: g })
+        Ok(FusedStats::new(lp, lm, g))
     }
 }
 
@@ -128,12 +185,19 @@ impl FusedMezo {
 pub struct FusedMezoMomentum {
     sess: Box<dyn Session>,
     pub m: Vec<f32>,
+    /// when set, every step also reports `cos(z, m)` in its stats (same
+    /// reconstruction as [`FusedConMeZo::trace_cos`]; off by default)
+    pub trace_cos: bool,
 }
 
 impl FusedMezoMomentum {
     pub fn new(rt: &Runtime, preset: &str) -> Result<Self> {
         let d_pad = rt.preset(preset)?.d_pad;
-        Ok(FusedMezoMomentum { sess: rt.bind_kind(preset, "mezo_momentum_step")?, m: vec![0.0; d_pad] })
+        Ok(FusedMezoMomentum {
+            sess: rt.bind_kind(preset, "mezo_momentum_step")?,
+            m: vec![0.0; d_pad],
+            trace_cos: false,
+        })
     }
 
     pub fn step(
@@ -161,9 +225,15 @@ impl FusedMezoMomentum {
         let lp = lit_f32(&outs[2])? as f64;
         let lm = lit_f32(&outs[3])? as f64;
         let g = lit_f32(&outs[4])? as f64;
+        let mut stats = FusedStats::new(lp, lm, g);
         let m_new = &outs[1];
+        if self.trace_cos {
+            if let Value::F32(w) = m_new {
+                stats.cos_zm = cos_z_momentum(w, &self.m, beta as f64, g);
+            }
+        }
         lit_copy_f32(m_new, &mut self.m)?;
-        Ok(FusedStats { loss: 0.5 * (lp + lm), proj_grad: g })
+        Ok(stats)
     }
 }
 
@@ -245,5 +315,53 @@ impl GradProbe {
         let mut sess = self.sess.borrow_mut();
         let outs = sess.run(&[Arg::VecF32(params), Arg::VecF32(m), ids, tgt, mask])?;
         Ok(lit_f32(&outs[0])? as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::cos_z_momentum;
+
+    fn direct_cos(z: &[f64], v: &[f64]) -> f64 {
+        let zv: f64 = z.iter().zip(v).map(|(a, b)| a * b).sum();
+        let zz: f64 = z.iter().map(|a| a * a).sum();
+        let vv: f64 = v.iter().map(|a| a * a).sum();
+        zv / (zz.sqrt() * vv.sqrt())
+    }
+
+    #[test]
+    fn cos_z_momentum_matches_direct_cosine() {
+        // Fabricate m' = beta m + (1-beta) g z for a known z and check the
+        // reconstruction against the explicit cosine.
+        let v = [0.5f64, -1.25, 2.0, 0.75, -0.1];
+        let z = [1.0f64, 0.25, -0.5, 2.0, 1.5];
+        for &(beta, g) in &[(0.9f64, 0.37f64), (0.5, -1.2), (0.0, 2.0)] {
+            let m_old: Vec<f32> = v.iter().map(|&x| x as f32).collect();
+            let m_new: Vec<f32> = v
+                .iter()
+                .zip(&z)
+                .map(|(&vi, &zi)| (beta * vi + (1.0 - beta) * g * zi) as f32)
+                .collect();
+            let got = cos_z_momentum(&m_new, &m_old, beta, g);
+            let want = direct_cos(&z, &v);
+            assert!(
+                (got - want).abs() < 1e-3,
+                "beta={beta} g={g}: got {got}, want {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn cos_z_momentum_degenerate_cases_are_nan() {
+        let m = [1.0f32, 2.0, 3.0];
+        // g = 0 -> direction unrecoverable
+        assert!(cos_z_momentum(&m, &m, 0.9, 0.0).is_nan());
+        // beta = 1 -> (1-beta) g = 0
+        assert!(cos_z_momentum(&m, &m, 1.0, 0.5).is_nan());
+        // zero old momentum -> no reference direction
+        assert!(cos_z_momentum(&m, &[0.0; 3], 0.9, 0.5).is_nan());
+        // m' = beta m exactly -> z reconstructs to zero
+        let m_new: Vec<f32> = m.iter().map(|&x| 0.9 * x).collect();
+        assert!(cos_z_momentum(&m_new, &m, 0.9, 0.5).is_nan());
     }
 }

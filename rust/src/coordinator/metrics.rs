@@ -71,6 +71,11 @@ pub fn render_table(headers: &[&str], rows: &[Vec<String>]) -> String {
         for (i, cell) in row.iter().enumerate() {
             if i < widths.len() {
                 widths[i] = widths[i].max(cell.len());
+            } else {
+                // rows may be wider than the header list; grow the width
+                // vector so the extra columns still align instead of being
+                // padded to an arbitrary 8
+                widths.push(cell.len());
             }
         }
     }
@@ -126,5 +131,30 @@ mod tests {
         assert_eq!(lines.len(), 4);
         assert!(lines[0].starts_with("task"));
         assert!(lines[2].contains("92.8"));
+    }
+
+    #[test]
+    fn rows_wider_than_headers_stay_aligned() {
+        // regression: extra cells used to be padded to a hardcoded 8,
+        // misaligning every row with a different overflow width
+        let t = render_table(
+            &["task", "acc"],
+            &[
+                vec!["sst2".into(), "92.8".into(), "wide-overflow-cell".into(), "zz".into()],
+                vec!["trec".into(), "88.4".into(), "y".into(), "longer-tail".into()],
+            ],
+        );
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4);
+        // both data rows pad overflow columns to the widest cell, so the
+        // last column starts at the same offset in each row
+        assert_eq!(
+            lines[2].find("zz").unwrap(),
+            lines[3].find("longer-tail").unwrap(),
+            "overflow columns misaligned:\n{t}"
+        );
+        // trailing-column cells are fully present, not truncated
+        assert!(lines[2].contains("wide-overflow-cell"));
+        assert!(lines[3].contains("longer-tail"));
     }
 }

@@ -17,13 +17,14 @@ use crate::util::error::{bail, Context, Result};
 
 use crate::checkpoint::Checkpoint;
 use crate::coordinator::fused::{
-    FoAdamW, FoSgd, FusedConMeZo, FusedMezo, FusedMezoMomentum, GradProbe,
+    FoAdamW, FoSgd, FusedConMeZo, FusedMezo, FusedMezoMomentum, FusedStats, GradProbe,
 };
 use crate::data::{PretrainSampler, TaskGen, TrainSampler};
 use crate::eval::{predict, score, EvalResult};
 use crate::objective::{Batch, BatchSource, ModelObjective, Objective};
 use crate::optimizer::{BetaSchedule, ZoOptimizer};
 use crate::runtime::{lit_vec_f32, Arg, Runtime, Session};
+use crate::telemetry::{StepTrace, StepTracer};
 use crate::util::memory::{activation_bytes, MemoryMeter};
 use crate::util::rng::STREAM_DIRECTION;
 use crate::util::Stopwatch;
@@ -61,6 +62,11 @@ pub struct TrainConfig {
     pub init_from: Option<PathBuf>,
     /// record cos^2(m, grad f) every eval (Fig. 6)
     pub probe_cos2: bool,
+    /// stream one [`StepTrace`] JSONL record per step to this file
+    /// (`--trace out.jsonl`); also turns on per-step `cos(z, m)` for the
+    /// momentum engines. `None` (the default) keeps the step loop free of
+    /// trace bookkeeping entirely.
+    pub trace: Option<PathBuf>,
 }
 
 impl TrainConfig {
@@ -84,6 +90,7 @@ impl TrainConfig {
             log_every: 100,
             init_from: None,
             probe_cos2: false,
+            trace: None,
         }
     }
 
@@ -193,6 +200,7 @@ pub struct Trainer<'rt> {
     sampler: TrainSampler,
     evaluator: Evaluator,
     probe: Option<GradProbe>,
+    tracer: Option<StepTracer>,
     meter: MemoryMeter,
     d_pad: usize,
 }
@@ -291,7 +299,23 @@ impl<'rt> Trainer<'rt> {
 
         let probe = if cfg.probe_cos2 { Some(GradProbe::new(rt, &cfg.preset)?) } else { None };
 
-        Ok(Trainer { rt, cfg, params, engine, sampler, evaluator, probe, meter, d_pad: meta.d_pad })
+        // step tracing: open the JSONL sink up front (fail fast on a bad
+        // path) and turn on cos(z, m) reconstruction where the engine has a
+        // momentum buffer to compare against
+        let mut engine = engine;
+        let tracer = match &cfg.trace {
+            Some(path) => {
+                match &mut engine {
+                    Engine::ConMeZo(e) => e.trace_cos = true,
+                    Engine::MezoMomentum(e) => e.trace_cos = true,
+                    _ => {}
+                }
+                Some(StepTracer::new(Some(path))?)
+            }
+            None => None,
+        };
+
+        Ok(Trainer { rt, cfg, params, engine, sampler, evaluator, probe, tracer, meter, d_pad: meta.d_pad })
     }
 
     /// Momentum buffer view (for probes), if the engine keeps one.
@@ -312,39 +336,63 @@ impl<'rt> Trainer<'rt> {
 
     /// One optimizer step; returns the mean two-point loss.
     pub fn step(&mut self, t: usize) -> Result<f64> {
+        Ok(self.step_stats(t)?.loss)
+    }
+
+    /// One optimizer step with full per-step telemetry. Fused ZO engines
+    /// report both antithetic losses (and `cos(z, m)` when tracing);
+    /// composed engines report the projected gradient; first-order engines
+    /// only the loss — everything else is `NaN`.
+    fn step_stats(&mut self, t: usize) -> Result<FusedStats> {
         let beta = self.cfg.beta_schedule().at(t);
         let seed = Self::step_seed(self.cfg.seed, t);
-        let loss = match &mut self.engine {
+        let nan = f64::NAN;
+        let stats = match &mut self.engine {
             Engine::ConMeZo(e) => {
                 let batch = self.sampler.next_batch();
-                e.step(&mut self.params, &batch, seed, beta, self.cfg.eta, self.cfg.lam)?.loss
+                e.step(&mut self.params, &batch, seed, beta, self.cfg.eta, self.cfg.lam)?
             }
             Engine::Mezo(e) => {
                 let batch = self.sampler.next_batch();
-                e.step(&mut self.params, &batch, seed, self.cfg.eta, self.cfg.lam)?.loss
+                e.step(&mut self.params, &batch, seed, self.cfg.eta, self.cfg.lam)?
             }
             Engine::MezoMomentum(e) => {
                 let batch = self.sampler.next_batch();
-                e.step(&mut self.params, &batch, seed, beta, self.cfg.eta, self.cfg.lam)?.loss
+                e.step(&mut self.params, &batch, seed, beta, self.cfg.eta, self.cfg.lam)?
             }
             Engine::Composed { opt, obj } => {
                 obj.advance();
-                opt.step(&mut self.params, obj, t, self.cfg.seed)?.loss
+                let s = opt.step(&mut self.params, obj, t, self.cfg.seed)?;
+                FusedStats {
+                    loss: s.loss,
+                    proj_grad: s.proj_grad,
+                    loss_plus: nan,
+                    loss_minus: nan,
+                    cos_zm: nan,
+                }
             }
             Engine::Sgd(e) => {
                 let batch = self.sampler.next_batch();
-                e.step(&mut self.params, &batch, self.cfg.eta)?
+                let loss = e.step(&mut self.params, &batch, self.cfg.eta)?;
+                FusedStats { loss, proj_grad: nan, loss_plus: nan, loss_minus: nan, cos_zm: nan }
             }
             Engine::AdamW(e) => {
                 let batch = self.sampler.next_batch();
-                e.step(&mut self.params, &batch, self.cfg.eta)?
+                let loss = e.step(&mut self.params, &batch, self.cfg.eta)?;
+                FusedStats { loss, proj_grad: nan, loss_plus: nan, loss_minus: nan, cos_zm: nan }
             }
         };
-        Ok(loss)
+        Ok(stats)
     }
 
     pub fn evaluate(&self) -> Result<EvalResult> {
         self.evaluator.evaluate(&self.params)
+    }
+
+    /// In-memory copy of every [`StepTrace`] recorded so far (empty unless
+    /// [`TrainConfig::trace`] is set).
+    pub fn trace_history(&self) -> &[StepTrace] {
+        self.tracer.as_ref().map(|t| t.history()).unwrap_or(&[])
     }
 
     /// Full training run with periodic eval + probes.
@@ -358,8 +406,30 @@ impl<'rt> Trainer<'rt> {
         };
         let mut loss_acc = 0f64;
         let mut loss_n = 0usize;
+        let steps_counter = self.rt.telemetry().filter(|r| r.enabled()).cloned();
         for t in 0..self.cfg.steps {
-            let loss = self.step(t)?;
+            let step_sw = Stopwatch::start();
+            let stats = self.step_stats(t)?;
+            let wall_s = step_sw.secs();
+            // trace bookkeeping happens OUTSIDE the timed region: wall_s
+            // measures the step itself, not the JSONL formatting
+            if let Some(reg) = &steps_counter {
+                reg.steps.inc();
+            }
+            if let Some(tracer) = self.tracer.as_mut() {
+                tracer.record(StepTrace {
+                    step: t as u64,
+                    seed: Self::step_seed(self.cfg.seed, t) as i64,
+                    loss: stats.loss,
+                    loss_plus: stats.loss_plus,
+                    loss_minus: stats.loss_minus,
+                    proj_grad: stats.proj_grad,
+                    cos_zm: stats.cos_zm,
+                    eta: self.cfg.eta as f64,
+                    wall_s,
+                })?;
+            }
+            let loss = stats.loss;
             loss_acc += loss;
             loss_n += 1;
             summary.final_loss = loss;
@@ -389,6 +459,9 @@ impl<'rt> Trainer<'rt> {
                     summary.cos2_curve.push((t + 1, probe.cos2(&self.params, m, &batch)?));
                 }
             }
+        }
+        if let Some(tracer) = self.tracer.as_mut() {
+            tracer.flush()?;
         }
         summary.wall_seconds = sw.secs();
         summary.steps_per_sec = self.cfg.steps as f64 / summary.wall_seconds.max(1e-9);

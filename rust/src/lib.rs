@@ -14,9 +14,11 @@
 //!
 //! On top of that sit the optimizer family (`optimizer`), the training
 //! orchestration and the O(1)-bytes/step distributed shared-randomness
-//! trainer (`coordinator`), plus every substrate the offline environment
-//! lacks (`util`, `config`, `cli`, `vecmath`, `net`, `checkpoint`,
-//! `bench`, `testing`).
+//! trainer (`coordinator`), the zero-overhead instrumentation layer
+//! (`telemetry`: per-`Runtime` metric registry, phase spans, step traces,
+//! cluster health), plus every substrate the offline environment lacks
+//! (`util`, `config`, `cli`, `vecmath`, `net`, `checkpoint`, `bench`,
+//! `testing`).
 //!
 //! Quick start (no artifacts needed): see `examples/quickstart.rs`.
 
@@ -43,6 +45,7 @@ pub mod objective;
 pub mod optimizer;
 pub mod parallel;
 pub mod runtime;
+pub mod telemetry;
 pub mod testing;
 pub mod util;
 pub mod vecmath;

@@ -27,6 +27,7 @@ fn app() -> App {
         .subcommand("pretrain", "build a pretrained checkpoint")
         .subcommand("leader", "host a distributed ZO run")
         .subcommand("worker", "join a distributed ZO run")
+        .subcommand("trace-summary", "summarize a --trace JSONL step trace")
         .subcommand("info", "print artifacts / platform info")
         .opt_default("backend", "auto", "execution backend (native|pjrt|auto)")
         .opt("threads", "native worker-pool size for GEMMs + attention (0 = all cores, clamped to available cores; precedence: --threads > runtime.threads > CONMEZO_THREADS > 1)")
@@ -55,6 +56,8 @@ fn app() -> App {
         .opt_default("max-strikes", "3", "leader: consecutive timeouts before dropping a straggler")
         .opt_default("hash-check-every", "100", "leader: divergence tripwire period in steps (0 = only after rejoins)")
         .opt("step-log", "leader: persist the per-step replay log here (rejoin substrate)")
+        .opt("trace", "stream one JSONL StepTrace record per step here (train/leader)")
+        .opt_default("metrics-every", "0", "leader: heartbeat-RTT + health line every N steps (0 = off)")
         .opt("ckpt", "worker: replica checkpoint path")
         .opt_default("ckpt-every", "0", "worker: checkpoint every N applied steps (0 = shutdown only)")
         .opt("die-at-step", "worker: fault injection - crash upon receiving Step N")
@@ -76,6 +79,7 @@ fn main() -> Result<()> {
         "pretrain" => cmd_pretrain(&p),
         "leader" => cmd_leader(&p),
         "worker" => cmd_worker(&p),
+        "trace-summary" => cmd_trace_summary(&p),
         "info" | "" => cmd_info(&p),
         other => bail!("unhandled subcommand {other}"),
     }
@@ -143,6 +147,9 @@ fn build_config(p: &conmezo::cli::Parsed) -> Result<(TrainConfig, String, Parall
     };
     if let Some(path) = p.value("init-from") {
         cfg.init_from = Some(path.into());
+    }
+    if let Some(path) = p.value("trace") {
+        cfg.trace = Some(path.into());
     }
     Ok((cfg, backend, policy))
 }
@@ -221,6 +228,8 @@ fn cmd_leader(p: &conmezo::cli::Parsed) -> Result<()> {
     cfg.max_strikes = p.usize_or("max-strikes", 3) as u32;
     cfg.hash_check_every = p.usize_or("hash-check-every", 100) as u64;
     cfg.step_log = p.value("step-log").map(|s| s.into());
+    cfg.metrics_every = p.usize_or("metrics-every", 0) as u64;
+    cfg.trace = p.value("trace").map(|s| s.into());
     // socket-level I/O bound: hung peers error out instead of blocking the
     // whole cluster (handshakes and sends included)
     let io_timeout = cfg.proj_timeout;
@@ -356,6 +365,59 @@ fn cmd_worker(p: &conmezo::cli::Parsed) -> Result<()> {
         }
     }
     println!("worker {id}: shutdown at t={} params_hash={:016x}", w.t, w.params_hash());
+    Ok(())
+}
+
+/// `conmezo trace-summary run.jsonl`: per-field percentiles of a step
+/// trace, rendered as an aligned table.
+fn cmd_trace_summary(p: &conmezo::cli::Parsed) -> Result<()> {
+    let path = match p.positional.first() {
+        Some(s) => Path::new(s),
+        None => bail!("usage: conmezo trace-summary <trace.jsonl>"),
+    };
+    let trace = conmezo::telemetry::read_trace(path)?;
+    if trace.is_empty() {
+        bail!("{}: no step records", path.display());
+    }
+    println!("{}: {} steps", path.display(), trace.len());
+
+    let fields: [(&str, fn(&conmezo::telemetry::StepTrace) -> f64); 6] = [
+        ("loss", |r| r.loss),
+        ("loss_plus", |r| r.loss_plus),
+        ("loss_minus", |r| r.loss_minus),
+        ("proj_grad", |r| r.proj_grad),
+        ("cos_zm", |r| r.cos_zm),
+        ("wall_ms", |r| r.wall_s * 1e3),
+    ];
+    let fmt = |v: f64| if v.is_nan() { "-".to_string() } else { format!("{v:.4}") };
+    let mut rows = Vec::new();
+    for (name, get) in fields {
+        // nulls on the wire parse back as NaN; summarize what's present
+        let xs: Vec<f64> = trace.iter().map(get).filter(|v| v.is_finite()).collect();
+        let (mean, _) = conmezo::util::mean_std(&xs);
+        rows.push(vec![
+            name.to_string(),
+            xs.len().to_string(),
+            fmt(mean),
+            fmt(conmezo::util::percentile(&xs, 50.0)),
+            fmt(conmezo::util::percentile(&xs, 90.0)),
+            fmt(conmezo::util::percentile(&xs, 99.0)),
+        ]);
+    }
+    print!(
+        "{}",
+        coordinator::metrics::render_table(&["field", "n", "mean", "p50", "p90", "p99"], &rows)
+    );
+    let first = trace.first().unwrap();
+    let last = trace.last().unwrap();
+    println!(
+        "steps {}..{}  eta={}  loss {} -> {}",
+        first.step,
+        last.step,
+        fmt(first.eta),
+        fmt(first.loss),
+        fmt(last.loss)
+    );
     Ok(())
 }
 

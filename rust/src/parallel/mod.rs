@@ -28,8 +28,11 @@
 //! Tasks must not dispatch onto the pool they run on (no nesting); the
 //! kernels never do.
 
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use crate::telemetry::Registry;
 
 /// A dispatched parallel-for: a type-erased pointer to the caller's
 /// closure plus the chunk geometry. The caller blocks inside
@@ -66,6 +69,15 @@ struct Shared {
     done: Condvar,
     /// a worker task panicked (re-raised on the calling thread)
     panicked: AtomicBool,
+    /// instrumentation registry shared with the owning `Runtime` (`None`
+    /// for bare pools, e.g. a model's default sequential pool) — recording
+    /// is timing-only and never changes what a dispatch computes
+    telemetry: Option<Arc<Registry>>,
+    /// registry-clock timestamp of the most recent dispatch; woken
+    /// participants subtract it from "now" to measure queue wait. Written
+    /// before the epoch bump under the state mutex, so the release/acquire
+    /// pair of the mutex publishes it to every woken worker.
+    dispatch_start_ns: AtomicU64,
 }
 
 /// A persistent pool of `threads - 1` OS workers plus the calling thread.
@@ -123,6 +135,14 @@ fn worker_loop(shared: Arc<Shared>, participant: usize) {
         // goes straight back to sleep without touching the ack barrier, so
         // narrow dispatches on a wide pool never wait on idle workers
         if participant < job.parts {
+            let tel = shared.telemetry.as_deref().filter(|r| r.enabled());
+            let t0 = tel.map(|r| {
+                r.pool_queue_wait.record_ns(
+                    r.now_ns()
+                        .saturating_sub(shared.dispatch_start_ns.load(Ordering::Relaxed)),
+                );
+                Instant::now()
+            });
             let ran = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                 let mut c = participant;
                 while c < job.chunks {
@@ -132,6 +152,18 @@ fn worker_loop(shared: Arc<Shared>, participant: usize) {
             }));
             if ran.is_err() {
                 shared.panicked.store(true, Ordering::SeqCst);
+            }
+            if let (Some(r), Some(t0)) = (tel, t0) {
+                // recorded before the ack below: the state mutex then
+                // publishes these stores to the caller's imbalance read
+                let busy = t0.elapsed().as_nanos() as u64;
+                r.pool_compute.record_ns(busy);
+                if let Some(slot) = r.pool_busy_ns.get(participant) {
+                    slot.fetch_add(busy, Ordering::Relaxed);
+                }
+                if let Some(slot) = r.pool_last_busy_ns.get(participant) {
+                    slot.store(busy, Ordering::Relaxed);
+                }
             }
             let mut st = lock(&shared.state);
             st.outstanding -= 1;
@@ -150,6 +182,12 @@ impl WorkerPool {
     /// [`WorkerPool::run`], so caller-computed chunks always share the
     /// workers' float mode no matter which thread dispatches.
     pub fn new(threads: usize) -> WorkerPool {
+        WorkerPool::with_telemetry(threads, None)
+    }
+
+    /// Like [`WorkerPool::new`], reporting dispatch/queue-wait/compute
+    /// timing into `telemetry` (sized for at least `threads` participants).
+    pub fn with_telemetry(threads: usize, telemetry: Option<Arc<Registry>>) -> WorkerPool {
         crate::runtime::enable_flush_to_zero();
         let threads = threads.max(1);
         let shared = Arc::new(Shared {
@@ -157,6 +195,8 @@ impl WorkerPool {
             work: Condvar::new(),
             done: Condvar::new(),
             panicked: AtomicBool::new(false),
+            telemetry,
+            dispatch_start_ns: AtomicU64::new(0),
         });
         let mut handles = Vec::with_capacity(threads - 1);
         let spawned = AtomicUsize::new(0);
@@ -193,6 +233,20 @@ impl WorkerPool {
         self.spawned.load(Ordering::SeqCst)
     }
 
+    /// The instrumentation registry this pool reports into (shared with
+    /// the owning `Runtime`), if any. Kernel call sites use this to time
+    /// GEMM/attention spans without threading a registry through every
+    /// signature.
+    pub fn telemetry(&self) -> Option<&Registry> {
+        self.shared.telemetry.as_deref()
+    }
+
+    /// Owned handle to the registry — for contexts that cannot hold a
+    /// borrow of the pool across `&mut self` calls (e.g. session `execute`).
+    pub fn telemetry_arc(&self) -> Option<Arc<Registry>> {
+        self.shared.telemetry.clone()
+    }
+
     /// Deterministic parallel-for over `chunks` chunks using `parts`
     /// participants (`parts` must be <= [`WorkerPool::threads`]): `task(c)`
     /// runs exactly once per chunk, chunk `c` on participant `c % parts`,
@@ -212,9 +266,24 @@ impl WorkerPool {
             "pool dispatch with {parts} participants on a {}-thread pool",
             self.threads
         );
+        let tel = self.shared.telemetry.as_deref().filter(|r| r.enabled());
         if parts <= 1 || self.handles.is_empty() {
+            let t0 = tel.map(|r| {
+                r.pool_dispatches.inc();
+                Instant::now()
+            });
             for c in 0..chunks {
                 task(c);
+            }
+            if let (Some(r), Some(t0)) = (tel, t0) {
+                let busy = t0.elapsed().as_nanos() as u64;
+                r.pool_compute.record_ns(busy);
+                if let Some(slot) = r.pool_busy_ns.first() {
+                    slot.fetch_add(busy, Ordering::Relaxed);
+                }
+                if let Some(slot) = r.pool_last_busy_ns.first() {
+                    slot.store(busy, Ordering::Relaxed);
+                }
             }
             return;
         }
@@ -230,6 +299,10 @@ impl WorkerPool {
         let _dispatch = lock(&self.run_lock);
         {
             let mut st = lock(&self.shared.state);
+            if let Some(r) = tel {
+                r.pool_dispatches.inc();
+                self.shared.dispatch_start_ns.store(r.now_ns(), Ordering::Relaxed);
+            }
             st.job = Some(job);
             st.epoch += 1;
             // only participants join the completion barrier (workers are
@@ -240,6 +313,7 @@ impl WorkerPool {
         // participant 0: the caller computes its own chunk stride while the
         // workers run theirs. A caller-side panic is deferred until every
         // worker finished — the job borrows this stack frame.
+        let t0 = tel.map(|_| Instant::now());
         let caller = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             let mut c = 0usize;
             while c < chunks {
@@ -247,12 +321,36 @@ impl WorkerPool {
                 c += parts;
             }
         }));
+        if let (Some(r), Some(t0)) = (tel, t0) {
+            let busy = t0.elapsed().as_nanos() as u64;
+            r.pool_compute.record_ns(busy);
+            if let Some(slot) = r.pool_busy_ns.first() {
+                slot.fetch_add(busy, Ordering::Relaxed);
+            }
+            if let Some(slot) = r.pool_last_busy_ns.first() {
+                slot.store(busy, Ordering::Relaxed);
+            }
+        }
         let mut st = lock(&self.shared.state);
         while st.outstanding != 0 {
             st = self.shared.done.wait(st).unwrap_or_else(|e| e.into_inner());
         }
         st.job = None;
         drop(st);
+        // every participant's last-dispatch busy time is visible now (the
+        // workers store before their ack; the state mutex publishes it):
+        // gauge the dispatch balance as max/mean over participants
+        if let Some(r) = tel {
+            let (mut max, mut sum) = (0u64, 0u64);
+            for slot in r.pool_last_busy_ns.iter().take(parts) {
+                let b = slot.load(Ordering::Relaxed);
+                max = max.max(b);
+                sum += b;
+            }
+            if sum > 0 {
+                r.pool_imbalance.set(max as f64 * parts as f64 / sum as f64);
+            }
+        }
         // clear the worker-panic flag BEFORE re-raising a caller-side
         // panic, so a failed dispatch can never leak a stale flag into the
         // next (clean) one
@@ -405,6 +503,41 @@ mod tests {
                 panic!("boom");
             }
         });
+    }
+
+    #[test]
+    fn telemetry_records_dispatches_and_participant_busy_time() {
+        let reg = Arc::new(Registry::with_capacity(3, 16));
+        let pool = WorkerPool::with_telemetry(3, Some(reg.clone()));
+        assert_eq!(pool.os_threads_spawned(), 2, "telemetry must not change spawning");
+        assert!(pool.telemetry().is_some());
+        for _ in 0..4 {
+            pool.run(3, 6, &|_| {
+                std::thread::sleep(std::time::Duration::from_micros(100));
+            });
+        }
+        assert_eq!(reg.pool_dispatches.get(), 4);
+        // caller + 2 workers time their chunk strides on every dispatch
+        assert_eq!(reg.pool_compute.count(), 12);
+        assert_eq!(reg.pool_queue_wait.count(), 8, "only woken workers have queue wait");
+        for p in 0..3 {
+            assert!(
+                reg.pool_busy_ns[p].load(Ordering::Relaxed) > 0,
+                "participant {p} never recorded busy time"
+            );
+        }
+        let imb = reg.pool_imbalance.get();
+        assert!(imb >= 1.0, "max/mean imbalance below 1: {imb}");
+        // narrow (inline) dispatches count too, attributed to the caller
+        let before = reg.pool_busy_ns[0].load(Ordering::Relaxed);
+        pool.run(1, 4, &|_| {});
+        assert_eq!(reg.pool_dispatches.get(), 5);
+        assert!(reg.pool_busy_ns[0].load(Ordering::Relaxed) >= before);
+        // the enabled flag gates recording without rebuilding the pool
+        reg.set_enabled(false);
+        pool.run(3, 6, &|_| {});
+        assert_eq!(reg.pool_dispatches.get(), 5, "disabled registry still recorded");
+        reg.set_enabled(true);
     }
 
     #[test]

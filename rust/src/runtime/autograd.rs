@@ -271,6 +271,7 @@ pub fn loss_and_grad_ws(
             let dqkv_ptr = SendPtr(dqkv.as_mut_ptr());
             let dw_ptr = SendPtr(dw_seg.as_mut_ptr());
             let dsc_ptr = SendPtr(dscore.as_mut_ptr());
+            let _att_t = pool.telemetry().and_then(|r| r.timer(&r.attention));
             pool.run(att_parts, b * h, &|task| {
                 let i = task / h;
                 let head = task % h;

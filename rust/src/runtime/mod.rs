@@ -341,6 +341,11 @@ pub trait Backend {
     fn manifest(&self) -> &Manifest;
     /// Bind one program into a reusable [`Session`] owning its workspaces.
     fn bind(&self, spec: &ProgramSpec) -> Result<Box<dyn Session>>;
+    /// The backend's telemetry registry, shared by every session it binds
+    /// (`None` for backends without instrumentation, e.g. PJRT).
+    fn telemetry(&self) -> Option<&std::sync::Arc<crate::telemetry::Registry>> {
+        None
+    }
 }
 
 /// Compat shim over the session API: the old `load`/`call` surface. Holds
@@ -472,6 +477,13 @@ impl Runtime {
 
     pub fn manifest(&self) -> &Manifest {
         self.backend.manifest()
+    }
+
+    /// The backend's telemetry registry (one per `Runtime`; every bound
+    /// session and the pool report into it). `None` on backends without
+    /// instrumentation.
+    pub fn telemetry(&self) -> Option<&std::sync::Arc<crate::telemetry::Registry>> {
+        self.backend.telemetry()
     }
 
     /// Bind a program by manifest name into a fresh [`Session`] owning its

@@ -79,6 +79,10 @@ pub struct NativeBackend {
     /// shared by every bound session's model — workers spawn here once and
     /// serve all GEMM/attention dispatches forever.
     pool: Arc<WorkerPool>,
+    /// ONE telemetry registry per backend, shared by the pool and every
+    /// bound session (sessions reach it through their model's pool handle,
+    /// so a rebind reuses the same instruments).
+    telemetry: Arc<crate::telemetry::Registry>,
 }
 
 impl NativeBackend {
@@ -134,8 +138,18 @@ impl NativeBackend {
             }
             preset_map.insert(meta.name.clone(), meta);
         }
-        let pool = Arc::new(WorkerPool::new(policy.threads));
-        NativeBackend { manifest: Manifest { programs, presets: preset_map }, policy, pool }
+        // registry first, pool second: the pool reports dispatch timing
+        // into the registry it is constructed with, and both live as long
+        // as the backend (telemetry is preallocated here so instrumented
+        // steady-state run()/two_point() never allocates)
+        let telemetry = Arc::new(crate::telemetry::Registry::new(policy.threads));
+        let pool = Arc::new(WorkerPool::with_telemetry(policy.threads, Some(telemetry.clone())));
+        NativeBackend {
+            manifest: Manifest { programs, presets: preset_map },
+            policy,
+            pool,
+            telemetry,
+        }
     }
 }
 
@@ -152,6 +166,10 @@ impl Backend for NativeBackend {
 
     fn manifest(&self) -> &Manifest {
         &self.manifest
+    }
+
+    fn telemetry(&self) -> Option<&Arc<crate::telemetry::Registry>> {
+        Some(&self.telemetry)
     }
 
     fn bind(&self, spec: &ProgramSpec) -> Result<Box<dyn Session>> {
@@ -337,6 +355,10 @@ pub struct NativeSession {
     z: Vec<f32>,
     /// reusable output slots, sized once from the manifest signature
     outs: Vec<Value>,
+    /// the backend's telemetry registry, resolved once at bind time (owned
+    /// handle: phase timers must not hold a borrow of the model across the
+    /// `&mut self` execute body)
+    tel: Option<Arc<crate::telemetry::Registry>>,
 }
 
 /// Output buffer size by manifest output name.
@@ -394,6 +416,7 @@ impl NativeSession {
         let fwd = needs_fwd.then(|| model.scratch());
         let grad = needs_grad.then(|| GradWorkspace::for_model(&model));
         let outs: Vec<Value> = spec.outputs.iter().map(|name| out_slot(meta, name)).collect();
+        let tel = model.telemetry_arc();
         NativeSession {
             spec,
             fwd,
@@ -401,6 +424,7 @@ impl NativeSession {
             u: vec![0.0; if needs_u { d } else { 0 }],
             z: vec![0.0; if needs_z { d } else { 0 }],
             outs,
+            tel,
             model,
         }
     }
@@ -408,6 +432,14 @@ impl NativeSession {
     fn execute(&mut self, args: &[Arg<'_>]) -> Result<()> {
         let (b, s) = (self.model.meta.batch, self.model.meta.seq_len);
         let d_raw = self.model.meta.d_raw;
+        let tel = self.tel.as_deref().filter(|r| r.enabled());
+        // one span covering the whole fused step (sampling + both forwards
+        // + the parameter/momentum update); drops when execute returns
+        let _step_span = match self.spec.kind.as_str() {
+            "conmezo_step" | "mezo_step" | "mezo_momentum_step" | "fo_sgd_step"
+            | "fo_adamw_step" => tel.and_then(|r| r.span("fused_step", Some(&r.fused_step))),
+            _ => None,
+        };
         match self.spec.kind.as_str() {
             "init" => {
                 let seed = arg_i32(&args[0], "seed")?;
@@ -421,10 +453,13 @@ impl NativeSession {
                 let params = arg_f32s(&args[0], "params")?;
                 let (ids, tgt, mask) = batch_at(args, 1)?;
                 let fwd = self.fwd.as_mut().expect("loss session owns forward scratch");
-                let l = if self.spec.kind == "loss_pallas" {
-                    self.model.loss_pallas_with(params, ids, tgt, mask, b, s, fwd)
-                } else {
-                    self.model.loss_with(params, ids, tgt, mask, b, s, fwd)
+                let l = {
+                    let _t = tel.and_then(|r| r.span("forward", Some(&r.forward)));
+                    if self.spec.kind == "loss_pallas" {
+                        self.model.loss_pallas_with(params, ids, tgt, mask, b, s, fwd)
+                    } else {
+                        self.model.loss_with(params, ids, tgt, mask, b, s, fwd)
+                    }
                 };
                 f32_mut(&mut self.outs[0])[0] = l;
             }
@@ -433,16 +468,19 @@ impl NativeSession {
                 let z = arg_f32s(&args[1], "z")?;
                 let lam = arg_f32(&args[2], "lam")?;
                 let (ids, tgt, mask) = batch_at(args, 3)?;
-                let (lp, lm) = pair_losses(
-                    &self.model,
-                    self.fwd.as_mut().expect("two_point session owns forward scratch"),
-                    params,
-                    z,
-                    lam,
-                    ids,
-                    tgt,
-                    mask,
-                );
+                let (lp, lm) = {
+                    let _t = tel.and_then(|r| r.span("forward", Some(&r.forward)));
+                    pair_losses(
+                        &self.model,
+                        self.fwd.as_mut().expect("two_point session owns forward scratch"),
+                        params,
+                        z,
+                        lam,
+                        ids,
+                        tgt,
+                        mask,
+                    )
+                };
                 f32_mut(&mut self.outs[0])[0] = lp;
                 f32_mut(&mut self.outs[1])[0] = lm;
             }
@@ -464,16 +502,19 @@ impl NativeSession {
                 let (ids, tgt, mask) = batch_at(args, 7)?;
                 self.model.sample_u_into(seed, &mut self.u);
                 vecmath::cone_direction(m_in, &self.u, theta, d_raw, &mut self.z);
-                let (lp, lm) = pair_losses(
-                    &self.model,
-                    self.fwd.as_mut().expect("step session owns forward scratch"),
-                    params,
-                    &self.z,
-                    lam,
-                    ids,
-                    tgt,
-                    mask,
-                );
+                let (lp, lm) = {
+                    let _t = tel.and_then(|r| r.span("forward", Some(&r.forward)));
+                    pair_losses(
+                        &self.model,
+                        self.fwd.as_mut().expect("step session owns forward scratch"),
+                        params,
+                        &self.z,
+                        lam,
+                        ids,
+                        tgt,
+                        mask,
+                    )
+                };
                 let g = ((lp as f64 - lm as f64) / (2.0 * lam as f64)) as f32;
                 let [o_x, o_m, o_lp, o_lm, o_g] = &mut self.outs[..] else {
                     unreachable!("conmezo_step has 5 outputs")
@@ -494,16 +535,19 @@ impl NativeSession {
                 let lam = arg_f32(&args[3], "lam")?;
                 let (ids, tgt, mask) = batch_at(args, 4)?;
                 self.model.sample_u_into(seed, &mut self.u);
-                let (lp, lm) = pair_losses(
-                    &self.model,
-                    self.fwd.as_mut().expect("step session owns forward scratch"),
-                    params,
-                    &self.u,
-                    lam,
-                    ids,
-                    tgt,
-                    mask,
-                );
+                let (lp, lm) = {
+                    let _t = tel.and_then(|r| r.span("forward", Some(&r.forward)));
+                    pair_losses(
+                        &self.model,
+                        self.fwd.as_mut().expect("step session owns forward scratch"),
+                        params,
+                        &self.u,
+                        lam,
+                        ids,
+                        tgt,
+                        mask,
+                    )
+                };
                 let g = ((lp as f64 - lm as f64) / (2.0 * lam as f64)) as f32;
                 let [o_x, o_lp, o_lm, o_g] = &mut self.outs[..] else {
                     unreachable!("mezo_step has 4 outputs")
@@ -522,16 +566,19 @@ impl NativeSession {
                 let lam = arg_f32(&args[5], "lam")?;
                 let (ids, tgt, mask) = batch_at(args, 6)?;
                 self.model.sample_u_into(seed, &mut self.u);
-                let (lp, lm) = pair_losses(
-                    &self.model,
-                    self.fwd.as_mut().expect("step session owns forward scratch"),
-                    params,
-                    &self.u,
-                    lam,
-                    ids,
-                    tgt,
-                    mask,
-                );
+                let (lp, lm) = {
+                    let _t = tel.and_then(|r| r.span("forward", Some(&r.forward)));
+                    pair_losses(
+                        &self.model,
+                        self.fwd.as_mut().expect("step session owns forward scratch"),
+                        params,
+                        &self.u,
+                        lam,
+                        ids,
+                        tgt,
+                        mask,
+                    )
+                };
                 let g = ((lp as f64 - lm as f64) / (2.0 * lam as f64)) as f32;
                 // m' = beta m + (1-beta) g u ; x' = x - eta m'
                 // (same float ops as vecmath::zo_update's momentum pass)
@@ -554,8 +601,10 @@ impl NativeSession {
                 let (ids, tgt, mask) = batch_at(args, 2)?;
                 let fwd = self.fwd.as_mut().expect("fo session owns forward scratch");
                 let gw = self.grad.as_mut().expect("fo session owns grad workspace");
-                let loss =
-                    autograd::loss_and_grad_ws(&self.model, params, ids, tgt, mask, b, s, fwd, gw);
+                let loss = {
+                    let _t = tel.and_then(|r| r.span("backward", Some(&r.backward)));
+                    autograd::loss_and_grad_ws(&self.model, params, ids, tgt, mask, b, s, fwd, gw)
+                };
                 let [o_x, o_loss] = &mut self.outs[..] else {
                     unreachable!("fo_sgd_step has 2 outputs")
                 };
@@ -571,8 +620,10 @@ impl NativeSession {
                 let (ids, tgt, mask) = batch_at(args, 5)?;
                 let fwd = self.fwd.as_mut().expect("fo session owns forward scratch");
                 let gw = self.grad.as_mut().expect("fo session owns grad workspace");
-                let loss =
-                    autograd::loss_and_grad_ws(&self.model, params, ids, tgt, mask, b, s, fwd, gw);
+                let loss = {
+                    let _t = tel.and_then(|r| r.span("backward", Some(&r.backward)));
+                    autograd::loss_and_grad_ws(&self.model, params, ids, tgt, mask, b, s, fwd, gw)
+                };
                 // AdamW with bias correction, t the 1-based step counter
                 // (same float ops as python/compile/steps.py::fo_adamw_step)
                 let bc1 = 1.0 - ADAM_B1.powf(t);
@@ -600,8 +651,10 @@ impl NativeSession {
                 let (ids, tgt, mask) = batch_at(args, 2)?;
                 let fwd = self.fwd.as_mut().expect("probe session owns forward scratch");
                 let gw = self.grad.as_mut().expect("probe session owns grad workspace");
-                let loss =
-                    autograd::loss_and_grad_ws(&self.model, params, ids, tgt, mask, b, s, fwd, gw);
+                let loss = {
+                    let _t = tel.and_then(|r| r.span("backward", Some(&r.backward)));
+                    autograd::loss_and_grad_ws(&self.model, params, ids, tgt, mask, b, s, fwd, gw)
+                };
                 let c = vecmath::cos2(m_in, &gw.grad) as f32;
                 f32_mut(&mut self.outs[0])[0] = c;
                 f32_mut(&mut self.outs[1])[0] = loss;
@@ -619,7 +672,14 @@ impl Session for NativeSession {
 
     fn run(&mut self, args: &[Arg<'_>]) -> Result<&[Value]> {
         validate_args(&self.spec, args)?;
+        let t0 = match self.tel.as_deref() {
+            Some(r) if r.enabled() => Some(std::time::Instant::now()),
+            _ => None,
+        };
         self.execute(args)?;
+        if let (Some(r), Some(t0)) = (self.tel.as_deref(), t0) {
+            r.run_latency.observe(t0.elapsed());
+        }
         Ok(&self.outs)
     }
 
@@ -651,16 +711,24 @@ impl Session for NativeSession {
         if ids.len() != r || targets.len() != r || mask.len() != r {
             bail!("{}: two_point batch must have {r} tokens", self.spec.name);
         }
-        let (lp, lm) = pair_losses(
-            &self.model,
-            self.fwd.as_mut().expect("two_point session owns forward scratch"),
-            x,
-            z,
-            lam,
-            ids,
-            targets,
-            mask,
-        );
+        let tel = self.tel.as_deref().filter(|t| t.enabled());
+        let t0 = tel.map(|_| std::time::Instant::now());
+        let (lp, lm) = {
+            let _t = tel.and_then(|t| t.span("forward", Some(&t.forward)));
+            pair_losses(
+                &self.model,
+                self.fwd.as_mut().expect("two_point session owns forward scratch"),
+                x,
+                z,
+                lam,
+                ids,
+                targets,
+                mask,
+            )
+        };
+        if let (Some(t), Some(t0)) = (tel, t0) {
+            t.run_latency.observe(t0.elapsed());
+        }
         f32_mut(&mut self.outs[0])[0] = lp;
         f32_mut(&mut self.outs[1])[0] = lm;
         Ok((lp as f64, lm as f64))
@@ -917,6 +985,78 @@ mod tests {
             spawned,
             "steady-state run()/two_point() must never spawn threads"
         );
+    }
+
+    #[test]
+    fn telemetry_registry_is_shared_across_rebinds() {
+        // ONE registry per Runtime: the worker pool and every bound session
+        // record into the same preallocated instruments, and rebinding a
+        // session accumulates instead of resetting
+        let meta = thr_preset();
+        let (ids, tgt, mask) = thr_batch(&meta);
+        let be = NativeBackend::with_presets_policy(vec![meta], ParallelPolicy { threads: 2 });
+        let pool = be.pool_handle();
+        let rt = Runtime::from_backend(Box::new(be));
+        let reg = rt.telemetry().expect("native backend always carries a registry").clone();
+        assert!(
+            std::sync::Arc::ptr_eq(&reg, &pool.telemetry_arc().unwrap()),
+            "pool must share the runtime's registry"
+        );
+
+        let mut init = rt.bind_kind("thr", "init").unwrap();
+        let params = lit_vec_f32(&init.run(&[Arg::I32(4)]).unwrap()[0]).unwrap();
+        let mut sample = rt.bind_kind("thr", "sample_u").unwrap();
+        let z = lit_vec_f32(&sample.run(&[Arg::I32(5)]).unwrap()[0]).unwrap();
+
+        let mut s1 = rt.bind_kind("thr", "two_point").unwrap();
+        s1.two_point(&params, &z, 1e-3, &ids, &tgt, &mask).unwrap();
+        let after_first = reg.run_latency.count();
+        assert!(after_first >= 1, "session runs must land in run_latency");
+        assert!(reg.gemm.count() > 0, "pooled GEMMs must land in the gemm histogram");
+        drop(s1);
+        let mut s2 = rt.bind_kind("thr", "two_point").unwrap();
+        s2.two_point(&params, &z, 1e-3, &ids, &tgt, &mask).unwrap();
+        assert!(
+            reg.run_latency.count() > after_first,
+            "a rebound session must accumulate into the SAME registry"
+        );
+    }
+
+    #[test]
+    fn steady_state_telemetry_is_allocation_free() {
+        // the tentpole's headline contract: with telemetry ENABLED (the
+        // default), steady-state two_point() neither spawns threads nor
+        // reallocates — output slots are pinned by
+        // planned_session_reuses_pool_and_output_slots; here the span ring
+        // and pool stay at the same addresses while the instruments
+        // demonstrably keep recording
+        let meta = thr_preset();
+        let (ids, tgt, mask) = thr_batch(&meta);
+        let be = NativeBackend::with_presets_policy(vec![meta], ParallelPolicy { threads: 3 });
+        let pool = be.pool_handle();
+        let rt = Runtime::from_backend(Box::new(be));
+        let reg = rt.telemetry().unwrap().clone();
+        assert!(reg.enabled(), "telemetry is on by default");
+
+        let mut init = rt.bind_kind("thr", "init").unwrap();
+        let params = lit_vec_f32(&init.run(&[Arg::I32(4)]).unwrap()[0]).unwrap();
+        let mut sample = rt.bind_kind("thr", "sample_u").unwrap();
+        let z = lit_vec_f32(&sample.run(&[Arg::I32(5)]).unwrap()[0]).unwrap();
+        let mut sess = rt.bind_kind("thr", "two_point").unwrap();
+
+        // warm-up: the first call settles pool workers and ring entries
+        let first = sess.two_point(&params, &z, 1e-3, &ids, &tgt, &mask).unwrap();
+        let spawned = pool.os_threads_spawned();
+        let ring_ptr = reg.spans.buf_ptr();
+        let n0 = reg.run_latency.count();
+        for _ in 0..16 {
+            assert_eq!(sess.two_point(&params, &z, 1e-3, &ids, &tgt, &mask).unwrap(), first);
+        }
+        assert_eq!(reg.run_latency.count(), n0 + 16, "every call must be measured");
+        assert_eq!(pool.os_threads_spawned(), spawned, "recording must not spawn threads");
+        assert_eq!(reg.spans.buf_ptr(), ring_ptr, "span ring must never reallocate");
+        assert!(!reg.spans.is_empty() && reg.spans.len() <= reg.spans.capacity());
+        assert!(reg.pool_dispatches.get() > 0);
     }
 
     #[test]

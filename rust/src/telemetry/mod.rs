@@ -1,0 +1,808 @@
+//! Zero-overhead telemetry: hot-path metrics, step traces, phase spans.
+//!
+//! Every primitive here is a plain struct over `std::sync::atomic` — no
+//! dependencies, no locks on the recording path (the span ring takes an
+//! uncontended `Mutex` only on the single-threaded session driver), and
+//! **no steady-state allocation**: the [`Registry`] and its histograms,
+//! per-participant slots, and span ring are fully preallocated when the
+//! backend is constructed, so instrumented `run()`/`two_point()` calls
+//! stay allocation-free (pinned by the pointer-stability tests in
+//! `runtime::native`). The measured cost of leaving telemetry on is
+//! pinned <1% by the `telemetry` section of `BENCH_native.json`
+//! (`benches/step_latency.rs`, asserted in CI bench-smoke).
+//!
+//! Four layers of the stack report into one registry per `Runtime`:
+//!
+//! 1. **kernels/pool** (`parallel`, `vecmath`, `runtime::model`) —
+//!    per-dispatch queue-wait vs compute time per participant, a
+//!    worker-imbalance gauge, and GEMM / attention span histograms;
+//! 2. **session** (`runtime::native`) — `run`/`two_point` latency split
+//!    into forward / backward / fused-step phases (also recorded as
+//!    [`Span`]s in the ring for timeline reconstruction);
+//! 3. **trainer** (`coordinator::trainer`) — a per-step [`StepTrace`]
+//!    record streamed to an optional `--trace out.jsonl` file through a
+//!    buffered writer flushed *outside* the timed region;
+//! 4. **cluster** (`coordinator::cluster`) — leader-side per-worker RTT
+//!    (over the protocol's `Heartbeat` frame), timeout/strike/skip
+//!    counters, and replay/wire/control byte counters, surfaced by the
+//!    leader's periodic `--metrics-every N` health line.
+//!
+//! `conmezo trace-summary <file>` renders percentiles of a recorded
+//! trace via `coordinator::metrics::render_table`.
+//!
+//! All counters use `Ordering::Relaxed`: telemetry reads are statistical,
+//! never synchronizing.
+
+use std::io::Write as _;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::util::error::{anyhow, Result};
+use crate::util::json::Json;
+
+// ---------------------------------------------------------------------------
+// scalar primitives
+// ---------------------------------------------------------------------------
+
+/// Monotonic event counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub const fn new() -> Counter {
+        Counter(AtomicU64::new(0))
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+
+    pub fn reset(&self) {
+        self.0.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Last-value gauge (an `f64` stored as its bit pattern).
+#[derive(Debug)]
+pub struct Gauge(AtomicU64);
+
+impl Default for Gauge {
+    fn default() -> Gauge {
+        Gauge::new()
+    }
+}
+
+impl Gauge {
+    pub const fn new() -> Gauge {
+        Gauge(AtomicU64::new(0x7ff8_0000_0000_0000)) // NaN: "never set"
+    }
+
+    #[inline]
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// histogram
+// ---------------------------------------------------------------------------
+
+/// Fixed-bucket latency histogram in nanoseconds.
+///
+/// Bucket upper bounds are fixed at construction (no allocation on
+/// `record_ns`); values above the last bound land in an overflow bucket.
+/// Percentiles are bucket-upper-bound estimates — coarse by design, cheap
+/// enough to read from a health loop.
+#[derive(Debug)]
+pub struct Histogram {
+    bounds: Vec<u64>,
+    counts: Vec<AtomicU64>, // bounds.len() + 1 (overflow)
+    sum_ns: AtomicU64,
+    n: AtomicU64,
+}
+
+impl Histogram {
+    /// Exponential buckets: `first, first*factor, first*factor^2, ...`.
+    pub fn exponential_ns(first: u64, factor: u64, buckets: usize) -> Histogram {
+        let mut bounds = Vec::with_capacity(buckets);
+        let mut b = first.max(1);
+        for _ in 0..buckets {
+            bounds.push(b);
+            b = b.saturating_mul(factor.max(2));
+        }
+        let counts = (0..bounds.len() + 1).map(|_| AtomicU64::new(0)).collect();
+        Histogram { bounds, counts, sum_ns: AtomicU64::new(0), n: AtomicU64::new(0) }
+    }
+
+    /// The default latency layout: 1 µs .. ~2 s in powers of two.
+    pub fn default_ns() -> Histogram {
+        Histogram::exponential_ns(1_000, 2, 22)
+    }
+
+    #[inline]
+    pub fn record_ns(&self, ns: u64) {
+        // first bucket whose bound is >= ns (linear scan: ~22 u64 compares)
+        let mut i = self.bounds.len();
+        for (k, &b) in self.bounds.iter().enumerate() {
+            if ns <= b {
+                i = k;
+                break;
+            }
+        }
+        self.counts[i].fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        self.n.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn observe(&self, d: Duration) {
+        self.record_ns(d.as_nanos() as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n.load(Ordering::Relaxed)
+    }
+
+    pub fn sum_ns(&self) -> u64 {
+        self.sum_ns.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            f64::NAN
+        } else {
+            self.sum_ns() as f64 / n as f64
+        }
+    }
+
+    /// Nearest-rank percentile estimate (upper bound of the bucket holding
+    /// the rank); `p` in [0, 100]. Returns 0 when empty.
+    pub fn percentile_ns(&self, p: f64) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        let rank = ((p / 100.0) * n as f64).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            cum += c.load(Ordering::Relaxed);
+            if cum >= rank {
+                return if i < self.bounds.len() {
+                    self.bounds[i]
+                } else {
+                    // overflow bucket: no upper bound; report the mean of
+                    // what actually landed there is unknowable, use 2x last
+                    self.bounds.last().copied().unwrap_or(u64::MAX).saturating_mul(2)
+                };
+            }
+        }
+        self.bounds.last().copied().unwrap_or(0)
+    }
+
+    pub fn reset(&self) {
+        for c in &self.counts {
+            c.store(0, Ordering::Relaxed);
+        }
+        self.sum_ns.store(0, Ordering::Relaxed);
+        self.n.store(0, Ordering::Relaxed);
+    }
+
+    /// (upper_bound_ns, count) per bucket; the overflow bucket reports
+    /// `u64::MAX` as its bound.
+    pub fn buckets(&self) -> impl Iterator<Item = (u64, u64)> + '_ {
+        self.counts.iter().enumerate().map(move |(i, c)| {
+            let bound = self.bounds.get(i).copied().unwrap_or(u64::MAX);
+            (bound, c.load(Ordering::Relaxed))
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// span ring
+// ---------------------------------------------------------------------------
+
+/// One timed phase: label + offset from the registry epoch + duration.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Span {
+    pub label: &'static str,
+    pub start_ns: u64,
+    pub dur_ns: u64,
+}
+
+/// Preallocated ring buffer of [`Span`]s, drop-oldest on wrap.
+///
+/// The backing `Vec` is allocated once at construction and never regrows
+/// (pinned by `ring_buffer_wraps_without_reallocating`); `push` is a
+/// short uncontended mutex hold on the session driver thread.
+#[derive(Debug)]
+pub struct SpanRing {
+    inner: Mutex<RingInner>,
+    cap: usize,
+}
+
+#[derive(Debug)]
+struct RingInner {
+    buf: Vec<Span>,
+    /// next write index once the buffer is full (oldest element)
+    next: usize,
+}
+
+impl SpanRing {
+    pub fn new(cap: usize) -> SpanRing {
+        let cap = cap.max(1);
+        SpanRing { inner: Mutex::new(RingInner { buf: Vec::with_capacity(cap), next: 0 }), cap }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().map(|r| r.buf.len()).unwrap_or(0)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn push(&self, s: Span) {
+        if let Ok(mut r) = self.inner.lock() {
+            if r.buf.len() < self.cap {
+                r.buf.push(s);
+            } else {
+                let i = r.next;
+                r.buf[i] = s;
+                r.next = (i + 1) % self.cap;
+            }
+        }
+    }
+
+    /// Copy the ring contents, oldest first, into `out` (cleared first).
+    pub fn snapshot(&self, out: &mut Vec<Span>) {
+        out.clear();
+        if let Ok(r) = self.inner.lock() {
+            if r.buf.len() == self.cap {
+                out.extend_from_slice(&r.buf[r.next..]);
+                out.extend_from_slice(&r.buf[..r.next]);
+            } else {
+                out.extend_from_slice(&r.buf);
+            }
+        }
+    }
+
+    /// Address of the backing buffer — lets tests pin that wraparound never
+    /// reallocates.
+    pub fn buf_ptr(&self) -> *const Span {
+        self.inner.lock().map(|r| r.buf.as_ptr()).unwrap_or(std::ptr::null())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// registry + scoped timers
+// ---------------------------------------------------------------------------
+
+/// All instruments for one `Runtime` (shared `Arc` across the backend, its
+/// `WorkerPool`, every bound session, and the trainer/cluster driving it).
+///
+/// Construction preallocates everything; recording is atomics only. The
+/// `enabled` flag gates every record site so the measured-overhead bench
+/// can toggle instrumentation without rebinding.
+#[derive(Debug)]
+pub struct Registry {
+    enabled: AtomicBool,
+    epoch: Instant,
+
+    // -- pool (parallel::WorkerPool) --
+    pub pool_dispatches: Counter,
+    pub pool_queue_wait: Histogram,
+    pub pool_compute: Histogram,
+    /// max/mean busy-time ratio across participants of the last dispatch
+    /// (1.0 = perfectly balanced)
+    pub pool_imbalance: Gauge,
+    /// cumulative busy nanoseconds per pool participant
+    pub pool_busy_ns: Vec<AtomicU64>,
+    /// busy nanoseconds per participant for the most recent dispatch
+    pub pool_last_busy_ns: Vec<AtomicU64>,
+    pub gemm: Histogram,
+    pub attention: Histogram,
+
+    // -- session (runtime::native) --
+    pub run_latency: Histogram,
+    pub forward: Histogram,
+    pub backward: Histogram,
+    pub fused_step: Histogram,
+
+    // -- trainer --
+    pub steps: Counter,
+
+    // -- cluster (leader side) --
+    pub rtt: Histogram,
+    pub timeouts: Counter,
+    pub strikes: Counter,
+    pub skips: Counter,
+    pub replay_bytes: Counter,
+    pub wire_bytes: Counter,
+    pub control_bytes: Counter,
+
+    pub spans: SpanRing,
+}
+
+impl Registry {
+    /// `participants` sizes the per-participant pool slots (the pool's
+    /// thread budget); the span ring defaults to 1024 entries.
+    pub fn new(participants: usize) -> Registry {
+        Registry::with_capacity(participants, 1024)
+    }
+
+    pub fn with_capacity(participants: usize, ring_cap: usize) -> Registry {
+        let slots = |n: usize| (0..n.max(1)).map(|_| AtomicU64::new(0)).collect::<Vec<_>>();
+        Registry {
+            enabled: AtomicBool::new(true),
+            epoch: Instant::now(),
+            pool_dispatches: Counter::new(),
+            pool_queue_wait: Histogram::default_ns(),
+            pool_compute: Histogram::default_ns(),
+            pool_imbalance: Gauge::new(),
+            pool_busy_ns: slots(participants),
+            pool_last_busy_ns: slots(participants),
+            gemm: Histogram::default_ns(),
+            attention: Histogram::default_ns(),
+            run_latency: Histogram::default_ns(),
+            forward: Histogram::default_ns(),
+            backward: Histogram::default_ns(),
+            fused_step: Histogram::default_ns(),
+            steps: Counter::new(),
+            rtt: Histogram::default_ns(),
+            timeouts: Counter::new(),
+            strikes: Counter::new(),
+            skips: Counter::new(),
+            replay_bytes: Counter::new(),
+            wire_bytes: Counter::new(),
+            control_bytes: Counter::new(),
+            spans: SpanRing::new(ring_cap),
+        }
+    }
+
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    /// Nanoseconds since this registry was constructed (span timestamps).
+    #[inline]
+    pub fn now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    /// Scoped histogram timer; `None` when telemetry is disabled (the
+    /// drop-guard records on scope exit, including early `?` returns).
+    #[inline]
+    pub fn timer<'a>(&self, hist: &'a Histogram) -> Option<HistTimer<'a>> {
+        if !self.enabled() {
+            return None;
+        }
+        Some(HistTimer { hist, start: Instant::now() })
+    }
+
+    /// Scoped span timer: records into the ring (and optionally a
+    /// histogram) on drop.
+    #[inline]
+    pub fn span<'a>(&'a self, label: &'static str, hist: Option<&'a Histogram>) -> Option<SpanTimer<'a>> {
+        if !self.enabled() {
+            return None;
+        }
+        Some(SpanTimer { reg: self, hist, label, start: Instant::now(), start_ns: self.now_ns() })
+    }
+}
+
+/// Drop-guard that records its lifetime into a histogram.
+pub struct HistTimer<'a> {
+    hist: &'a Histogram,
+    start: Instant,
+}
+
+impl Drop for HistTimer<'_> {
+    fn drop(&mut self) {
+        self.hist.record_ns(self.start.elapsed().as_nanos() as u64);
+    }
+}
+
+/// Drop-guard that records a [`Span`] (ring + optional histogram).
+pub struct SpanTimer<'a> {
+    reg: &'a Registry,
+    hist: Option<&'a Histogram>,
+    label: &'static str,
+    start: Instant,
+    start_ns: u64,
+}
+
+impl Drop for SpanTimer<'_> {
+    fn drop(&mut self) {
+        let dur_ns = self.start.elapsed().as_nanos() as u64;
+        if let Some(h) = self.hist {
+            h.record_ns(dur_ns);
+        }
+        self.reg.spans.push(Span { label: self.label, start_ns: self.start_ns, dur_ns });
+    }
+}
+
+// ---------------------------------------------------------------------------
+// step traces
+// ---------------------------------------------------------------------------
+
+/// One training step, as streamed to `--trace out.jsonl` (one JSON object
+/// per line). Unavailable quantities are `NaN` in memory and `null` on the
+/// wire (e.g. `cos_zm` for optimizers without a momentum buffer).
+#[derive(Clone, Copy, Debug)]
+pub struct StepTrace {
+    pub step: u64,
+    pub seed: i64,
+    /// mean of the two perturbed losses (the reported train loss)
+    pub loss: f64,
+    pub loss_plus: f64,
+    pub loss_minus: f64,
+    /// projected gradient g = (f+ - f-) / (2 lambda)
+    pub proj_grad: f64,
+    /// cosine between the step direction z and the pre-step momentum
+    pub cos_zm: f64,
+    pub eta: f64,
+    /// wall-clock seconds of the step itself (trace I/O excluded)
+    pub wall_s: f64,
+}
+
+fn push_num(out: &mut String, v: f64) {
+    use std::fmt::Write as _;
+    if v.is_finite() {
+        // Display is shortest-round-trip, so parse_line recovers the bits
+        let _ = write!(out, "{v}");
+    } else {
+        out.push_str("null");
+    }
+}
+
+impl StepTrace {
+    /// Append this record to `out` as one JSONL line (with trailing `\n`).
+    pub fn to_jsonl(&self, out: &mut String) {
+        use std::fmt::Write as _;
+        let _ = write!(out, "{{\"step\":{},\"seed\":{},\"loss\":", self.step, self.seed);
+        push_num(out, self.loss);
+        out.push_str(",\"loss_plus\":");
+        push_num(out, self.loss_plus);
+        out.push_str(",\"loss_minus\":");
+        push_num(out, self.loss_minus);
+        out.push_str(",\"proj_grad\":");
+        push_num(out, self.proj_grad);
+        out.push_str(",\"cos_zm\":");
+        push_num(out, self.cos_zm);
+        out.push_str(",\"eta\":");
+        push_num(out, self.eta);
+        out.push_str(",\"wall_s\":");
+        push_num(out, self.wall_s);
+        out.push_str("}\n");
+    }
+
+    /// Parse one JSONL line back into a record (`null` -> `NaN`).
+    pub fn parse_line(line: &str) -> Result<StepTrace> {
+        let v = Json::parse(line.trim())?;
+        let num = |k: &str| v.get(k).and_then(Json::as_f64).unwrap_or(f64::NAN);
+        Ok(StepTrace {
+            step: v
+                .expect("step")?
+                .as_i64()
+                .ok_or_else(|| anyhow!("step is not a number"))? as u64,
+            seed: v
+                .expect("seed")?
+                .as_i64()
+                .ok_or_else(|| anyhow!("seed is not a number"))?,
+            loss: num("loss"),
+            loss_plus: num("loss_plus"),
+            loss_minus: num("loss_minus"),
+            proj_grad: num("proj_grad"),
+            cos_zm: num("cos_zm"),
+            eta: num("eta"),
+            wall_s: num("wall_s"),
+        })
+    }
+}
+
+/// Buffered JSONL writer for [`StepTrace`] records + in-memory history.
+///
+/// `record` formats into a reused line buffer and hands it to a
+/// `BufWriter`; actual disk flushes happen in `flush()`, which callers
+/// invoke *outside* the timed step region, so tracing does not perturb
+/// the step latency it is measuring.
+pub struct StepTracer {
+    out: Option<std::io::BufWriter<std::fs::File>>,
+    line: String,
+    history: Vec<StepTrace>,
+}
+
+impl StepTracer {
+    /// `path = None` keeps history in memory without writing a file.
+    pub fn new(path: Option<&std::path::Path>) -> Result<StepTracer> {
+        let out = match path {
+            Some(p) => {
+                if let Some(dir) = p.parent() {
+                    if !dir.as_os_str().is_empty() {
+                        std::fs::create_dir_all(dir)?;
+                    }
+                }
+                Some(std::io::BufWriter::new(std::fs::File::create(p)?))
+            }
+            None => None,
+        };
+        Ok(StepTracer { out, line: String::with_capacity(256), history: Vec::new() })
+    }
+
+    pub fn record(&mut self, tr: StepTrace) -> Result<()> {
+        self.history.push(tr);
+        if let Some(w) = self.out.as_mut() {
+            self.line.clear();
+            tr.to_jsonl(&mut self.line);
+            w.write_all(self.line.as_bytes())?;
+        }
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        if let Some(w) = self.out.as_mut() {
+            w.flush()?;
+        }
+        Ok(())
+    }
+
+    pub fn history(&self) -> &[StepTrace] {
+        &self.history
+    }
+}
+
+impl Drop for StepTracer {
+    fn drop(&mut self) {
+        let _ = self.flush();
+    }
+}
+
+/// Load every record of a `--trace` JSONL file (blank lines skipped).
+pub fn read_trace(path: &std::path::Path) -> Result<Vec<StepTrace>> {
+    let text = std::fs::read_to_string(path)?;
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        out.push(
+            StepTrace::parse_line(line)
+                .map_err(|e| anyhow!("{}:{}: {e}", path.display(), i + 1))?,
+        );
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_basics() {
+        let c = Counter::new();
+        c.inc();
+        c.add(41);
+        assert_eq!(c.get(), 42);
+        c.reset();
+        assert_eq!(c.get(), 0);
+
+        let g = Gauge::new();
+        assert!(g.get().is_nan(), "unset gauge reads NaN");
+        g.set(1.25);
+        assert_eq!(g.get(), 1.25);
+    }
+
+    #[test]
+    fn histogram_bucket_boundaries() {
+        // bounds: 10, 20, 40
+        let h = Histogram::exponential_ns(10, 2, 3);
+        h.record_ns(0); // -> bucket 0 (<= 10)
+        h.record_ns(10); // boundary value lands in its own bucket, not the next
+        h.record_ns(11); // -> bucket 1
+        h.record_ns(20); // -> bucket 1
+        h.record_ns(40); // -> bucket 2
+        h.record_ns(41); // -> overflow
+        let counts: Vec<u64> = h.buckets().map(|(_, c)| c).collect();
+        assert_eq!(counts, vec![2, 2, 1, 1]);
+        let bounds: Vec<u64> = h.buckets().map(|(b, _)| b).collect();
+        assert_eq!(bounds, vec![10, 20, 40, u64::MAX]);
+        assert_eq!(h.count(), 6);
+        assert_eq!(h.sum_ns(), 122);
+        assert!((h.mean_ns() - 122.0 / 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_percentiles_are_bucket_bounds() {
+        let h = Histogram::exponential_ns(10, 2, 4); // 10 20 40 80
+        for _ in 0..50 {
+            h.record_ns(5); // bucket 0
+        }
+        for _ in 0..49 {
+            h.record_ns(35); // bucket 2
+        }
+        h.record_ns(1_000_000); // overflow
+        assert_eq!(h.percentile_ns(50.0), 10);
+        assert_eq!(h.percentile_ns(90.0), 40);
+        // overflow bucket has no bound; estimate is 2x the last bound
+        assert_eq!(h.percentile_ns(100.0), 160);
+        let empty = Histogram::default_ns();
+        assert_eq!(empty.percentile_ns(50.0), 0);
+        assert!(empty.mean_ns().is_nan());
+    }
+
+    #[test]
+    fn histogram_reset_clears_everything() {
+        let h = Histogram::default_ns();
+        h.observe(Duration::from_micros(7));
+        assert_eq!(h.count(), 1);
+        h.reset();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.sum_ns(), 0);
+        assert!(h.buckets().all(|(_, c)| c == 0));
+    }
+
+    #[test]
+    fn ring_buffer_wraps_without_reallocating() {
+        let ring = SpanRing::new(4);
+        assert!(ring.is_empty());
+        let sp = |i: u64| Span { label: "t", start_ns: i, dur_ns: 1 };
+        ring.push(sp(0));
+        let p0 = ring.buf_ptr();
+        for i in 1..11 {
+            ring.push(sp(i));
+        }
+        // capacity preserved, oldest dropped, backing buffer never moved
+        assert_eq!(ring.len(), 4);
+        assert_eq!(ring.buf_ptr(), p0, "ring reallocated on wrap");
+        let mut out = Vec::new();
+        ring.snapshot(&mut out);
+        let starts: Vec<u64> = out.iter().map(|s| s.start_ns).collect();
+        assert_eq!(starts, vec![7, 8, 9, 10]);
+    }
+
+    #[test]
+    fn registry_timers_respect_enabled_flag() {
+        let reg = Registry::with_capacity(2, 8);
+        {
+            let _t = reg.timer(&reg.forward);
+            let _s = reg.span("phase", Some(&reg.backward));
+        }
+        assert_eq!(reg.forward.count(), 1);
+        assert_eq!(reg.backward.count(), 1);
+        assert_eq!(reg.spans.len(), 1);
+        reg.set_enabled(false);
+        assert!(reg.timer(&reg.forward).is_none());
+        assert!(reg.span("phase", None).is_none());
+        assert_eq!(reg.forward.count(), 1, "disabled timer recorded");
+        reg.set_enabled(true);
+        assert!(reg.timer(&reg.forward).is_some());
+    }
+
+    #[test]
+    fn span_records_ring_and_histogram() {
+        let reg = Registry::with_capacity(1, 8);
+        {
+            let _s = reg.span("fwd", Some(&reg.forward));
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let mut out = Vec::new();
+        reg.spans.snapshot(&mut out);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].label, "fwd");
+        assert!(out[0].dur_ns >= 1_000_000, "span under 1ms: {}", out[0].dur_ns);
+        assert_eq!(reg.forward.count(), 1);
+    }
+
+    #[test]
+    fn step_trace_jsonl_roundtrip() {
+        let tr = StepTrace {
+            step: 17,
+            seed: -123456789,
+            loss: 2.718281828459045,
+            loss_plus: 2.75,
+            loss_minus: 2.6875,
+            proj_grad: -0.001953125,
+            cos_zm: 0.3333333333333333,
+            eta: 1e-6,
+            wall_s: 0.0123,
+        };
+        let mut line = String::new();
+        tr.to_jsonl(&mut line);
+        assert!(line.ends_with('\n'));
+        let back = StepTrace::parse_line(&line).unwrap();
+        assert_eq!(back.step, tr.step);
+        assert_eq!(back.seed, tr.seed);
+        assert_eq!(back.loss, tr.loss, "f64 did not round-trip");
+        assert_eq!(back.proj_grad, tr.proj_grad);
+        assert_eq!(back.cos_zm, tr.cos_zm);
+        assert_eq!(back.eta, tr.eta);
+    }
+
+    #[test]
+    fn step_trace_nan_becomes_null_and_back() {
+        let tr = StepTrace {
+            step: 0,
+            seed: 1,
+            loss: 0.5,
+            loss_plus: f64::NAN,
+            loss_minus: f64::INFINITY,
+            proj_grad: 0.0,
+            cos_zm: f64::NAN,
+            eta: 1e-3,
+            wall_s: 0.1,
+        };
+        let mut line = String::new();
+        tr.to_jsonl(&mut line);
+        assert!(line.contains("\"cos_zm\":null"), "{line}");
+        assert!(line.contains("\"loss_minus\":null"), "{line}");
+        let back = StepTrace::parse_line(&line).unwrap();
+        assert!(back.cos_zm.is_nan());
+        assert!(back.loss_plus.is_nan());
+        assert_eq!(back.loss, 0.5);
+    }
+
+    #[test]
+    fn step_trace_rejects_garbage() {
+        assert!(StepTrace::parse_line("not json").is_err());
+        assert!(StepTrace::parse_line("{\"loss\":1}").is_err(), "missing step must fail");
+    }
+
+    #[test]
+    fn tracer_streams_jsonl_and_keeps_history() {
+        let dir = std::env::temp_dir().join(format!("conmezo_tel_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.jsonl");
+        let mk = |i: u64| StepTrace {
+            step: i,
+            seed: i as i64 * 7,
+            loss: 1.0 / (i + 1) as f64,
+            loss_plus: 0.0,
+            loss_minus: 0.0,
+            proj_grad: -0.25,
+            cos_zm: f64::NAN,
+            eta: 1e-4,
+            wall_s: 0.001,
+        };
+        {
+            let mut tracer = StepTracer::new(Some(&path)).unwrap();
+            for i in 0..5 {
+                tracer.record(mk(i)).unwrap();
+            }
+            tracer.flush().unwrap();
+            assert_eq!(tracer.history().len(), 5);
+        }
+        let back = read_trace(&path).unwrap();
+        assert_eq!(back.len(), 5);
+        for (i, tr) in back.iter().enumerate() {
+            assert_eq!(tr.step, i as u64);
+            assert_eq!(tr.loss, 1.0 / (i + 1) as f64);
+            assert!(tr.cos_zm.is_nan());
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

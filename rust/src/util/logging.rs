@@ -17,19 +17,39 @@ pub enum Level {
 
 static LEVEL: AtomicU8 = AtomicU8::new(255);
 
+/// Map a `CONMEZO_LOG` value to a level; the bool is true when the value
+/// was present but unrecognized (caller warns once). Unset -> info.
+fn parse_level(var: Option<&str>) -> (u8, bool) {
+    match var {
+        Some("error") => (0, false),
+        Some("warn") => (1, false),
+        Some("info") => (2, false),
+        Some("debug") => (3, false),
+        Some("trace") => (4, false),
+        Some(_) => (2, true),
+        None => (2, false),
+    }
+}
+
 fn level() -> u8 {
     let v = LEVEL.load(Ordering::Relaxed);
     if v != 255 {
         return v;
     }
-    let parsed = match std::env::var("CONMEZO_LOG").as_deref() {
-        Ok("error") => 0,
-        Ok("warn") => 1,
-        Ok("debug") => 3,
-        Ok("trace") => 4,
-        _ => 2,
-    };
-    LEVEL.store(parsed, Ordering::Relaxed);
+    let var = std::env::var("CONMEZO_LOG").ok();
+    let (parsed, unrecognized) = parse_level(var.as_deref());
+    // compare-exchange so exactly one caller transitions off the sentinel
+    // and owns the one-time warning
+    let first = LEVEL
+        .compare_exchange(255, parsed, Ordering::Relaxed, Ordering::Relaxed)
+        .is_ok();
+    if first && unrecognized {
+        let _ = writeln!(
+            std::io::stderr().lock(),
+            "[conmezo] unrecognized CONMEZO_LOG value {:?} (expected error|warn|info|debug|trace); defaulting to info",
+            var.as_deref().unwrap_or("")
+        );
+    }
     parsed
 }
 
@@ -75,4 +95,27 @@ macro_rules! debug {
     ($target:expr, $($arg:tt)*) => {
         $crate::util::logging::log($crate::util::logging::Level::Debug, $target, format_args!($($arg)*))
     };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_documented_value_is_recognized() {
+        // "info" used to fall through the match and only worked by accident
+        assert_eq!(parse_level(Some("error")), (0, false));
+        assert_eq!(parse_level(Some("warn")), (1, false));
+        assert_eq!(parse_level(Some("info")), (2, false));
+        assert_eq!(parse_level(Some("debug")), (3, false));
+        assert_eq!(parse_level(Some("trace")), (4, false));
+        assert_eq!(parse_level(None), (2, false));
+    }
+
+    #[test]
+    fn unrecognized_values_default_to_info_and_flag_a_warning() {
+        assert_eq!(parse_level(Some("verbose")), (2, true));
+        assert_eq!(parse_level(Some("INFO")), (2, true), "values are case-sensitive");
+        assert_eq!(parse_level(Some("")), (2, true));
+    }
 }

@@ -256,6 +256,9 @@ fn par_rows(
     pool: &WorkerPool,
     span: impl Fn(usize, usize, &mut [f32]) + Sync,
 ) {
+    // every pooled GEMM variant funnels through here, so one timer guard
+    // covers the whole family (timing only; the math is untouched)
+    let _gemm_t = pool.telemetry().and_then(|r| r.timer(&r.gemm));
     if t <= 1 {
         span(0, rows, out);
         return;

@@ -260,6 +260,54 @@ fn pretrain_then_conmezo_finetune_end_to_end() {
     }
 }
 
+#[test]
+fn step_trace_jsonl_round_trips_with_history() {
+    // ISSUE-7 acceptance: train with --trace, parse every JSONL line back,
+    // and verify it matches the in-memory history bit-for-bit (floats are
+    // emitted shortest-round-trip).
+    let rt = runtime();
+    let dir = std::env::temp_dir().join(format!("conmezo_it_trace_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("trace.jsonl");
+    let _ = std::fs::remove_file(&path);
+
+    let steps = 30usize;
+    let mut cfg = quick_cfg("conmezo", steps);
+    cfg.trace = Some(path.clone());
+    let mut tr = Trainer::new(&rt, cfg).unwrap();
+    tr.run().unwrap();
+
+    let history = tr.trace_history().to_vec();
+    assert_eq!(history.len(), steps, "one record per step");
+    let parsed = conmezo::telemetry::read_trace(&path).unwrap();
+    assert_eq!(parsed.len(), steps);
+    let mut cos_seen = 0usize;
+    for (t, (mem, disk)) in history.iter().zip(&parsed).enumerate() {
+        assert_eq!(disk.step, t as u64);
+        assert_eq!(disk.seed, mem.seed);
+        assert_eq!(disk.seed, Trainer::step_seed(42, t) as i64, "seed not replayable");
+        assert_eq!(disk.loss.to_bits(), mem.loss.to_bits(), "step {t}: loss did not round-trip");
+        assert_eq!(disk.proj_grad.to_bits(), mem.proj_grad.to_bits(), "step {t}: g did not round-trip");
+        assert_eq!(disk.loss_plus.to_bits(), mem.loss_plus.to_bits());
+        assert_eq!(disk.loss_minus.to_bits(), mem.loss_minus.to_bits());
+        assert!((mem.loss - 0.5 * (mem.loss_plus + mem.loss_minus)).abs() < 1e-9);
+        if mem.cos_zm.is_finite() {
+            cos_seen += 1;
+            assert!((-1.0..=1.0).contains(&mem.cos_zm), "step {t}: cos_zm {}", mem.cos_zm);
+            assert_eq!(disk.cos_zm.to_bits(), mem.cos_zm.to_bits());
+        } else {
+            assert!(disk.cos_zm.is_nan(), "null must parse back to NaN");
+        }
+        assert!(disk.wall_s >= 0.0);
+        assert_eq!(disk.eta as f32, 3e-4);
+    }
+    // tracing turned on the cos(z, m) reconstruction in the fused engine
+    assert!(cos_seen >= steps - 2, "cos_zm missing from {}/{steps} steps", steps - cos_seen);
+    // and the runtime registry counted every trainer step
+    assert_eq!(rt.telemetry().unwrap().steps.get(), steps as u64);
+    std::fs::remove_file(&path).ok();
+}
+
 // ---------------------------------------------------------------------------
 // property-based coordinator invariants
 // ---------------------------------------------------------------------------
