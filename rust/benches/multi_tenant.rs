@@ -1,0 +1,150 @@
+//! Multi-tenant serving economics at the nano preset — the `multi_tenant`
+//! section of `BENCH_native.json` (asserted by CI bench-smoke).
+//!
+//! Two timed rows per pool size N in {1, 4, 16}: end-to-end steps/sec
+//! through the shared-base [`conmezo::serve::Server`] (tenant admission +
+//! round-robin to completion over ONE base buffer and ONE session per
+//! `(preset, rank)`), and the same N tenant workloads run as independent
+//! full-weight trainers — each owning d_pad parameters, its own bound
+//! sessions, and d_pad-sized optimizer state. Memory rows record the
+//! per-tenant marginal bytes from the server's `MemoryMeter` ledger vs the
+//! full-weight params+optimizer footprint; `items_per_iter` carries the
+//! byte count so the JSON stays machine-comparable.
+//!
+//! `cargo bench --bench multi_tenant [-- --quick]`
+
+use std::time::Instant;
+
+use conmezo::bench::{consume, write_bench_json, write_results, BenchArgs, BenchResult};
+use conmezo::data::{spec, TaskGen, TrainSampler};
+use conmezo::objective::{ModelObjective, Objective};
+use conmezo::optimizer::{by_name, BetaSchedule, ZoOptimizer};
+use conmezo::runtime::{lit_vec_f32, Arg, ParallelPolicy, Runtime};
+use conmezo::serve::{ServeConfig, Server};
+use conmezo::util::memory::MemoryMeter;
+
+/// The full-weight baseline uses the serve manifest's default
+/// hyperparameters (conmezo, eta 1e-2, lam 1e-3, theta 1.35, beta 0.9) so
+/// the two paths do the same optimizer math per step.
+fn full_weight_opt(d: usize) -> conmezo::util::error::Result<Box<dyn ZoOptimizer>> {
+    by_name("conmezo", d, 1e-2, 1e-3, 1.35, BetaSchedule::Constant(0.9), &[])
+}
+
+/// A single-sample memory record: `items_per_iter` is the byte count, the
+/// time fields hold the (one-shot) setup wall-clock that produced it.
+fn mem_result(name: String, secs: f64, bytes: usize) -> BenchResult {
+    BenchResult {
+        name,
+        samples: 1,
+        mean_s: secs,
+        std_s: 0.0,
+        p50_s: secs,
+        p99_s: secs,
+        items_per_iter: Some(bytes as f64),
+    }
+}
+
+fn main() -> conmezo::util::error::Result<()> {
+    let args = BenchArgs::parse();
+    let b = args.bencher();
+    let rt = Runtime::native_with(ParallelPolicy::auto());
+    let meta = rt.preset("nano")?.clone();
+    let steps = if args.quick { 2 } else { 8 };
+    let ckpt_dir = std::env::temp_dir().join(format!("conmezo_bench_serve_{}", std::process::id()));
+    std::fs::create_dir_all(&ckpt_dir)?;
+    let init = rt.load_kind("nano", "init")?;
+    let gen = TaskGen::new(spec("sst2").unwrap(), meta.vocab, meta.seq_len);
+    let mut results = Vec::new();
+    let mut adapter_marginal = 0usize;
+
+    for &n in &[1usize, 4, 16] {
+        // manifest defaults: preset=nano rank=4 opt=conmezo — the adapter
+        // twin of the full-weight baseline below
+        let mut mani = String::from("quantum 1\nbase_seed 7\n");
+        for i in 0..n {
+            let line = format!("tenant name=j{i} steps={steps} seed={} train_n=16\n", 100 + i);
+            mani.push_str(&line);
+        }
+        let cfg = ServeConfig::parse(&mani)?;
+        let units = (n * steps) as f64;
+
+        // steps/sec through the scheduler; admission (base load + session
+        // bind + job build) is part of each sample, as it is when serving
+        let name = format!("multi_tenant/nano/serve_n{n}_steps");
+        let r = b.run_items(&name, Some(units), &mut || {
+            let mut server = Server::new(&rt, cfg.clone(), ckpt_dir.clone()).unwrap();
+            let report = server.run().unwrap();
+            assert_eq!(report.jobs.len(), n);
+        });
+        println!("{}", r.report());
+        results.push(r);
+
+        // per-tenant marginal bytes from the server's own ledger
+        let t0 = Instant::now();
+        let server = Server::new(&rt, cfg.clone(), ckpt_dir.clone())?;
+        let admit_s = t0.elapsed().as_secs_f64();
+        let tenant_bytes: usize = server
+            .meter()
+            .breakdown()
+            .iter()
+            .filter(|(k, _)| k.starts_with("tenant."))
+            .map(|(_, v)| *v)
+            .sum();
+        adapter_marginal = tenant_bytes / n;
+        let r = mem_result(
+            format!("multi_tenant/nano/serve_n{n}_marginal_bytes_per_tenant"),
+            admit_s,
+            adapter_marginal,
+        );
+        println!("{}", r.report());
+        results.push(r);
+
+        // N independent full-weight trainers over the same tasks/seeds:
+        // every tenant binds its own sessions and steps a d_pad vector
+        let name = format!("multi_tenant/nano/full_weight_n{n}_steps");
+        let r = b.run_items(&name, Some(units), &mut || {
+            for i in 0..n {
+                let seed = 100 + i as u64;
+                let data = gen.dataset(16, seed);
+                let sampler = TrainSampler::new(data, meta.batch, meta.seq_len, seed, 0);
+                let mut obj = ModelObjective::new(&rt, "nano", Box::new(sampler)).unwrap();
+                let flat = init.call(&[Arg::I32(seed as i32)]).unwrap();
+                let mut x = lit_vec_f32(&flat[0]).unwrap();
+                let mut opt = full_weight_opt(meta.d_pad).unwrap();
+                for t in 0..steps {
+                    opt.step(&mut x, &mut obj, t, seed).unwrap();
+                    obj.advance();
+                }
+                consume(x[0]);
+            }
+        });
+        println!("{}", r.report());
+        results.push(r);
+    }
+
+    // the full-weight tenant's persistent marginal (params + optimizer
+    // state), constant in N — the denominator of the serving win
+    let t0 = Instant::now();
+    let mut m = MemoryMeter::new();
+    m.alloc_f32("params", meta.d_pad);
+    full_weight_opt(meta.d_pad)?.record_memory(&mut m);
+    let full_bytes = m.current_bytes();
+    let r = mem_result(
+        "multi_tenant/nano/full_weight_marginal_bytes_per_tenant".to_string(),
+        t0.elapsed().as_secs_f64(),
+        full_bytes,
+    );
+    println!("{}", r.report());
+    results.push(r);
+
+    println!(
+        "nano marginals: adapter tenant {:.1} KiB vs full-weight trainer {:.1} KiB ({:.1}x)",
+        adapter_marginal as f64 / 1024.0,
+        full_bytes as f64 / 1024.0,
+        full_bytes as f64 / adapter_marginal.max(1) as f64
+    );
+
+    write_results("multi_tenant.jsonl", &results)?;
+    write_bench_json("multi_tenant", &results)?;
+    Ok(())
+}

@@ -45,6 +45,7 @@ pub mod objective;
 pub mod optimizer;
 pub mod parallel;
 pub mod runtime;
+pub mod serve;
 pub mod telemetry;
 pub mod testing;
 pub mod util;

@@ -4,6 +4,8 @@
 //!   train     finetune a preset on a task with any optimizer (config file
 //!             + --set overrides)
 //!   pretrain  build the pretrained checkpoint for a preset
+//!   serve     run a multi-tenant adapter-finetuning workload from a
+//!             manifest (N LoRA-style ZO jobs over one shared base)
 //!   worker    join a distributed run (connect to a leader)
 //!   leader    host a distributed run over TCP
 //!   info      print artifact/platform info
@@ -19,12 +21,14 @@ use conmezo::net::{TcpTransport, Transport};
 use conmezo::objective::ModelObjective;
 use conmezo::optimizer::BetaSchedule;
 use conmezo::runtime::{lit_vec_f32, Arg, ParallelPolicy, Runtime};
+use conmezo::serve::{Server, ServeConfig};
 use conmezo::util::json::Json;
 
 fn app() -> App {
     App::new("conmezo", "gradient-free LLM finetuning (ConMeZO, AISTATS 2026)")
         .subcommand("train", "finetune a preset on a task")
         .subcommand("pretrain", "build a pretrained checkpoint")
+        .subcommand("serve", "run a multi-tenant adapter-finetuning workload")
         .subcommand("leader", "host a distributed ZO run")
         .subcommand("worker", "join a distributed ZO run")
         .subcommand("trace-summary", "summarize a --trace JSONL step trace")
@@ -58,6 +62,9 @@ fn app() -> App {
         .opt("step-log", "leader: persist the per-step replay log here (rejoin substrate)")
         .opt("trace", "stream one JSONL StepTrace record per step here (train/leader)")
         .opt_default("metrics-every", "0", "leader: heartbeat-RTT + health line every N steps (0 = off)")
+        .opt("manifest", "serve: tenant workload manifest file")
+        .opt_default("ckpt-dir", "results/serve_ckpts", "serve: per-tenant checkpoint directory")
+        .opt("quantum", "serve: override the manifest's round-robin quantum")
         .opt("ckpt", "worker: replica checkpoint path")
         .opt_default("ckpt-every", "0", "worker: checkpoint every N applied steps (0 = shutdown only)")
         .opt("die-at-step", "worker: fault injection - crash upon receiving Step N")
@@ -77,6 +84,7 @@ fn main() -> Result<()> {
     match p.subcommand.as_str() {
         "train" => cmd_train(&p),
         "pretrain" => cmd_pretrain(&p),
+        "serve" => cmd_serve(&p),
         "leader" => cmd_leader(&p),
         "worker" => cmd_worker(&p),
         "trace-summary" => cmd_trace_summary(&p),
@@ -196,6 +204,42 @@ fn cmd_pretrain(p: &conmezo::cli::Parsed) -> Result<()> {
     if let Some((_, l)) = curve.last() {
         println!("final LM loss {l:.4}");
     }
+    Ok(())
+}
+
+fn cmd_serve(p: &conmezo::cli::Parsed) -> Result<()> {
+    let policy = thread_policy(p, &load_file_cfg(p)?)?;
+    let rt = Runtime::from_name_with(&p.str_or("backend", "auto"), policy)?;
+    let manifest = p
+        .value("manifest")
+        .ok_or_else(|| conmezo::anyhow!("serve needs --manifest <workload file>"))?;
+    let mut cfg = ServeConfig::load(Path::new(manifest))?;
+    if let Some(q) = p.value("quantum") {
+        cfg.quantum = q
+            .trim()
+            .parse()
+            .map_err(|_| conmezo::anyhow!("--quantum must be a positive integer, got {q:?}"))?;
+        if cfg.quantum == 0 {
+            bail!("--quantum must be >= 1");
+        }
+    }
+    let ckpt_dir = p.str_or("ckpt-dir", "results/serve_ckpts");
+    println!(
+        "serving {} tenants from {manifest} (quantum {}, backend {})",
+        cfg.tenants.len(),
+        cfg.quantum,
+        rt.platform()
+    );
+    let mut server = Server::new(&rt, cfg, ckpt_dir.into())?;
+    let report = server.run()?;
+    for j in &report.jobs {
+        println!("{}", j.summary_line());
+    }
+    println!(
+        "serve complete: {} tenants, peak mem {:.1} MiB",
+        report.jobs.len(),
+        server.meter().peak_mib()
+    );
     Ok(())
 }
 

@@ -31,11 +31,18 @@ use std::rc::Rc;
 
 use crate::util::error::{bail, Result};
 
+use crate::runtime::adapter::AdapterSession;
 use crate::runtime::{lit_f32, Arg, Runtime, Session};
 
 /// A bound session shareable by several objectives in one process
 /// (single-threaded interior mutability; the step loop never re-enters).
 pub type SharedSession = Rc<RefCell<Box<dyn Session>>>;
+
+/// An adapter session shareable by every tenant of one (preset, rank)
+/// pair: the serve scheduler runs jobs one quantum at a time, so all
+/// tenants evaluate through ONE forward scratch and the marginal tenant
+/// owns only its adapter + optimizer state (O(rank·dims), not O(d)).
+pub type SharedAdapterSession = Rc<RefCell<AdapterSession>>;
 
 /// Fixed-shape token batch fed to the runtime loss programs.
 #[derive(Clone, Debug, PartialEq)]
@@ -266,6 +273,109 @@ impl Objective for ModelObjective {
             &self.batch.targets,
             &self.batch.mask,
         )
+    }
+
+    fn advance(&mut self) {
+        self.batch = self.source.next_batch();
+    }
+
+    fn evals(&self) -> u64 {
+        self.evals
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AdapterObjective
+// ---------------------------------------------------------------------------
+
+/// The ZO oracle over a tenant's low-rank adapter: `x` is the
+/// `plan.dim()`-sized adapter vector, the loss is
+/// `f(base + delta(adapter))` on the tenant's own minibatch stream, and
+/// `two_point` perturbs ONLY the adapter coordinates (the low-rank delta
+/// fuses into the weight loads through
+/// [`crate::vecmath::AdapterBinding`]; no materialized per-tenant weight
+/// buffer exists). The base buffer and the [`AdapterSession`] are shared
+/// across tenants — each objective owns nothing but its batch source.
+pub struct AdapterObjective {
+    sess: SharedAdapterSession,
+    base: Rc<Vec<f32>>,
+    pub batch: Batch,
+    source: Box<dyn BatchSource>,
+    dim: usize,
+    evals: u64,
+}
+
+impl AdapterObjective {
+    /// Bind a tenant over a shared session + shared base. The base must be
+    /// the session preset's padded parameter buffer.
+    pub fn new(
+        sess: SharedAdapterSession,
+        base: Rc<Vec<f32>>,
+        source: Box<dyn BatchSource>,
+    ) -> Result<Self> {
+        let dim = {
+            let s = sess.borrow();
+            if base.len() != s.meta().d_pad {
+                bail!(
+                    "adapter objective: base has {} elements, preset {:?} wants d_pad {}",
+                    base.len(),
+                    s.meta().name,
+                    s.meta().d_pad
+                );
+            }
+            s.plan().dim()
+        };
+        let mut source = source;
+        let batch = source.next_batch();
+        Ok(AdapterObjective { sess, base, batch, source, dim, evals: 0 })
+    }
+
+    /// Clone the shared session handle for further tenants.
+    pub fn session(&self) -> SharedAdapterSession {
+        self.sess.clone()
+    }
+}
+
+impl Objective for AdapterObjective {
+    /// Adapter vectors have no pad lanes: every coordinate is live.
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn d_raw(&self) -> usize {
+        self.dim
+    }
+
+    fn loss(&mut self, x: &[f32]) -> Result<f64> {
+        self.evals += 1;
+        let b = &self.batch;
+        let l = self.sess.borrow_mut().loss(
+            &self.base,
+            x,
+            &b.input_ids,
+            &b.targets,
+            &b.mask,
+            b.batch,
+            b.seq,
+        );
+        Ok(l as f64)
+    }
+
+    fn two_point(&mut self, x: &[f32], z: &[f32], lam: f32) -> Result<(f64, f64)> {
+        self.evals += 2;
+        let b = &self.batch;
+        let (lp, lm) = self.sess.borrow_mut().two_point(
+            &self.base,
+            x,
+            z,
+            lam,
+            &b.input_ids,
+            &b.targets,
+            &b.mask,
+            b.batch,
+            b.seq,
+        );
+        Ok((lp as f64, lm as f64))
     }
 
     fn advance(&mut self) {

@@ -80,6 +80,29 @@ impl ZoOptimizer for ConMeZo {
         meter.alloc_f32("opt.direction", self.u.len());
         meter.alloc_f32("opt.cone", self.z.len());
     }
+
+    fn state(&self) -> Vec<(&'static str, &[f32])> {
+        vec![("m", &self.m)]
+    }
+
+    fn restore(&mut self, name: &str, data: &[f32]) -> Result<()> {
+        match name {
+            "m" => {
+                if data.len() != self.m.len() {
+                    crate::bail!(
+                        "conmezo momentum: checkpoint has {} elements, optimizer {}",
+                        data.len(),
+                        self.m.len()
+                    );
+                }
+                self.m.copy_from_slice(data);
+                // a restored momentum replaces the m_0 <- u_0 bootstrap
+                self.started = true;
+                Ok(())
+            }
+            other => crate::bail!("conmezo: unknown state buffer {other:?}"),
+        }
+    }
 }
 
 #[cfg(test)]

@@ -8,10 +8,14 @@
 //! This captures LOZO's core claim — LLM gradients live in a low-dimensional
 //! subspace, so structured perturbations estimate them with less variance.
 //!
-//! LOZO-M adds a momentum over the *dense* accumulated estimate. (The
+//! LOZO-M adds a momentum over the *dense* accumulated estimate. The
 //! original work keeps the momentum in factored form; we keep it dense for
-//! simplicity, which only increases this baseline's memory — documented in
-//! DESIGN.md §2.)
+//! simplicity, which only costs this baseline memory, not accuracy: the
+//! dense buffer is one extra O(d) vector (`record_memory` accounts it as
+//! `opt.momentum`, so Fig. 4 / Table 8 reproductions see the overhead),
+//! whereas the factored form would store O((a + b)·r) per tensor. The math
+//! is unchanged — the dense momentum accumulates exactly the factored
+//! updates.
 
 use crate::util::error::Result;
 

@@ -54,6 +54,27 @@ impl ZoOptimizer for MezoMomentum {
         meter.alloc_f32("opt.momentum", self.m.len());
         meter.alloc_f32("opt.direction", self.z.len());
     }
+
+    fn state(&self) -> Vec<(&'static str, &[f32])> {
+        vec![("m", &self.m)]
+    }
+
+    fn restore(&mut self, name: &str, data: &[f32]) -> Result<()> {
+        match name {
+            "m" => {
+                if data.len() != self.m.len() {
+                    crate::bail!(
+                        "mezo_momentum: checkpoint has {} elements, optimizer {}",
+                        data.len(),
+                        self.m.len()
+                    );
+                }
+                self.m.copy_from_slice(data);
+                Ok(())
+            }
+            other => crate::bail!("mezo_momentum: unknown state buffer {other:?}"),
+        }
+    }
 }
 
 #[cfg(test)]

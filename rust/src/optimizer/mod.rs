@@ -66,6 +66,22 @@ pub trait ZoOptimizer {
 
     /// Account persistent optimizer state (Fig. 4 / Table 8).
     fn record_memory(&self, meter: &mut MemoryMeter);
+
+    /// Persistent state buffers to checkpoint alongside `x`: (name,
+    /// payload) pairs sufficient to resume [`ZoOptimizer::step`]
+    /// bit-identically at the next `t`. Per-step scratch regenerated from
+    /// `(run_seed, t)` is NOT state; stateless optimizers keep the empty
+    /// default (`crate::serve` checkpoints these per job).
+    fn state(&self) -> Vec<(&'static str, &[f32])> {
+        Vec::new()
+    }
+
+    /// Restore one buffer previously exported by [`ZoOptimizer::state`].
+    /// The default (stateless) rejects every name.
+    fn restore(&mut self, name: &str, data: &[f32]) -> Result<()> {
+        let _ = data;
+        crate::bail!("{}: unknown optimizer state buffer {name:?}", self.name())
+    }
 }
 
 /// The shared direction stream: u ~ N(0, I_d) on valid lanes, zero pads.

@@ -1,0 +1,358 @@
+//! Per-tenant low-rank adapter sessions over one shared base-weight buffer.
+//!
+//! The multi-tenant serving arc ([`crate::serve`]) runs N concurrent ZO
+//! finetuning jobs on ONE `Runtime`/`WorkerPool`: every tenant reads the
+//! SAME read-only base parameters and owns only a tiny adapter vector.
+//! [`AdapterPlan`] maps a preset's layout onto that vector (built once per
+//! (preset, rank) and shared by every tenant of that shape):
+//!
+//! * 2-D weights `[rows, cols]` with both dims ≥ rank become factored
+//!   [`AdapterSeg::Mat`] segments — the tenant owns `U [rows, rank]` and
+//!   `V [cols, rank]`, and the effective weight element is
+//!   `base + (U V^T)/sqrt(rank)`, the LoRA parameterization with LOZO's
+//!   rank normalization (`optimizer::lozo` uses the same segmentation).
+//! * everything else (1-D gains/biases, tensors smaller than the rank)
+//!   keeps a dense delta: `base + a`.
+//!
+//! SPSA perturbs ONLY the adapter coordinates: a direction `z` has
+//! `plan.dim()` elements (laid out exactly like the adapter vector), and
+//! `f(base, adapter ± λz)` evaluates through
+//! [`crate::vecmath::AdapterBinding::perturbed`] with the low-rank product
+//! `(U + λZ_u)(V + λZ_v)^T / sqrt(r)` fused in-register into the existing
+//! view-taking GEMM/bias/layernorm/embedding kernels — no materialized
+//! per-tenant weight copy exists at any point, so per-tenant incremental
+//! memory is O(rank·dims) (adapter + optimizer state), not O(d).
+//!
+//! [`AdapterSession`] is the bound surface: one forward scratch + model
+//! plan, reusable across tenants (the serve scheduler runs jobs one
+//! quantum at a time, so all tenants of a preset share ONE session and the
+//! marginal tenant costs only its adapter vector).
+
+use crate::runtime::model::{FwdScratch, NativeModel};
+use crate::runtime::PresetMeta;
+use crate::util::rng::{Xoshiro256pp, STREAM_INIT};
+use crate::vecmath::{self, AdapterBinding, AdapterSeg, ParamView};
+
+/// A preset's layout mapped onto a flat per-tenant adapter vector (one
+/// segment per tensor, offsets ascending — the shape every tenant of a
+/// (preset, rank) pair shares).
+#[derive(Clone, Debug)]
+pub struct AdapterPlan {
+    segs: Vec<AdapterSeg>,
+    dim: usize,
+    rank: usize,
+}
+
+impl AdapterPlan {
+    /// Segment `meta.layout` at `rank`: 2-D tensors whose dims both reach
+    /// `rank` get `U/V` factors, everything else a dense delta (the same
+    /// criterion as `optimizer::lozo`'s per-tensor segmentation).
+    pub fn new(meta: &PresetMeta, rank: usize) -> AdapterPlan {
+        assert!(rank >= 1, "adapter rank must be at least 1");
+        let mut segs = Vec::with_capacity(meta.layout.len());
+        let mut a_off = 0usize;
+        for e in &meta.layout {
+            if e.shape.len() == 2 && e.shape[0] >= rank && e.shape[1] >= rank {
+                let (rows, cols) = (e.shape[0], e.shape[1]);
+                segs.push(AdapterSeg::Mat {
+                    off: e.offset,
+                    rows,
+                    cols,
+                    rank,
+                    u_off: a_off,
+                    v_off: a_off + rows * rank,
+                });
+                a_off += (rows + cols) * rank;
+            } else {
+                let len: usize = e.shape.iter().product();
+                segs.push(AdapterSeg::Dense { off: e.offset, len, a_off });
+                a_off += len;
+            }
+        }
+        debug_assert_eq!(a_off, vecmath::adapter_dim(&segs));
+        AdapterPlan { segs, dim: a_off, rank }
+    }
+
+    /// The segment list (what [`AdapterBinding`]s resolve against).
+    pub fn segs(&self) -> &[AdapterSeg] {
+        &self.segs
+    }
+
+    /// Tenant-owned parameter count — the dimension the tenant's ZO
+    /// optimizer runs in (no padding: every coordinate is live).
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// The low-rank factor width.
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// Deterministic adapter init: `U ~ N(0, 0.02)` per segment stream,
+    /// `V = 0` (so the initial delta is exactly zero — tenants start at
+    /// the shared base — but the ZO gradient still flows through the
+    /// `U·Z_v^T` cross term), dense deltas zero.
+    pub fn init(&self, seed: i32) -> Vec<f32> {
+        let mut x = vec![0f32; self.dim];
+        for (idx, seg) in self.segs.iter().enumerate() {
+            if let AdapterSeg::Mat { rows, rank, u_off, .. } = seg {
+                let mut rng =
+                    Xoshiro256pp::derive_stream(seed as u32 as u64, STREAM_INIT, idx as u64);
+                for u in &mut x[*u_off..*u_off + rows * rank] {
+                    *u = rng.next_normal() as f32 * 0.02;
+                }
+            }
+        }
+        x
+    }
+}
+
+/// A bound adapter-evaluation surface: one model plan + one forward
+/// scratch serving every tenant of a (preset, rank) pair. The base buffer
+/// is passed per call (it is shared, read-only, and owned by the caller),
+/// the adapter/direction vectors are the tenant's own `plan.dim()`-sized
+/// state.
+pub struct AdapterSession {
+    model: NativeModel,
+    plan: AdapterPlan,
+    ws: FwdScratch,
+}
+
+impl AdapterSession {
+    /// Bind over an already-pooled model (backends construct these via
+    /// [`crate::runtime::Backend::bind_adapter`]).
+    pub fn new(model: NativeModel, rank: usize) -> AdapterSession {
+        let plan = AdapterPlan::new(&model.meta, rank);
+        let ws = model.scratch();
+        AdapterSession { model, plan, ws }
+    }
+
+    pub fn plan(&self) -> &AdapterPlan {
+        &self.plan
+    }
+
+    pub fn meta(&self) -> &PresetMeta {
+        &self.model.meta
+    }
+
+    /// `f(base + delta(adapter))` on one batch — the unperturbed loss.
+    #[allow(clippy::too_many_arguments)]
+    pub fn loss(
+        &mut self,
+        base: &[f32],
+        adapter: &[f32],
+        ids: &[i32],
+        targets: &[i32],
+        mask: &[f32],
+        b: usize,
+        s: usize,
+    ) -> f32 {
+        let bind = AdapterBinding::new(self.plan.segs(), adapter);
+        let view = ParamView::adapter(base, &bind);
+        self.model.loss_view_with(view, ids, targets, mask, b, s, &mut self.ws)
+    }
+
+    /// The antithetic pair `(f(adapter + λz), f(adapter - λz))` with the
+    /// perturbation applied in adapter coordinates and fused into the
+    /// weight loads — zero parameter-sized writes, bit-identical to
+    /// materializing `base + delta(adapter ± λz)` first.
+    #[allow(clippy::too_many_arguments)]
+    pub fn two_point(
+        &mut self,
+        base: &[f32],
+        adapter: &[f32],
+        z: &[f32],
+        lam: f32,
+        ids: &[i32],
+        targets: &[i32],
+        mask: &[f32],
+        b: usize,
+        s: usize,
+    ) -> (f32, f32) {
+        let plus = AdapterBinding::perturbed(self.plan.segs(), adapter, z, lam);
+        let lp = self.model.loss_view_with(
+            ParamView::adapter(base, &plus),
+            ids,
+            targets,
+            mask,
+            b,
+            s,
+            &mut self.ws,
+        );
+        let minus = AdapterBinding::perturbed(self.plan.segs(), adapter, z, -lam);
+        let lm = self.model.loss_view_with(
+            ParamView::adapter(base, &minus),
+            ids,
+            targets,
+            mask,
+            b,
+            s,
+            &mut self.ws,
+        );
+        (lp, lm)
+    }
+
+    /// Per-example eval logits (`ids [b, s]`, `pos [b]` -> `out [b, vocab]`)
+    /// through the position-masked LM head.
+    #[allow(clippy::too_many_arguments)]
+    pub fn eval_logits(
+        &mut self,
+        base: &[f32],
+        adapter: &[f32],
+        ids: &[i32],
+        pos: &[i32],
+        b: usize,
+        s: usize,
+        out: &mut [f32],
+    ) {
+        let bind = AdapterBinding::new(self.plan.segs(), adapter);
+        let view = ParamView::adapter(base, &bind);
+        self.model.eval_logits_view_with(view, ids, pos, b, s, &mut self.ws, out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::model::build_preset;
+    use crate::util::rng::STREAM_DIRECTION;
+
+    fn nano() -> PresetMeta {
+        build_preset("nano", 64, 32, 2, 2, 16, 4)
+    }
+
+    fn sample_dir(dim: usize, seed: u64, t: u64) -> Vec<f32> {
+        let mut z = vec![0f32; dim];
+        Xoshiro256pp::derive_stream(seed, STREAM_DIRECTION, t).fill_normal_f32(&mut z);
+        z
+    }
+
+    #[test]
+    fn plan_segments_match_layout_and_lozo_criterion() {
+        let meta = nano();
+        let plan = AdapterPlan::new(&meta, 4);
+        assert_eq!(plan.segs().len(), meta.layout.len());
+        let mut dim = 0usize;
+        for (seg, e) in plan.segs().iter().zip(&meta.layout) {
+            assert_eq!(seg.off(), e.offset);
+            assert_eq!(seg.elems(), e.shape.iter().product::<usize>());
+            let factored = e.shape.len() == 2 && e.shape[0] >= 4 && e.shape[1] >= 4;
+            match seg {
+                AdapterSeg::Mat { rows, cols, rank, u_off, v_off, .. } => {
+                    assert!(factored, "{} should not be factored", e.name);
+                    assert_eq!((*rows, *cols), (e.shape[0], e.shape[1]));
+                    assert_eq!(*rank, 4);
+                    assert_eq!(*u_off, dim);
+                    assert_eq!(*v_off, dim + rows * rank);
+                }
+                AdapterSeg::Dense { len, a_off, .. } => {
+                    assert!(!factored, "{} should be factored", e.name);
+                    assert_eq!(*len, e.shape.iter().product::<usize>());
+                    assert_eq!(*a_off, dim);
+                }
+            }
+            dim += seg.adapter_elems();
+        }
+        assert_eq!(plan.dim(), dim);
+        // the whole point: tenant state is a small fraction of d
+        assert!(plan.dim() * 4 < meta.d_raw, "dim {} vs d_raw {}", plan.dim(), meta.d_raw);
+        // a rank larger than every tensor dim degenerates to all-dense
+        let huge = AdapterPlan::new(&meta, 1 << 20);
+        assert!(huge.segs().iter().all(|s| matches!(s, AdapterSeg::Dense { .. })));
+        assert_eq!(huge.dim(), meta.d_raw);
+    }
+
+    #[test]
+    fn init_is_deterministic_and_delta_starts_at_zero() {
+        let meta = nano();
+        let plan = AdapterPlan::new(&meta, 4);
+        let a = plan.init(7);
+        assert_eq!(a, plan.init(7));
+        assert_ne!(a, plan.init(8));
+        assert!(a.iter().any(|&v| v != 0.0), "U factors must be initialized");
+        // V = 0 and dense = 0 => the materialized view IS the base
+        let model = NativeModel::new(meta.clone());
+        let base = model.init_flat(3);
+        let bind = AdapterBinding::new(plan.segs(), &a);
+        let mut mat = vec![0f32; meta.d_pad];
+        ParamView::adapter(&base, &bind).materialize_into(&mut mat);
+        assert_eq!(mat, base, "fresh adapter must leave the base unchanged");
+    }
+
+    #[test]
+    fn adapter_two_point_matches_materialized_across_pool_sizes() {
+        // THE tentpole contract at the session level: evaluating
+        // f(base + delta(adapter ± λz)) through the fused adapter view must
+        // reproduce materialize-then-forward BITWISE at pool sizes {1,2,4}
+        let meta = build_preset("adpt-thr", 64, 64, 2, 2, 64, 8);
+        let (b, s) = (meta.batch, meta.seq_len);
+        let ids: Vec<i32> = (0..b * s).map(|i| ((i * 5) % 61) as i32).collect();
+        let tgt: Vec<i32> = (0..b * s).map(|i| ((i * 11) % 61) as i32).collect();
+        let mut mask = vec![0f32; b * s];
+        for i in 0..b {
+            mask[i * s + s - 1] = 1.0;
+        }
+        let ref_model = NativeModel::new(meta.clone());
+        let base = ref_model.init_flat(21);
+        let plan = AdapterPlan::new(&meta, 4);
+        let mut adapter = plan.init(5);
+        // give V a nonzero value so the low-rank delta actually bites
+        Xoshiro256pp::derive_stream(99, STREAM_INIT, 0).fill_normal_f32(&mut adapter);
+        for v in adapter.iter_mut() {
+            *v *= 0.02;
+        }
+        let z = sample_dir(plan.dim(), 17, 3);
+        let lam = 1e-3f32;
+        for t in [1usize, 2, 4] {
+            let model = NativeModel::new(meta.clone()).with_threads(t);
+            let mut sess = AdapterSession::new(model, 4);
+            let (lp, lm) = sess.two_point(&base, &adapter, &z, lam, &ids, &tgt, &mask, b, s);
+            let l0 = sess.loss(&base, &adapter, &ids, &tgt, &mask, b, s);
+            let check = NativeModel::new(meta.clone()).with_threads(t);
+            let mut ws = check.scratch();
+            for (want_l, sc) in [(lp, lam), (lm, -lam)] {
+                let bind = AdapterBinding::perturbed(plan.segs(), &adapter, &z, sc);
+                let mut xs = vec![0f32; meta.d_pad];
+                ParamView::adapter(&base, &bind).materialize_into(&mut xs);
+                let want = check.loss_with(&xs, &ids, &tgt, &mask, b, s, &mut ws);
+                assert_eq!(want_l, want, "adapter two_point diverged (t={t}, sc={sc})");
+            }
+            let bind = AdapterBinding::new(plan.segs(), &adapter);
+            let mut xs = vec![0f32; meta.d_pad];
+            ParamView::adapter(&base, &bind).materialize_into(&mut xs);
+            let want0 = check.loss_with(&xs, &ids, &tgt, &mask, b, s, &mut ws);
+            assert_eq!(l0, want0, "adapter loss diverged (t={t})");
+        }
+    }
+
+    #[test]
+    fn adapter_eval_logits_matches_materialized_full_path() {
+        let meta = nano();
+        let (b, s) = (meta.batch, meta.seq_len);
+        let model = NativeModel::new(meta.clone());
+        let base = model.init_flat(11);
+        let plan = AdapterPlan::new(&meta, 4);
+        let mut adapter = plan.init(2);
+        Xoshiro256pp::derive_stream(42, STREAM_INIT, 1).fill_normal_f32(&mut adapter);
+        for v in adapter.iter_mut() {
+            *v *= 0.02;
+        }
+        let ids: Vec<i32> = (0..b * s).map(|i| ((i * 7) % 64) as i32).collect();
+        let pos = [1i32, 5, 9, 15];
+        let mut sess = AdapterSession::new(NativeModel::new(meta.clone()), 4);
+        let mut got = vec![0f32; b * meta.vocab];
+        sess.eval_logits(&base, &adapter, &ids, &pos, b, s, &mut got);
+        // reference: materialize the delta, run the full-logits forward,
+        // gather the requested rows
+        let bind = AdapterBinding::new(plan.segs(), &adapter);
+        let mut xs = vec![0f32; meta.d_pad];
+        ParamView::adapter(&base, &bind).materialize_into(&mut xs);
+        let full = model.forward(&xs, &ids, b, s);
+        for i in 0..b {
+            let p = pos[i] as usize;
+            let v = meta.vocab;
+            assert_eq!(got[i * v..(i + 1) * v], full[(i * s + p) * v..(i * s + p + 1) * v]);
+        }
+    }
+}

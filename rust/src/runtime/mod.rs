@@ -57,6 +57,7 @@
 //! clamped to `std::thread::available_parallelism()`, identically at every
 //! layer).
 
+pub mod adapter;
 pub mod autograd;
 pub mod manifest;
 pub mod model;
@@ -346,6 +347,13 @@ pub trait Backend {
     fn telemetry(&self) -> Option<&std::sync::Arc<crate::telemetry::Registry>> {
         None
     }
+    /// Bind a per-tenant low-rank [`adapter::AdapterSession`] for `preset`
+    /// at `rank`: the shared-base multi-tenant surface (`crate::serve`).
+    /// Backends without adapter support keep the erroring default.
+    fn bind_adapter(&self, preset: &str, rank: usize) -> Result<adapter::AdapterSession> {
+        let _ = (preset, rank);
+        bail!("backend {:?} has no adapter-session support", self.platform())
+    }
 }
 
 /// Compat shim over the session API: the old `load`/`call` surface. Holds
@@ -527,6 +535,12 @@ impl Runtime {
 
     pub fn preset(&self, name: &str) -> Result<&PresetMeta> {
         self.backend.manifest().preset(name)
+    }
+
+    /// Bind a per-tenant adapter session (shared base + O(rank·dims)
+    /// tenant state) — the `serve` scheduler's per-preset surface.
+    pub fn bind_adapter(&self, preset: &str, rank: usize) -> Result<adapter::AdapterSession> {
+        self.backend.bind_adapter(preset, rank)
     }
 }
 

@@ -41,6 +41,7 @@ use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use crate::parallel::WorkerPool;
+use crate::runtime::adapter::AdapterSession;
 use crate::runtime::autograd::{self, GradWorkspace};
 use crate::runtime::manifest::{Manifest, PresetMeta, ProgramSpec, TensorSpec};
 use crate::runtime::model::{builtin_presets, FwdScratch, NativeModel, QUAD_DIM};
@@ -181,6 +182,12 @@ impl Backend for NativeBackend {
         let meta = self.manifest.preset(&spec.preset)?.clone();
         let model = NativeModel::new(meta).with_pool(self.pool.clone());
         Ok(Box::new(NativeSession::new(spec.clone(), model)))
+    }
+
+    fn bind_adapter(&self, preset: &str, rank: usize) -> Result<AdapterSession> {
+        let meta = self.manifest.preset(preset)?.clone();
+        let model = NativeModel::new(meta).with_pool(self.pool.clone());
+        Ok(AdapterSession::new(model, rank))
     }
 }
 

@@ -1,0 +1,809 @@
+//! Multi-tenant adapter finetuning service: N concurrent LoRA-style ZO
+//! jobs multiplexed over ONE `Runtime`, ONE `WorkerPool`, and ONE shared
+//! read-only base-weight buffer.
+//!
+//! The serving model inverts the trainer's one-run-owns-everything shape:
+//!
+//! * **shared, per preset** — the base parameter buffer (`init` program,
+//!   `base_seed`) and one [`AdapterSession`] per `(preset, rank)` pair
+//!   (model plan + forward scratch). These are O(d) and paid once.
+//! * **per tenant** — an adapter vector of `AdapterPlan::dim()` floats
+//!   plus the tenant's optimizer state over that vector. The low-rank
+//!   delta fuses into the weight loads ([`crate::vecmath::AdapterBinding`])
+//!   so no tenant ever materializes a private weight copy: the marginal
+//!   tenant costs O(rank·dims), not O(d).
+//!
+//! Scheduling is a deterministic round-robin: each runnable job gets up to
+//! `quantum` units per turn (a unit = one ZO train step, or one full eval
+//! pass for `mode=eval` tenants). Every job's direction/batch/eval streams
+//! are pure functions of its OWN `(seed, t)` — nothing reads the global
+//! interleaving — so the final adapters are bit-identical for any quantum
+//! (pinned by `scheduler_is_deterministic_across_quanta`).
+//!
+//! Job lifecycle: `Active -> (pause_at: checkpoint + drop state) Paused ->
+//! (next turn: reload + replay batch stream) Active -> Done`. Checkpoints
+//! are per-tenant CMZ1 files holding the adapter plus every
+//! [`ZoOptimizer::state`] buffer; resume rebuilds the objective and calls
+//! `advance()` t times so step t sees the same minibatch it would have in
+//! an uninterrupted run (pinned bit-identically by
+//! `checkpoint_roundtrip_is_bit_identical`).
+//!
+//! [`AdapterSession`]: crate::runtime::adapter::AdapterSession
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+use std::time::Instant;
+
+use crate::util::error::{bail, Result};
+
+use crate::checkpoint::{params_hash, Checkpoint};
+use crate::data::{self, Example, TaskGen, TrainSampler};
+use crate::eval::{predict, score};
+use crate::objective::{AdapterObjective, Objective, SharedAdapterSession};
+use crate::optimizer::{BetaSchedule, ZoOptimizer};
+use crate::runtime::{lit_vec_f32, Arg, PresetMeta, Runtime};
+use crate::util::memory::MemoryMeter;
+
+// ---------------------------------------------------------------------------
+// Workload manifest
+// ---------------------------------------------------------------------------
+
+/// What a tenant's job units do.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum JobMode {
+    /// Each unit is one ZO train step (with optional periodic eval).
+    Train,
+    /// Each unit is one full eval pass over `eval_n` examples.
+    Eval,
+}
+
+/// One tenant line of the workload manifest.
+#[derive(Clone, Debug)]
+pub struct TenantSpec {
+    pub name: String,
+    pub preset: String,
+    pub rank: usize,
+    pub optimizer: String,
+    pub task: String,
+    /// Train steps (or eval passes for `mode=eval`).
+    pub steps: usize,
+    pub seed: u64,
+    pub eta: f32,
+    pub lam: f32,
+    pub theta: f32,
+    pub beta: f32,
+    /// Run an eval pass every N train steps (0 = never).
+    pub eval_every: usize,
+    pub eval_n: usize,
+    pub train_n: usize,
+    /// Checkpoint + drop all live state after this many completed steps;
+    /// the job resumes from the CMZ1 file on its next turn.
+    pub pause_at: Option<usize>,
+    pub mode: JobMode,
+}
+
+impl TenantSpec {
+    fn defaults(idx: usize, base_seed: u64) -> TenantSpec {
+        TenantSpec {
+            name: format!("t{idx}"),
+            preset: "nano".to_string(),
+            rank: 4,
+            optimizer: "conmezo".to_string(),
+            task: "sst2".to_string(),
+            steps: 10,
+            seed: base_seed.wrapping_add(idx as u64),
+            eta: 1e-2,
+            lam: 1e-3,
+            theta: 1.35,
+            beta: 0.9,
+            eval_every: 0,
+            eval_n: 32,
+            train_n: 64,
+            pause_at: None,
+            mode: JobMode::Train,
+        }
+    }
+}
+
+/// A parsed workload: scheduler settings + tenant list.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Units per job per round-robin turn (>= 1).
+    pub quantum: usize,
+    /// Seed for the shared base weights (`init` program argument).
+    pub base_seed: u64,
+    pub tenants: Vec<TenantSpec>,
+}
+
+fn num<T: std::str::FromStr>(v: &str, what: &str, ln: usize) -> Result<T> {
+    v.parse().map_err(|_| crate::anyhow!("manifest line {ln}: bad {what} value {v:?}"))
+}
+
+impl ServeConfig {
+    /// Parse the text manifest format: one directive per line, `#`
+    /// comments. `quantum N` and `base_seed N` apply to subsequent lines;
+    /// `tenant key=value ...` declares one job (unknown keys are errors).
+    pub fn parse(text: &str) -> Result<ServeConfig> {
+        let mut cfg = ServeConfig { quantum: 1, base_seed: 42, tenants: Vec::new() };
+        for (i, raw) in text.lines().enumerate() {
+            let ln = i + 1;
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let mut it = line.split_whitespace();
+            match it.next().unwrap() {
+                "quantum" => {
+                    let v = it.next().ok_or_else(|| {
+                        crate::anyhow!("manifest line {ln}: quantum needs a value")
+                    })?;
+                    cfg.quantum = num(v, "quantum", ln)?;
+                    if cfg.quantum == 0 {
+                        bail!("manifest line {ln}: quantum must be >= 1");
+                    }
+                }
+                "base_seed" => {
+                    let v = it.next().ok_or_else(|| {
+                        crate::anyhow!("manifest line {ln}: base_seed needs a value")
+                    })?;
+                    cfg.base_seed = num(v, "base_seed", ln)?;
+                }
+                "tenant" => {
+                    let mut t = TenantSpec::defaults(cfg.tenants.len(), cfg.base_seed);
+                    for kv in it {
+                        let (k, v) = kv.split_once('=').ok_or_else(|| {
+                            crate::anyhow!("manifest line {ln}: expected key=value, got {kv:?}")
+                        })?;
+                        match k {
+                            "name" => t.name = v.to_string(),
+                            "preset" => t.preset = v.to_string(),
+                            "rank" => t.rank = num(v, "rank", ln)?,
+                            "opt" => t.optimizer = v.to_string(),
+                            "task" => t.task = v.to_string(),
+                            "steps" => t.steps = num(v, "steps", ln)?,
+                            "seed" => t.seed = num(v, "seed", ln)?,
+                            "eta" => t.eta = num(v, "eta", ln)?,
+                            "lam" => t.lam = num(v, "lam", ln)?,
+                            "theta" => t.theta = num(v, "theta", ln)?,
+                            "beta" => t.beta = num(v, "beta", ln)?,
+                            "eval_every" => t.eval_every = num(v, "eval_every", ln)?,
+                            "eval_n" => t.eval_n = num(v, "eval_n", ln)?,
+                            "train_n" => t.train_n = num(v, "train_n", ln)?,
+                            "pause_at" => t.pause_at = Some(num(v, "pause_at", ln)?),
+                            "mode" => {
+                                t.mode = match v {
+                                    "train" => JobMode::Train,
+                                    "eval" => JobMode::Eval,
+                                    other => bail!("manifest line {ln}: unknown mode {other:?}"),
+                                }
+                            }
+                            other => bail!("manifest line {ln}: unknown tenant key {other:?}"),
+                        }
+                    }
+                    if t.rank == 0 {
+                        bail!("manifest line {ln}: rank must be >= 1");
+                    }
+                    if t.mode == JobMode::Eval && t.eval_n == 0 {
+                        bail!("manifest line {ln}: mode=eval needs eval_n >= 1");
+                    }
+                    cfg.tenants.push(t);
+                }
+                other => bail!("manifest line {ln}: unknown directive {other:?}"),
+            }
+        }
+        if cfg.tenants.is_empty() {
+            bail!("manifest declares no tenants");
+        }
+        for (i, a) in cfg.tenants.iter().enumerate() {
+            for b in &cfg.tenants[i + 1..] {
+                if a.name == b.name {
+                    bail!("duplicate tenant name {:?} (checkpoints are keyed by name)", a.name);
+                }
+            }
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: &Path) -> Result<ServeConfig> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| crate::anyhow!("reading manifest {}: {e}", path.display()))?;
+        Self::parse(&text)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-job state + telemetry
+// ---------------------------------------------------------------------------
+
+/// Per-job counters and timings.
+#[derive(Clone, Debug, Default)]
+pub struct JobStats {
+    pub steps: usize,
+    pub evals: usize,
+    pub checkpoints: usize,
+    pub resumes: usize,
+    pub last_loss: f64,
+    pub last_acc: f64,
+    /// Time spent waiting for a scheduler turn.
+    pub queue_wait_ns: u64,
+    /// Time spent actually computing units.
+    pub compute_ns: u64,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum JobState {
+    Active,
+    /// Checkpointed to disk at the recorded step; no live adapter /
+    /// optimizer / objective until the next turn reloads them.
+    Paused,
+    Done,
+}
+
+struct Job {
+    spec: TenantSpec,
+    meta: PresetMeta,
+    state: JobState,
+    /// Completed units (train steps, or eval passes for `mode=eval`).
+    t: usize,
+    adapter: Vec<f32>,
+    opt: Option<Box<dyn ZoOptimizer>>,
+    obj: Option<AdapterObjective>,
+    sess: SharedAdapterSession,
+    base: Rc<Vec<f32>>,
+    train: Vec<Example>,
+    eval_examples: Vec<Example>,
+    paused_once: bool,
+    stats: JobStats,
+    last_release: Instant,
+}
+
+fn build_opt(spec: &TenantSpec, dim: usize) -> Result<Box<dyn ZoOptimizer>> {
+    // the adapter vector is the optimizer's whole world: no pad lanes, no
+    // tensor layout (structured perturbations already live in the plan)
+    crate::optimizer::by_name(
+        &spec.optimizer,
+        dim,
+        spec.eta,
+        spec.lam,
+        spec.theta,
+        BetaSchedule::Constant(spec.beta),
+        &[],
+    )
+}
+
+impl Job {
+    fn build(spec: TenantSpec, sess: SharedAdapterSession, base: Rc<Vec<f32>>) -> Result<Job> {
+        let (meta, dim, adapter) = {
+            let s = sess.borrow();
+            (s.meta().clone(), s.plan().dim(), s.plan().init(spec.seed as i32))
+        };
+        let task = data::spec(&spec.task).ok_or_else(|| {
+            crate::anyhow!("tenant {:?}: unknown task {:?}", spec.name, spec.task)
+        })?;
+        let gen = TaskGen::new(task, meta.vocab, meta.seq_len);
+        let train = gen.dataset(spec.train_n, spec.seed);
+        let eval_examples = gen.dataset(spec.eval_n, spec.seed ^ 0xEEE);
+        let (opt, obj) = match spec.mode {
+            JobMode::Train => {
+                let opt = build_opt(&spec, dim)?;
+                let sampler =
+                    TrainSampler::new(train.clone(), meta.batch, meta.seq_len, spec.seed, 0);
+                let obj = AdapterObjective::new(sess.clone(), base.clone(), Box::new(sampler))?;
+                (Some(opt), Some(obj))
+            }
+            JobMode::Eval => (None, None),
+        };
+        let state = if spec.steps == 0 { JobState::Done } else { JobState::Active };
+        let stats = JobStats { last_loss: f64::NAN, last_acc: f64::NAN, ..JobStats::default() };
+        Ok(Job {
+            spec,
+            meta,
+            state,
+            t: 0,
+            adapter,
+            opt,
+            obj,
+            sess,
+            base,
+            train,
+            eval_examples,
+            paused_once: false,
+            stats,
+            last_release: Instant::now(),
+        })
+    }
+
+    fn ckpt_path(&self, dir: &Path) -> PathBuf {
+        dir.join(format!("{}.cmz1", self.spec.name))
+    }
+
+    /// Persistent bytes the tenant owns beyond the shared base/session:
+    /// adapter vector + optimizer state/scratch — all O(rank·dims).
+    fn tenant_bytes(&self) -> usize {
+        let mut m = MemoryMeter::new();
+        m.alloc_f32("adapter", self.adapter.len());
+        if let Some(opt) = &self.opt {
+            opt.record_memory(&mut m);
+        }
+        m.current_bytes()
+    }
+
+    /// One scheduler turn: resume if paused, then run up to `quantum`
+    /// units (a pause ends the turn early).
+    fn run_turn(&mut self, quantum: usize, ckpt_dir: &Path) -> Result<()> {
+        if self.state == JobState::Paused {
+            self.resume(ckpt_dir)?;
+        }
+        for _ in 0..quantum {
+            if self.state != JobState::Active {
+                break;
+            }
+            let t0 = Instant::now();
+            self.unit(ckpt_dir)?;
+            self.stats.compute_ns += t0.elapsed().as_nanos() as u64;
+        }
+        Ok(())
+    }
+
+    fn unit(&mut self, ckpt_dir: &Path) -> Result<()> {
+        match self.spec.mode {
+            JobMode::Train => {
+                let opt = self.opt.as_mut().expect("active train job has an optimizer");
+                let obj = self.obj.as_mut().expect("active train job has an objective");
+                let st = opt.step(&mut self.adapter, obj, self.t, self.spec.seed)?;
+                obj.advance();
+                self.stats.last_loss = st.loss;
+                self.stats.steps += 1;
+                self.t += 1;
+                if self.spec.eval_every > 0 && self.t % self.spec.eval_every == 0 {
+                    self.run_eval();
+                }
+                if self.t >= self.spec.steps {
+                    self.state = JobState::Done;
+                } else if Some(self.t) == self.spec.pause_at && !self.paused_once {
+                    self.pause(ckpt_dir)?;
+                }
+            }
+            JobMode::Eval => {
+                self.run_eval();
+                self.t += 1;
+                if self.t >= self.spec.steps {
+                    self.state = JobState::Done;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Candidate-restricted eval over the job's fixed example set through
+    /// the position-masked LM head (only the predicted positions hit the
+    /// tied-embedding GEMM).
+    fn run_eval(&mut self) {
+        let (b, s, v) = (self.meta.batch, self.meta.seq_len, self.meta.vocab);
+        let mut ids = vec![0i32; b * s];
+        let mut pos = vec![0i32; b];
+        let mut out = vec![0f32; b * v];
+        let mut pairs = Vec::with_capacity(self.eval_examples.len());
+        let mut sess = self.sess.borrow_mut();
+        for chunk in self.eval_examples.chunks(b) {
+            ids.fill(0);
+            pos.fill(0);
+            for (i, e) in chunk.iter().enumerate() {
+                ids[i * s..(i + 1) * s].copy_from_slice(&e.tokens);
+                pos[i] = e.predict_pos as i32;
+            }
+            sess.eval_logits(&self.base, &self.adapter, &ids, &pos, b, s, &mut out);
+            for (i, e) in chunk.iter().enumerate() {
+                pairs.push((e.label, predict(&out[i * v..(i + 1) * v], &e.candidates)));
+            }
+        }
+        self.stats.last_acc = score(&pairs).accuracy();
+        self.stats.evals += 1;
+    }
+
+    /// Write the CMZ1 checkpoint (adapter + every optimizer state buffer)
+    /// and drop all live per-tenant state.
+    fn pause(&mut self, ckpt_dir: &Path) -> Result<()> {
+        let mut ck = Checkpoint::new(&self.spec.preset, self.t as u64);
+        ck.put("adapter", &self.adapter);
+        if let Some(opt) = &self.opt {
+            for (name, data) in opt.state() {
+                ck.put(&format!("opt.{name}"), data);
+            }
+        }
+        ck.save(&self.ckpt_path(ckpt_dir))?;
+        self.adapter = Vec::new();
+        self.opt = None;
+        self.obj = None;
+        self.state = JobState::Paused;
+        self.paused_once = true;
+        self.stats.checkpoints += 1;
+        Ok(())
+    }
+
+    /// Reload the checkpoint and rebuild live state: optimizer buffers via
+    /// [`ZoOptimizer::restore`], and a fresh objective advanced `t` times
+    /// so step `t` consumes the same minibatch an uninterrupted run would
+    /// (the batch stream is a pure function of `(seed, draw index)`).
+    fn resume(&mut self, ckpt_dir: &Path) -> Result<()> {
+        let path = self.ckpt_path(ckpt_dir);
+        let ck = Checkpoint::load(&path)?;
+        if ck.preset != self.spec.preset {
+            bail!(
+                "tenant {:?}: checkpoint preset {:?} != spec preset {:?}",
+                self.spec.name,
+                ck.preset,
+                self.spec.preset
+            );
+        }
+        self.t = ck.step as usize;
+        self.adapter = ck.get("adapter")?.to_vec();
+        let mut opt = build_opt(&self.spec, self.adapter.len())?;
+        for (name, data) in &ck.buffers {
+            if let Some(buf) = name.strip_prefix("opt.") {
+                opt.restore(buf, data)?;
+            }
+        }
+        let sampler = TrainSampler::new(
+            self.train.clone(),
+            self.meta.batch,
+            self.meta.seq_len,
+            self.spec.seed,
+            0,
+        );
+        let mut obj =
+            AdapterObjective::new(self.sess.clone(), self.base.clone(), Box::new(sampler))?;
+        for _ in 0..self.t {
+            obj.advance();
+        }
+        self.opt = Some(opt);
+        self.obj = Some(obj);
+        self.state = JobState::Active;
+        self.stats.resumes += 1;
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Server: deterministic fair-share scheduler
+// ---------------------------------------------------------------------------
+
+/// Final state of one tenant's job.
+#[derive(Clone, Debug)]
+pub struct JobReport {
+    pub name: String,
+    /// The tenant's final adapter vector (bit-exact; determinism and
+    /// checkpoint-roundtrip tests compare these directly).
+    pub adapter: Vec<f32>,
+    /// FNV-1a over the adapter bits (display / cheap comparison).
+    pub adapter_hash: u64,
+    /// Final optimizer state buffers, e.g. `("m", momentum)`.
+    pub opt_state: Vec<(String, Vec<f32>)>,
+    /// Per-tenant incremental memory (adapter + optimizer state bytes).
+    pub tenant_bytes: usize,
+    pub stats: JobStats,
+}
+
+impl JobReport {
+    /// One greppable summary line (`examples/run_serve.sh` asserts on
+    /// these).
+    pub fn summary_line(&self) -> String {
+        format!(
+            "tenant {}: steps={} evals={} checkpoints={} resumes={} loss={:.4} acc={:.3} \
+             wait={:.2}ms compute={:.2}ms tenant_kib={:.1} adapter_hash={:016x}",
+            self.name,
+            self.stats.steps,
+            self.stats.evals,
+            self.stats.checkpoints,
+            self.stats.resumes,
+            self.stats.last_loss,
+            self.stats.last_acc,
+            self.stats.queue_wait_ns as f64 / 1e6,
+            self.stats.compute_ns as f64 / 1e6,
+            self.tenant_bytes as f64 / 1024.0,
+            self.adapter_hash,
+        )
+    }
+}
+
+/// Everything the workload produced, in manifest order.
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    pub jobs: Vec<JobReport>,
+}
+
+/// The multi-tenant scheduler: owns the shared bases/sessions and every
+/// job, and drives them round-robin until all are done. (The `Runtime` is
+/// only needed at build time: sessions own their model plans and pool
+/// handles.)
+pub struct Server {
+    cfg: ServeConfig,
+    ckpt_dir: PathBuf,
+    jobs: Vec<Job>,
+    meter: MemoryMeter,
+}
+
+impl Server {
+    /// Build all shared state and all jobs. Bases are loaded once per
+    /// preset (the `init` program with `base_seed`); adapter sessions bind
+    /// once per `(preset, rank)` and are shared by every matching tenant.
+    pub fn new(rt: &Runtime, cfg: ServeConfig, ckpt_dir: PathBuf) -> Result<Server> {
+        let mut bases: HashMap<String, Rc<Vec<f32>>> = HashMap::new();
+        let mut sessions: HashMap<(String, usize), SharedAdapterSession> = HashMap::new();
+        let mut meter = MemoryMeter::new();
+        let mut jobs = Vec::with_capacity(cfg.tenants.len());
+        for spec in &cfg.tenants {
+            let base = match bases.get(&spec.preset) {
+                Some(b) => b.clone(),
+                None => {
+                    let init = rt.load_kind(&spec.preset, "init")?;
+                    let x = lit_vec_f32(&init.call(&[Arg::I32(cfg.base_seed as i32)])?[0])?;
+                    meter.alloc_f32(&format!("base.{}", spec.preset), x.len());
+                    let b = Rc::new(x);
+                    bases.insert(spec.preset.clone(), b.clone());
+                    b
+                }
+            };
+            let key = (spec.preset.clone(), spec.rank);
+            let sess = match sessions.get(&key) {
+                Some(s) => s.clone(),
+                None => {
+                    let s: SharedAdapterSession =
+                        Rc::new(RefCell::new(rt.bind_adapter(&spec.preset, spec.rank)?));
+                    sessions.insert(key, s.clone());
+                    s
+                }
+            };
+            let job = Job::build(spec.clone(), sess, base)?;
+            meter.alloc(&format!("tenant.{}", spec.name), job.tenant_bytes());
+            jobs.push(job);
+        }
+        Ok(Server { cfg, ckpt_dir, jobs, meter })
+    }
+
+    /// Shared + per-tenant memory accounting (`base.<preset>` entries are
+    /// the shared O(d) cost, `tenant.<name>` entries the O(rank·dims)
+    /// marginals).
+    pub fn meter(&self) -> &MemoryMeter {
+        &self.meter
+    }
+
+    /// Run the workload to completion: round-robin turns of `quantum`
+    /// units per runnable job until every job is `Done`.
+    pub fn run(&mut self) -> Result<ServeReport> {
+        let start = Instant::now();
+        for job in &mut self.jobs {
+            job.last_release = start;
+        }
+        loop {
+            let mut any_runnable = false;
+            for job in &mut self.jobs {
+                if job.state == JobState::Done {
+                    continue;
+                }
+                any_runnable = true;
+                let now = Instant::now();
+                job.stats.queue_wait_ns += now.duration_since(job.last_release).as_nanos() as u64;
+                job.run_turn(self.cfg.quantum, &self.ckpt_dir)?;
+                job.last_release = Instant::now();
+            }
+            if !any_runnable {
+                break;
+            }
+        }
+        Ok(self.report())
+    }
+
+    fn report(&self) -> ServeReport {
+        let jobs = self
+            .jobs
+            .iter()
+            .map(|j| JobReport {
+                name: j.spec.name.clone(),
+                adapter: j.adapter.clone(),
+                adapter_hash: params_hash(&j.adapter),
+                opt_state: j
+                    .opt
+                    .as_ref()
+                    .map(|o| {
+                        o.state()
+                            .into_iter()
+                            .map(|(n, d)| (n.to_string(), d.to_vec()))
+                            .collect()
+                    })
+                    .unwrap_or_default(),
+                tenant_bytes: j.tenant_bytes(),
+                stats: j.stats.clone(),
+            })
+            .collect();
+        ServeReport { jobs }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::ParallelPolicy;
+
+    fn rt() -> Runtime {
+        Runtime::native_with(ParallelPolicy::single())
+    }
+
+    fn tmp_dir(test: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("conmezo_serve_{test}_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn run_manifest(text: &str, quantum: Option<usize>, dir: &str) -> ServeReport {
+        let mut cfg = ServeConfig::parse(text).unwrap();
+        if let Some(q) = quantum {
+            cfg.quantum = q;
+        }
+        let rt = rt();
+        let mut server = Server::new(&rt, cfg, tmp_dir(dir)).unwrap();
+        server.run().unwrap()
+    }
+
+    #[test]
+    fn manifest_parses_directives_and_defaults() {
+        let cfg = ServeConfig::parse(
+            "# workload\nquantum 3\nbase_seed 9\n\
+             tenant name=a opt=mezo steps=5 rank=2 eval_every=2 eval_n=8\n\
+             tenant task=rte mode=eval steps=2\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.quantum, 3);
+        assert_eq!(cfg.base_seed, 9);
+        assert_eq!(cfg.tenants.len(), 2);
+        let a = &cfg.tenants[0];
+        assert_eq!((a.name.as_str(), a.rank, a.steps), ("a", 2, 5));
+        assert_eq!(a.optimizer, "mezo");
+        assert_eq!((a.eval_every, a.eval_n), (2, 8));
+        assert_eq!(a.seed, 9); // base_seed + index 0
+        let b = &cfg.tenants[1];
+        assert_eq!(b.name, "t1"); // default name from index
+        assert_eq!(b.task, "rte");
+        assert_eq!(b.mode, JobMode::Eval);
+        assert_eq!(b.seed, 10);
+    }
+
+    #[test]
+    fn manifest_rejects_bad_input() {
+        assert!(ServeConfig::parse("").is_err(), "no tenants");
+        assert!(ServeConfig::parse("tenant name=a bogus=1\n").is_err(), "unknown key");
+        assert!(ServeConfig::parse("quantum 0\ntenant name=a\n").is_err(), "zero quantum");
+        assert!(ServeConfig::parse("tenant name=a\ntenant name=a\n").is_err(), "dup name");
+        assert!(ServeConfig::parse("tenant name=a mode=weird\n").is_err(), "bad mode");
+        assert!(ServeConfig::parse("frobnicate 3\n").is_err(), "unknown directive");
+        assert!(ServeConfig::parse("tenant name=a rank=0\n").is_err(), "zero rank");
+    }
+
+    /// SATELLITE (c): same manifest + seeds => bit-identical final
+    /// adapters and optimizer state, independent of the interleaving the
+    /// quantum produces (every per-job stream is a function of (seed, t)).
+    #[test]
+    fn scheduler_is_deterministic_across_quanta() {
+        let mani = "base_seed 5\n\
+             tenant name=a opt=conmezo steps=5 seed=3 train_n=16\n\
+             tenant name=b opt=mezo_momentum steps=4 seed=4 train_n=16 task=rte\n\
+             tenant name=c opt=conmezo steps=3 seed=7 train_n=16 eval_every=2 eval_n=8\n";
+        let r1 = run_manifest(mani, Some(1), "det_q1");
+        let r3 = run_manifest(mani, Some(3), "det_q3");
+        assert_eq!(r1.jobs.len(), 3);
+        for (a, b) in r1.jobs.iter().zip(&r3.jobs) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.adapter, b.adapter, "adapter diverged for {}", a.name);
+            assert_eq!(a.adapter_hash, b.adapter_hash);
+            assert_eq!(a.opt_state, b.opt_state, "opt state diverged for {}", a.name);
+            assert_eq!(a.stats.steps, b.stats.steps);
+            assert_eq!(a.stats.evals, b.stats.evals);
+            assert!(a.stats.last_loss.is_finite());
+        }
+        // the eval tenant actually evaluated (t=2 of 3)
+        assert_eq!(r1.jobs[2].stats.evals, 1);
+        assert!(r1.jobs[2].stats.last_acc.is_finite());
+    }
+
+    /// SATELLITE (f): pause -> CMZ1 checkpoint -> drop state -> resume
+    /// must reproduce the uninterrupted run's (adapter, momentum)
+    /// bit-identically.
+    #[test]
+    fn checkpoint_roundtrip_is_bit_identical() {
+        let paused_mani = "tenant name=p opt=conmezo steps=6 seed=11 train_n=16 pause_at=3\n";
+        let straight_mani = "tenant name=p opt=conmezo steps=6 seed=11 train_n=16\n";
+        let dir = tmp_dir("roundtrip_paused");
+        let rt_ = rt();
+        let mut server =
+            Server::new(&rt_, ServeConfig::parse(paused_mani).unwrap(), dir.clone()).unwrap();
+        let paused = server.run().unwrap();
+        let straight = run_manifest(straight_mani, None, "roundtrip_straight");
+        let (p, s) = (&paused.jobs[0], &straight.jobs[0]);
+        assert_eq!(p.stats.checkpoints, 1);
+        assert_eq!(p.stats.resumes, 1);
+        assert_eq!(s.stats.checkpoints, 0);
+        assert!(dir.join("p.cmz1").exists(), "checkpoint file must persist");
+        assert_eq!(p.stats.steps, 6);
+        assert_eq!(s.stats.steps, 6);
+        assert_eq!(p.adapter, s.adapter, "resumed adapter != uninterrupted adapter");
+        assert_eq!(p.opt_state, s.opt_state, "resumed momentum != uninterrupted momentum");
+        // the checkpoint on disk holds the step-3 state, not the final one
+        let ck = Checkpoint::load(&dir.join("p.cmz1")).unwrap();
+        assert_eq!(ck.step, 3);
+        assert_ne!(ck.get("adapter").unwrap(), &p.adapter[..]);
+        assert!(ck.get("opt.m").is_ok());
+    }
+
+    /// TENTPOLE acceptance: 16 concurrent tenants on one Runtime, with
+    /// per-tenant incremental memory O(rank·dims) — a fraction of what 16
+    /// independent full-weight trainers would pay.
+    #[test]
+    fn sixteen_tenants_share_one_runtime_with_small_marginals() {
+        let mut mani = String::from("quantum 2\nbase_seed 3\n");
+        for i in 0..16 {
+            let line = match i % 4 {
+                0 => format!("tenant name=j{i} opt=conmezo steps=1 seed={} train_n=8\n", 20 + i),
+                1 => format!("tenant name=j{i} opt=mezo steps=1 seed={} train_n=8\n", 20 + i),
+                2 => format!(
+                    "tenant name=j{i} opt=mezo_momentum steps=1 seed={} train_n=8 task=rte\n",
+                    20 + i
+                ),
+                _ => format!("tenant name=j{i} mode=eval steps=1 seed={} eval_n=8\n", 20 + i),
+            };
+            mani.push_str(&line);
+        }
+        let cfg = ServeConfig::parse(&mani).unwrap();
+        let rt_ = rt();
+        let mut server = Server::new(&rt_, cfg, tmp_dir("sixteen")).unwrap();
+        let meta = rt_.preset("nano").unwrap().clone();
+        // shared base accounted once, at full d_pad
+        let base_bytes = *server.meter().breakdown().get("base.nano").unwrap();
+        assert_eq!(base_bytes, meta.d_pad * 4);
+        // every tenant's marginal is a small fraction of a full-weight
+        // trainer's persistent state (params + m + u + z at d_pad)
+        let full_weight = meta.d_pad * 4 * 4;
+        let tenants: Vec<(String, usize)> = server
+            .meter()
+            .breakdown()
+            .iter()
+            .filter(|(k, _)| k.starts_with("tenant."))
+            .map(|(k, v)| (k.clone(), *v))
+            .collect();
+        assert_eq!(tenants.len(), 16);
+        for (name, bytes) in &tenants {
+            assert!(
+                bytes * 4 <= full_weight,
+                "{name}: marginal {bytes} B not << full-weight {full_weight} B"
+            );
+        }
+        let report = server.run().unwrap();
+        assert_eq!(report.jobs.len(), 16);
+        // eval-mode tenants (every 4th) evaluated, the rest trained
+        for (i, j) in report.jobs.iter().enumerate() {
+            assert!(j.tenant_bytes * 4 <= full_weight, "{}", j.name);
+            if i % 4 == 3 {
+                assert_eq!((j.stats.steps, j.stats.evals), (0, 1), "{}", j.name);
+                assert!(j.stats.last_acc.is_finite());
+            } else {
+                assert_eq!((j.stats.steps, j.stats.evals), (1, 0), "{}", j.name);
+                assert!(j.stats.last_loss.is_finite());
+            }
+        }
+    }
+
+    #[test]
+    fn queue_and_compute_times_are_recorded() {
+        let r = run_manifest(
+            "tenant name=a steps=2 train_n=8\ntenant name=b steps=2 train_n=8\n",
+            None,
+            "timing",
+        );
+        for j in &r.jobs {
+            assert!(j.stats.compute_ns > 0, "{} compute time", j.name);
+        }
+        // with two tenants round-robining, each waits while the other runs
+        assert!(r.jobs.iter().any(|j| j.stats.queue_wait_ns > 0));
+    }
+}

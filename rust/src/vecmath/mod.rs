@@ -34,8 +34,217 @@
 //! `view_bias_and_layernorm_match_materialized` and by model-/session-
 //! level twins. A plain view (`dir = None`) dispatches straight to the
 //! unfused kernel, so the non-perturbed paths pay nothing.
+//!
+//! ## [`AdapterBinding`]: low-rank tenant deltas over a shared base
+//!
+//! The multi-tenant serving layer (`crate::serve`) runs N finetuning jobs
+//! against ONE read-only base buffer: each tenant owns only a small adapter
+//! vector. An [`AdapterBinding`] maps per-tensor segments of the base onto
+//! that vector — 2-D weights get rank-r factors (`U V^T / sqrt(r)` fused
+//! into the loads), 1-D tensors get dense deltas — and a [`ParamView`]
+//! carrying a binding resolves each `slice()` (how `runtime::model` carves
+//! per-tensor views) to the matching segment. SPSA perturbations live in
+//! ADAPTER coordinates: for a 2-D segment the effective element under
+//! `scale = ±λ` is `base + ((U+λZu)(V+λZv)^T)/sqrt(r)`, so a tenant's whole
+//! ZO state is O(rank·dims). Composite views route to `*_span_view` kernels
+//! that walk the exact tile order of the fused spans while reading
+//! `view.at(i)`, so results stay bit-identical to materializing the delta
+//! and running the plain kernel — pinned by
+//! `adapter_view_gemms_match_materialized_across_pool_sizes`.
 
 use crate::parallel::{SendPtr, WorkerPool};
+
+/// One tensor's mapping from the shared base buffer onto a tenant's flat
+/// adapter vector. Segments are built once per (preset, rank) by
+/// `runtime::adapter::AdapterPlan` and shared by every tenant of that
+/// shape; 2-D weights whose dims both reach `rank` get low-rank factors
+/// (mirroring `optimizer::lozo`'s segmentation), everything else a dense
+/// delta.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdapterSeg {
+    /// A 2-D tensor `[rows, cols]` at `off` in the base: the tenant owns
+    /// `U [rows, rank]` at `u_off` and `V [cols, rank]` at `v_off` in the
+    /// adapter vector, and the effective element is
+    /// `base + (U V^T)/sqrt(rank)`.
+    Mat { off: usize, rows: usize, cols: usize, rank: usize, u_off: usize, v_off: usize },
+    /// Any other tensor (1-D gains/biases, or 2-D too small for the rank):
+    /// a dense delta of `len` elements at `a_off` in the adapter vector.
+    Dense { off: usize, len: usize, a_off: usize },
+}
+
+impl AdapterSeg {
+    /// Offset of this tensor in the base buffer.
+    pub fn off(&self) -> usize {
+        match self {
+            AdapterSeg::Mat { off, .. } | AdapterSeg::Dense { off, .. } => *off,
+        }
+    }
+
+    /// Element count of this tensor in the base buffer.
+    pub fn elems(&self) -> usize {
+        match self {
+            AdapterSeg::Mat { rows, cols, .. } => rows * cols,
+            AdapterSeg::Dense { len, .. } => *len,
+        }
+    }
+
+    /// Tenant-owned parameter count for this segment: `(rows + cols) * rank`
+    /// for a factored matrix, `len` for a dense delta.
+    pub fn adapter_elems(&self) -> usize {
+        match self {
+            AdapterSeg::Mat { rows, cols, rank, .. } => (rows + cols) * rank,
+            AdapterSeg::Dense { len, .. } => *len,
+        }
+    }
+}
+
+/// Total tenant-owned parameter count over a segment list — the dimension
+/// the per-tenant ZO optimizer runs in.
+pub fn adapter_dim(segs: &[AdapterSeg]) -> usize {
+    segs.iter().map(|s| s.adapter_elems()).sum()
+}
+
+/// A tenant's adapter delta bound over a segment list, optionally carrying
+/// an SPSA perturbation `dir` (same flat layout as `adapter`) at `scale`.
+/// [`ParamView::adapter`] wraps the shared base with one of these; slicing
+/// a tensor out of that view resolves to the matching segment.
+#[derive(Clone, Copy, Debug)]
+pub struct AdapterBinding<'a> {
+    segs: &'a [AdapterSeg],
+    adapter: &'a [f32],
+    dir: Option<&'a [f32]>,
+    scale: f32,
+}
+
+impl<'a> AdapterBinding<'a> {
+    /// The unperturbed binding `base + delta(adapter)`.
+    pub fn new(segs: &'a [AdapterSeg], adapter: &'a [f32]) -> AdapterBinding<'a> {
+        assert_eq!(adapter.len(), adapter_dim(segs));
+        AdapterBinding { segs, adapter, dir: None, scale: 0.0 }
+    }
+
+    /// The perturbed binding `base + delta(adapter + scale * dir)` where the
+    /// perturbation composes in adapter coordinates (for 2-D segments both
+    /// factors shift: `(U + scale*Zu)(V + scale*Zv)^T / sqrt(r)`).
+    pub fn perturbed(
+        segs: &'a [AdapterSeg],
+        adapter: &'a [f32],
+        dir: &'a [f32],
+        scale: f32,
+    ) -> AdapterBinding<'a> {
+        assert_eq!(adapter.len(), adapter_dim(segs));
+        assert_eq!(adapter.len(), dir.len());
+        AdapterBinding { segs, adapter, dir: Some(dir), scale }
+    }
+
+    /// The segment list this binding resolves against.
+    pub fn segs(&self) -> &'a [AdapterSeg] {
+        self.segs
+    }
+
+    /// The per-tensor view for `seg` over its base slice.
+    fn seg_view(&self, seg: &AdapterSeg, base: &'a [f32]) -> ParamView<'a> {
+        debug_assert_eq!(base.len(), seg.elems());
+        match *seg {
+            AdapterSeg::Mat { rows, cols, rank, u_off, v_off, .. } => ParamView {
+                base,
+                dir: None,
+                scale: 0.0,
+                add: None,
+                lowrank: Some(LowRankRef {
+                    u: &self.adapter[u_off..u_off + rows * rank],
+                    v: &self.adapter[v_off..v_off + cols * rank],
+                    zu: self.dir.map(|z| &z[u_off..u_off + rows * rank]),
+                    zv: self.dir.map(|z| &z[v_off..v_off + cols * rank]),
+                    rank,
+                    cols,
+                    inv_sqrt_r: 1.0 / (rank as f32).sqrt(),
+                    scale: self.scale,
+                    elem_off: 0,
+                }),
+                binding: None,
+            },
+            AdapterSeg::Dense { len, a_off, .. } => ParamView {
+                base,
+                dir: self.dir.map(|z| &z[a_off..a_off + len]),
+                scale: self.scale,
+                add: Some(&self.adapter[a_off..a_off + len]),
+                lowrank: None,
+                binding: None,
+            },
+        }
+    }
+
+    /// The segment exactly covering `[off, off + len)` in the base buffer.
+    fn find(&self, off: usize, len: usize) -> &'a AdapterSeg {
+        let idx = self.segs.partition_point(|s| s.off() < off);
+        match self.segs.get(idx) {
+            Some(s) if s.off() == off && s.elems() == len => s,
+            _ => panic!("adapter binding has no segment covering [{off}, {})", off + len),
+        }
+    }
+
+    /// Effective element `i` of a whole-buffer adapter view (lanes past the
+    /// segment coverage — the alignment pads — read the base verbatim).
+    fn element(&self, base: &'a [f32], i: usize) -> f32 {
+        let idx = self.segs.partition_point(|s| s.off() + s.elems() <= i);
+        match self.segs.get(idx) {
+            Some(s) if s.off() <= i => {
+                let v = self.seg_view(s, &base[s.off()..s.off() + s.elems()]);
+                v.at(i - s.off())
+            }
+            _ => base[i],
+        }
+    }
+}
+
+/// A rank-`r` factor delta over one 2-D tensor, resolved from an
+/// [`AdapterBinding`] segment: element `(row, col)` reads
+/// `sum_k (U[row,k] + scale*Zu[row,k]) * (V[col,k] + scale*Zv[col,k])`
+/// times `1/sqrt(rank)`, k ascending from a zero f32 accumulator — the
+/// exact order the materialized test reference uses, so fused reads are
+/// bit-identical to materialize-then-run.
+#[derive(Clone, Copy, Debug)]
+pub struct LowRankRef<'a> {
+    u: &'a [f32],
+    v: &'a [f32],
+    zu: Option<&'a [f32]>,
+    zv: Option<&'a [f32]>,
+    rank: usize,
+    cols: usize,
+    inv_sqrt_r: f32,
+    scale: f32,
+    /// Flat-element offset of this (possibly sub-sliced) view into the
+    /// underlying `[rows, cols]` tensor.
+    elem_off: usize,
+}
+
+impl LowRankRef<'_> {
+    /// The delta at flat element `i` of the viewed range.
+    #[inline(always)]
+    fn at(&self, i: usize) -> f32 {
+        let e = self.elem_off + i;
+        let (r, c) = (e / self.cols, e % self.cols);
+        let urow = &self.u[r * self.rank..(r + 1) * self.rank];
+        let vrow = &self.v[c * self.rank..(c + 1) * self.rank];
+        let mut acc = 0f32;
+        match (self.zu, self.zv) {
+            (Some(zu), Some(zv)) => {
+                let zur = &zu[r * self.rank..(r + 1) * self.rank];
+                let zvr = &zv[c * self.rank..(c + 1) * self.rank];
+                for kk in 0..self.rank {
+                    acc += (urow[kk] + self.scale * zur[kk]) * (vrow[kk] + self.scale * zvr[kk]);
+                }
+            }
+            _ => {
+                for kk in 0..self.rank {
+                    acc += urow[kk] * vrow[kk];
+                }
+            }
+        }
+        acc * self.inv_sqrt_r
+    }
+}
 
 /// A flat parameter buffer viewed through an optional rank-one
 /// perturbation: element `i` reads as `base[i] + scale * dir[i]` (or just
@@ -51,19 +260,34 @@ pub struct ParamView<'a> {
     base: &'a [f32],
     dir: Option<&'a [f32]>,
     scale: f32,
+    /// Unit-scale dense delta (a tenant's persistent 1-D adapter values).
+    add: Option<&'a [f32]>,
+    /// Low-rank factor delta (a tenant's 2-D adapter segment).
+    lowrank: Option<LowRankRef<'a>>,
+    /// Whole-buffer adapter binding: per-tensor `slice()` calls resolve
+    /// against its segment list instead of slicing dense deltas.
+    binding: Option<&'a AdapterBinding<'a>>,
 }
 
 impl<'a> ParamView<'a> {
     /// An unperturbed view: reads are plain `base[i]` loads and every
     /// `*_view` kernel dispatches to its unfused twin.
     pub fn plain(base: &'a [f32]) -> ParamView<'a> {
-        ParamView { base, dir: None, scale: 0.0 }
+        ParamView { base, dir: None, scale: 0.0, add: None, lowrank: None, binding: None }
     }
 
     /// The perturbed view `base + scale * dir` (lengths must match).
     pub fn perturbed(base: &'a [f32], dir: &'a [f32], scale: f32) -> ParamView<'a> {
         assert_eq!(base.len(), dir.len());
-        ParamView { base, dir: Some(dir), scale }
+        ParamView { base, dir: Some(dir), scale, add: None, lowrank: None, binding: None }
+    }
+
+    /// A view of the shared base buffer through a tenant's adapter delta:
+    /// per-tensor `slice()` calls resolve against `binding`'s segments
+    /// (low-rank for factored 2-D weights, dense for the rest), with any
+    /// SPSA perturbation applied in adapter coordinates.
+    pub fn adapter(base: &'a [f32], binding: &'a AdapterBinding<'a>) -> ParamView<'a> {
+        ParamView { base, dir: None, scale: 0.0, add: None, lowrank: None, binding: Some(binding) }
     }
 
     pub fn len(&self) -> usize {
@@ -85,28 +309,73 @@ impl<'a> ParamView<'a> {
     }
 
     /// The sub-view `[off, off + len)` — how per-tensor views are carved
-    /// out of the flat buffer (`runtime::model::Span::view`).
+    /// out of the flat buffer (`runtime::model::Span::view`). On an adapter
+    /// view the range must cover one segment exactly; the result carries
+    /// that segment's low-rank or dense delta.
     pub fn slice(&self, off: usize, len: usize) -> ParamView<'a> {
+        if let Some(bind) = self.binding {
+            let seg = bind.find(off, len);
+            return bind.seg_view(seg, &self.base[off..off + len]);
+        }
         ParamView {
             base: &self.base[off..off + len],
             dir: self.dir.map(|d| &d[off..off + len]),
             scale: self.scale,
+            add: self.add.map(|a| &a[off..off + len]),
+            lowrank: self.lowrank.map(|mut lr| {
+                lr.elem_off += off;
+                lr
+            }),
+            binding: None,
         }
     }
 
-    /// Element `i` with the perturbation fused into the load.
+    /// Whether this view carries any delta beyond a dense perturbation —
+    /// the composite paths the adapter kernels must take.
+    #[inline(always)]
+    pub(crate) fn has_composite(&self) -> bool {
+        self.add.is_some() || self.lowrank.is_some() || self.binding.is_some()
+    }
+
+    /// Whether reads differ from the raw base at all.
+    #[inline(always)]
+    pub(crate) fn has_delta(&self) -> bool {
+        self.dir.is_some() || self.has_composite()
+    }
+
+    /// Element `i` with every delta fused into the load, accumulated in a
+    /// fixed order (base, then dense adapter, then low-rank factor, then
+    /// scaled perturbation) so the composite value is bitwise reproducible
+    /// by the materialized reference.
     #[inline(always)]
     pub fn at(&self, i: usize) -> f32 {
-        match self.dir {
-            Some(d) => self.base[i] + self.scale * d[i],
-            None => self.base[i],
+        if let Some(bind) = self.binding {
+            return bind.element(self.base, i);
         }
+        let mut w = self.base[i];
+        if let Some(a) = self.add {
+            w += a[i];
+        }
+        if let Some(lr) = &self.lowrank {
+            w += lr.at(i);
+        }
+        if let Some(d) = self.dir {
+            w += self.scale * d[i];
+        }
+        w
     }
 
     /// Write the viewed values into `out` (the materialized reference the
     /// bit-identity tests compare against; cold paths only — the point of
     /// the view is NOT doing this on the step path).
     pub fn materialize_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.len());
+        if self.has_composite() {
+            for (i, o) in out.iter_mut().enumerate() {
+                *o = self.at(i);
+            }
+            return;
+        }
         match self.dir {
             Some(d) => axpy_into(self.scale, d, self.base, out),
             None => out.copy_from_slice(self.base),
@@ -437,6 +706,12 @@ pub fn matmul_view_threaded(
     assert_eq!(b.len(), k * n);
     assert_eq!(out.len(), m * n);
     let t = effective_threads(pool.threads(), m, k * n);
+    if b.has_composite() {
+        par_rows(out, m, n, t, pool, |row0, rows, chunk| {
+            matmul_span_view(a, b, k, n, row0, rows, chunk)
+        });
+        return;
+    }
     match b.dir() {
         None => {
             let w = b.base();
@@ -450,6 +725,64 @@ pub fn matmul_view_threaded(
                 matmul_span_fused(a, w, z, sc, k, n, row0, rows, chunk)
             });
         }
+    }
+}
+
+/// [`matmul_span`] with the weight operand behind a composite
+/// [`ParamView`] (low-rank adapter delta and/or dense add): every weight
+/// load is `w.at(idx)`, hoisted into the same per-`p` j-tile temp as
+/// [`matmul_span_fused`], with the identical tile walk and per-element
+/// accumulation order — bit-identical to materializing the effective
+/// weights and running [`matmul_span`].
+fn matmul_span_view(
+    a: &[f32],
+    w: ParamView<'_>,
+    k: usize,
+    n: usize,
+    row0: usize,
+    rows: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), rows * n);
+    debug_assert_eq!(w.len(), k * n);
+    let mut acc = [[0f32; MATMUL_NR]; MATMUL_MR];
+    let mut wtile = [0f32; MATMUL_NR];
+    let mut j0 = 0;
+    while j0 < n {
+        let nb = MATMUL_NR.min(n - j0);
+        let mut i0 = 0;
+        while i0 + MATMUL_MR <= rows {
+            for row in acc.iter_mut() {
+                row[..nb].fill(0.0);
+            }
+            for p in 0..k {
+                for (jj, t) in wtile[..nb].iter_mut().enumerate() {
+                    *t = w.at(p * n + j0 + jj);
+                }
+                for (rr, row) in acc.iter_mut().enumerate() {
+                    let av = a[(row0 + i0 + rr) * k + p];
+                    for (o, &wv) in row[..nb].iter_mut().zip(&wtile[..nb]) {
+                        *o += av * wv;
+                    }
+                }
+            }
+            for (rr, row) in acc.iter().enumerate() {
+                out[(i0 + rr) * n + j0..(i0 + rr) * n + j0 + nb].copy_from_slice(&row[..nb]);
+            }
+            i0 += MATMUL_MR;
+        }
+        // remainder rows: plain saxpy over the same j-tile
+        for i in i0..rows {
+            let orow = &mut out[i * n + j0..i * n + j0 + nb];
+            orow.fill(0.0);
+            for p in 0..k {
+                let av = a[(row0 + i) * k + p];
+                for (jj, o) in orow.iter_mut().enumerate() {
+                    *o += av * w.at(p * n + j0 + jj);
+                }
+            }
+        }
+        j0 += nb;
     }
 }
 
@@ -492,6 +825,12 @@ pub fn matmul_at_view_threaded(
     assert_eq!(d.len(), m * n);
     assert_eq!(out.len(), k * n);
     let t = effective_threads(pool.threads(), k, m * n);
+    if a.has_composite() {
+        par_rows(out, k, n, t, pool, |p0, prows, chunk| {
+            matmul_at_span_view(a, d, m, k, n, p0, prows, chunk)
+        });
+        return;
+    }
     match a.dir() {
         None => {
             let w = a.base();
@@ -505,6 +844,61 @@ pub fn matmul_at_view_threaded(
                 matmul_at_span_fused(w, z, sc, d, m, k, n, p0, prows, chunk)
             });
         }
+    }
+}
+
+/// [`matmul_at_span`] with the transposed operand behind a composite
+/// [`ParamView`] (`a[idx] -> view.at(idx)` at load time; identical tile
+/// walk and accumulation order as the unfused span).
+#[allow(clippy::too_many_arguments)]
+fn matmul_at_span_view(
+    w: ParamView<'_>,
+    d: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    p_base: usize,
+    prows: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), prows * n);
+    debug_assert_eq!(w.len(), m * k);
+    let mut acc = [[0f32; MATMUL_NR]; MATMUL_MR];
+    let mut j0 = 0;
+    while j0 < n {
+        let nb = MATMUL_NR.min(n - j0);
+        let mut p0 = 0;
+        while p0 + MATMUL_MR <= prows {
+            for row in acc.iter_mut() {
+                row[..nb].fill(0.0);
+            }
+            for i in 0..m {
+                let drow = &d[i * n + j0..i * n + j0 + nb];
+                for (rr, row) in acc.iter_mut().enumerate() {
+                    let av = w.at(i * k + p_base + p0 + rr);
+                    for (o, &dv) in row[..nb].iter_mut().zip(drow) {
+                        *o += av * dv;
+                    }
+                }
+            }
+            for (rr, row) in acc.iter().enumerate() {
+                out[(p0 + rr) * n + j0..(p0 + rr) * n + j0 + nb].copy_from_slice(&row[..nb]);
+            }
+            p0 += MATMUL_MR;
+        }
+        // remainder out-rows: accumulate the j-tile directly in place
+        for p in p0..prows {
+            let orow = &mut out[p * n + j0..p * n + j0 + nb];
+            orow.fill(0.0);
+            for i in 0..m {
+                let av = w.at(i * k + p_base + p);
+                let drow = &d[i * n + j0..i * n + j0 + nb];
+                for (o, &dv) in orow.iter_mut().zip(drow) {
+                    *o += av * dv;
+                }
+            }
+        }
+        j0 += nb;
     }
 }
 
@@ -645,6 +1039,12 @@ pub fn matmul_bt_view_threaded(
     assert_eq!(bt.len(), n * k);
     assert_eq!(out.len(), m * n);
     let t = effective_threads(pool.threads(), m, k * n);
+    if bt.has_composite() {
+        par_rows(out, m, n, t, pool, |row0, rows, chunk| {
+            matmul_bt_span_view(a, bt, k, n, row0, rows, chunk)
+        });
+        return;
+    }
     match bt.dir() {
         None => {
             let w = bt.base();
@@ -657,6 +1057,33 @@ pub fn matmul_bt_view_threaded(
             par_rows(out, m, n, t, pool, |row0, rows, chunk| {
                 matmul_bt_span_fused(a, w, z, sc, k, n, row0, rows, chunk)
             });
+        }
+    }
+}
+
+/// [`matmul_bt_span`] with the transposed operand behind a composite
+/// [`ParamView`] (`bt[idx] -> view.at(idx)` at load time; the dot
+/// accumulates p ascending exactly like the unfused span).
+fn matmul_bt_span_view(
+    a: &[f32],
+    bt: ParamView<'_>,
+    k: usize,
+    n: usize,
+    row0: usize,
+    rows: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), rows * n);
+    debug_assert_eq!(bt.len(), n * k);
+    for i in 0..rows {
+        let arow = &a[(row0 + i) * k..(row0 + i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for j in 0..n {
+            let mut acc = 0f32;
+            for (p, &av) in arow.iter().enumerate() {
+                acc += av * bt.at(j * k + p);
+            }
+            orow[j] = acc;
         }
     }
 }
@@ -777,7 +1204,7 @@ pub fn layernorm_rows_view(
     eps: f32,
     out: &mut [f32],
 ) {
-    if g.dir().is_none() && b.dir().is_none() {
+    if !g.has_delta() && !b.has_delta() {
         return layernorm_rows(x, g.base(), b.base(), rows, cols, eps, out);
     }
     assert_eq!(x.len(), rows * cols);
@@ -836,6 +1263,17 @@ pub fn add_bias_rows(x: &mut [f32], bias: &[f32], rows: usize, cols: usize) {
 /// hoisting the perturbed bias would need a heap temp on the
 /// allocation-free step path.
 pub fn add_bias_rows_view(x: &mut [f32], bias: ParamView<'_>, rows: usize, cols: usize) {
+    if bias.has_composite() {
+        assert_eq!(x.len(), rows * cols);
+        assert_eq!(bias.len(), cols);
+        for i in 0..rows {
+            let row = &mut x[i * cols..(i + 1) * cols];
+            for (j, v) in row.iter_mut().enumerate() {
+                *v += bias.at(j);
+            }
+        }
+        return;
+    }
     match bias.dir() {
         None => add_bias_rows(x, bias.base(), rows, cols),
         Some((z, sc)) => {
@@ -1550,6 +1988,165 @@ mod tests {
             &mut got_ln,
         );
         assert_eq!(got_ln, want_ln);
+    }
+
+    /// One factored segment covering a whole `[rows, cols]` buffer, with
+    /// `U` at adapter offset 0 and `V` right after it.
+    fn mat_segs(rows: usize, cols: usize, rank: usize) -> Vec<AdapterSeg> {
+        vec![AdapterSeg::Mat { off: 0, rows, cols, rank, u_off: 0, v_off: rows * rank }]
+    }
+
+    #[test]
+    fn adapter_view_resolves_segments_and_pads() {
+        // a Mat + Dense binding over one buffer: slicing resolves each
+        // tensor to its segment, whole-view at() agrees with the sliced
+        // views, and lanes past the segment coverage read the base verbatim
+        let (rows, cols, rank, dlen) = (6usize, 10usize, 2usize, 16usize);
+        let segs = vec![
+            AdapterSeg::Mat { off: 0, rows, cols, rank, u_off: 0, v_off: rows * rank },
+            AdapterSeg::Dense { off: rows * cols, len: dlen, a_off: (rows + cols) * rank },
+        ];
+        let dim = adapter_dim(&segs);
+        assert_eq!(dim, (rows + cols) * rank + dlen);
+        let base = randv(rows * cols + dlen + 4, 120); // 4 pad lanes
+        let adapter = randv(dim, 121);
+        let z = randv(dim, 122);
+        let lam = 1e-3f32;
+        let bind = AdapterBinding::perturbed(&segs, &adapter, &z, lam);
+        let whole = ParamView::adapter(&base, &bind);
+        let inv = 1.0 / (rank as f32).sqrt();
+
+        let mat = whole.slice(0, rows * cols);
+        for e in 0..rows * cols {
+            let (r, c) = (e / cols, e % cols);
+            let mut acc = 0f32;
+            for kk in 0..rank {
+                acc += (adapter[r * rank + kk] + lam * z[r * rank + kk])
+                    * (adapter[rows * rank + c * rank + kk]
+                        + lam * z[rows * rank + c * rank + kk]);
+            }
+            assert_eq!(mat.at(e), base[e] + acc * inv, "mat elem {e}");
+            assert_eq!(whole.at(e), mat.at(e), "whole-view mat elem {e}");
+        }
+        // sub-slicing a resolved Mat view shifts the element offset
+        let sub = mat.slice(cols, cols);
+        for j in 0..cols {
+            assert_eq!(sub.at(j), mat.at(cols + j));
+        }
+
+        let dense = whole.slice(rows * cols, dlen);
+        let a0 = (rows + cols) * rank;
+        for j in 0..dlen {
+            let want = base[rows * cols + j] + adapter[a0 + j] + lam * z[a0 + j];
+            assert_eq!(dense.at(j), want, "dense elem {j}");
+            assert_eq!(whole.at(rows * cols + j), want);
+        }
+        // pad lanes: base verbatim
+        for p in rows * cols + dlen..base.len() {
+            assert_eq!(whole.at(p), base[p]);
+        }
+        // materialize_into IS the per-element at() map
+        let mut mt = vec![0f32; base.len()];
+        whole.materialize_into(&mut mt);
+        for (i, &v) in mt.iter().enumerate() {
+            assert_eq!(v, whole.at(i), "materialized elem {i}");
+        }
+    }
+
+    #[test]
+    fn adapter_view_gemms_match_materialized_across_pool_sizes() {
+        // THE AdapterBinding contract: the fused low-rank delta must equal
+        // materialize-then-run BITWISE, at every pool size and for both
+        // antithetic scales, across all three view-taking GEMM families.
+        // Same tile-straddling shapes as the dense-ParamView pin.
+        let (m, k, n) = (254usize, 97usize, 130usize);
+        let rank = 3usize;
+        let a = randv(m * k, 131);
+        let d = randv(m * n, 132);
+        let w = randv(k * n, 133); // matmul weight [k, n]
+        let wa = randv(m * k, 134); // matmul_at operand [m, k]
+        let wbt = randv(n * k, 135); // matmul_bt operand [n, k]
+        let segs_w = mat_segs(k, n, rank);
+        let segs_wa = mat_segs(m, k, rank);
+        let segs_wbt = mat_segs(n, k, rank);
+        let ad_w = randv(adapter_dim(&segs_w), 136);
+        let z_w = randv(adapter_dim(&segs_w), 137);
+        let ad_wa = randv(adapter_dim(&segs_wa), 138);
+        let z_wa = randv(adapter_dim(&segs_wa), 139);
+        let ad_wbt = randv(adapter_dim(&segs_wbt), 140);
+        let z_wbt = randv(adapter_dim(&segs_wbt), 141);
+        let lam = 1e-3f32;
+        for sc in [lam, -lam] {
+            let bind_w = AdapterBinding::perturbed(&segs_w, &ad_w, &z_w, sc);
+            let view_w = ParamView::adapter(&w, &bind_w).slice(0, k * n);
+            let bind_wa = AdapterBinding::perturbed(&segs_wa, &ad_wa, &z_wa, sc);
+            let view_wa = ParamView::adapter(&wa, &bind_wa).slice(0, m * k);
+            let bind_wbt = AdapterBinding::perturbed(&segs_wbt, &ad_wbt, &z_wbt, sc);
+            let view_wbt = ParamView::adapter(&wbt, &bind_wbt).slice(0, n * k);
+
+            let mut w_mat = vec![0f32; k * n];
+            view_w.materialize_into(&mut w_mat);
+            let mut want = vec![0f32; m * n];
+            matmul(&a, &w_mat, m, k, n, &mut want);
+            let mut wa_mat = vec![0f32; m * k];
+            view_wa.materialize_into(&mut wa_mat);
+            let mut want_at = vec![0f32; k * n];
+            matmul_at(&wa_mat, &d, m, k, n, &mut want_at);
+            let mut wbt_mat = vec![0f32; n * k];
+            view_wbt.materialize_into(&mut wbt_mat);
+            let mut want_bt = vec![0f32; m * n];
+            matmul_bt(&a, &wbt_mat, m, k, n, &mut want_bt);
+
+            for t in [1usize, 2, 4] {
+                let pool = WorkerPool::new(t);
+                let mut got = vec![0f32; m * n];
+                matmul_view_threaded(&a, view_w, m, k, n, &mut got, &pool);
+                assert_eq!(got, want, "adapter matmul_view (t={t}, sc={sc})");
+                let mut got_at = vec![0f32; k * n];
+                matmul_at_view_threaded(view_wa, &d, m, k, n, &mut got_at, &pool);
+                assert_eq!(got_at, want_at, "adapter matmul_at_view (t={t}, sc={sc})");
+                let mut got_bt = vec![0f32; m * n];
+                matmul_bt_view_threaded(&a, view_wbt, m, k, n, &mut got_bt, &pool);
+                assert_eq!(got_bt, want_bt, "adapter matmul_bt_view (t={t}, sc={sc})");
+            }
+        }
+    }
+
+    #[test]
+    fn adapter_view_bias_and_layernorm_match_materialized() {
+        // dense (1-D) adapter segments through the bias/layernorm kernels:
+        // persistent delta plus SPSA perturbation, vs materialize-then-run
+        let (rows, cols) = (7usize, 96usize);
+        let x = randv(rows * cols, 150);
+        let bias = randv(cols, 151);
+        let g = randv(cols, 152);
+        let segs = vec![AdapterSeg::Dense { off: 0, len: cols, a_off: 0 }];
+        let ad_b = randv(cols, 153);
+        let z_b = randv(cols, 154);
+        let ad_g = randv(cols, 155);
+        let z_g = randv(cols, 156);
+        for sc in [2e-3f32, -2e-3f32] {
+            let bind_b = AdapterBinding::perturbed(&segs, &ad_b, &z_b, sc);
+            let bview = ParamView::adapter(&bias, &bind_b).slice(0, cols);
+            let bind_g = AdapterBinding::perturbed(&segs, &ad_g, &z_g, sc);
+            let gview = ParamView::adapter(&g, &bind_g).slice(0, cols);
+            let mut b_mat = vec![0f32; cols];
+            bview.materialize_into(&mut b_mat);
+            let mut g_mat = vec![0f32; cols];
+            gview.materialize_into(&mut g_mat);
+
+            let mut want = x.clone();
+            add_bias_rows(&mut want, &b_mat, rows, cols);
+            let mut got = x.clone();
+            add_bias_rows_view(&mut got, bview, rows, cols);
+            assert_eq!(got, want, "adapter add_bias_rows_view (sc={sc})");
+
+            let mut want_ln = vec![0f32; rows * cols];
+            layernorm_rows(&x, &g_mat, &b_mat, rows, cols, 1e-5, &mut want_ln);
+            let mut got_ln = vec![0f32; rows * cols];
+            layernorm_rows_view(&x, gview, bview, rows, cols, 1e-5, &mut got_ln);
+            assert_eq!(got_ln, want_ln, "adapter layernorm_rows_view (sc={sc})");
+        }
     }
 
     #[test]
