@@ -1,0 +1,179 @@
+//! GFLOP/s roofline for the forward GEMM kernels: scalar vs SIMD vs
+//! SIMD+packed, single-core, against the machine's theoretical non-FMA
+//! AVX2 peak (the `gflops` section of `BENCH_native.json`). Before any
+//! timing, every variant is asserted BITWISE equal to the scalar kernel —
+//! the bench doubles as a smoke test of the bit-identity contract.
+//! `cargo bench --bench gflops [-- --quick]`.
+
+use conmezo::bench::{write_bench_json, write_results, BenchArgs, BenchResult};
+use conmezo::parallel::WorkerPool;
+use conmezo::util::rng::Xoshiro256pp;
+use conmezo::vecmath::{self, simd, simd::SimdPolicy, PackedB};
+
+fn randv(n: usize, seed: u64) -> Vec<f32> {
+    let mut r = Xoshiro256pp::seed_from_u64(seed);
+    let mut v = vec![0f32; n];
+    r.fill_normal_f32(&mut v);
+    v
+}
+
+fn assert_bits(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{what}: bit mismatch at {i}: {x} vs {y}"
+        );
+    }
+}
+
+/// Theoretical single-core f32 peak for the dispatch the kernels actually
+/// use: 8 lanes × (1 mul + 1 add) per cycle — NOT the FMA peak, because
+/// the bit-identity contract forbids contraction (`vecmath::simd` module
+/// docs). Frequency from /proc/cpuinfo when readable, else 3 GHz.
+fn theoretical_peak_flops() -> f64 {
+    let ghz = std::fs::read_to_string("/proc/cpuinfo")
+        .ok()
+        .and_then(|text| {
+            text.lines()
+                .filter(|l| l.starts_with("cpu MHz"))
+                .filter_map(|l| l.split(':').nth(1)?.trim().parse::<f64>().ok())
+                .fold(None, |acc: Option<f64>, v| Some(acc.map_or(v, |a| a.max(v))))
+        })
+        .map(|mhz| mhz / 1000.0)
+        .unwrap_or(3.0);
+    ghz * 1e9 * 16.0
+}
+
+fn main() -> conmezo::util::error::Result<()> {
+    conmezo::runtime::enable_flush_to_zero();
+    let args = BenchArgs::parse();
+    let b = args.bencher();
+    let mut results = Vec::new();
+    let avail = simd::available();
+    println!("simd available: {avail} (status before policy overrides: {})", simd::status());
+
+    // single participant: per-kernel GFLOP/s, not pool scaling (the
+    // `parallel` section already covers dispatch)
+    let pool = WorkerPool::new(1);
+
+    // (label, m, k, n, transposed B) — the medium-preset QKV projection and
+    // the tied LM head (vocab=512), the two biggest forward GEMM shapes
+    let shapes: &[(&str, usize, usize, usize, bool)] = &[
+        ("qkv_512x256x768", 512, 256, 768, false),
+        ("lmhead_bt_512x256x512", 512, 256, 512, true),
+    ];
+    for &(label, m, k, n, bt) in shapes {
+        let a = randv(m * k, 11);
+        let w = randv(k * n, 12); // n*k == k*n elements either storage order
+        let mut packed = vec![0f32; vecmath::packed_len(k, n)];
+        if bt {
+            vecmath::pack_bt(&w, k, n, &mut packed);
+        } else {
+            vecmath::pack_b(&w, k, n, &mut packed);
+        }
+        let run = |out: &mut [f32]| {
+            if bt {
+                vecmath::matmul_bt(&a, &w, m, k, n, out);
+            } else {
+                vecmath::matmul(&a, &w, m, k, n, out);
+            }
+        };
+        let run_packed = |out: &mut [f32]| {
+            vecmath::matmul_packed_view_threaded(&a, PackedB::Plain(&packed[..]), m, k, n, out, &pool);
+        };
+
+        // bitwise pre-assert: scalar is the reference; SIMD and packed
+        // (both dispatches) must reproduce it exactly
+        let mut reference = vec![0f32; m * n];
+        let mut out = vec![0f32; m * n];
+        simd::set_policy(SimdPolicy::Off);
+        run(&mut reference);
+        run_packed(&mut out);
+        assert_bits(&reference, &out, &format!("{label}/packed-scalar vs scalar"));
+        if avail {
+            simd::set_policy(SimdPolicy::Auto);
+            run(&mut out);
+            assert_bits(&reference, &out, &format!("{label}/simd vs scalar"));
+            run_packed(&mut out);
+            assert_bits(&reference, &out, &format!("{label}/simd-packed vs scalar"));
+        }
+        println!("{label}: bit-identity pre-assert passed (simd avail: {avail})");
+
+        let flops = Some((2 * m * k * n) as f64);
+        simd::set_policy(SimdPolicy::Off);
+        let r = b.run_items(&format!("{label}/scalar"), flops, &mut || run(&mut out));
+        println!("{}", r.report());
+        results.push(r);
+        if avail {
+            simd::set_policy(SimdPolicy::Auto);
+            let r = b.run_items(&format!("{label}/simd"), flops, &mut || run(&mut out));
+            println!("{}", r.report());
+            results.push(r);
+            let r = b.run_items(&format!("{label}/simd_packed"), flops, &mut || {
+                run_packed(&mut out)
+            });
+            println!("{}", r.report());
+            results.push(r);
+        } else {
+            // no AVX2: record the packed-scalar row so the section still
+            // shows the layout's cache effect
+            let r = b.run_items(&format!("{label}/scalar_packed"), flops, &mut || {
+                run_packed(&mut out)
+            });
+            println!("{}", r.report());
+            results.push(r);
+        }
+    }
+
+    // the fused perturbation kernel (out = x + a*z), 2 FLOP per element
+    {
+        let d = 1 << 20;
+        let x = randv(d, 21);
+        let z = randv(d, 22);
+        let mut reference = vec![0f32; d];
+        let mut out = vec![0f32; d];
+        simd::set_policy(SimdPolicy::Off);
+        vecmath::axpy_into(1e-3, &z, &x, &mut reference);
+        if avail {
+            simd::set_policy(SimdPolicy::Auto);
+            vecmath::axpy_into(1e-3, &z, &x, &mut out);
+            assert_bits(&reference, &out, "axpy_into/simd vs scalar");
+        }
+        let flops = Some(2.0 * d as f64);
+        simd::set_policy(SimdPolicy::Off);
+        let r = b.run_items("axpy_into_1m/scalar", flops, &mut || {
+            vecmath::axpy_into(1e-3, &z, &x, &mut out)
+        });
+        println!("{}", r.report());
+        results.push(r);
+        if avail {
+            simd::set_policy(SimdPolicy::Auto);
+            let r = b.run_items("axpy_into_1m/simd", flops, &mut || {
+                vecmath::axpy_into(1e-3, &z, &x, &mut out)
+            });
+            println!("{}", r.report());
+            results.push(r);
+        }
+    }
+
+    // synthetic roofline row: mean_s = 1 s, items = peak FLOPs, so
+    // throughput() reads back as the peak itself
+    let peak = theoretical_peak_flops();
+    println!("theoretical peak (1 core, 8 lanes x mul+add, no FMA): {:.1} GFLOP/s", peak / 1e9);
+    results.push(BenchResult {
+        name: "peak/avx2_mul_add_1core".into(),
+        samples: 1,
+        mean_s: 1.0,
+        std_s: 0.0,
+        p50_s: 1.0,
+        p99_s: 1.0,
+        items_per_iter: Some(peak),
+    });
+
+    simd::set_policy(SimdPolicy::Auto);
+    write_results("gflops.jsonl", &results)?;
+    write_bench_json("gflops", &results)?;
+    Ok(())
+}

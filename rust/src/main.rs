@@ -35,6 +35,7 @@ fn app() -> App {
         .subcommand("info", "print artifacts / platform info")
         .opt_default("backend", "auto", "execution backend (native|pjrt|auto)")
         .opt("threads", "native worker-pool size for GEMMs + attention (0 = all cores, clamped to available cores; precedence: --threads > runtime.threads > CONMEZO_THREADS > 1)")
+        .opt("simd", "explicit-SIMD kernel dispatch (auto|off; precedence: --simd > runtime.simd > CONMEZO_SIMD > runtime AVX2+FMA detection)")
         .opt("config", "TOML config file")
         .repeated("set", "config override key=value")
         .opt_default("preset", "tiny", "model preset (nano|tiny|small|medium)")
@@ -125,6 +126,27 @@ fn thread_policy(p: &conmezo::cli::Parsed, file_cfg: &Config) -> Result<Parallel
     })
 }
 
+/// Apply the SIMD dispatch policy from the layered sources: an explicit
+/// `--simd` beats the config's `runtime.simd` beats the `CONMEZO_SIMD` env
+/// var (which `vecmath::simd` consults lazily when nothing explicit is
+/// set, falling through to runtime AVX2+FMA detection). `auto` means
+/// detect, `off` forces the always-compiled scalar fallback; results are
+/// bit-identical either way — the knob trades speed, never numerics.
+fn apply_simd_policy(p: &conmezo::cli::Parsed, file_cfg: &Config) -> Result<()> {
+    use conmezo::vecmath::simd::{self, SimdPolicy};
+    let chosen = match p.value("simd") {
+        Some(s) => s.to_string(),
+        None => file_cfg.str_or("runtime.simd", ""),
+    };
+    match chosen.as_str() {
+        "" => {}
+        "auto" => simd::set_policy(SimdPolicy::Auto),
+        "off" => simd::set_policy(SimdPolicy::Off),
+        other => bail!("--simd / runtime.simd must be auto or off, got {other:?}"),
+    }
+    Ok(())
+}
+
 /// (train config, backend name, thread policy) from the layered sources.
 fn build_config(p: &conmezo::cli::Parsed) -> Result<(TrainConfig, String, ParallelPolicy)> {
     // layering: file < CLI flags < --set overrides
@@ -136,6 +158,7 @@ fn build_config(p: &conmezo::cli::Parsed) -> Result<(TrainConfig, String, Parall
         explicit => explicit.to_string(),
     };
     let policy = thread_policy(p, &file_cfg)?;
+    apply_simd_policy(p, &file_cfg)?;
     let mut cfg = TrainConfig::preset(
         &file_cfg.str_or("model.preset", &p.str_or("preset", "tiny")),
         &file_cfg.str_or("train.task", &p.str_or("task", "sst2")),
@@ -194,7 +217,9 @@ fn cmd_train(p: &conmezo::cli::Parsed) -> Result<()> {
 }
 
 fn cmd_pretrain(p: &conmezo::cli::Parsed) -> Result<()> {
-    let policy = thread_policy(p, &load_file_cfg(p)?)?;
+    let file_cfg = load_file_cfg(p)?;
+    let policy = thread_policy(p, &file_cfg)?;
+    apply_simd_policy(p, &file_cfg)?;
     let rt = Runtime::from_name_with(&p.str_or("backend", "auto"), policy)?;
     let preset = p.str_or("preset", "tiny");
     let steps = p.usize_or("steps", 400);
@@ -208,7 +233,9 @@ fn cmd_pretrain(p: &conmezo::cli::Parsed) -> Result<()> {
 }
 
 fn cmd_serve(p: &conmezo::cli::Parsed) -> Result<()> {
-    let policy = thread_policy(p, &load_file_cfg(p)?)?;
+    let file_cfg = load_file_cfg(p)?;
+    let policy = thread_policy(p, &file_cfg)?;
+    apply_simd_policy(p, &file_cfg)?;
     let rt = Runtime::from_name_with(&p.str_or("backend", "auto"), policy)?;
     let manifest = p
         .value("manifest")
@@ -338,7 +365,9 @@ fn cmd_leader(p: &conmezo::cli::Parsed) -> Result<()> {
 }
 
 fn cmd_worker(p: &conmezo::cli::Parsed) -> Result<()> {
-    let policy = thread_policy(p, &load_file_cfg(p)?)?;
+    let file_cfg = load_file_cfg(p)?;
+    let policy = thread_policy(p, &file_cfg)?;
+    apply_simd_policy(p, &file_cfg)?;
     let rt = Runtime::from_name_with(&p.str_or("backend", "auto"), policy)?;
     let preset = p.str_or("preset", "tiny");
     let task = p.str_or("task", "sst2");
@@ -466,8 +495,10 @@ fn cmd_trace_summary(p: &conmezo::cli::Parsed) -> Result<()> {
 }
 
 fn cmd_info(p: &conmezo::cli::Parsed) -> Result<()> {
+    apply_simd_policy(p, &load_file_cfg(p)?)?;
     let rt = Runtime::from_name(&p.str_or("backend", "auto"))?;
     println!("platform: {}", rt.platform());
+    println!("simd: {}", conmezo::vecmath::simd::status());
     println!("programs: {}", rt.manifest().programs.len());
     for (name, preset) in &rt.manifest().presets {
         println!(

@@ -5,12 +5,21 @@
 //! per forward at the medium preset). A [`WorkerPool`] is created ONCE per
 //! `Runtime` (sized by `runtime::ParallelPolicy`) and every threaded
 //! kernel — the `vecmath` GEMMs plus the attention loops in
-//! `runtime::model` ((batch, head, query-block) tasks on the streaming
-//! forward, whole (batch, head) pairs on the kernel-composition twin) and
-//! `runtime::autograd` — dispatches onto it through
-//! [`WorkerPool::run`], a deterministic parallel-for over chunks. Steady
-//! state spawns zero threads (pinned by [`WorkerPool::os_threads_spawned`]
-//! instrumentation tests) and allocates nothing per dispatch.
+//! `runtime::model` ((batch, head, query-block) tasks on both the
+//! streaming forward and the kernel-composition twin), the bind-time
+//! weight-packing pass (`runtime::model::pack_flat`, one chunk per packed
+//! tensor writing a disjoint destination range), and `runtime::autograd` —
+//! dispatches onto it through [`WorkerPool::run`], a deterministic
+//! parallel-for over chunks. Steady state spawns zero threads (pinned by
+//! [`WorkerPool::os_threads_spawned`] instrumentation tests) and allocates
+//! nothing per dispatch.
+//!
+//! Parallelism composes with SIMD, not against it: the pool splits output
+//! ROWS across participants, and inside each row span the `vecmath`
+//! kernels vectorize across output COLUMNS (`vecmath::simd`, AVX2+FMA
+//! when detected). Column lanes are independent dot products, so lane
+//! width never interacts with the row partition and the bit-identity
+//! contract above holds at every (pool size, SIMD on/off) combination.
 //!
 //! ## Determinism contract
 //!

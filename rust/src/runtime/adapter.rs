@@ -156,7 +156,11 @@ impl AdapterSession {
     /// The antithetic pair `(f(adapter + λz), f(adapter - λz))` with the
     /// perturbation applied in adapter coordinates and fused into the
     /// weight loads — zero parameter-sized writes, bit-identical to
-    /// materializing `base + delta(adapter ± λz)` first.
+    /// materializing `base + delta(adapter ± λz)` first. The shared base
+    /// packs into weight panels ONCE per pair; both ±λ evals then fuse the
+    /// tenant's low-rank/dense deltas (which carry the perturbation)
+    /// in-register on top of the packed base tiles (`z_packed = false` —
+    /// the direction lives in adapter coordinates, not a dense panel).
     #[allow(clippy::too_many_arguments)]
     pub fn two_point(
         &mut self,
@@ -170,8 +174,9 @@ impl AdapterSession {
         b: usize,
         s: usize,
     ) -> (f32, f32) {
+        self.model.pack_base(base, &mut self.ws);
         let plus = AdapterBinding::perturbed(self.plan.segs(), adapter, z, lam);
-        let lp = self.model.loss_view_with(
+        let lp = self.model.loss_view_with_prepacked(
             ParamView::adapter(base, &plus),
             ids,
             targets,
@@ -179,9 +184,10 @@ impl AdapterSession {
             b,
             s,
             &mut self.ws,
+            false,
         );
         let minus = AdapterBinding::perturbed(self.plan.segs(), adapter, z, -lam);
-        let lm = self.model.loss_view_with(
+        let lm = self.model.loss_view_with_prepacked(
             ParamView::adapter(base, &minus),
             ids,
             targets,
@@ -189,6 +195,7 @@ impl AdapterSession {
             b,
             s,
             &mut self.ws,
+            false,
         );
         (lp, lm)
     }

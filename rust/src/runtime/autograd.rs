@@ -4,7 +4,13 @@
 //! The forward pass IS `NativeModel::forward_into` with tape recording
 //! switched on — one implementation, optional recording — so the returned
 //! loss is bit-identical to `NativeModel::loss` by construction (the old
-//! op-for-op replica and its pinning test are gone). The backward pass
+//! op-for-op replica and its pinning test are gone). That shared forward
+//! also means the taped pass consumes the bind-time packed weight panels
+//! (and the SIMD kernels) for free: `forward_into` repacks values and
+//! dispatches the packed GEMMs exactly like the eval path, while the
+//! backward GEMMs below read the flat buffer directly (their A^T/B^T
+//! operand shapes don't reuse the forward's B-side panels). The backward
+//! pass
 //! walks the recorded [`Tape`] in reverse through the backward kernels
 //! (`matmul_at`/`matmul_bt` grad pair, `softmax_rows_backward`,
 //! `layernorm_rows_backward`, `gelu_backward`, `add_bias_rows_backward`)

@@ -391,7 +391,10 @@ fn f32_mut(v: &mut Value) -> &mut [f32] {
 /// steps and the [`Session::two_point`] fast path. Both evals stream
 /// `x ± λz` through [`ParamView`]s with the perturbation fused into the
 /// weight loads: zero parameter-sized writes per pair, bit-identical to
-/// the retired materialize-into-`xs` path.
+/// the retired materialize-into-`xs` path. The GEMM weights pack ONCE per
+/// pair ([`NativeModel::pack_pair`]: base and direction panels), so both
+/// ±λ forwards consume cache-friendly tiles with `w + sc·z` fused
+/// in-register — one packing pass amortized over the two arms.
 #[allow(clippy::too_many_arguments)]
 fn pair_losses(
     model: &NativeModel,
@@ -404,8 +407,27 @@ fn pair_losses(
     mask: &[f32],
 ) -> (f32, f32) {
     let (b, s) = (model.meta.batch, model.meta.seq_len);
-    let lp = model.loss_view_with(ParamView::perturbed(params, z, lam), ids, tgt, mask, b, s, fwd);
-    let lm = model.loss_view_with(ParamView::perturbed(params, z, -lam), ids, tgt, mask, b, s, fwd);
+    model.pack_pair(params, z, fwd);
+    let lp = model.loss_view_with_prepacked(
+        ParamView::perturbed(params, z, lam),
+        ids,
+        tgt,
+        mask,
+        b,
+        s,
+        fwd,
+        true,
+    );
+    let lm = model.loss_view_with_prepacked(
+        ParamView::perturbed(params, z, -lam),
+        ids,
+        tgt,
+        mask,
+        b,
+        s,
+        fwd,
+        true,
+    );
     (lp, lm)
 }
 
@@ -909,6 +931,29 @@ mod tests {
             NativeSession::new(program_spec(&meta, "conmezo_step"), NativeModel::new(meta.clone()));
         assert_eq!(sess.u.len(), meta.d_pad);
         assert_eq!(sess.z.len(), meta.d_pad, "conmezo_step holds its cone direction");
+    }
+
+    #[test]
+    fn two_point_packing_is_steady_state_allocation_free() {
+        // packing pins: the session's panel buffers size themselves on the
+        // FIRST pair (packz lazily) and every later two_point repacks in
+        // place — same pointer, same lengths, step after step
+        let meta = thr_preset();
+        let (ids, tgt, mask) = thr_batch(&meta);
+        let mut sess =
+            NativeSession::new(program_spec(&meta, "two_point"), NativeModel::new(meta.clone()));
+        let params = sess.model.init_flat(3);
+        let z = sess.model.sample_u(9);
+        sess.two_point(&params, &z, 1e-3, &ids, &tgt, &mask).unwrap();
+        let total = sess.model.plan.packed_total;
+        let (pw, lw, lz) = sess.fwd.as_ref().unwrap().pack_storage();
+        assert_eq!((lw, lz), (total, total), "both panel buffers sized after the first pair");
+        for step in 0..3 {
+            sess.two_point(&params, &z, 1e-3, &ids, &tgt, &mask).unwrap();
+            let (pw2, lw2, lz2) = sess.fwd.as_ref().unwrap().pack_storage();
+            assert_eq!(pw, pw2, "packw reallocated at step {step}");
+            assert_eq!((lw, lz), (lw2, lz2), "panel buffers grew at step {step}");
+        }
     }
 
     #[test]

@@ -51,8 +51,41 @@
 //! `view.at(i)`, so results stay bit-identical to materializing the delta
 //! and running the plain kernel — pinned by
 //! `adapter_view_gemms_match_materialized_across_pool_sizes`.
+//!
+//! ## Explicit SIMD and bind-time weight packing
+//!
+//! Two raw-speed layers sit UNDER the kernels above without changing any
+//! result bit:
+//!
+//! * **[`simd`]** holds AVX2 twins of the hot inner kernels (GEMM spans,
+//!   `axpy_into`, bias/layernorm/gelu/softmax row loops). Dispatch is
+//!   per-call through `simd::enabled()` (runtime `is_x86_feature_detected!`,
+//!   overridable via `CONMEZO_SIMD={auto,off}` / `runtime.simd` config /
+//!   `--simd`); the scalar bodies live on as `*_scalar` twins and are the
+//!   always-compiled fallback. The SIMD kernels vectorize across
+//!   INDEPENDENT output elements only (8 output columns per vector, each
+//!   lane running the scalar p-ascending chain) and never contract the
+//!   fused `w + sc*z` multiply-add into an FMA, so bit-identity against the
+//!   scalar kernels — and through them against the materialized references
+//!   — is preserved. Pinned by `simd_kernels_bit_identical_to_scalar`.
+//! * **Packed panels**: [`pack_b`] / [`pack_bt`] re-stride a weight's
+//!   B-side operand once into `MATMUL_NR`-wide, zero-padded column panels
+//!   (`dst[jt*NR*k + p*NR + jj]`), so the GEMM inner loop reads
+//!   contiguous cache lines instead of striding `n` (or gathering `k`-
+//!   strided columns for the transposed LM head). [`PackedB`] carries the
+//!   packed base plus an optional packed direction (`w + sc*z` fused
+//!   in-register per ±λ arm) or a composite [`ParamView`] (adapter deltas
+//!   fused on top of the packed base via [`ParamView::at_with_base`]);
+//!   [`matmul_packed_view_threaded`] is the pooled entry.
+//!   `runtime::model` packs each 2-D weight once per top-level call (once
+//!   per antithetic PAIR in `pair_losses`/adapter `two_point`) into
+//!   bind-time-allocated scratch — packing is a pure permutation copy, so
+//!   packed results are bit-identical to the unpacked kernels (pinned by
+//!   `packed_gemms_match_unpacked_across_pool_sizes`).
 
 use crate::parallel::{SendPtr, WorkerPool};
+
+pub mod simd;
 
 /// One tensor's mapping from the shared base buffer onto a tenant's flat
 /// adapter vector. Segments are built once per (preset, rank) by
@@ -352,7 +385,17 @@ impl<'a> ParamView<'a> {
         if let Some(bind) = self.binding {
             return bind.element(self.base, i);
         }
-        let mut w = self.base[i];
+        self.at_with_base(self.base[i], i)
+    }
+
+    /// [`Self::at`] with the base value supplied by the caller — the packed
+    /// GEMM arms read the base from a packed panel (a bit-exact copy of
+    /// `base[i]`) and fuse the deltas on top in the same fixed order.
+    /// Binding-carrying views must resolve to per-tensor views first.
+    #[inline(always)]
+    pub(crate) fn at_with_base(&self, base: f32, i: usize) -> f32 {
+        debug_assert!(self.binding.is_none());
+        let mut w = base;
         if let Some(a) = self.add {
             w += a[i];
         }
@@ -363,6 +406,22 @@ impl<'a> ParamView<'a> {
             w += self.scale * d[i];
         }
         w
+    }
+
+    /// The contiguous row `[off, off + len)` as a [`RowView`]: one dispatch
+    /// (plain / perturbed / composite) hoisted out of the per-element loop.
+    /// This is the ONE fused accessor behind every per-element view read —
+    /// the embedding gather and the tied-LM-head column loop both route
+    /// through it, so the two element-wise paths cannot drift.
+    #[inline(always)]
+    pub fn row(&self, off: usize, len: usize) -> RowView<'a> {
+        if self.has_composite() {
+            return RowView::Composite { v: *self, off };
+        }
+        match self.dir {
+            None => RowView::Plain(&self.base[off..off + len]),
+            Some(d) => RowView::Perturbed { b: &self.base[off..off + len], z: &d[off..off + len], sc: self.scale },
+        }
     }
 
     /// Write the viewed values into `out` (the materialized reference the
@@ -383,6 +442,33 @@ impl<'a> ParamView<'a> {
     }
 }
 
+/// One contiguous row of a [`ParamView`] with the plain/perturbed/composite
+/// dispatch resolved ONCE instead of per element. `at(j)` evaluates the
+/// exact expression [`ParamView::at`] evaluates (same order, no FMA), so
+/// routing a per-element loop through a `RowView` cannot change bits.
+#[derive(Clone, Copy, Debug)]
+pub enum RowView<'a> {
+    /// Unperturbed slice: `at(j) = b[j]`.
+    Plain(&'a [f32]),
+    /// Dense perturbation: `at(j) = b[j] + sc * z[j]`.
+    Perturbed { b: &'a [f32], z: &'a [f32], sc: f32 },
+    /// Composite (adapter deltas and/or whole-buffer binding): `at(j)`
+    /// falls back to `v.at(off + j)`.
+    Composite { v: ParamView<'a>, off: usize },
+}
+
+impl RowView<'_> {
+    /// Element `j` of the row.
+    #[inline(always)]
+    pub fn at(&self, j: usize) -> f32 {
+        match self {
+            RowView::Plain(b) => b[j],
+            RowView::Perturbed { b, z, sc } => b[j] + sc * z[j],
+            RowView::Composite { v, off } => v.at(off + j),
+        }
+    }
+}
+
 /// y <- y + a * x (BLAS axpy).
 pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
     assert_eq!(x.len(), y.len());
@@ -391,10 +477,21 @@ pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
     }
 }
 
-/// out <- x + a * z, writing into a separate buffer.
+/// out <- x + a * z, writing into a separate buffer. The expression (one
+/// f32 multiply, one f32 add, no FMA) is THE perturbation contract every
+/// fused view kernel reproduces.
 pub fn axpy_into(a: f32, z: &[f32], x: &[f32], out: &mut [f32]) {
     assert_eq!(x.len(), z.len());
     assert_eq!(x.len(), out.len());
+    if simd::enabled() {
+        unsafe { simd::axpy_into(a, z, x, out) }
+    } else {
+        axpy_into_scalar(a, z, x, out);
+    }
+}
+
+/// Scalar body of [`axpy_into`] (the always-compiled fallback).
+pub(crate) fn axpy_into_scalar(a: f32, z: &[f32], x: &[f32], out: &mut [f32]) {
     for i in 0..x.len() {
         out[i] = x[i] + a * z[i];
     }
@@ -551,8 +648,17 @@ fn par_rows(
 
 /// Rows `row0..row0+rows` of a[m, k] @ b[k, n]; `out` holds exactly that
 /// row range. The register-blocked core shared by [`matmul`] and
-/// [`matmul_threaded`].
+/// [`matmul_threaded`]; dispatches to the AVX2 twin when [`simd::enabled`].
 fn matmul_span(a: &[f32], b: &[f32], k: usize, n: usize, row0: usize, rows: usize, out: &mut [f32]) {
+    if simd::enabled() {
+        unsafe { simd::matmul_span(a, b, k, n, row0, rows, out) }
+    } else {
+        matmul_span_scalar(a, b, k, n, row0, rows, out);
+    }
+}
+
+/// Scalar body of [`matmul_span`].
+pub(crate) fn matmul_span_scalar(a: &[f32], b: &[f32], k: usize, n: usize, row0: usize, rows: usize, out: &mut [f32]) {
     debug_assert_eq!(out.len(), rows * n);
     let mut acc = [[0f32; MATMUL_NR]; MATMUL_MR];
     let mut j0 = 0;
@@ -604,6 +710,26 @@ fn matmul_span(a: &[f32], b: &[f32], k: usize, n: usize, row0: usize, rows: usiz
 /// identical anyway, so hoisting cannot change bits).
 #[allow(clippy::too_many_arguments)]
 fn matmul_span_fused(
+    a: &[f32],
+    w: &[f32],
+    z: &[f32],
+    sc: f32,
+    k: usize,
+    n: usize,
+    row0: usize,
+    rows: usize,
+    out: &mut [f32],
+) {
+    if simd::enabled() {
+        unsafe { simd::matmul_span_fused(a, w, z, sc, k, n, row0, rows, out) }
+    } else {
+        matmul_span_fused_scalar(a, w, z, sc, k, n, row0, rows, out);
+    }
+}
+
+/// Scalar body of [`matmul_span_fused`].
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn matmul_span_fused_scalar(
     a: &[f32],
     w: &[f32],
     z: &[f32],
@@ -743,6 +869,25 @@ fn matmul_span_view(
     rows: usize,
     out: &mut [f32],
 ) {
+    if simd::enabled() {
+        unsafe { simd::matmul_span_view(a, w, k, n, row0, rows, out) }
+    } else {
+        matmul_span_view_scalar(a, w, k, n, row0, rows, out);
+    }
+}
+
+/// Scalar body of [`matmul_span_view`]. The per-`p` weight tile reads
+/// through [`ParamView::row`] so the plain/perturbed/composite dispatch is
+/// hoisted out of the element loop.
+pub(crate) fn matmul_span_view_scalar(
+    a: &[f32],
+    w: ParamView<'_>,
+    k: usize,
+    n: usize,
+    row0: usize,
+    rows: usize,
+    out: &mut [f32],
+) {
     debug_assert_eq!(out.len(), rows * n);
     debug_assert_eq!(w.len(), k * n);
     let mut acc = [[0f32; MATMUL_NR]; MATMUL_MR];
@@ -756,8 +901,9 @@ fn matmul_span_view(
                 row[..nb].fill(0.0);
             }
             for p in 0..k {
+                let wrow = w.row(p * n + j0, nb);
                 for (jj, t) in wtile[..nb].iter_mut().enumerate() {
-                    *t = w.at(p * n + j0 + jj);
+                    *t = wrow.at(jj);
                 }
                 for (rr, row) in acc.iter_mut().enumerate() {
                     let av = a[(row0 + i0 + rr) * k + p];
@@ -777,8 +923,9 @@ fn matmul_span_view(
             orow.fill(0.0);
             for p in 0..k {
                 let av = a[(row0 + i) * k + p];
+                let wrow = w.row(p * n + j0, nb);
                 for (jj, o) in orow.iter_mut().enumerate() {
-                    *o += av * w.at(p * n + j0 + jj);
+                    *o += av * wrow.at(jj);
                 }
             }
         }
@@ -904,7 +1051,27 @@ fn matmul_at_span_view(
 
 /// Output rows `p_base..p_base+prows` of a^T @ d; `out` holds exactly that
 /// row range of the [k, n] result.
+#[allow(clippy::too_many_arguments)]
 fn matmul_at_span(a: &[f32], d: &[f32], m: usize, k: usize, n: usize, p_base: usize, prows: usize, out: &mut [f32]) {
+    if simd::enabled() {
+        unsafe { simd::matmul_at_span(a, d, m, k, n, p_base, prows, out) }
+    } else {
+        matmul_at_span_scalar(a, d, m, k, n, p_base, prows, out);
+    }
+}
+
+/// Scalar body of [`matmul_at_span`].
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn matmul_at_span_scalar(
+    a: &[f32],
+    d: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    p_base: usize,
+    prows: usize,
+    out: &mut [f32],
+) {
     debug_assert_eq!(out.len(), prows * n);
     let mut acc = [[0f32; MATMUL_NR]; MATMUL_MR];
     let mut j0 = 0;
@@ -950,6 +1117,27 @@ fn matmul_at_span(a: &[f32], d: &[f32], m: usize, k: usize, n: usize, p_base: us
 /// accumulation order as the unfused span).
 #[allow(clippy::too_many_arguments)]
 fn matmul_at_span_fused(
+    w: &[f32],
+    z: &[f32],
+    sc: f32,
+    d: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    p_base: usize,
+    prows: usize,
+    out: &mut [f32],
+) {
+    if simd::enabled() {
+        unsafe { simd::matmul_at_span_fused(w, z, sc, d, m, k, n, p_base, prows, out) }
+    } else {
+        matmul_at_span_fused_scalar(w, z, sc, d, m, k, n, p_base, prows, out);
+    }
+}
+
+/// Scalar body of [`matmul_at_span_fused`].
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn matmul_at_span_fused_scalar(
     w: &[f32],
     z: &[f32],
     sc: f32,
@@ -1062,8 +1250,12 @@ pub fn matmul_bt_view_threaded(
 }
 
 /// [`matmul_bt_span`] with the transposed operand behind a composite
-/// [`ParamView`] (`bt[idx] -> view.at(idx)` at load time; the dot
-/// accumulates p ascending exactly like the unfused span).
+/// [`ParamView`]: each output column hoists one [`ParamView::row`] over
+/// `bt`'s row `j` (row `j` of the [n, k] storage IS column `j` of `b`) so
+/// the composite dispatch runs once per column instead of once per element;
+/// the dot accumulates p ascending exactly like the unfused span. Stays
+/// scalar: the dispatcher only routes composite views here, and the packed
+/// composite kernel covers the SIMD case.
 fn matmul_bt_span_view(
     a: &[f32],
     bt: ParamView<'_>,
@@ -1079,9 +1271,10 @@ fn matmul_bt_span_view(
         let arow = &a[(row0 + i) * k..(row0 + i + 1) * k];
         let orow = &mut out[i * n..(i + 1) * n];
         for j in 0..n {
+            let brow = bt.row(j * k, k);
             let mut acc = 0f32;
             for (p, &av) in arow.iter().enumerate() {
-                acc += av * bt.at(j * k + p);
+                acc += av * brow.at(p);
             }
             orow[j] = acc;
         }
@@ -1090,6 +1283,15 @@ fn matmul_bt_span_view(
 
 /// Rows `row0..row0+rows` of a @ bt^T; `out` holds exactly that row range.
 fn matmul_bt_span(a: &[f32], bt: &[f32], k: usize, n: usize, row0: usize, rows: usize, out: &mut [f32]) {
+    if simd::enabled() {
+        unsafe { simd::matmul_bt_span(a, bt, k, n, row0, rows, out) }
+    } else {
+        matmul_bt_span_scalar(a, bt, k, n, row0, rows, out);
+    }
+}
+
+/// Scalar body of [`matmul_bt_span`].
+pub(crate) fn matmul_bt_span_scalar(a: &[f32], bt: &[f32], k: usize, n: usize, row0: usize, rows: usize, out: &mut [f32]) {
     debug_assert_eq!(out.len(), rows * n);
     for i in 0..rows {
         let arow = &a[(row0 + i) * k..(row0 + i + 1) * k];
@@ -1120,6 +1322,26 @@ fn matmul_bt_span_fused(
     rows: usize,
     out: &mut [f32],
 ) {
+    if simd::enabled() {
+        unsafe { simd::matmul_bt_span_fused(a, w, z, sc, k, n, row0, rows, out) }
+    } else {
+        matmul_bt_span_fused_scalar(a, w, z, sc, k, n, row0, rows, out);
+    }
+}
+
+/// Scalar body of [`matmul_bt_span_fused`].
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn matmul_bt_span_fused_scalar(
+    a: &[f32],
+    w: &[f32],
+    z: &[f32],
+    sc: f32,
+    k: usize,
+    n: usize,
+    row0: usize,
+    rows: usize,
+    out: &mut [f32],
+) {
     debug_assert_eq!(out.len(), rows * n);
     debug_assert_eq!(w.len(), z.len());
     for i in 0..rows {
@@ -1137,7 +1359,222 @@ fn matmul_bt_span_fused(
     }
 }
 
+// ---------------------------------------------------------------------------
+// Packed B-side weight panels.
+//
+// A GEMM's B operand is read k*m times per call but the scalar spans
+// re-stride it from row-major every time (stride n for [k, n] weights,
+// stride k column gathers for the transposed LM head). Since model weights
+// survive thousands of calls, `runtime::model` re-strides each 2-D weight
+// ONCE per top-level call (once per antithetic pair) into the panel layout
+// below, and the packed kernels stream contiguous cache lines.
+// ---------------------------------------------------------------------------
+
+/// Which row-major storage a packed panel was built from — decides how a
+/// composite [`ParamView`]'s flat element index is reconstructed when
+/// fusing adapter deltas on top of packed base values.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PackForm {
+    /// Packed from `b[k, n]` (element `p*n + j`).
+    B,
+    /// Packed from `bt[n, k]`, the transposed storage (element `j*k + p`).
+    Bt,
+}
+
+/// Length of the packed panel buffer for a `[k, n]`-shaped B operand:
+/// `ceil(n / MATMUL_NR)` panels of `MATMUL_NR * k` elements. Tail panels
+/// are zero-padded to the full width so the SIMD kernels can always load
+/// whole vectors.
+pub fn packed_len(k: usize, n: usize) -> usize {
+    n.div_ceil(MATMUL_NR) * MATMUL_NR * k
+}
+
+/// Pack `src[k, n]` (row-major) into column panels:
+/// `dst[jt*NR*k + p*NR + jj] = src[p*n + jt*NR + jj]`. Pad lanes of a tail
+/// panel are never written — callers hand in zero-initialized buffers and
+/// the pads stay zero across repacks (the geometry never changes after
+/// bind). A pure permutation copy: packed values are bit-exact base values.
+pub fn pack_b(src: &[f32], k: usize, n: usize, dst: &mut [f32]) {
+    assert_eq!(src.len(), k * n);
+    assert_eq!(dst.len(), packed_len(k, n));
+    let mut jt = 0;
+    let mut j0 = 0;
+    while j0 < n {
+        let nb = MATMUL_NR.min(n - j0);
+        let tb = jt * MATMUL_NR * k;
+        for p in 0..k {
+            let srow = &src[p * n + j0..p * n + j0 + nb];
+            dst[tb + p * MATMUL_NR..tb + p * MATMUL_NR + nb].copy_from_slice(srow);
+        }
+        j0 += nb;
+        jt += 1;
+    }
+}
+
+/// Pack `src[n, k]` (the TRANSPOSED storage, e.g. the tied LM head's
+/// `[vocab, d_model]` embedding) into the SAME panel layout as [`pack_b`]:
+/// `dst[jt*NR*k + p*NR + jj] = src[(jt*NR + jj)*k + p]`. One microkernel
+/// then serves both operand forms — and the transposed GEMM's k-strided
+/// column gathers become contiguous panel loads.
+pub fn pack_bt(src: &[f32], k: usize, n: usize, dst: &mut [f32]) {
+    assert_eq!(src.len(), n * k);
+    assert_eq!(dst.len(), packed_len(k, n));
+    let mut jt = 0;
+    let mut j0 = 0;
+    while j0 < n {
+        let nb = MATMUL_NR.min(n - j0);
+        let tb = jt * MATMUL_NR * k;
+        for jj in 0..nb {
+            let srow = &src[(j0 + jj) * k..(j0 + jj + 1) * k];
+            for (p, &v) in srow.iter().enumerate() {
+                dst[tb + p * MATMUL_NR + jj] = v;
+            }
+        }
+        j0 += nb;
+        jt += 1;
+    }
+}
+
+/// A packed B operand for [`matmul_packed_view_threaded`], mirroring the
+/// three [`ParamView`] dispatch arms.
+#[derive(Clone, Copy, Debug)]
+pub enum PackedB<'a> {
+    /// Unperturbed packed panels.
+    Plain(&'a [f32]),
+    /// Base and direction both packed (one pack amortizes over both ±λ
+    /// arms of a pair); the effective panel value `w + sc*z` is fused
+    /// in-register with the exact [`axpy_into`] expression.
+    Perturbed { w: &'a [f32], z: &'a [f32], sc: f32 },
+    /// Packed base with a composite [`ParamView`]'s deltas (adapter
+    /// low-rank/dense, plus any perturbation) fused on top via
+    /// [`ParamView::at_with_base`]; `form` reconstructs the flat element
+    /// index the deltas are addressed by.
+    Composite { w: &'a [f32], view: ParamView<'a>, form: PackForm },
+}
+
+/// [`matmul_view_threaded`] over a pre-packed B operand: rows of
+/// `out[m, n] = a[m, k] @ B` split across the pool, each task running the
+/// packed span kernel. Bit-identical to the unpacked kernels for every
+/// arm and pool size (packing is a permutation copy; the per-element
+/// accumulation order is unchanged) — pinned by
+/// `packed_gemms_match_unpacked_across_pool_sizes`.
+pub fn matmul_packed_view_threaded(
+    a: &[f32],
+    pk: PackedB<'_>,
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+    pool: &WorkerPool,
+) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(out.len(), m * n);
+    let plen = packed_len(k, n);
+    match pk {
+        PackedB::Plain(w) => assert_eq!(w.len(), plen),
+        PackedB::Perturbed { w, z, .. } => {
+            assert_eq!(w.len(), plen);
+            assert_eq!(z.len(), plen);
+        }
+        PackedB::Composite { w, .. } => assert_eq!(w.len(), plen),
+    }
+    let t = effective_threads(pool.threads(), m, k * n);
+    par_rows(out, m, n, t, pool, |row0, rows, chunk| {
+        matmul_span_packed(a, &pk, k, n, row0, rows, chunk)
+    });
+}
+
+/// Row span of the packed GEMM; dispatches to the AVX2 twin when
+/// [`simd::enabled`].
+fn matmul_span_packed(a: &[f32], pk: &PackedB<'_>, k: usize, n: usize, row0: usize, rows: usize, out: &mut [f32]) {
+    if simd::enabled() {
+        unsafe { simd::matmul_span_packed(a, pk, k, n, row0, rows, out) }
+    } else {
+        matmul_span_packed_scalar(a, pk, k, n, row0, rows, out);
+    }
+}
+
+/// Scalar body of [`matmul_span_packed`]: the [`matmul_span_fused`] tile
+/// walk with the per-`p` weight tile read from a packed panel (plain copy,
+/// fused `w + sc*z`, or composite [`ParamView::at_with_base`] — never
+/// touching pad lanes past `nb`).
+pub(crate) fn matmul_span_packed_scalar(
+    a: &[f32],
+    pk: &PackedB<'_>,
+    k: usize,
+    n: usize,
+    row0: usize,
+    rows: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), rows * n);
+    let mut acc = [[0f32; MATMUL_NR]; MATMUL_MR];
+    let mut wtile = [0f32; MATMUL_NR];
+    let mut j0 = 0;
+    let mut jt = 0;
+    while j0 < n {
+        let nb = MATMUL_NR.min(n - j0);
+        let tb = jt * MATMUL_NR * k;
+        let fill = |p: usize, wtile: &mut [f32; MATMUL_NR]| match *pk {
+            PackedB::Plain(w) => {
+                wtile[..nb].copy_from_slice(&w[tb + p * MATMUL_NR..tb + p * MATMUL_NR + nb]);
+            }
+            PackedB::Perturbed { w, z, sc } => {
+                for (jj, t) in wtile[..nb].iter_mut().enumerate() {
+                    let e = tb + p * MATMUL_NR + jj;
+                    *t = w[e] + sc * z[e];
+                }
+            }
+            PackedB::Composite { w, view, form } => {
+                for (jj, t) in wtile[..nb].iter_mut().enumerate() {
+                    let e = match form {
+                        PackForm::B => p * n + j0 + jj,
+                        PackForm::Bt => (j0 + jj) * k + p,
+                    };
+                    *t = view.at_with_base(w[tb + p * MATMUL_NR + jj], e);
+                }
+            }
+        };
+        let mut i0 = 0;
+        while i0 + MATMUL_MR <= rows {
+            for row in acc.iter_mut() {
+                row[..nb].fill(0.0);
+            }
+            for p in 0..k {
+                fill(p, &mut wtile);
+                for (rr, row) in acc.iter_mut().enumerate() {
+                    let av = a[(row0 + i0 + rr) * k + p];
+                    for (o, &wv) in row[..nb].iter_mut().zip(&wtile[..nb]) {
+                        *o += av * wv;
+                    }
+                }
+            }
+            for (rr, row) in acc.iter().enumerate() {
+                out[(i0 + rr) * n + j0..(i0 + rr) * n + j0 + nb].copy_from_slice(&row[..nb]);
+            }
+            i0 += MATMUL_MR;
+        }
+        // remainder rows: plain saxpy over the same j-tile
+        for i in i0..rows {
+            let orow = &mut out[i * n + j0..i * n + j0 + nb];
+            orow.fill(0.0);
+            for p in 0..k {
+                fill(p, &mut wtile);
+                let av = a[(row0 + i) * k + p];
+                for (o, &wv) in orow.iter_mut().zip(&wtile[..nb]) {
+                    *o += av * wv;
+                }
+            }
+        }
+        j0 += nb;
+        jt += 1;
+    }
+}
+
 /// Row-wise softmax in place over an [rows, cols] buffer (max-subtracted).
+/// The max scan and the exp/denominator pass are sequential dependence
+/// chains and stay scalar; only the final rescale vectorizes (see
+/// [`scale_in_place`]).
 pub fn softmax_rows(x: &mut [f32], rows: usize, cols: usize) {
     assert_eq!(x.len(), rows * cols);
     for i in 0..rows {
@@ -1154,9 +1591,24 @@ pub fn softmax_rows(x: &mut [f32], rows: usize, cols: usize) {
             denom += *v;
         }
         let inv = 1.0 / denom;
-        for v in row.iter_mut() {
-            *v *= inv;
-        }
+        scale_in_place(row, inv);
+    }
+}
+
+/// `row[j] *= inv` for every element — the vectorizable tail of
+/// [`softmax_rows`] (independent elements, one multiply each).
+fn scale_in_place(row: &mut [f32], inv: f32) {
+    if simd::enabled() {
+        unsafe { simd::scale_in_place(row, inv) }
+    } else {
+        scale_in_place_scalar(row, inv);
+    }
+}
+
+/// Scalar body of [`scale_in_place`].
+pub(crate) fn scale_in_place_scalar(row: &mut [f32], inv: f32) {
+    for v in row.iter_mut() {
+        *v *= inv;
     }
 }
 
@@ -1184,9 +1636,26 @@ pub fn layernorm_rows(x: &[f32], g: &[f32], b: &[f32], rows: usize, cols: usize,
         var /= cols as f64;
         let inv = 1.0 / (var + eps as f64).sqrt();
         let (mean, inv) = (mean as f32, inv as f32);
-        for j in 0..cols {
-            orow[j] = (row[j] - mean) * inv * g[j] + b[j];
-        }
+        ln_affine(row, g, b, mean, inv, orow);
+    }
+}
+
+/// The affine step of one layernorm row:
+/// `orow[j] = (row[j] - mean) * inv * g[j] + b[j]` (left-associated). The
+/// f64 mean/variance reduction stays in the caller — only this
+/// independent-element loop vectorizes.
+fn ln_affine(row: &[f32], g: &[f32], b: &[f32], mean: f32, inv: f32, orow: &mut [f32]) {
+    if simd::enabled() {
+        unsafe { simd::layernorm_affine(row, g, b, mean, inv, orow) }
+    } else {
+        layernorm_affine_scalar(row, g, b, mean, inv, orow);
+    }
+}
+
+/// Scalar body of [`ln_affine`].
+pub(crate) fn layernorm_affine_scalar(row: &[f32], g: &[f32], b: &[f32], mean: f32, inv: f32, orow: &mut [f32]) {
+    for j in 0..row.len() {
+        orow[j] = (row[j] - mean) * inv * g[j] + b[j];
     }
 }
 
@@ -1234,8 +1703,18 @@ pub fn layernorm_rows_view(
 }
 
 /// GELU (tanh approximation — the jax.nn.gelu default used by the L2 model),
-/// applied in place.
+/// applied in place. The SIMD twin vectorizes the polynomial halves and
+/// keeps `tanh` scalar per element (same `f32::tanh` call).
 pub fn gelu(x: &mut [f32]) {
+    if simd::enabled() {
+        unsafe { simd::gelu(x) }
+    } else {
+        gelu_scalar(x);
+    }
+}
+
+/// Scalar body of [`gelu`].
+pub(crate) fn gelu_scalar(x: &mut [f32]) {
     const C: f32 = 0.797_884_56; // sqrt(2/pi)
     for v in x.iter_mut() {
         let t = *v;
@@ -1247,6 +1726,15 @@ pub fn gelu(x: &mut [f32]) {
 pub fn add_bias_rows(x: &mut [f32], bias: &[f32], rows: usize, cols: usize) {
     assert_eq!(x.len(), rows * cols);
     assert_eq!(bias.len(), cols);
+    if simd::enabled() {
+        unsafe { simd::add_bias_rows(x, bias, rows, cols) }
+    } else {
+        add_bias_rows_scalar(x, bias, rows, cols);
+    }
+}
+
+/// Scalar body of [`add_bias_rows`].
+pub(crate) fn add_bias_rows_scalar(x: &mut [f32], bias: &[f32], rows: usize, cols: usize) {
     for i in 0..rows {
         let row = &mut x[i * cols..(i + 1) * cols];
         for j in 0..cols {
@@ -1279,13 +1767,28 @@ pub fn add_bias_rows_view(x: &mut [f32], bias: ParamView<'_>, rows: usize, cols:
         Some((z, sc)) => {
             assert_eq!(x.len(), rows * cols);
             assert_eq!(bias.len(), cols);
-            let b = bias.base();
-            for i in 0..rows {
-                let row = &mut x[i * cols..(i + 1) * cols];
-                for j in 0..cols {
-                    row[j] += b[j] + sc * z[j];
-                }
-            }
+            add_bias_rows_perturbed(x, bias.base(), z, sc, rows, cols);
+        }
+    }
+}
+
+/// The perturbed arm of [`add_bias_rows_view`]:
+/// `row[j] += b[j] + sc * z[j]`, the fused value computed per element
+/// before the add.
+fn add_bias_rows_perturbed(x: &mut [f32], b: &[f32], z: &[f32], sc: f32, rows: usize, cols: usize) {
+    if simd::enabled() {
+        unsafe { simd::add_bias_rows_perturbed(x, b, z, sc, rows, cols) }
+    } else {
+        add_bias_rows_perturbed_scalar(x, b, z, sc, rows, cols);
+    }
+}
+
+/// Scalar body of [`add_bias_rows_perturbed`].
+pub(crate) fn add_bias_rows_perturbed_scalar(x: &mut [f32], b: &[f32], z: &[f32], sc: f32, rows: usize, cols: usize) {
+    for i in 0..rows {
+        let row = &mut x[i * cols..(i + 1) * cols];
+        for j in 0..cols {
+            row[j] += b[j] + sc * z[j];
         }
     }
 }
@@ -2212,6 +2715,253 @@ mod tests {
             assert_eq!(got, want);
         }
         assert_eq!(pool.os_threads_spawned(), 3, "steady-state GEMMs must not spawn");
+    }
+
+    #[test]
+    fn param_view_row_matches_at() {
+        // RowView is the single fused accessor behind every per-element
+        // view read: each arm must reproduce at() exactly
+        let (rows, cols, rank) = (6usize, 10usize, 2usize);
+        let base = randv(rows * cols, 160);
+        let dir = randv(rows * cols, 161);
+        let segs = mat_segs(rows, cols, rank);
+        let ad = randv(adapter_dim(&segs), 162);
+        let zd = randv(adapter_dim(&segs), 163);
+        let bind = AdapterBinding::perturbed(&segs, &ad, &zd, 1e-3);
+        let views = [
+            ParamView::plain(&base),
+            ParamView::perturbed(&base, &dir, -1e-3),
+            ParamView::adapter(&base, &bind),
+            ParamView::adapter(&base, &bind).slice(0, rows * cols),
+        ];
+        for (vi, v) in views.iter().enumerate() {
+            for r in 0..rows {
+                let rv = v.row(r * cols, cols);
+                for j in 0..cols {
+                    assert_eq!(rv.at(j), v.at(r * cols + j), "view {vi} row {r} elem {j}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn simd_kernels_bit_identical_to_scalar() {
+        // THE SIMD contract: every AVX2 twin must reproduce its scalar body
+        // BITWISE — lanes in index order, p-ascending per output element,
+        // mul+add never contracted to FMA. Shapes deliberately straddle the
+        // 8-lane vectors (n = 130 leaves a 2-wide tail panel) and the
+        // MR-row groups (m % 4 != 0). Compares the kernels directly so the
+        // global dispatch policy cannot interfere.
+        if !simd::available() {
+            return;
+        }
+        let (m, k, n) = (37usize, 97usize, 130usize);
+        let a = randv(m * k, 170);
+        let w = randv(k * n, 171);
+        let z = randv(k * n, 172);
+        let d = randv(m * n, 173);
+        let wbt = randv(n * k, 174);
+        let zbt = randv(n * k, 175);
+        for sc in [1e-3f32, -1e-3f32] {
+            let mut want = vec![0f32; m * n];
+            let mut got = vec![0f32; m * n];
+            matmul_span_scalar(&a, &w, k, n, 0, m, &mut want);
+            unsafe { simd::matmul_span(&a, &w, k, n, 0, m, &mut got) };
+            assert_eq!(got, want, "matmul_span");
+            matmul_span_fused_scalar(&a, &w, &z, sc, k, n, 0, m, &mut want);
+            unsafe { simd::matmul_span_fused(&a, &w, &z, sc, k, n, 0, m, &mut got) };
+            assert_eq!(got, want, "matmul_span_fused sc={sc}");
+
+            let segs = mat_segs(k, n, 3);
+            let ad = randv(adapter_dim(&segs), 176);
+            let zd = randv(adapter_dim(&segs), 177);
+            let bind = AdapterBinding::perturbed(&segs, &ad, &zd, sc);
+            let view = ParamView::adapter(&w, &bind).slice(0, k * n);
+            matmul_span_view_scalar(&a, view, k, n, 0, m, &mut want);
+            unsafe { simd::matmul_span_view(&a, view, k, n, 0, m, &mut got) };
+            assert_eq!(got, want, "matmul_span_view sc={sc}");
+
+            let mut want_at = vec![0f32; k * n];
+            let mut got_at = vec![0f32; k * n];
+            matmul_at_span_scalar(&a, &d, m, k, n, 0, k, &mut want_at);
+            unsafe { simd::matmul_at_span(&a, &d, m, k, n, 0, k, &mut got_at) };
+            assert_eq!(got_at, want_at, "matmul_at_span");
+            let za = randv(m * k, 178);
+            matmul_at_span_fused_scalar(&a, &za, sc, &d, m, k, n, 0, k, &mut want_at);
+            unsafe { simd::matmul_at_span_fused(&a, &za, sc, &d, m, k, n, 0, k, &mut got_at) };
+            assert_eq!(got_at, want_at, "matmul_at_span_fused sc={sc}");
+
+            matmul_bt_span_scalar(&a, &wbt, k, n, 0, m, &mut want);
+            unsafe { simd::matmul_bt_span(&a, &wbt, k, n, 0, m, &mut got) };
+            assert_eq!(got, want, "matmul_bt_span");
+            matmul_bt_span_fused_scalar(&a, &wbt, &zbt, sc, k, n, 0, m, &mut want);
+            unsafe { simd::matmul_bt_span_fused(&a, &wbt, &zbt, sc, k, n, 0, m, &mut got) };
+            assert_eq!(got, want, "matmul_bt_span_fused sc={sc}");
+
+            // row/elementwise kernels at a non-multiple-of-8 width
+            let cols = 130usize;
+            let rows = 5usize;
+            let x0 = randv(rows * cols, 179);
+            let bias = randv(cols, 180);
+            let zb = randv(cols, 181);
+            let mut xs = x0.clone();
+            let mut xv = x0.clone();
+            add_bias_rows_scalar(&mut xs, &bias, rows, cols);
+            unsafe { simd::add_bias_rows(&mut xv, &bias, rows, cols) };
+            assert_eq!(xv, xs, "add_bias_rows");
+            let mut xs = x0.clone();
+            let mut xv = x0.clone();
+            add_bias_rows_perturbed_scalar(&mut xs, &bias, &zb, sc, rows, cols);
+            unsafe { simd::add_bias_rows_perturbed(&mut xv, &bias, &zb, sc, rows, cols) };
+            assert_eq!(xv, xs, "add_bias_rows_perturbed sc={sc}");
+
+            let gv = randv(cols, 182);
+            let mut os = vec![0f32; cols];
+            let mut ov = vec![0f32; cols];
+            layernorm_affine_scalar(&x0[..cols], &gv, &bias, 0.125, 1.5, &mut os);
+            unsafe { simd::layernorm_affine(&x0[..cols], &gv, &bias, 0.125, 1.5, &mut ov) };
+            assert_eq!(ov, os, "layernorm_affine");
+
+            let mut rs = x0[..cols].to_vec();
+            let mut rv = x0[..cols].to_vec();
+            scale_in_place_scalar(&mut rs, 0.73);
+            unsafe { simd::scale_in_place(&mut rv, 0.73) };
+            assert_eq!(rv, rs, "scale_in_place");
+
+            let mut gs = x0.clone();
+            let mut gvx = x0.clone();
+            gelu_scalar(&mut gs);
+            unsafe { simd::gelu(&mut gvx) };
+            assert_eq!(gvx, gs, "gelu");
+
+            let xa = randv(257, 183);
+            let za2 = randv(257, 184);
+            let mut oas = vec![0f32; 257];
+            let mut oav = vec![0f32; 257];
+            axpy_into_scalar(sc, &za2, &xa, &mut oas);
+            unsafe { simd::axpy_into(sc, &za2, &xa, &mut oav) };
+            assert_eq!(oav, oas, "axpy_into sc={sc}");
+        }
+    }
+
+    #[test]
+    fn packed_gemms_match_unpacked_across_pool_sizes() {
+        // THE packing contract: packing is a permutation copy, so every
+        // PackedB arm must equal its unpacked twin BITWISE at every pool
+        // size and both antithetic scales. n = 130 leaves a zero-padded
+        // tail panel; m = 254 leaves remainder rows in every partition.
+        let (m, k, n) = (254usize, 97usize, 130usize);
+        let a = randv(m * k, 190);
+        let w = randv(k * n, 191);
+        let z = randv(k * n, 192);
+        let wbt = randv(n * k, 193);
+        let zbt = randv(n * k, 194);
+        let mut pw = vec![0f32; packed_len(k, n)];
+        let mut pz = vec![0f32; packed_len(k, n)];
+        let mut pwbt = vec![0f32; packed_len(k, n)];
+        let mut pzbt = vec![0f32; packed_len(k, n)];
+        pack_b(&w, k, n, &mut pw);
+        pack_b(&z, k, n, &mut pz);
+        pack_bt(&wbt, k, n, &mut pwbt);
+        pack_bt(&zbt, k, n, &mut pzbt);
+
+        let segs = mat_segs(k, n, 3);
+        let ad = randv(adapter_dim(&segs), 195);
+        let zd = randv(adapter_dim(&segs), 196);
+        let segs_bt = mat_segs(n, k, 3);
+        let ad_bt = randv(adapter_dim(&segs_bt), 197);
+        let zd_bt = randv(adapter_dim(&segs_bt), 198);
+
+        for t in [1usize, 2, 4] {
+            let pool = WorkerPool::new(t);
+            let mut want = vec![0f32; m * n];
+            let mut got = vec![0f32; m * n];
+
+            matmul_threaded(&a, &w, m, k, n, &mut want, &pool);
+            matmul_packed_view_threaded(&a, PackedB::Plain(&pw), m, k, n, &mut got, &pool);
+            assert_eq!(got, want, "packed plain (t={t})");
+
+            matmul_bt_threaded(&a, &wbt, m, k, n, &mut want, &pool);
+            matmul_packed_view_threaded(&a, PackedB::Plain(&pwbt), m, k, n, &mut got, &pool);
+            assert_eq!(got, want, "packed bt plain (t={t})");
+
+            for sc in [1e-3f32, -1e-3f32] {
+                matmul_view_threaded(&a, ParamView::perturbed(&w, &z, sc), m, k, n, &mut want, &pool);
+                matmul_packed_view_threaded(
+                    &a,
+                    PackedB::Perturbed { w: &pw, z: &pz, sc },
+                    m,
+                    k,
+                    n,
+                    &mut got,
+                    &pool,
+                );
+                assert_eq!(got, want, "packed perturbed (t={t}, sc={sc})");
+
+                matmul_bt_view_threaded(&a, ParamView::perturbed(&wbt, &zbt, sc), m, k, n, &mut want, &pool);
+                matmul_packed_view_threaded(
+                    &a,
+                    PackedB::Perturbed { w: &pwbt, z: &pzbt, sc },
+                    m,
+                    k,
+                    n,
+                    &mut got,
+                    &pool,
+                );
+                assert_eq!(got, want, "packed bt perturbed (t={t}, sc={sc})");
+
+                let bind = AdapterBinding::perturbed(&segs, &ad, &zd, sc);
+                let view = ParamView::adapter(&w, &bind).slice(0, k * n);
+                matmul_view_threaded(&a, view, m, k, n, &mut want, &pool);
+                matmul_packed_view_threaded(
+                    &a,
+                    PackedB::Composite { w: &pw, view, form: PackForm::B },
+                    m,
+                    k,
+                    n,
+                    &mut got,
+                    &pool,
+                );
+                assert_eq!(got, want, "packed composite (t={t}, sc={sc})");
+
+                let bind_bt = AdapterBinding::perturbed(&segs_bt, &ad_bt, &zd_bt, sc);
+                let view_bt = ParamView::adapter(&wbt, &bind_bt).slice(0, n * k);
+                matmul_bt_view_threaded(&a, view_bt, m, k, n, &mut want, &pool);
+                matmul_packed_view_threaded(
+                    &a,
+                    PackedB::Composite { w: &pwbt, view: view_bt, form: PackForm::Bt },
+                    m,
+                    k,
+                    n,
+                    &mut got,
+                    &pool,
+                );
+                assert_eq!(got, want, "packed bt composite (t={t}, sc={sc})");
+            }
+        }
+    }
+
+    #[test]
+    fn pack_pads_stay_zero_across_repacks() {
+        // tail panels are zero-padded at allocation and never rewritten —
+        // the SIMD kernels rely on pad lanes staying 0 across repacks
+        let (k, n) = (5usize, 70usize); // one full panel + a 6-wide tail
+        let w = randv(k * n, 200);
+        let mut dst = vec![0f32; packed_len(k, n)];
+        for round in 0..3 {
+            pack_b(&w, k, n, &mut dst);
+            let tb = MATMUL_NR * k; // tail panel base
+            for p in 0..k {
+                for jj in 0..MATMUL_NR {
+                    let v = dst[tb + p * MATMUL_NR + jj];
+                    if jj < n - MATMUL_NR {
+                        assert_eq!(v, w[p * n + MATMUL_NR + jj], "round {round}");
+                    } else {
+                        assert_eq!(v, 0.0, "pad lane ({p}, {jj}) round {round}");
+                    }
+                }
+            }
+        }
     }
 
     #[test]

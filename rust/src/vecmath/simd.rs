@@ -1,0 +1,1039 @@
+//! Explicit SIMD (AVX2) inner kernels behind the scalar `vecmath` paths.
+//!
+//! Every kernel here is a drop-in twin of a scalar kernel in the parent
+//! module, under ONE contract: **bit-identical results**. The rules that
+//! make that hold:
+//!
+//! * vectorize only across independent output elements (the j / column
+//!   dimension of a GEMM, the elements of a row kernel) — every lane keeps
+//!   the scalar kernel's p-ascending accumulation chain for its own output
+//!   element;
+//! * never contract `a*b + c` into an FMA: the scalar kernels evaluate one
+//!   f32 multiply then one f32 add, so the vector kernels use
+//!   `_mm256_add_ps(_mm256_mul_ps(..))` (the `fma` target feature is only
+//!   part of the detection gate, it is never used for arithmetic);
+//! * scalar tails run in index order after the full vector chunks;
+//! * transcendentals (`exp`, `tanh`) and every f64 reduction (layernorm
+//!   statistics, `dot`) stay scalar per element.
+//!
+//! Detection is lazy and overridable: `CONMEZO_SIMD={auto,off}` env var,
+//! `runtime.simd` config key, `--simd` CLI flag (the latter two land here
+//! through [`set_policy`]). The scalar path is always compiled and is the
+//! only path on non-x86_64 targets.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// How the SIMD dispatch should resolve.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdPolicy {
+    /// Use AVX2 kernels when the CPU supports avx2+fma (the default).
+    Auto,
+    /// Always run the scalar kernels.
+    Off,
+}
+
+/// Explicit policy override: 0 = unset (read `CONMEZO_SIMD`), 1 = auto,
+/// 2 = off.
+static POLICY: AtomicU8 = AtomicU8::new(0);
+/// Resolved dispatch state: 0 = unknown, 1 = SIMD on, 2 = SIMD off.
+static RESOLVED: AtomicU8 = AtomicU8::new(0);
+
+/// Install a dispatch policy (CLI `--simd` / `runtime.simd` config). Takes
+/// effect on the next kernel call; racing callers see either the old or
+/// the new policy, both of which produce bit-identical results.
+pub fn set_policy(p: SimdPolicy) {
+    POLICY.store(
+        match p {
+            SimdPolicy::Auto => 1,
+            SimdPolicy::Off => 2,
+        },
+        Ordering::Relaxed,
+    );
+    RESOLVED.store(0, Ordering::Relaxed);
+}
+
+/// Whether this build/CPU can run the AVX2 kernels at all (ignores the
+/// policy override).
+#[cfg(target_arch = "x86_64")]
+pub fn available() -> bool {
+    is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+}
+
+/// Non-x86_64 targets always run the scalar fallback.
+#[cfg(not(target_arch = "x86_64"))]
+pub fn available() -> bool {
+    false
+}
+
+/// Whether kernel dispatch takes the SIMD path right now (policy override,
+/// else `CONMEZO_SIMD` env, else runtime CPU detection).
+#[inline]
+pub fn enabled() -> bool {
+    match RESOLVED.load(Ordering::Relaxed) {
+        1 => true,
+        2 => false,
+        _ => resolve(),
+    }
+}
+
+#[cold]
+fn resolve() -> bool {
+    let pol = match POLICY.load(Ordering::Relaxed) {
+        1 => SimdPolicy::Auto,
+        2 => SimdPolicy::Off,
+        _ => match std::env::var("CONMEZO_SIMD") {
+            Ok(v) if v.eq_ignore_ascii_case("off") || v == "0" => SimdPolicy::Off,
+            _ => SimdPolicy::Auto,
+        },
+    };
+    let on = pol == SimdPolicy::Auto && available();
+    RESOLVED.store(if on { 1 } else { 2 }, Ordering::Relaxed);
+    on
+}
+
+/// Human-readable dispatch state for `conmezo info` / benches.
+pub fn status() -> &'static str {
+    if enabled() {
+        "on (avx2+fma)"
+    } else if available() {
+        "off (policy)"
+    } else {
+        "off (unavailable)"
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+pub(crate) use x86::*;
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::super::{PackForm, PackedB, ParamView, MATMUL_NR};
+    use core::arch::x86_64::*;
+
+    // ---------------------------------------------------------------
+    // GEMM register kernels.
+    //
+    // Shared shape: j is tiled by MATMUL_NR like the scalar kernels, and
+    // inside a tile 8-lane column chunks hold 4 row accumulators in
+    // registers across the whole inner dimension. Each output element's
+    // chain is `acc = add(acc, mul(broadcast(a), b))` with the inner index
+    // ascending — exactly the scalar `acc += av * bv`.
+    // ---------------------------------------------------------------
+
+    /// SIMD twin of `matmul_span_scalar` (plain B, [k, n] row-major).
+    #[target_feature(enable = "avx2,fma")]
+    pub(crate) unsafe fn matmul_span(
+        a: &[f32],
+        b: &[f32],
+        k: usize,
+        n: usize,
+        row0: usize,
+        rows: usize,
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(out.len(), rows * n);
+        let (ap, bp, op) = (a.as_ptr(), b.as_ptr(), out.as_mut_ptr());
+        let mut j0 = 0;
+        while j0 < n {
+            let nb = MATMUL_NR.min(n - j0);
+            let nv = nb & !7;
+            let mut i0 = 0;
+            while i0 + 4 <= rows {
+                let ar0 = ap.add((row0 + i0) * k);
+                let ar1 = ap.add((row0 + i0 + 1) * k);
+                let ar2 = ap.add((row0 + i0 + 2) * k);
+                let ar3 = ap.add((row0 + i0 + 3) * k);
+                let mut jv = 0;
+                while jv < nv {
+                    let mut acc0 = _mm256_setzero_ps();
+                    let mut acc1 = _mm256_setzero_ps();
+                    let mut acc2 = _mm256_setzero_ps();
+                    let mut acc3 = _mm256_setzero_ps();
+                    let mut wp = bp.add(j0 + jv);
+                    for p in 0..k {
+                        let bv = _mm256_loadu_ps(wp);
+                        acc0 = _mm256_add_ps(acc0, _mm256_mul_ps(_mm256_set1_ps(*ar0.add(p)), bv));
+                        acc1 = _mm256_add_ps(acc1, _mm256_mul_ps(_mm256_set1_ps(*ar1.add(p)), bv));
+                        acc2 = _mm256_add_ps(acc2, _mm256_mul_ps(_mm256_set1_ps(*ar2.add(p)), bv));
+                        acc3 = _mm256_add_ps(acc3, _mm256_mul_ps(_mm256_set1_ps(*ar3.add(p)), bv));
+                        wp = wp.add(n);
+                    }
+                    _mm256_storeu_ps(op.add(i0 * n + j0 + jv), acc0);
+                    _mm256_storeu_ps(op.add((i0 + 1) * n + j0 + jv), acc1);
+                    _mm256_storeu_ps(op.add((i0 + 2) * n + j0 + jv), acc2);
+                    _mm256_storeu_ps(op.add((i0 + 3) * n + j0 + jv), acc3);
+                    jv += 8;
+                }
+                // tail columns of the tile: scalar, index order
+                for j in j0 + nv..j0 + nb {
+                    for (rr, arp) in [ar0, ar1, ar2, ar3].into_iter().enumerate() {
+                        let mut acc = 0f32;
+                        for p in 0..k {
+                            acc += *arp.add(p) * *bp.add(p * n + j);
+                        }
+                        *op.add((i0 + rr) * n + j) = acc;
+                    }
+                }
+                i0 += 4;
+            }
+            while i0 < rows {
+                let arp = ap.add((row0 + i0) * k);
+                let mut jv = 0;
+                while jv < nv {
+                    let mut acc = _mm256_setzero_ps();
+                    let mut wp = bp.add(j0 + jv);
+                    for p in 0..k {
+                        acc = _mm256_add_ps(acc, _mm256_mul_ps(_mm256_set1_ps(*arp.add(p)), _mm256_loadu_ps(wp)));
+                        wp = wp.add(n);
+                    }
+                    _mm256_storeu_ps(op.add(i0 * n + j0 + jv), acc);
+                    jv += 8;
+                }
+                for j in j0 + nv..j0 + nb {
+                    let mut acc = 0f32;
+                    for p in 0..k {
+                        acc += *arp.add(p) * *bp.add(p * n + j);
+                    }
+                    *op.add(i0 * n + j) = acc;
+                }
+                i0 += 1;
+            }
+            j0 += nb;
+        }
+    }
+
+    /// SIMD twin of `matmul_span_fused_scalar`: every weight load is
+    /// `w + sc*z`, evaluated as separate mul+add per element before the
+    /// accumulation multiply — the exact `axpy_into` expression.
+    #[target_feature(enable = "avx2,fma")]
+    pub(crate) unsafe fn matmul_span_fused(
+        a: &[f32],
+        w: &[f32],
+        z: &[f32],
+        sc: f32,
+        k: usize,
+        n: usize,
+        row0: usize,
+        rows: usize,
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(out.len(), rows * n);
+        let (ap, wp0, zp0, op) = (a.as_ptr(), w.as_ptr(), z.as_ptr(), out.as_mut_ptr());
+        let scv = _mm256_set1_ps(sc);
+        let mut j0 = 0;
+        while j0 < n {
+            let nb = MATMUL_NR.min(n - j0);
+            let nv = nb & !7;
+            let mut i0 = 0;
+            while i0 + 4 <= rows {
+                let ar0 = ap.add((row0 + i0) * k);
+                let ar1 = ap.add((row0 + i0 + 1) * k);
+                let ar2 = ap.add((row0 + i0 + 2) * k);
+                let ar3 = ap.add((row0 + i0 + 3) * k);
+                let mut jv = 0;
+                while jv < nv {
+                    let mut acc0 = _mm256_setzero_ps();
+                    let mut acc1 = _mm256_setzero_ps();
+                    let mut acc2 = _mm256_setzero_ps();
+                    let mut acc3 = _mm256_setzero_ps();
+                    let mut wp = wp0.add(j0 + jv);
+                    let mut zp = zp0.add(j0 + jv);
+                    for p in 0..k {
+                        let bv = _mm256_add_ps(_mm256_loadu_ps(wp), _mm256_mul_ps(scv, _mm256_loadu_ps(zp)));
+                        acc0 = _mm256_add_ps(acc0, _mm256_mul_ps(_mm256_set1_ps(*ar0.add(p)), bv));
+                        acc1 = _mm256_add_ps(acc1, _mm256_mul_ps(_mm256_set1_ps(*ar1.add(p)), bv));
+                        acc2 = _mm256_add_ps(acc2, _mm256_mul_ps(_mm256_set1_ps(*ar2.add(p)), bv));
+                        acc3 = _mm256_add_ps(acc3, _mm256_mul_ps(_mm256_set1_ps(*ar3.add(p)), bv));
+                        wp = wp.add(n);
+                        zp = zp.add(n);
+                    }
+                    _mm256_storeu_ps(op.add(i0 * n + j0 + jv), acc0);
+                    _mm256_storeu_ps(op.add((i0 + 1) * n + j0 + jv), acc1);
+                    _mm256_storeu_ps(op.add((i0 + 2) * n + j0 + jv), acc2);
+                    _mm256_storeu_ps(op.add((i0 + 3) * n + j0 + jv), acc3);
+                    jv += 8;
+                }
+                for j in j0 + nv..j0 + nb {
+                    for (rr, arp) in [ar0, ar1, ar2, ar3].into_iter().enumerate() {
+                        let mut acc = 0f32;
+                        for p in 0..k {
+                            let e = p * n + j;
+                            acc += *arp.add(p) * (*wp0.add(e) + sc * *zp0.add(e));
+                        }
+                        *op.add((i0 + rr) * n + j) = acc;
+                    }
+                }
+                i0 += 4;
+            }
+            while i0 < rows {
+                let arp = ap.add((row0 + i0) * k);
+                let mut jv = 0;
+                while jv < nv {
+                    let mut acc = _mm256_setzero_ps();
+                    let mut wp = wp0.add(j0 + jv);
+                    let mut zp = zp0.add(j0 + jv);
+                    for p in 0..k {
+                        let bv = _mm256_add_ps(_mm256_loadu_ps(wp), _mm256_mul_ps(scv, _mm256_loadu_ps(zp)));
+                        acc = _mm256_add_ps(acc, _mm256_mul_ps(_mm256_set1_ps(*arp.add(p)), bv));
+                        wp = wp.add(n);
+                        zp = zp.add(n);
+                    }
+                    _mm256_storeu_ps(op.add(i0 * n + j0 + jv), acc);
+                    jv += 8;
+                }
+                for j in j0 + nv..j0 + nb {
+                    let mut acc = 0f32;
+                    for p in 0..k {
+                        let e = p * n + j;
+                        acc += *arp.add(p) * (*wp0.add(e) + sc * *zp0.add(e));
+                    }
+                    *op.add(i0 * n + j) = acc;
+                }
+                i0 += 1;
+            }
+            j0 += nb;
+        }
+    }
+
+    /// SIMD twin of `matmul_span_view_scalar` (composite views): the
+    /// per-`p` weight tile is built SCALAR through `ParamView` (low-rank /
+    /// dense-delta element order untouched), the accumulator consume is
+    /// vectorized. Pad lanes of the stack tile stay zero and are never
+    /// stored.
+    #[target_feature(enable = "avx2,fma")]
+    pub(crate) unsafe fn matmul_span_view(
+        a: &[f32],
+        w: ParamView<'_>,
+        k: usize,
+        n: usize,
+        row0: usize,
+        rows: usize,
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(out.len(), rows * n);
+        let ap = a.as_ptr();
+        let mut acc = [[0f32; MATMUL_NR]; 4];
+        let mut wtile = [0f32; MATMUL_NR];
+        let mut j0 = 0;
+        while j0 < n {
+            let nb = MATMUL_NR.min(n - j0);
+            let nv8 = (nb + 7) & !7; // wtile/acc are MATMUL_NR wide: in-bounds
+            let mut i0 = 0;
+            while i0 + 4 <= rows {
+                for row in acc.iter_mut() {
+                    row[..nb].fill(0.0);
+                }
+                for p in 0..k {
+                    let wrow = w.row(p * n + j0, nb);
+                    for (jj, t) in wtile[..nb].iter_mut().enumerate() {
+                        *t = wrow.at(jj);
+                    }
+                    for (rr, arow) in acc.iter_mut().enumerate() {
+                        let av = _mm256_set1_ps(*ap.add((row0 + i0 + rr) * k + p));
+                        let mut jv = 0;
+                        while jv < nv8 {
+                            let cur = _mm256_loadu_ps(arow.as_ptr().add(jv));
+                            let wv = _mm256_loadu_ps(wtile.as_ptr().add(jv));
+                            _mm256_storeu_ps(arow.as_mut_ptr().add(jv), _mm256_add_ps(cur, _mm256_mul_ps(av, wv)));
+                            jv += 8;
+                        }
+                    }
+                }
+                for (rr, arow) in acc.iter().enumerate() {
+                    out[(i0 + rr) * n + j0..(i0 + rr) * n + j0 + nb].copy_from_slice(&arow[..nb]);
+                }
+                i0 += 4;
+            }
+            for i in i0..rows {
+                acc[0][..nb].fill(0.0);
+                for p in 0..k {
+                    let wrow = w.row(p * n + j0, nb);
+                    for (jj, t) in wtile[..nb].iter_mut().enumerate() {
+                        *t = wrow.at(jj);
+                    }
+                    let av = _mm256_set1_ps(*ap.add((row0 + i) * k + p));
+                    let mut jv = 0;
+                    while jv < nv8 {
+                        let cur = _mm256_loadu_ps(acc[0].as_ptr().add(jv));
+                        let wv = _mm256_loadu_ps(wtile.as_ptr().add(jv));
+                        _mm256_storeu_ps(acc[0].as_mut_ptr().add(jv), _mm256_add_ps(cur, _mm256_mul_ps(av, wv)));
+                        jv += 8;
+                    }
+                }
+                out[i * n + j0..i * n + j0 + nb].copy_from_slice(&acc[0][..nb]);
+            }
+            j0 += nb;
+        }
+    }
+
+    /// SIMD twin of `matmul_at_span_scalar` (out rows over the k
+    /// dimension, inner index i ascending).
+    #[target_feature(enable = "avx2,fma")]
+    pub(crate) unsafe fn matmul_at_span(
+        a: &[f32],
+        d: &[f32],
+        m: usize,
+        k: usize,
+        n: usize,
+        p_base: usize,
+        prows: usize,
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(out.len(), prows * n);
+        let (ap, dp, op) = (a.as_ptr(), d.as_ptr(), out.as_mut_ptr());
+        let mut j0 = 0;
+        while j0 < n {
+            let nb = MATMUL_NR.min(n - j0);
+            let nv = nb & !7;
+            let mut p0 = 0;
+            while p0 + 4 <= prows {
+                let c0 = ap.add(p_base + p0);
+                let mut jv = 0;
+                while jv < nv {
+                    let mut acc0 = _mm256_setzero_ps();
+                    let mut acc1 = _mm256_setzero_ps();
+                    let mut acc2 = _mm256_setzero_ps();
+                    let mut acc3 = _mm256_setzero_ps();
+                    let mut drp = dp.add(j0 + jv);
+                    let mut arp = c0;
+                    for _i in 0..m {
+                        let dv = _mm256_loadu_ps(drp);
+                        acc0 = _mm256_add_ps(acc0, _mm256_mul_ps(_mm256_set1_ps(*arp), dv));
+                        acc1 = _mm256_add_ps(acc1, _mm256_mul_ps(_mm256_set1_ps(*arp.add(1)), dv));
+                        acc2 = _mm256_add_ps(acc2, _mm256_mul_ps(_mm256_set1_ps(*arp.add(2)), dv));
+                        acc3 = _mm256_add_ps(acc3, _mm256_mul_ps(_mm256_set1_ps(*arp.add(3)), dv));
+                        drp = drp.add(n);
+                        arp = arp.add(k);
+                    }
+                    _mm256_storeu_ps(op.add(p0 * n + j0 + jv), acc0);
+                    _mm256_storeu_ps(op.add((p0 + 1) * n + j0 + jv), acc1);
+                    _mm256_storeu_ps(op.add((p0 + 2) * n + j0 + jv), acc2);
+                    _mm256_storeu_ps(op.add((p0 + 3) * n + j0 + jv), acc3);
+                    jv += 8;
+                }
+                for j in j0 + nv..j0 + nb {
+                    for rr in 0..4 {
+                        let mut acc = 0f32;
+                        for i in 0..m {
+                            acc += *ap.add(i * k + p_base + p0 + rr) * *dp.add(i * n + j);
+                        }
+                        *op.add((p0 + rr) * n + j) = acc;
+                    }
+                }
+                p0 += 4;
+            }
+            while p0 < prows {
+                let mut jv = 0;
+                while jv < nv {
+                    let mut acc = _mm256_setzero_ps();
+                    let mut drp = dp.add(j0 + jv);
+                    let mut arp = ap.add(p_base + p0);
+                    for _i in 0..m {
+                        acc = _mm256_add_ps(acc, _mm256_mul_ps(_mm256_set1_ps(*arp), _mm256_loadu_ps(drp)));
+                        drp = drp.add(n);
+                        arp = arp.add(k);
+                    }
+                    _mm256_storeu_ps(op.add(p0 * n + j0 + jv), acc);
+                    jv += 8;
+                }
+                for j in j0 + nv..j0 + nb {
+                    let mut acc = 0f32;
+                    for i in 0..m {
+                        acc += *ap.add(i * k + p_base + p0) * *dp.add(i * n + j);
+                    }
+                    *op.add(p0 * n + j) = acc;
+                }
+                p0 += 1;
+            }
+            j0 += nb;
+        }
+    }
+
+    /// SIMD twin of `matmul_at_span_fused_scalar` (`a` load is `w + sc*z`,
+    /// broadcast per out-row — scalar fused loads, vector d consume).
+    #[target_feature(enable = "avx2,fma")]
+    pub(crate) unsafe fn matmul_at_span_fused(
+        w: &[f32],
+        z: &[f32],
+        sc: f32,
+        d: &[f32],
+        m: usize,
+        k: usize,
+        n: usize,
+        p_base: usize,
+        prows: usize,
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(out.len(), prows * n);
+        let (wp, zp, dp, op) = (w.as_ptr(), z.as_ptr(), d.as_ptr(), out.as_mut_ptr());
+        let mut j0 = 0;
+        while j0 < n {
+            let nb = MATMUL_NR.min(n - j0);
+            let nv = nb & !7;
+            let mut p0 = 0;
+            while p0 + 4 <= prows {
+                let mut jv = 0;
+                while jv < nv {
+                    let mut acc0 = _mm256_setzero_ps();
+                    let mut acc1 = _mm256_setzero_ps();
+                    let mut acc2 = _mm256_setzero_ps();
+                    let mut acc3 = _mm256_setzero_ps();
+                    let mut drp = dp.add(j0 + jv);
+                    for i in 0..m {
+                        let e = i * k + p_base + p0;
+                        let dv = _mm256_loadu_ps(drp);
+                        acc0 = _mm256_add_ps(acc0, _mm256_mul_ps(_mm256_set1_ps(*wp.add(e) + sc * *zp.add(e)), dv));
+                        acc1 = _mm256_add_ps(
+                            acc1,
+                            _mm256_mul_ps(_mm256_set1_ps(*wp.add(e + 1) + sc * *zp.add(e + 1)), dv),
+                        );
+                        acc2 = _mm256_add_ps(
+                            acc2,
+                            _mm256_mul_ps(_mm256_set1_ps(*wp.add(e + 2) + sc * *zp.add(e + 2)), dv),
+                        );
+                        acc3 = _mm256_add_ps(
+                            acc3,
+                            _mm256_mul_ps(_mm256_set1_ps(*wp.add(e + 3) + sc * *zp.add(e + 3)), dv),
+                        );
+                        drp = drp.add(n);
+                    }
+                    _mm256_storeu_ps(op.add(p0 * n + j0 + jv), acc0);
+                    _mm256_storeu_ps(op.add((p0 + 1) * n + j0 + jv), acc1);
+                    _mm256_storeu_ps(op.add((p0 + 2) * n + j0 + jv), acc2);
+                    _mm256_storeu_ps(op.add((p0 + 3) * n + j0 + jv), acc3);
+                    jv += 8;
+                }
+                for j in j0 + nv..j0 + nb {
+                    for rr in 0..4 {
+                        let mut acc = 0f32;
+                        for i in 0..m {
+                            let e = i * k + p_base + p0 + rr;
+                            acc += (*wp.add(e) + sc * *zp.add(e)) * *dp.add(i * n + j);
+                        }
+                        *op.add((p0 + rr) * n + j) = acc;
+                    }
+                }
+                p0 += 4;
+            }
+            while p0 < prows {
+                let mut jv = 0;
+                while jv < nv {
+                    let mut acc = _mm256_setzero_ps();
+                    let mut drp = dp.add(j0 + jv);
+                    for i in 0..m {
+                        let e = i * k + p_base + p0;
+                        acc = _mm256_add_ps(
+                            acc,
+                            _mm256_mul_ps(_mm256_set1_ps(*wp.add(e) + sc * *zp.add(e)), _mm256_loadu_ps(drp)),
+                        );
+                        drp = drp.add(n);
+                    }
+                    _mm256_storeu_ps(op.add(p0 * n + j0 + jv), acc);
+                    jv += 8;
+                }
+                for j in j0 + nv..j0 + nb {
+                    let mut acc = 0f32;
+                    for i in 0..m {
+                        let e = i * k + p_base + p0;
+                        acc += (*wp.add(e) + sc * *zp.add(e)) * *dp.add(i * n + j);
+                    }
+                    *op.add(p0 * n + j) = acc;
+                }
+                p0 += 1;
+            }
+            j0 += nb;
+        }
+    }
+
+    /// SIMD twin of `matmul_bt_span_scalar`: 8 output columns per vector,
+    /// each lane's dot running p-ascending over a gathered column of `bt`
+    /// (stride-k rows → `_mm256_i32gather_ps` with a constant index
+    /// vector). The packed kernel replaces the gathers with contiguous
+    /// panel loads; this is the unpacked fallback.
+    #[target_feature(enable = "avx2,fma")]
+    pub(crate) unsafe fn matmul_bt_span(
+        a: &[f32],
+        bt: &[f32],
+        k: usize,
+        n: usize,
+        row0: usize,
+        rows: usize,
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(out.len(), rows * n);
+        let (ap, bp, op) = (a.as_ptr(), bt.as_ptr(), out.as_mut_ptr());
+        let nv = n & !7;
+        let ki = k as i32;
+        let vidx = _mm256_setr_epi32(0, ki, 2 * ki, 3 * ki, 4 * ki, 5 * ki, 6 * ki, 7 * ki);
+        for i in 0..rows {
+            let arp = ap.add((row0 + i) * k);
+            let mut j = 0;
+            while j < nv {
+                let mut acc = _mm256_setzero_ps();
+                let base = bp.add(j * k);
+                for p in 0..k {
+                    let bv = _mm256_i32gather_ps::<4>(base.add(p), vidx);
+                    acc = _mm256_add_ps(acc, _mm256_mul_ps(_mm256_set1_ps(*arp.add(p)), bv));
+                }
+                _mm256_storeu_ps(op.add(i * n + j), acc);
+                j += 8;
+            }
+            while j < n {
+                let brp = bp.add(j * k);
+                let mut acc = 0f32;
+                for p in 0..k {
+                    acc += *arp.add(p) * *brp.add(p);
+                }
+                *op.add(i * n + j) = acc;
+                j += 1;
+            }
+        }
+    }
+
+    /// SIMD twin of `matmul_bt_span_fused_scalar` (gathered `w + sc*z`).
+    #[target_feature(enable = "avx2,fma")]
+    pub(crate) unsafe fn matmul_bt_span_fused(
+        a: &[f32],
+        w: &[f32],
+        z: &[f32],
+        sc: f32,
+        k: usize,
+        n: usize,
+        row0: usize,
+        rows: usize,
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(out.len(), rows * n);
+        let (ap, wp, zp, op) = (a.as_ptr(), w.as_ptr(), z.as_ptr(), out.as_mut_ptr());
+        let nv = n & !7;
+        let ki = k as i32;
+        let vidx = _mm256_setr_epi32(0, ki, 2 * ki, 3 * ki, 4 * ki, 5 * ki, 6 * ki, 7 * ki);
+        let scv = _mm256_set1_ps(sc);
+        for i in 0..rows {
+            let arp = ap.add((row0 + i) * k);
+            let mut j = 0;
+            while j < nv {
+                let mut acc = _mm256_setzero_ps();
+                let wbase = wp.add(j * k);
+                let zbase = zp.add(j * k);
+                for p in 0..k {
+                    let wv = _mm256_i32gather_ps::<4>(wbase.add(p), vidx);
+                    let zv = _mm256_i32gather_ps::<4>(zbase.add(p), vidx);
+                    let bv = _mm256_add_ps(wv, _mm256_mul_ps(scv, zv));
+                    acc = _mm256_add_ps(acc, _mm256_mul_ps(_mm256_set1_ps(*arp.add(p)), bv));
+                }
+                _mm256_storeu_ps(op.add(i * n + j), acc);
+                j += 8;
+            }
+            while j < n {
+                let wrp = wp.add(j * k);
+                let zrp = zp.add(j * k);
+                let mut acc = 0f32;
+                for p in 0..k {
+                    acc += *arp.add(p) * (*wrp.add(p) + sc * *zrp.add(p));
+                }
+                *op.add(i * n + j) = acc;
+                j += 1;
+            }
+        }
+    }
+
+    /// SIMD twin of `matmul_span_packed_scalar`: the hot packed-panel
+    /// kernel. Plain/perturbed arms read full 64-lane zero-padded panels
+    /// with contiguous vector loads; the composite arm builds the weight
+    /// tile scalar (packed base + `ParamView` deltas) and consumes it
+    /// vectorized.
+    #[target_feature(enable = "avx2,fma")]
+    pub(crate) unsafe fn matmul_span_packed(
+        a: &[f32],
+        pk: &PackedB<'_>,
+        k: usize,
+        n: usize,
+        row0: usize,
+        rows: usize,
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(out.len(), rows * n);
+        if let PackedB::Composite { .. } = pk {
+            return matmul_span_packed_composite(a, pk, k, n, row0, rows, out);
+        }
+        let (ap, op) = (a.as_ptr(), out.as_mut_ptr());
+        let (wp0, zp0, sc) = match *pk {
+            PackedB::Plain(w) => (w.as_ptr(), std::ptr::null::<f32>(), 0f32),
+            PackedB::Perturbed { w, z, sc } => (w.as_ptr(), z.as_ptr(), sc),
+            PackedB::Composite { .. } => unreachable!(),
+        };
+        let fused = !zp0.is_null();
+        let scv = _mm256_set1_ps(sc);
+        let mut j0 = 0;
+        let mut jt = 0;
+        while j0 < n {
+            let nb = MATMUL_NR.min(n - j0);
+            let nv = nb & !7;
+            let tb = jt * MATMUL_NR * k;
+            let mut i0 = 0;
+            while i0 + 4 <= rows {
+                let ar0 = ap.add((row0 + i0) * k);
+                let ar1 = ap.add((row0 + i0 + 1) * k);
+                let ar2 = ap.add((row0 + i0 + 2) * k);
+                let ar3 = ap.add((row0 + i0 + 3) * k);
+                let mut jv = 0;
+                while jv < nv {
+                    let mut acc0 = _mm256_setzero_ps();
+                    let mut acc1 = _mm256_setzero_ps();
+                    let mut acc2 = _mm256_setzero_ps();
+                    let mut acc3 = _mm256_setzero_ps();
+                    let mut wp = wp0.add(tb + jv);
+                    let mut zp = if fused { zp0.add(tb + jv) } else { zp0 };
+                    for p in 0..k {
+                        let bv = if fused {
+                            let v = _mm256_add_ps(_mm256_loadu_ps(wp), _mm256_mul_ps(scv, _mm256_loadu_ps(zp)));
+                            zp = zp.add(MATMUL_NR);
+                            v
+                        } else {
+                            _mm256_loadu_ps(wp)
+                        };
+                        acc0 = _mm256_add_ps(acc0, _mm256_mul_ps(_mm256_set1_ps(*ar0.add(p)), bv));
+                        acc1 = _mm256_add_ps(acc1, _mm256_mul_ps(_mm256_set1_ps(*ar1.add(p)), bv));
+                        acc2 = _mm256_add_ps(acc2, _mm256_mul_ps(_mm256_set1_ps(*ar2.add(p)), bv));
+                        acc3 = _mm256_add_ps(acc3, _mm256_mul_ps(_mm256_set1_ps(*ar3.add(p)), bv));
+                        wp = wp.add(MATMUL_NR);
+                    }
+                    _mm256_storeu_ps(op.add(i0 * n + j0 + jv), acc0);
+                    _mm256_storeu_ps(op.add((i0 + 1) * n + j0 + jv), acc1);
+                    _mm256_storeu_ps(op.add((i0 + 2) * n + j0 + jv), acc2);
+                    _mm256_storeu_ps(op.add((i0 + 3) * n + j0 + jv), acc3);
+                    jv += 8;
+                }
+                for jj in nv..nb {
+                    for (rr, arp) in [ar0, ar1, ar2, ar3].into_iter().enumerate() {
+                        let mut acc = 0f32;
+                        for p in 0..k {
+                            let e = tb + p * MATMUL_NR + jj;
+                            let wv = if fused { *wp0.add(e) + sc * *zp0.add(e) } else { *wp0.add(e) };
+                            acc += *arp.add(p) * wv;
+                        }
+                        *op.add((i0 + rr) * n + j0 + jj) = acc;
+                    }
+                }
+                i0 += 4;
+            }
+            while i0 < rows {
+                let arp = ap.add((row0 + i0) * k);
+                let mut jv = 0;
+                while jv < nv {
+                    let mut acc = _mm256_setzero_ps();
+                    let mut wp = wp0.add(tb + jv);
+                    let mut zp = if fused { zp0.add(tb + jv) } else { zp0 };
+                    for p in 0..k {
+                        let bv = if fused {
+                            let v = _mm256_add_ps(_mm256_loadu_ps(wp), _mm256_mul_ps(scv, _mm256_loadu_ps(zp)));
+                            zp = zp.add(MATMUL_NR);
+                            v
+                        } else {
+                            _mm256_loadu_ps(wp)
+                        };
+                        acc = _mm256_add_ps(acc, _mm256_mul_ps(_mm256_set1_ps(*arp.add(p)), bv));
+                        wp = wp.add(MATMUL_NR);
+                    }
+                    _mm256_storeu_ps(op.add(i0 * n + j0 + jv), acc);
+                    jv += 8;
+                }
+                for jj in nv..nb {
+                    let mut acc = 0f32;
+                    for p in 0..k {
+                        let e = tb + p * MATMUL_NR + jj;
+                        let wv = if fused { *wp0.add(e) + sc * *zp0.add(e) } else { *wp0.add(e) };
+                        acc += *arp.add(p) * wv;
+                    }
+                    *op.add(i0 * n + j0 + jj) = acc;
+                }
+                i0 += 1;
+            }
+            j0 += nb;
+            jt += 1;
+        }
+    }
+
+    /// Composite arm of the packed kernel: scalar tile build (packed base
+    /// value + `ParamView::at_with_base` deltas in the pinned order),
+    /// vectorized consume.
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn matmul_span_packed_composite(
+        a: &[f32],
+        pk: &PackedB<'_>,
+        k: usize,
+        n: usize,
+        row0: usize,
+        rows: usize,
+        out: &mut [f32],
+    ) {
+        let (wp0, view, form) = match pk {
+            PackedB::Composite { w, view, form } => (w.as_ptr(), view, *form),
+            _ => unreachable!(),
+        };
+        let ap = a.as_ptr();
+        let mut acc = [[0f32; MATMUL_NR]; 4];
+        let mut wtile = [0f32; MATMUL_NR];
+        let mut j0 = 0;
+        let mut jt = 0;
+        while j0 < n {
+            let nb = MATMUL_NR.min(n - j0);
+            let nv8 = (nb + 7) & !7;
+            let tb = jt * MATMUL_NR * k;
+            let mut i0 = 0;
+            while i0 + 4 <= rows {
+                for row in acc.iter_mut() {
+                    row[..nb].fill(0.0);
+                }
+                for p in 0..k {
+                    for (jj, t) in wtile[..nb].iter_mut().enumerate() {
+                        let e = match form {
+                            PackForm::B => p * n + j0 + jj,
+                            PackForm::Bt => (j0 + jj) * k + p,
+                        };
+                        *t = view.at_with_base(*wp0.add(tb + p * MATMUL_NR + jj), e);
+                    }
+                    for (rr, arow) in acc.iter_mut().enumerate() {
+                        let av = _mm256_set1_ps(*ap.add((row0 + i0 + rr) * k + p));
+                        let mut jv = 0;
+                        while jv < nv8 {
+                            let cur = _mm256_loadu_ps(arow.as_ptr().add(jv));
+                            let wv = _mm256_loadu_ps(wtile.as_ptr().add(jv));
+                            _mm256_storeu_ps(arow.as_mut_ptr().add(jv), _mm256_add_ps(cur, _mm256_mul_ps(av, wv)));
+                            jv += 8;
+                        }
+                    }
+                }
+                for (rr, arow) in acc.iter().enumerate() {
+                    out[(i0 + rr) * n + j0..(i0 + rr) * n + j0 + nb].copy_from_slice(&arow[..nb]);
+                }
+                i0 += 4;
+            }
+            for i in i0..rows {
+                acc[0][..nb].fill(0.0);
+                for p in 0..k {
+                    for (jj, t) in wtile[..nb].iter_mut().enumerate() {
+                        let e = match form {
+                            PackForm::B => p * n + j0 + jj,
+                            PackForm::Bt => (j0 + jj) * k + p,
+                        };
+                        *t = view.at_with_base(*wp0.add(tb + p * MATMUL_NR + jj), e);
+                    }
+                    let av = _mm256_set1_ps(*ap.add((row0 + i) * k + p));
+                    let mut jv = 0;
+                    while jv < nv8 {
+                        let cur = _mm256_loadu_ps(acc[0].as_ptr().add(jv));
+                        let wv = _mm256_loadu_ps(wtile.as_ptr().add(jv));
+                        _mm256_storeu_ps(acc[0].as_mut_ptr().add(jv), _mm256_add_ps(cur, _mm256_mul_ps(av, wv)));
+                        jv += 8;
+                    }
+                }
+                out[i * n + j0..i * n + j0 + nb].copy_from_slice(&acc[0][..nb]);
+            }
+            j0 += nb;
+            jt += 1;
+        }
+    }
+
+    // ---------------------------------------------------------------
+    // Row / elementwise kernels.
+    // ---------------------------------------------------------------
+
+    /// SIMD twin of `axpy_into_scalar`: out = x + a*z (separate mul+add).
+    #[target_feature(enable = "avx2,fma")]
+    pub(crate) unsafe fn axpy_into(a: f32, z: &[f32], x: &[f32], out: &mut [f32]) {
+        let nv = x.len() & !7;
+        let av = _mm256_set1_ps(a);
+        let (xp, zp, op) = (x.as_ptr(), z.as_ptr(), out.as_mut_ptr());
+        let mut i = 0;
+        while i < nv {
+            let v = _mm256_add_ps(_mm256_loadu_ps(xp.add(i)), _mm256_mul_ps(av, _mm256_loadu_ps(zp.add(i))));
+            _mm256_storeu_ps(op.add(i), v);
+            i += 8;
+        }
+        while i < x.len() {
+            *op.add(i) = *xp.add(i) + a * *zp.add(i);
+            i += 1;
+        }
+    }
+
+    /// SIMD twin of `add_bias_rows_scalar`.
+    #[target_feature(enable = "avx2,fma")]
+    pub(crate) unsafe fn add_bias_rows(x: &mut [f32], bias: &[f32], rows: usize, cols: usize) {
+        let nv = cols & !7;
+        let (xp, bp) = (x.as_mut_ptr(), bias.as_ptr());
+        for i in 0..rows {
+            let rp = xp.add(i * cols);
+            let mut j = 0;
+            while j < nv {
+                let v = _mm256_add_ps(_mm256_loadu_ps(rp.add(j)), _mm256_loadu_ps(bp.add(j)));
+                _mm256_storeu_ps(rp.add(j), v);
+                j += 8;
+            }
+            while j < cols {
+                *rp.add(j) += *bp.add(j);
+                j += 1;
+            }
+        }
+    }
+
+    /// SIMD twin of the perturbed `add_bias_rows_view` arm:
+    /// `row[j] += b[j] + sc*z[j]`.
+    #[target_feature(enable = "avx2,fma")]
+    pub(crate) unsafe fn add_bias_rows_perturbed(x: &mut [f32], b: &[f32], z: &[f32], sc: f32, rows: usize, cols: usize) {
+        let nv = cols & !7;
+        let scv = _mm256_set1_ps(sc);
+        let (xp, bp, zp) = (x.as_mut_ptr(), b.as_ptr(), z.as_ptr());
+        for i in 0..rows {
+            let rp = xp.add(i * cols);
+            let mut j = 0;
+            while j < nv {
+                let bv = _mm256_add_ps(_mm256_loadu_ps(bp.add(j)), _mm256_mul_ps(scv, _mm256_loadu_ps(zp.add(j))));
+                _mm256_storeu_ps(rp.add(j), _mm256_add_ps(_mm256_loadu_ps(rp.add(j)), bv));
+                j += 8;
+            }
+            while j < cols {
+                *rp.add(j) += *bp.add(j) + sc * *zp.add(j);
+                j += 1;
+            }
+        }
+    }
+
+    /// SIMD twin of the layernorm affine row:
+    /// `orow[j] = (row[j] - mean) * inv * g[j] + b[j]` (left-associated,
+    /// like the scalar loop). The f64 mean/variance reduction stays in the
+    /// scalar caller.
+    #[target_feature(enable = "avx2,fma")]
+    pub(crate) unsafe fn layernorm_affine(row: &[f32], g: &[f32], b: &[f32], mean: f32, inv: f32, orow: &mut [f32]) {
+        let cols = row.len();
+        let nv = cols & !7;
+        let mv = _mm256_set1_ps(mean);
+        let iv = _mm256_set1_ps(inv);
+        let (rp, gp, bp, op) = (row.as_ptr(), g.as_ptr(), b.as_ptr(), orow.as_mut_ptr());
+        let mut j = 0;
+        while j < nv {
+            let t = _mm256_mul_ps(_mm256_sub_ps(_mm256_loadu_ps(rp.add(j)), mv), iv);
+            let v = _mm256_add_ps(_mm256_mul_ps(t, _mm256_loadu_ps(gp.add(j))), _mm256_loadu_ps(bp.add(j)));
+            _mm256_storeu_ps(op.add(j), v);
+            j += 8;
+        }
+        while j < cols {
+            *op.add(j) = (*rp.add(j) - mean) * inv * *gp.add(j) + *bp.add(j);
+            j += 1;
+        }
+    }
+
+    /// SIMD twin of the softmax rescale loop (`*v *= inv`); the max scan
+    /// and the sequential exp/denominator accumulation stay scalar.
+    #[target_feature(enable = "avx2,fma")]
+    pub(crate) unsafe fn scale_in_place(row: &mut [f32], inv: f32) {
+        let nv = row.len() & !7;
+        let iv = _mm256_set1_ps(inv);
+        let rp = row.as_mut_ptr();
+        let mut j = 0;
+        while j < nv {
+            _mm256_storeu_ps(rp.add(j), _mm256_mul_ps(_mm256_loadu_ps(rp.add(j)), iv));
+            j += 8;
+        }
+        while j < row.len() {
+            *rp.add(j) *= inv;
+            j += 1;
+        }
+    }
+
+    /// SIMD twin of `gelu_scalar`: the polynomial halves are vectorized
+    /// with the scalar expression tree; `tanh` runs scalar per element
+    /// through an 8-wide stack buffer (same `f32::tanh` call).
+    #[target_feature(enable = "avx2,fma")]
+    pub(crate) unsafe fn gelu(x: &mut [f32]) {
+        const C: f32 = 0.797_884_56; // sqrt(2/pi)
+        const A: f32 = 0.044715;
+        let nv = x.len() & !7;
+        let cv = _mm256_set1_ps(C);
+        let av = _mm256_set1_ps(A);
+        let half = _mm256_set1_ps(0.5);
+        let one = _mm256_set1_ps(1.0);
+        let xp = x.as_mut_ptr();
+        let mut buf = [0f32; 8];
+        let mut i = 0;
+        while i < nv {
+            let t = _mm256_loadu_ps(xp.add(i));
+            // C * (t + ((A*t)*t)*t) — the scalar `C * (t + A*t*t*t)`
+            let cube = _mm256_mul_ps(_mm256_mul_ps(_mm256_mul_ps(av, t), t), t);
+            let arg = _mm256_mul_ps(cv, _mm256_add_ps(t, cube));
+            _mm256_storeu_ps(buf.as_mut_ptr(), arg);
+            for v in buf.iter_mut() {
+                *v = v.tanh();
+            }
+            let th = _mm256_loadu_ps(buf.as_ptr());
+            // (0.5*t) * (1 + th) — the scalar `0.5 * t * (1.0 + th)`
+            let res = _mm256_mul_ps(_mm256_mul_ps(half, t), _mm256_add_ps(one, th));
+            _mm256_storeu_ps(xp.add(i), res);
+            i += 8;
+        }
+        while i < x.len() {
+            let t = *xp.add(i);
+            *xp.add(i) = 0.5 * t * (1.0 + (C * (t + A * t * t * t)).tanh());
+            i += 1;
+        }
+    }
+}
+
+// Non-x86_64: the dispatchers in the parent module never take the SIMD
+// branch (`enabled()` is false), but the symbols must exist — delegate to
+// the scalar twins so any stray call is still correct.
+#[cfg(not(target_arch = "x86_64"))]
+pub(crate) use fallback::*;
+
+#[cfg(not(target_arch = "x86_64"))]
+mod fallback {
+    use super::super::{PackedB, ParamView};
+
+    pub(crate) unsafe fn matmul_span(a: &[f32], b: &[f32], k: usize, n: usize, row0: usize, rows: usize, out: &mut [f32]) {
+        super::super::matmul_span_scalar(a, b, k, n, row0, rows, out)
+    }
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) unsafe fn matmul_span_fused(a: &[f32], w: &[f32], z: &[f32], sc: f32, k: usize, n: usize, row0: usize, rows: usize, out: &mut [f32]) {
+        super::super::matmul_span_fused_scalar(a, w, z, sc, k, n, row0, rows, out)
+    }
+    pub(crate) unsafe fn matmul_span_view(a: &[f32], w: ParamView<'_>, k: usize, n: usize, row0: usize, rows: usize, out: &mut [f32]) {
+        super::super::matmul_span_view_scalar(a, w, k, n, row0, rows, out)
+    }
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) unsafe fn matmul_at_span(a: &[f32], d: &[f32], m: usize, k: usize, n: usize, p_base: usize, prows: usize, out: &mut [f32]) {
+        super::super::matmul_at_span_scalar(a, d, m, k, n, p_base, prows, out)
+    }
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) unsafe fn matmul_at_span_fused(w: &[f32], z: &[f32], sc: f32, d: &[f32], m: usize, k: usize, n: usize, p_base: usize, prows: usize, out: &mut [f32]) {
+        super::super::matmul_at_span_fused_scalar(w, z, sc, d, m, k, n, p_base, prows, out)
+    }
+    pub(crate) unsafe fn matmul_bt_span(a: &[f32], bt: &[f32], k: usize, n: usize, row0: usize, rows: usize, out: &mut [f32]) {
+        super::super::matmul_bt_span_scalar(a, bt, k, n, row0, rows, out)
+    }
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) unsafe fn matmul_bt_span_fused(a: &[f32], w: &[f32], z: &[f32], sc: f32, k: usize, n: usize, row0: usize, rows: usize, out: &mut [f32]) {
+        super::super::matmul_bt_span_fused_scalar(a, w, z, sc, k, n, row0, rows, out)
+    }
+    pub(crate) unsafe fn matmul_span_packed(a: &[f32], pk: &PackedB<'_>, k: usize, n: usize, row0: usize, rows: usize, out: &mut [f32]) {
+        super::super::matmul_span_packed_scalar(a, pk, k, n, row0, rows, out)
+    }
+    pub(crate) unsafe fn axpy_into(a: f32, z: &[f32], x: &[f32], out: &mut [f32]) {
+        super::super::axpy_into_scalar(a, z, x, out)
+    }
+    pub(crate) unsafe fn add_bias_rows(x: &mut [f32], bias: &[f32], rows: usize, cols: usize) {
+        super::super::add_bias_rows_scalar(x, bias, rows, cols)
+    }
+    pub(crate) unsafe fn add_bias_rows_perturbed(x: &mut [f32], b: &[f32], z: &[f32], sc: f32, rows: usize, cols: usize) {
+        super::super::add_bias_rows_perturbed_scalar(x, b, z, sc, rows, cols)
+    }
+    pub(crate) unsafe fn layernorm_affine(row: &[f32], g: &[f32], b: &[f32], mean: f32, inv: f32, orow: &mut [f32]) {
+        super::super::layernorm_affine_scalar(row, g, b, mean, inv, orow)
+    }
+    pub(crate) unsafe fn scale_in_place(row: &mut [f32], inv: f32) {
+        super::super::scale_in_place_scalar(row, inv)
+    }
+    pub(crate) unsafe fn gelu(x: &mut [f32]) {
+        super::super::gelu_scalar(x)
+    }
+}
