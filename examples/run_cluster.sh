@@ -1,18 +1,23 @@
 #!/usr/bin/env bash
 # Fault-injection smoke run for the multi-process ZO cluster.
 #
-# Launches 1 leader + 3 workers as real OS processes over localhost TCP.
-# Worker 2 checkpoints periodically and crashes mid-run (--die-at-step);
-# the leader drops it, renormalizes the step average over the survivors,
-# and keeps training. The worker is then relaunched from its checkpoint
-# and rejoins via seed replay (the leader ships the missed (seed, g,
-# theta, eta, beta) records — O(1) bytes per missed step). The leader's
-# divergence tripwire re-verifies parameter hashes right after the rejoin
-# and periodically thereafter.
+# Scenario 1 — worker crash + rejoin. 1 leader + 3 workers as real OS
+# processes over localhost TCP. Worker 2 checkpoints periodically and
+# crashes mid-run (--die-at-step); the leader drops it, renormalizes the
+# step average over the survivors, and keeps training. The worker is then
+# relaunched from its checkpoint and rejoins via seed replay (the leader
+# ships the missed (seed, g, theta, eta, beta) records — O(1) bytes per
+# missed step). The leader's divergence tripwire re-verifies parameter
+# hashes right after the rejoin and periodically thereafter.
 #
-# PASS iff the run completes AND all three workers print the same final
-# params_hash (bit-identical replicas despite the crash), AND the leader
-# observed at least one rejoin.
+# Scenario 2 — leader crash + WAL resume. A second run persists the step
+# WAL with --fsync every-step; once the WAL holds $KILL_RECORDS durable
+# steps the leader is SIGKILLed mid-run and relaunched with --resume. The
+# workers (started with --reconnect) ride out the outage, re-admit via
+# seed replay, and the run must finish with all three params_hash lines
+# bit-identical to an uninterrupted baseline of the same run.
+#
+# PASS iff both scenarios complete with bit-identical replicas.
 #
 #   examples/run_cluster.sh            # build if needed, then run
 #   STEPS=300 DIE_AT=80 examples/run_cluster.sh
@@ -28,6 +33,10 @@ trap 'kill $(jobs -p) 2>/dev/null || true; rm -rf "$WORK"' EXIT
 # leader step trace (one JSONL record per step); point TRACE_OUT outside
 # $WORK to keep it after the cleanup trap (CI uploads it as an artifact)
 TRACE_OUT="${TRACE_OUT:-$WORK/leader_trace.jsonl}"
+# scenario-2 artifacts (WAL + resumed-leader logs); point OUT_DIR outside
+# $WORK to keep them after the cleanup trap
+OUT_DIR="${OUT_DIR:-$WORK}"
+mkdir -p "$OUT_DIR"
 
 BIN="${BIN:-rust/target/release/conmezo}"
 if [ ! -x "$BIN" ]; then
@@ -39,7 +48,7 @@ common=(--preset "$PRESET" --steps "$STEPS" --seed 42 --eta 3e-4 --lam 1e-3 --ev
 "$BIN" leader --listen "$ADDR" --workers 3 "${common[@]}" \
     --proj-timeout-ms 2000 --max-strikes 2 --hash-check-every 25 \
     --metrics-every 25 --trace "$TRACE_OUT" \
-    --step-log "$WORK/steps.cmzl" >"$WORK/leader.log" 2>&1 &
+    --step-log "$WORK/steps.cmzw" >"$WORK/leader.log" 2>&1 &
 LEADER=$!
 
 "$BIN" worker --connect "$ADDR" --worker-id 0 "${common[@]}" >"$WORK/w0.log" 2>&1 &
@@ -60,9 +69,9 @@ echo "worker 2 crashed at step $DIE_AT; relaunching from its checkpoint"
 
 fail() {
     echo "FAIL: $1" >&2
-    echo "--- leader.log ---" >&2; cat "$WORK/leader.log" >&2 || true
-    for w in w0 w1 w2_crash w2; do
-        echo "--- $w.log ---" >&2; cat "$WORK/$w.log" >&2 || true
+    for f in "$WORK"/*.log "$OUT_DIR"/*.log; do
+        [ -f "$f" ] || continue
+        echo "--- $(basename "$f") ---" >&2; cat "$f" >&2 || true
     done
     exit 1
 }
@@ -80,7 +89,7 @@ h2=$(grep -o 'params_hash=[0-9a-f]*' "$WORK/w2.log" | tail -1 || true)
 
 # and the leader must have actually exercised the recovery path
 grep -q 'rejoins' "$WORK/leader.log" || fail "leader saw no rejoin"
-[ -s "$WORK/steps.cmzl" ] || fail "step log was not persisted"
+[ -s "$WORK/steps.cmzw" ] || fail "step log was not persisted"
 
 # telemetry: the health line fired and the step trace holds one JSONL
 # record per step (parseable by `conmezo trace-summary`)
@@ -91,3 +100,66 @@ tl=$(wc -l <"$TRACE_OUT")
 "$BIN" trace-summary "$TRACE_OUT" >/dev/null || fail "trace-summary rejected the trace"
 
 echo "PASS: crash at step $DIE_AT, rejoin via seed replay, 3 replicas bit-identical ($h0)"
+
+# ---------------------------------------------------------------------------
+# Scenario 2: SIGKILL the LEADER mid-run, resume it from its WAL
+# ---------------------------------------------------------------------------
+STEPS2="${STEPS2:-100}"
+KILL_RECORDS="${KILL_RECORDS:-30}"   # SIGKILL once this many steps are durable
+WAL2="$OUT_DIR/leader_kill_steps.cmzw"
+rm -f "$WAL2"
+common2=(--preset "$PRESET" --steps "$STEPS2" --seed 43 --eta 3e-4 --lam 1e-3 --eval-every 0)
+leader2=(--listen "$ADDR" --workers 3 --proj-timeout-ms 2000 --hash-check-every 25 --metrics-every 20)
+
+# baseline: the identical run, uninterrupted
+"$BIN" leader "${leader2[@]}" "${common2[@]}" >"$WORK/base_leader.log" 2>&1 &
+BASE=$!
+for i in 0 1 2; do
+    "$BIN" worker --connect "$ADDR" --worker-id "$i" "${common2[@]}" >"$WORK/base_w$i.log" 2>&1 &
+done
+wait "$BASE" || fail "scenario-2 baseline leader exited nonzero"
+wait || fail "a scenario-2 baseline worker exited nonzero"
+hb=$(grep -o 'params_hash=[0-9a-f]*' "$WORK/base_w0.log" | tail -1 || true)
+[ -n "$hb" ] || fail "scenario-2 baseline reported no final hash"
+
+# the run we interrupt: WAL persisted with every-step durability, workers
+# armed to ride out the leader outage and reconnect
+"$BIN" leader "${leader2[@]}" "${common2[@]}" \
+    --step-log "$WAL2" --fsync every-step >"$OUT_DIR/kill_leader_first.log" 2>&1 &
+LEADER2=$!
+for i in 0 1 2; do
+    "$BIN" worker --connect "$ADDR" --worker-id "$i" "${common2[@]}" \
+        --reconnect 10 >"$WORK/kill_w$i.log" 2>&1 &
+done
+
+# wait for $KILL_RECORDS durable step cells (4 B magic + 33 B per cell;
+# consensus cells only make the file larger), then SIGKILL — no clean
+# shutdown, no flush: whatever the WAL holds is all the next leader gets
+min_size=$((4 + 33 * KILL_RECORDS))
+sz=0
+for _ in $(seq 1 300); do
+    sz=$(stat -c %s "$WAL2" 2>/dev/null || echo 0)
+    [ "$sz" -ge "$min_size" ] && break
+    kill -0 "$LEADER2" 2>/dev/null || fail "scenario-2 leader died before the kill point"
+    sleep 0.1
+done
+[ "$sz" -ge "$min_size" ] || fail "WAL never reached $KILL_RECORDS records (size $sz)"
+kill -9 "$LEADER2"
+wait "$LEADER2" 2>/dev/null || true
+echo "leader SIGKILLed with $sz B of WAL durable; resuming from it"
+
+"$BIN" leader "${leader2[@]}" "${common2[@]}" \
+    --step-log "$WAL2" --fsync every-step --resume >"$OUT_DIR/kill_leader_resumed.log" 2>&1 &
+LEADER2B=$!
+wait "$LEADER2B" || fail "resumed leader exited nonzero"
+wait || fail "a worker exited nonzero after the leader restart"
+
+grep -q 'resumed from WAL' "$OUT_DIR/kill_leader_resumed.log" || fail "resumed leader did not report WAL recovery"
+k0=$(grep -o 'params_hash=[0-9a-f]*' "$WORK/kill_w0.log" | tail -1 || true)
+k1=$(grep -o 'params_hash=[0-9a-f]*' "$WORK/kill_w1.log" | tail -1 || true)
+k2=$(grep -o 'params_hash=[0-9a-f]*' "$WORK/kill_w2.log" | tail -1 || true)
+[ -n "$k0" ] || fail "worker 0 reported no final hash after the leader restart"
+{ [ "$k0" = "$k1" ] && [ "$k0" = "$k2" ]; } || fail "replicas diverged after the leader restart: $k0 $k1 $k2"
+[ "$k0" = "$hb" ] || fail "leader restart changed the trajectory: $k0 != baseline $hb"
+
+echo "PASS: leader SIGKILL + --resume, 3 replicas bit-identical to the uninterrupted run ($k0)"

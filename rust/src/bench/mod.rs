@@ -187,7 +187,9 @@ pub fn write_bench_json(section: &str, results: &[BenchResult]) -> crate::util::
         Json::Arr(results.iter().map(|r| r.to_json()).collect()),
     );
     root.insert("schema".into(), Json::str("conmezo-bench-v1"));
-    std::fs::write(&path, Json::Obj(root).to_string())?;
+    // read-modify-write over a shared file: the replace must be atomic so
+    // a crashed bench bin can't tear every other section's results
+    crate::util::fs::atomic_write(&path, Json::Obj(root).to_string().as_bytes())?;
     Ok(())
 }
 

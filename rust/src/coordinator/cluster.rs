@@ -15,12 +15,21 @@
 //!   replica is live.
 //! * **Rejoin via seed replay** — the leader appends a 28-byte
 //!   [`StepRecord`] `(seed, g, theta, eta, beta)` per step to a
-//!   [`StepLog`] (optionally persisted, CRC-checked). A worker that
-//!   (re)connects at leader step `T` announcing its own step `t ≤ T`
-//!   (0 fresh, or `ckpt.step` when warm-started from a snapshot) receives
-//!   the gap `t..T` in chunked `Replay` frames and fast-forwards with
-//!   ZERO function evaluations ([`ZoWorker::replay`]) — O(1) bytes per
-//!   missed step.
+//!   [`StepLog`], persisted through an append-only write-ahead log
+//!   ([`crate::checkpoint::StepLogWriter`]: per-record CRC framing, O(1)
+//!   bytes/step, fsync policy knob). A worker that (re)connects at leader
+//!   step `T` announcing its own step `t ≤ T` (0 fresh, or `ckpt.step`
+//!   when warm-started from a snapshot) receives the gap `t..T` in chunked
+//!   `Replay` frames and fast-forwards with ZERO function evaluations
+//!   ([`ZoWorker::replay`]) — O(1) bytes per missed step.
+//! * **Leader restart** — the WAL append (+ fsync under the default
+//!   `every-step` policy) happens BEFORE the step's `Apply` broadcast, so
+//!   no replica can ever apply a step the log doesn't hold. A killed
+//!   leader therefore restarts with [`Leader::resume`]: step count,
+//!   replayable record stream and last consensus hash all come back from
+//!   the WAL (a torn tail is truncated, not fatal), workers re-admit
+//!   through the ordinary `Hello`/`Replay` path, and the run continues
+//!   bit-identical to an uninterrupted one.
 //! * **Divergence tripwire** — every `hash_check_every` steps (and
 //!   immediately after every rejoin) the leader collects an FNV-1a hash of
 //!   each replica's parameters; any disagreement aborts the run rather
@@ -33,12 +42,12 @@
 //! parity test); registration, replay, eval, hash checks and heartbeats
 //! land in `control_bytes`.
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 use std::time::Duration;
 
-use crate::checkpoint::{StepLog, StepRecord};
-use crate::net::{Msg, Transport, PROTO_VERSION, REPLAY_CHUNK};
+use crate::checkpoint::{Checkpoint, FsyncPolicy, StepLog, StepLogWriter, StepRecord};
+use crate::net::{Msg, Transport, TransportErrorKind, PROTO_VERSION, REPLAY_CHUNK};
 use crate::optimizer::BetaSchedule;
 use crate::telemetry::{Registry, StepTrace, StepTracer};
 use crate::util::error::{bail, Result};
@@ -67,10 +76,11 @@ pub struct LeaderConfig {
     pub max_strikes: u32,
     /// divergence tripwire period in steps (0 = only after rejoins)
     pub hash_check_every: u64,
-    /// persist the step log here (the on-disk rejoin substrate)
+    /// persist the step log here as an append-only WAL (the on-disk
+    /// rejoin + leader-restart substrate)
     pub step_log: Option<PathBuf>,
-    /// save the step log every this many steps (and at shutdown)
-    pub log_save_every: u64,
+    /// WAL durability knob: when each appended record hits the disk
+    pub fsync: FsyncPolicy,
     /// health/RTT period in steps (0 = off): each period the leader pings
     /// every live worker with `Heartbeat`, records the round-trip time in
     /// its [`Registry`], and logs a one-line cluster health summary
@@ -93,7 +103,7 @@ impl LeaderConfig {
             max_strikes: 3,
             hash_check_every: 0,
             step_log: None,
-            log_save_every: 100,
+            fsync: FsyncPolicy::EveryStep,
             metrics_every: 0,
             trace: None,
         }
@@ -116,6 +126,10 @@ pub struct Leader {
     cfg: LeaderConfig,
     slots: Vec<Slot>,
     log: StepLog,
+    /// append-only on-disk mirror of `log` (opened when `cfg.step_log` is
+    /// set; every record is appended + policy-synced BEFORE its `Apply`
+    /// broadcast, so the WAL always covers every step any replica took)
+    wal: Option<StepLogWriter>,
     t: u64,
     /// (step, hash) agreed by all live replicas at the last tripwire
     consensus: Option<(u64, u64)>,
@@ -134,6 +148,7 @@ impl Leader {
             cfg,
             slots,
             log: StepLog::new(),
+            wal: None,
             t: 0,
             consensus: None,
             verify_hash: false,
@@ -141,6 +156,68 @@ impl Leader {
             telemetry,
             tracer: None,
         }
+    }
+
+    /// Rebuild a leader from its WAL after a crash (the `--resume` path).
+    ///
+    /// The step count, the full replayable record stream, and the last
+    /// agreed parameter hash all come back from the log; a torn tail left
+    /// by the crash is truncated to the last valid record (counted in the
+    /// `wal_truncations` telemetry), never fatal. Workers that survived
+    /// the outage re-admit through the ordinary `Hello`/`Replay` path and
+    /// must pass a divergence tripwire before the first resumed step.
+    ///
+    /// `init_from` optionally names a checkpoint used to sanity-check the
+    /// log: a snapshot AHEAD of the recovered WAL means the log lost
+    /// fsynced-but-applied steps (e.g. `every-N` policy + power loss) and
+    /// resuming would fork history, so it bails instead.
+    pub fn resume(cfg: LeaderConfig, init_from: Option<&Path>) -> Result<Leader> {
+        let path = match cfg.step_log.clone() {
+            Some(p) => p,
+            None => bail!("leader resume requires a step-log path (the WAL is the recovery substrate)"),
+        };
+        let (writer, rec) = StepLogWriter::resume(&path, cfg.fsync)?;
+        let mut leader = Leader::new(cfg);
+        if rec.truncated() {
+            leader.telemetry.wal_truncations.inc();
+            crate::warn_!(
+                "leader",
+                "recovered WAL {}: truncated {} torn record(s) / {} B off the tail",
+                path.display(),
+                rec.dropped_records,
+                rec.dropped_bytes
+            );
+        }
+        leader.t = rec.log.records.len() as u64;
+        leader.log = rec.log;
+        leader.consensus = rec.consensus;
+        // replicas that outlived the leader must prove bit-identity before
+        // training moves again
+        leader.verify_hash = leader.t > 0;
+        if let Some(ckpt_path) = init_from {
+            let ck = Checkpoint::load(ckpt_path)?;
+            if ck.step > leader.t {
+                bail!(
+                    "checkpoint {} is at step {} but the recovered WAL only reaches step {} — the log is stale (lost tail under a relaxed fsync policy?)",
+                    ckpt_path.display(),
+                    ck.step,
+                    leader.t
+                );
+            }
+        }
+        crate::info!(
+            "leader",
+            "resumed from WAL {} at step {} ({} records, consensus {})",
+            path.display(),
+            leader.t,
+            leader.log.records.len(),
+            match leader.consensus {
+                Some((ct, h)) => format!("{h:016x}@{ct}"),
+                None => "unknown".into(),
+            }
+        );
+        leader.wal = Some(writer);
+        Ok(leader)
     }
 
     /// Current step (= records logged so far).
@@ -242,6 +319,7 @@ impl Leader {
         self.slots[wid as usize] = Slot { conn: Some(conn), strikes: 0 };
         if self.t > 0 {
             self.summary.rejoins += 1;
+            self.telemetry.reconnects.inc();
             // pin the rejoin at runtime: the very next thing the cluster
             // does is a tripwire round, so a diverged rejoiner aborts the
             // run instead of polluting the average
@@ -271,6 +349,11 @@ impl Leader {
         if let Some(path) = self.cfg.trace.clone() {
             self.tracer = Some(StepTracer::new(Some(&path))?);
         }
+        // fresh runs open (truncate) the WAL here; `resume` arrives with
+        // the recovered writer already in place and must not clobber it
+        if let Some(path) = self.cfg.step_log.clone().filter(|_| self.wal.is_none()) {
+            self.wal = Some(StepLogWriter::create(&path, self.cfg.fsync)?);
+        }
         for conn in initial {
             self.admit(conn)?;
         }
@@ -281,9 +364,9 @@ impl Leader {
                 }
             }
             if self.live() == 0 {
-                self.save_log();
+                self.sync_wal();
                 bail!("all {} workers lost at step {} (step log {})", self.cfg.n_workers, self.t,
-                    match &self.cfg.step_log { Some(p) => format!("saved to {}", p.display()), None => "not persisted".into() });
+                    match &self.cfg.step_log { Some(p) => format!("persisted at {}", p.display()), None => "not persisted".into() });
             }
             if self.verify_hash
                 || (self.cfg.hash_check_every > 0 && self.t > 0 && self.t % self.cfg.hash_check_every == 0)
@@ -299,16 +382,25 @@ impl Leader {
             if self.cfg.eval_every > 0 && self.t % self.cfg.eval_every == 0 {
                 self.eval_round();
             }
-            if self.cfg.log_save_every > 0 && self.t % self.cfg.log_save_every == 0 {
-                self.save_log();
-            }
         }
         self.broadcast(&Msg::Shutdown, false);
-        self.save_log();
+        if let Some(w) = self.wal.as_mut() {
+            w.sync()?;
+        }
         if let Some(tracer) = self.tracer.as_mut() {
             tracer.flush()?;
         }
         Ok(self.summary)
+    }
+
+    /// Best-effort flush of any WAL bytes still pending under a relaxed
+    /// fsync policy (abort paths; errors are logged, not compounded).
+    fn sync_wal(&mut self) {
+        if let Some(w) = self.wal.as_mut() {
+            if let Err(e) = w.sync() {
+                crate::warn_!("leader", "WAL flush failed: {e}");
+            }
+        }
     }
 
     /// Heartbeat ping/echo over every live connection: measures per-worker
@@ -370,7 +462,7 @@ impl Leader {
         let r = &self.telemetry;
         crate::info!(
             "leader",
-            "health t={} live={}/{} rtt_p50={:.3}ms timeouts={} stragglers={} lost={} rejoins={} wire={}B control={}B",
+            "health t={} live={}/{} rtt_p50={:.3}ms timeouts={} stragglers={} lost={} rejoins={} wire={}B control={}B wal_appends={} wal_fsyncs={} wal_trunc={} reconnects={} faults={}",
             self.t,
             self.live(),
             self.cfg.n_workers,
@@ -381,6 +473,11 @@ impl Leader {
             self.summary.rejoins,
             self.summary.wire_bytes,
             self.summary.control_bytes,
+            r.wal_appends.get(),
+            r.wal_fsyncs.get(),
+            r.wal_truncations.get(),
+            r.reconnects.get(),
+            r.faults_injected.get(),
         );
     }
 
@@ -394,7 +491,7 @@ impl Leader {
         self.broadcast(&msg, true);
         let projs = loop {
             if self.live() == 0 {
-                self.save_log();
+                self.sync_wal();
                 bail!("all {} workers lost at step {t}", self.cfg.n_workers);
             }
             let p = self.collect(t, self.cfg.proj_timeout, true, "Proj", |wid, m| match *m {
@@ -422,7 +519,18 @@ impl Leader {
         // renormalize by the replicas actually heard from, not the nominal
         // cluster size — a straggler's missing shard must not bias g to 0
         let g = g_sum / k;
-        self.log.records.push(StepRecord { seed, g, theta: hy.theta, eta: hy.eta, beta });
+        let rec = StepRecord { seed, g, theta: hy.theta, eta: hy.eta, beta };
+        self.log.records.push(rec);
+        // WAL-before-Apply: the record must be durable (per the fsync
+        // policy) before any replica can act on it, so a crashed leader can
+        // always replay every step a worker took — append failure is fatal
+        // rather than a silent durability downgrade
+        if let Some(w) = self.wal.as_mut() {
+            let f0 = w.fsyncs();
+            w.append_step(&rec)?;
+            self.telemetry.wal_appends.inc();
+            self.telemetry.wal_fsyncs.add(w.fsyncs() - f0);
+        }
         // EVERY live replica gets the Apply — including stragglers whose
         // Proj was skipped — so all replicas stay bit-identical
         self.broadcast(&Msg::Apply { t, g }, true);
@@ -463,10 +571,18 @@ impl Leader {
         });
         if let Some((&h0, rest)) = hashes.split_first() {
             if rest.iter().any(|&h| h != h0) {
-                self.save_log();
+                self.sync_wal();
                 bail!("divergence tripwire at step {t}: replica parameter hashes disagree: {hashes:x?}");
             }
             self.consensus = Some((t, h0));
+            // persist the agreement so a restarted leader can hand the
+            // consensus hash to rejoining workers in `Welcome`
+            if let Some(w) = self.wal.as_mut() {
+                let f0 = w.fsyncs();
+                w.append_consensus(t, h0)?;
+                self.telemetry.wal_appends.inc();
+                self.telemetry.wal_fsyncs.add(w.fsyncs() - f0);
+            }
             crate::debug!("leader", "tripwire at step {t}: {} replicas agree on {h0:016x}", hashes.len());
         }
         Ok(())
@@ -569,6 +685,9 @@ impl Leader {
     fn drop_worker(&mut self, i: usize, reason: &str) {
         if self.slots[i].conn.take().is_some() {
             self.summary.workers_lost += 1;
+            if TransportErrorKind::classify_str(reason) == Some(TransportErrorKind::FaultInjected) {
+                self.telemetry.faults_injected.inc();
+            }
             crate::warn_!("leader", "dropping worker {i} at step {}: {reason} ({} live workers remain)", self.t, self.live());
         }
     }
@@ -587,13 +706,6 @@ impl Leader {
         }
     }
 
-    fn save_log(&mut self) {
-        if let Some(path) = &self.cfg.step_log {
-            if let Err(e) = self.log.save(path) {
-                crate::warn_!("leader", "failed to persist step log to {}: {e}", path.display());
-            }
-        }
-    }
 }
 
 /// Worker->leader messages carry the step they answer; anything at or
@@ -661,7 +773,8 @@ pub fn run_worker_with(conn: &mut dyn Transport, worker: &mut ZoWorker, opts: &W
                     bail!("Step t={t} but this replica is at step {} (protocol desync)", worker.t);
                 }
                 if opts.die_at_step == Some(t) {
-                    bail!("fault injection: worker {} dying at step {t}", worker.id);
+                    return Err(TransportErrorKind::FaultInjected
+                        .err(format!("worker {} dying at step {t}", worker.id)));
                 }
                 let (lp, lm) = worker.compute_proj(t, seed, theta, lam)?;
                 conn.send(&Msg::Proj { t, worker_id: worker.id, loss_plus: lp, loss_minus: lm })?;
@@ -898,5 +1011,86 @@ mod tests {
         }
         assert_eq!(reg_on.steps.get(), steps);
         std::fs::remove_file(&trace_path).ok();
+    }
+
+    #[test]
+    fn leader_resume_requires_step_log() {
+        let err = Leader::resume(cfg(1, 1), None).unwrap_err().to_string();
+        assert!(err.contains("requires a step-log path"), "{err}");
+    }
+
+    #[test]
+    fn leader_resume_from_wal_is_bit_identical() {
+        // the leader-restart acceptance criterion, in-process: kill the
+        // leader after 8 steps (here: just let phase 1 finish), resume from
+        // the WAL alone, run to 16 — the trajectory must be bit-identical
+        // to one uninterrupted 16-step run
+        use crate::checkpoint::load_wal;
+
+        let n = 2u32;
+        let dir = std::env::temp_dir().join(format!("conmezo_resume_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let wal_path = dir.join("steps.cmzw");
+
+        let mut x0 = vec![0f32; D];
+        let mut rng = crate::util::rng::Xoshiro256pp::seed_from_u64(11);
+        rng.fill_normal_f32(&mut x0);
+
+        type Spawned = (Vec<Box<dyn Transport>>, Vec<std::thread::JoinHandle<Vec<f32>>>);
+        let spawn_workers = |x0: &[f32]| -> Spawned {
+            let mut conns: Vec<Box<dyn Transport>> = Vec::new();
+            let mut handles = Vec::new();
+            for id in 0..n {
+                let (wside, lside) = channel_pair();
+                conns.push(Box::new(lside));
+                let x = x0.to_vec();
+                handles.push(std::thread::spawn(move || {
+                    let mut wside = wside;
+                    let mut w = ZoWorker::new(id, x, Box::new(NativeQuadratic::new(D)));
+                    run_worker_with(&mut wside, &mut w, &WorkerOpts::default()).unwrap();
+                    w.x
+                }));
+            }
+            (conns, handles)
+        };
+
+        // phase 1: 8 steps against the WAL, with a tripwire round at t=4
+        let mut c1 = cfg(n, 8);
+        c1.step_log = Some(wal_path.clone());
+        c1.hash_check_every = 4;
+        let (conns, handles) = spawn_workers(&x0);
+        Leader::new(c1).run(conns).unwrap();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let rec = load_wal(&wal_path).unwrap();
+        assert_eq!(rec.log.records.len(), 8);
+        assert!(rec.consensus.is_some(), "tripwire consensus must be persisted");
+        assert!(!rec.truncated());
+
+        // phase 2: resume from the WAL alone; FRESH workers replay 0..8
+        // through the ordinary rejoin path, then train 8..16
+        let mut c2 = cfg(n, 16);
+        c2.step_log = Some(wal_path.clone());
+        c2.hash_check_every = 4;
+        let leader = Leader::resume(c2, None).unwrap();
+        assert_eq!(leader.t(), 8, "step count must come back from the WAL");
+        let (conns, handles) = spawn_workers(&x0);
+        let summary = leader.run(conns).unwrap();
+        let resumed: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert_eq!(summary.rejoins, n as u64, "post-restart admissions count as rejoins");
+
+        // baseline: one uninterrupted 16-step run, no persistence
+        let mut c3 = cfg(n, 16);
+        c3.hash_check_every = 4;
+        let (conns, handles) = spawn_workers(&x0);
+        Leader::new(c3).run(conns).unwrap();
+        let baseline: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+
+        assert_eq!(resumed, baseline, "leader restart must be invisible to the trajectory");
+
+        let rec = load_wal(&wal_path).unwrap();
+        assert_eq!(rec.log.records.len(), 16, "the resumed leader appends to the same WAL");
+        std::fs::remove_file(&wal_path).ok();
     }
 }

@@ -61,6 +61,12 @@ pub struct ZoWorker {
     started: bool,
     /// completed (applied) steps; the protocol's step counter
     pub t: u64,
+    /// steps whose shard batch has been drawn. Advancement is a pure
+    /// function of the step number: a step this replica already computed
+    /// live can be re-issued (leader restart) or arrive again as a replay
+    /// record without double-advancing the batch stream — double advance
+    /// would silently desync the shard from an uninterrupted run
+    advanced: u64,
     pub obj: Box<dyn Objective>,
     /// local eval closure: returns (correct, total); optional
     pub eval_fn: Option<Box<dyn FnMut(&[f32]) -> (u64, u64)>>,
@@ -77,6 +83,7 @@ impl ZoWorker {
             z: vec![0.0; d],
             started: false,
             t: 0,
+            advanced: 0,
             obj,
             eval_fn: None,
         }
@@ -107,6 +114,9 @@ impl ZoWorker {
             z: vec![0.0; d],
             started: ckpt.step > 0,
             t: ckpt.step,
+            // the warm-started process has a fresh shard stream; the gap
+            // replay advances it once per missed step, exactly as before
+            advanced: ckpt.step,
             obj,
             eval_fn: None,
         })
@@ -130,7 +140,10 @@ impl ZoWorker {
             self.started = true;
         }
         vecmath::cone_direction(&self.m, &self.u, theta, d_raw, &mut self.z);
-        self.obj.advance(); // every worker advances its OWN shard stream
+        if self.advanced <= t {
+            self.obj.advance(); // every worker advances its OWN shard stream
+            self.advanced = t + 1;
+        }
         self.obj.two_point(&self.x, &self.z, lam)
     }
 
@@ -159,7 +172,10 @@ impl ZoWorker {
                 self.started = true;
             }
             vecmath::cone_direction(&self.m, &self.u, r.theta, d_raw, &mut self.z);
-            self.obj.advance(); // keep the shard stream in step with live peers
+            if self.advanced <= t {
+                self.obj.advance(); // keep the shard stream in step with live peers
+                self.advanced = t + 1;
+            }
             vecmath::zo_update(&mut self.x, &mut self.m, &self.z, r.g as f32, r.eta, r.beta);
             self.t = t + 1;
         }

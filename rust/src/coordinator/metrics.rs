@@ -57,9 +57,9 @@ impl RunRecord {
     }
 
     pub fn save_in(&self, dir: &Path) -> Result<PathBuf> {
-        std::fs::create_dir_all(dir)?;
         let path = dir.join(format!("{}.json", self.name));
-        std::fs::write(&path, self.to_json().to_string())?;
+        // atomic: a crash mid-save must never leave a half-written summary
+        crate::util::fs::atomic_write(&path, self.to_json().to_string().as_bytes())?;
         Ok(path)
     }
 }

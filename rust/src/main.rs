@@ -60,7 +60,9 @@ fn app() -> App {
         .opt_default("eval-timeout-ms", "120000", "leader: max wait for a worker's EvalResult (0 = block forever)")
         .opt_default("max-strikes", "3", "leader: consecutive timeouts before dropping a straggler")
         .opt_default("hash-check-every", "100", "leader: divergence tripwire period in steps (0 = only after rejoins)")
-        .opt("step-log", "leader: persist the per-step replay log here (rejoin substrate)")
+        .opt("step-log", "leader: persist the per-step replay WAL here (rejoin + restart substrate)")
+        .opt_default("fsync", "every-step", "leader: WAL durability policy (every-step|every-N|close)")
+        .flag("resume", "leader: rebuild state from the --step-log WAL after a crash")
         .opt("trace", "stream one JSONL StepTrace record per step here (train/leader)")
         .opt_default("metrics-every", "0", "leader: heartbeat-RTT + health line every N steps (0 = off)")
         .opt("manifest", "serve: tenant workload manifest file")
@@ -299,12 +301,20 @@ fn cmd_leader(p: &conmezo::cli::Parsed) -> Result<()> {
     cfg.max_strikes = p.usize_or("max-strikes", 3) as u32;
     cfg.hash_check_every = p.usize_or("hash-check-every", 100) as u64;
     cfg.step_log = p.value("step-log").map(|s| s.into());
+    cfg.fsync = conmezo::checkpoint::FsyncPolicy::parse(&p.str_or("fsync", "every-step"))?;
     cfg.metrics_every = p.usize_or("metrics-every", 0) as u64;
     cfg.trace = p.value("trace").map(|s| s.into());
     // socket-level I/O bound: hung peers error out instead of blocking the
     // whole cluster (handshakes and sends included)
     let io_timeout = cfg.proj_timeout;
 
+    let leader = if p.flag("resume") {
+        let l = coordinator::Leader::resume(cfg, p.value("init-from").map(Path::new))?;
+        println!("leader: resumed from WAL at step {}", l.t());
+        l
+    } else {
+        coordinator::Leader::new(cfg)
+    };
     println!(
         "leader: waiting for {n} workers on {addr} (protocol v{})",
         conmezo::net::PROTO_VERSION
@@ -321,7 +331,7 @@ fn cmd_leader(p: &conmezo::cli::Parsed) -> Result<()> {
     // after initial registration the accept loop goes non-blocking: the
     // leader polls it between steps so crashed workers can rejoin mid-run
     listener.set_nonblocking(true)?;
-    let summary = coordinator::Leader::new(cfg).run_with_joiner(conns, |_t| {
+    let summary = leader.run_with_joiner(conns, |_t| {
         let mut joined: Vec<Box<dyn Transport>> = Vec::new();
         loop {
             match listener.accept() {
@@ -418,14 +428,25 @@ fn cmd_worker(p: &conmezo::cli::Parsed) -> Result<()> {
     let mut reconnects = p.usize_or("reconnect", 0);
     loop {
         println!("worker {id}: connecting to {addr} (at step {})", w.t);
-        let mut conn =
-            TcpTransport::connect_retry(&addr, 20, std::time::Duration::from_millis(250))?;
+        let mut conn = TcpTransport::connect_retry(
+            &addr,
+            id,
+            20,
+            std::time::Duration::from_millis(250),
+            std::time::Duration::from_secs(5),
+        )?;
         match coordinator::run_worker_with(&mut conn, &mut w, &opts) {
             Ok(()) => break,
             Err(e) => {
-                // injected crashes and handshake rejections must not loop
-                let msg = e.to_string();
-                if reconnects == 0 || msg.contains("fault injection") || msg.contains("mismatch") {
+                use conmezo::net::TransportErrorKind as K;
+                // retry only what the transport layer classified as a
+                // connection-level failure; injected crashes, handshake
+                // rejections and divergence bails must not loop
+                let retryable = matches!(
+                    K::classify(&e),
+                    Some(K::Timeout) | Some(K::Closed) | Some(K::Corrupt)
+                );
+                if reconnects == 0 || !retryable {
                     return Err(e);
                 }
                 reconnects -= 1;

@@ -340,6 +340,18 @@ pub struct Registry {
     pub wire_bytes: Counter,
     pub control_bytes: Counter,
 
+    // -- durability (WAL + reconnect/chaos accounting) --
+    /// cells appended to the leader's write-ahead step log
+    pub wal_appends: Counter,
+    /// fsyncs issued by the WAL writer (policy-dependent)
+    pub wal_fsyncs: Counter,
+    /// torn-tail truncations performed when recovering a WAL
+    pub wal_truncations: Counter,
+    /// worker (re)connections admitted after step 0 (leader view)
+    pub reconnects: Counter,
+    /// errors classified as injected faults (chaos/test harness traffic)
+    pub faults_injected: Counter,
+
     pub spans: SpanRing,
 }
 
@@ -375,6 +387,11 @@ impl Registry {
             replay_bytes: Counter::new(),
             wire_bytes: Counter::new(),
             control_bytes: Counter::new(),
+            wal_appends: Counter::new(),
+            wal_fsyncs: Counter::new(),
+            wal_truncations: Counter::new(),
+            reconnects: Counter::new(),
+            faults_injected: Counter::new(),
             spans: SpanRing::new(ring_cap),
         }
     }

@@ -1,0 +1,107 @@
+//! Crash-safe filesystem primitives.
+//!
+//! [`atomic_write`] is the durability contract every snapshot-shaped
+//! artifact in the tree goes through (CMZ1 checkpoints, run metrics,
+//! `BENCH_native.json`): readers observe either the old complete file or
+//! the new complete file, never a torn in-between, even across power loss.
+//!
+//! Protocol: write to a same-directory tempfile, `sync_all` it, `rename`
+//! over the destination (atomic on POSIX when source and target share a
+//! filesystem — which the same-directory placement guarantees), then fsync
+//! the parent directory so the rename itself is durable. A crash at any
+//! point leaves either the old file intact (possibly plus a stale
+//! `.tmp-*` sibling, which a later writer ignores and overwrites) or the
+//! new file fully in place.
+
+use std::io::Write;
+use std::path::Path;
+
+use crate::util::error::{Context, Result};
+
+/// Suffix marking in-flight tempfiles; stale ones (crash between write and
+/// rename) are harmless and are reclaimed by the next write to the same
+/// destination.
+const TMP_SUFFIX: &str = ".tmp-atomic";
+
+fn tmp_path(path: &Path) -> std::path::PathBuf {
+    let mut name = path.file_name().map(|n| n.to_os_string()).unwrap_or_default();
+    name.push(TMP_SUFFIX);
+    path.with_file_name(name)
+}
+
+/// Atomically replace `path` with `bytes`: same-dir tempfile → write →
+/// `sync_all` → rename → parent-dir fsync. Creates missing parent
+/// directories first.
+pub fn atomic_write(path: &Path, bytes: &[u8]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating {}", dir.display()))?;
+        }
+    }
+    let tmp = tmp_path(path);
+    {
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        f.write_all(bytes).with_context(|| format!("writing {}", tmp.display()))?;
+        f.sync_all().with_context(|| format!("syncing {}", tmp.display()))?;
+    }
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {} -> {}", tmp.display(), path.display()))?;
+    // fsync the parent directory so the rename (the commit point) survives
+    // power loss, not just the file contents
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            if let Ok(d) = std::fs::File::open(dir) {
+                let _ = d.sync_all();
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("conmezo_fs_tests").join(name);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn writes_and_replaces() {
+        let dir = tmpdir("replace");
+        let p = dir.join("out.bin");
+        atomic_write(&p, b"first").unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), b"first");
+        atomic_write(&p, b"second, longer contents").unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), b"second, longer contents");
+        // no tempfile left behind on the happy path
+        assert!(!tmp_path(&p).exists());
+    }
+
+    #[test]
+    fn creates_parent_dirs() {
+        let dir = tmpdir("parents");
+        let p = dir.join("a/b/c/out.bin");
+        atomic_write(&p, b"deep").unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), b"deep");
+    }
+
+    #[test]
+    fn crash_before_rename_leaves_old_file_intact() {
+        // simulate a crash between tempfile write and rename: the stale
+        // tempfile sits next to an untouched destination; the reader sees
+        // the old contents and the next atomic_write reclaims the temp
+        let dir = tmpdir("crash");
+        let p = dir.join("out.bin");
+        atomic_write(&p, b"committed").unwrap();
+        std::fs::write(tmp_path(&p), b"torn half-writ").unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), b"committed", "old file must survive");
+        atomic_write(&p, b"recovered").unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), b"recovered");
+        assert!(!tmp_path(&p).exists(), "stale tempfile reclaimed");
+    }
+}

@@ -2,6 +2,7 @@
 //! errors, PRNG, JSON, logging, memory accounting, and small helpers.
 
 pub mod error;
+pub mod fs;
 pub mod json;
 pub mod logging;
 pub mod plot;

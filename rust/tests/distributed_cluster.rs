@@ -17,7 +17,10 @@ use conmezo::coordinator::{
     run_leader, run_worker, run_worker_with, DistHypers, Leader, LeaderConfig, LocalCluster,
     WorkerOpts, ZoWorker,
 };
-use conmezo::net::{channel_pair, ChannelTransport, Fault, FaultTransport, TcpTransport, Transport};
+use conmezo::net::{
+    channel_pair, ChannelTransport, Fault, FaultTransport, TcpTransport, Transport,
+    TransportErrorKind,
+};
 use conmezo::objective::Objective;
 use conmezo::optimizer::BetaSchedule;
 use conmezo::util::error::Result;
@@ -113,7 +116,14 @@ fn tcp_cluster_matches_local_cluster_bitwise() {
     for id in 0..n {
         let addr = addr.clone();
         handles.push(thread::spawn(move || {
-            let mut conn = TcpTransport::connect_retry(&addr, 40, Duration::from_millis(50)).unwrap();
+            let mut conn = TcpTransport::connect_retry(
+                &addr,
+                id,
+                40,
+                Duration::from_millis(5),
+                Duration::from_millis(50),
+            )
+            .unwrap();
             let mut w = ZoWorker::new(id, x0(), shard(id));
             run_worker(&mut conn, &mut w).unwrap();
             (w.x, w.m, w.t)
@@ -153,7 +163,7 @@ fn worker_death_renormalizes_over_survivors_and_log_replays() {
     let n = 3u32;
     let steps = 30u64;
     let die_at = 7u64;
-    let log_path = temp_path("death.cmzl");
+    let log_path = temp_path("death.cmzw");
     let _ = std::fs::remove_file(&log_path);
 
     let mut conns: Vec<Box<dyn Transport>> = Vec::new();
@@ -183,7 +193,11 @@ fn worker_death_renormalizes_over_survivors_and_log_replays() {
     assert_eq!(summary.rejoins, 0);
     let (res2, _, _, t2) = &states[2];
     let err = res2.as_ref().unwrap_err();
-    assert!(err.contains("fault injection"), "{err}");
+    assert_eq!(
+        TransportErrorKind::classify_str(err),
+        Some(TransportErrorKind::FaultInjected),
+        "{err}"
+    );
     assert_eq!(*t2, die_at, "crashed worker applied steps past its death");
     for id in 0..2 {
         let (res, x, m, t) = &states[id];
@@ -230,7 +244,7 @@ fn straggler_is_skipped_but_stays_bit_identical() {
     let n = 3u32;
     let steps = 20u64;
     let lag_step = 6u64;
-    let log_path = temp_path("straggler.cmzl");
+    let log_path = temp_path("straggler.cmzw");
     let _ = std::fs::remove_file(&log_path);
 
     let mut conns: Vec<Box<dyn Transport>> = Vec::new();
@@ -302,7 +316,11 @@ fn killed_worker_rejoins_via_seed_replay_bit_identical() {
                 let mut first = wside;
                 let opts = WorkerOpts { die_at_step: Some(die_at), ..Default::default() };
                 let err = run_worker_with(&mut first, &mut w, &opts).unwrap_err();
-                assert!(err.to_string().contains("fault injection"), "{err}");
+                assert_eq!(
+                    TransportErrorKind::classify(&err),
+                    Some(TransportErrorKind::FaultInjected),
+                    "{err}"
+                );
                 drop(first); // the leader sees a dead connection
                 // reconnect with the same replica: only die_at..T replays
                 let (mut wside2, lside2) = channel_pair();
@@ -360,6 +378,11 @@ fn leader_bails_when_all_workers_lost() {
     assert!(err.contains("all 2 workers lost"), "{err}");
     for h in handles {
         let res = h.join().unwrap();
-        assert!(res.unwrap_err().contains("fault injection"));
+        let err = res.unwrap_err();
+        assert_eq!(
+            TransportErrorKind::classify_str(&err),
+            Some(TransportErrorKind::FaultInjected),
+            "{err}"
+        );
     }
 }
